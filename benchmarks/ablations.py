@@ -1,0 +1,210 @@
+"""Paper ablations: Tables 4 (β), 5 (τ0), 6 (verify layer), 7 (draft
+model), 8 (error metric), plus the eq.(8) speedup-model validation."""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks import common as C
+from repro.configs import SpeCaConfig
+from repro.core import complexity as CX
+from repro.core.speca import speca_sample
+
+
+def _speca_row(cfg, dcfg, params, cond, batch, key, scfg, x_full,
+               templates, ref, label):
+    from repro.core.speca import speca_sample
+    x, st = jax.jit(lambda k: speca_sample(cfg, params, dcfg, scfg, k,
+                                           cond, batch))(key)
+    x = np.asarray(jax.block_until_ready(x))
+    n_tok = (dcfg.latent_size // cfg.patch_size) ** 2 \
+        * max(dcfg.num_frames, 1)
+    full_fl = CX.forward_flops(cfg, n_tok) * batch
+    ver_fl = CX.verify_flops(cfg, n_tok) * batch
+    fl = int(st["num_full"]) * full_fl + int(st["num_attempted"]) * ver_fl
+    S = dcfg.num_inference_steps
+    row = {
+        "config": label,
+        "alpha": round(float(st["alpha"]), 4),
+        "tflops": round(fl / 1e12, 6),
+        "speedup_flops": round(S * full_fl / fl, 3),
+        "rel_dev": round(C.rel_dev(jnp.asarray(x), jnp.asarray(x_full)), 5),
+        "fid_proxy": round(C.frechet(x, ref), 4) if x.ndim == 4 else None,
+        "cond_score": round(C.cond_score(x, np.asarray(cond["labels"]),
+                                         templates), 5),
+    }
+    return row, st
+
+
+def _setup(batch=16, seed=7):
+    cfg, dcfg, params = C.get_model("dit")
+    cond = C.make_cond(cfg, dcfg, batch)
+    key = jax.random.PRNGKey(seed)
+    res = C.run_method("full", cfg, dcfg, params, cond, batch, key)
+    templates = C.class_templates(cfg, dcfg)
+    ref = C.reference_latents(cfg, dcfg, 64)
+    return cfg, dcfg, params, cond, key, res.samples, templates, ref
+
+
+def table4_decay(batch=16):
+    cfg, dcfg, params, cond, key, x_full, tpl, ref = _setup(batch)
+    rows = []
+    for beta in [0.3, 0.5, 0.7, 0.9, 0.99]:
+        scfg = SpeCaConfig(taylor_order=2, max_draft=8, tau0=0.5, beta=beta)
+        row, _ = _speca_row(cfg, dcfg, params, cond, batch, key, scfg,
+                            x_full, tpl, ref, f"beta={beta}")
+        rows.append(row)
+    C.print_table("table4_decay (τ0=0.5)", rows)
+    C.write_result("table4_decay", rows)
+    return rows
+
+
+def table5_threshold(batch=16):
+    cfg, dcfg, params, cond, key, x_full, tpl, ref = _setup(batch)
+    rows = []
+    for tau0 in [0.05, 0.1, 0.3, 0.5, 0.8, 1.2]:
+        scfg = SpeCaConfig(taylor_order=2, max_draft=8, tau0=tau0, beta=0.9)
+        row, _ = _speca_row(cfg, dcfg, params, cond, batch, key, scfg,
+                            x_full, tpl, ref, f"tau0={tau0}")
+        rows.append(row)
+    C.print_table("table5_threshold (β=0.9)", rows)
+    C.write_result("table5_threshold", rows)
+    return rows
+
+
+def table6_verify_layer(batch=16):
+    cfg, dcfg, params, cond, key, x_full, tpl, ref = _setup(batch)
+    rows = []
+    L = cfg.num_layers
+    for vl in [0, L // 3, (2 * L) // 3, L - 1]:
+        scfg = SpeCaConfig(taylor_order=2, max_draft=8, tau0=0.3, beta=0.9,
+                           verify_layer=vl)
+        row, _ = _speca_row(cfg, dcfg, params, cond, batch, key, scfg,
+                            x_full, tpl, ref, f"layer{vl}")
+        rows.append(row)
+    C.print_table("table6_verify_layer (5× target)", rows)
+    C.write_result("table6_verify_layer", rows)
+    return rows
+
+
+def table7_draft(batch=16):
+    cfg, dcfg, params, cond, key, x_full, tpl, ref = _setup(batch)
+    rows = []
+    # non-verified drafts (w/o SpeCa)
+    for name in ["fora_5", "ab2_5", "taylorseer_5_2"]:
+        res = C.run_method(name, cfg, dcfg, params, cond, batch, key)
+        rows.append(C.evaluate(res, x_full, cfg, dcfg, cond, tpl, ref)
+                    | {"config": name + " (w/o SpeCa)"})
+    # verified drafts (SpeCa framework)
+    for draft in ["reuse", "ab2", "taylor"]:
+        scfg = SpeCaConfig(taylor_order=2, max_draft=8, tau0=0.4, beta=0.9)
+        x, st = jax.jit(lambda k, d=draft: speca_sample(
+            cfg, params, dcfg, scfg, k, cond, batch, draft_mode=d))(key)
+        x = np.asarray(jax.block_until_ready(x))
+        rows.append({
+            "config": f"SpeCa({draft})",
+            "alpha": round(float(st["alpha"]), 4),
+            "rel_dev": round(C.rel_dev(jnp.asarray(x),
+                                       jnp.asarray(x_full)), 5),
+            "fid_proxy": round(C.frechet(x, ref), 4),
+            "cond_score": round(C.cond_score(
+                x, np.asarray(cond["labels"]), tpl), 5),
+        })
+    C.print_table("table7_draft_models", rows)
+    C.write_result("table7_draft", rows)
+    return rows
+
+
+def table8_metrics(batch=16):
+    cfg, dcfg, params, cond, key, x_full, tpl, ref = _setup(batch)
+    rows = []
+    for metric, tau0 in [("cosine", 0.05), ("rel_l1", 0.3),
+                         ("rel_l2", 0.3), ("rel_linf", 0.5)]:
+        scfg = SpeCaConfig(taylor_order=2, max_draft=8, tau0=tau0, beta=0.9,
+                           error_metric=metric)
+        row, _ = _speca_row(cfg, dcfg, params, cond, batch, key, scfg,
+                            x_full, tpl, ref, metric)
+        rows.append(row)
+    C.print_table("table8_error_metrics", rows)
+    C.write_result("table8_metrics", rows)
+    return rows
+
+
+def speedup_model_check(batch=16):
+    """Eq. (8): measured FLOPs speedup vs 1/(1−α+αγ)."""
+    cfg, dcfg, params, cond, key, x_full, tpl, ref = _setup(batch)
+    n_tok = (dcfg.latent_size // cfg.patch_size) ** 2
+    gamma = CX.gamma(cfg, n_tok)
+    rows = []
+    for tau0 in [0.1, 0.3, 0.6, 1.0]:
+        scfg = SpeCaConfig(taylor_order=2, max_draft=8, tau0=tau0, beta=0.9)
+        x, st = jax.jit(lambda k: speca_sample(
+            cfg, params, dcfg, scfg, k, cond, batch))(key)
+        jax.block_until_ready(x)
+        S = dcfg.num_inference_steps
+        alpha = float(st["alpha"])
+        full_fl = CX.forward_flops(cfg, n_tok) * batch
+        ver_fl = CX.verify_flops(cfg, n_tok) * batch
+        measured = S * full_fl / (int(st["num_full"]) * full_fl
+                                  + int(st["num_attempted"]) * ver_fl)
+        predicted = CX.speedup_model(alpha, gamma)
+        rows.append({
+            "tau0": tau0, "alpha": round(alpha, 4),
+            "gamma": round(gamma, 4),
+            "speedup_measured": round(measured, 4),
+            "speedup_eq8": round(predicted, 4),
+            "rel_err": round(abs(measured - predicted) / predicted, 4),
+        })
+    C.print_table("speedup_model (eq. 8 validation)", rows)
+    C.write_result("speedup_model", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    table4_decay()
+    table5_threshold()
+    table6_verify_layer()
+    table7_draft()
+    table8_metrics()
+    speedup_model_check()
+
+
+def table9_beyond_paper(batch=16):
+    """Beyond-paper ablations: Newton (binomial) draft weights, Taylor
+    order m, and max draft length K — knobs the paper fixes or omits."""
+    cfg, dcfg, params, cond, key, x_full, tpl, ref = _setup(batch)
+    rows = []
+    # draft weight family: taylor (paper) vs newton (exact for deg<=m)
+    for draft in ["taylor", "newton"]:
+        scfg = SpeCaConfig(taylor_order=2, max_draft=8, tau0=0.3, beta=0.9)
+        x, st = jax.jit(lambda k, d=draft: speca_sample(
+            cfg, params, dcfg, scfg, k, cond, batch, draft_mode=d))(key)
+        x = np.asarray(jax.block_until_ready(x))
+        rows.append({
+            "config": f"draft={draft} m=2 K=8",
+            "alpha": round(float(st["alpha"]), 4),
+            "rel_dev": round(C.rel_dev(jnp.asarray(x),
+                                       jnp.asarray(x_full)), 5),
+            "cond_score": round(C.cond_score(
+                x, np.asarray(cond["labels"]), tpl), 5),
+        })
+    # Taylor order m (paper's O)
+    for m in [0, 1, 2, 3]:
+        scfg = SpeCaConfig(taylor_order=m, max_draft=8, tau0=0.3, beta=0.9)
+        row, _ = _speca_row(cfg, dcfg, params, cond, batch, key, scfg,
+                            x_full, tpl, ref, f"order m={m}")
+        rows.append(row)
+    # max consecutive drafts K (paper's N)
+    for k_draft in [2, 4, 8, 16]:
+        scfg = SpeCaConfig(taylor_order=2, max_draft=k_draft, tau0=0.3,
+                           beta=0.9)
+        row, _ = _speca_row(cfg, dcfg, params, cond, batch, key, scfg,
+                            x_full, tpl, ref, f"max_draft K={k_draft}")
+        rows.append(row)
+    C.print_table("table9_beyond_paper (newton / order / draft length)",
+                  rows)
+    C.write_result("table9_beyond_paper", rows)
+    return rows

@@ -1,0 +1,359 @@
+"""Shared benchmark infrastructure: model zoo, quality proxies, accounting.
+
+Scale adaptation (DESIGN.md §8): the paper's models are 0.7B–13B and its
+metrics need external scorers (ImageReward, VBench, Inception). At CPU
+scale we train reduced models of the same families on synthetic
+class-structured latents and report *declared proxies*:
+
+  * ``rel_dev``     — relative L2 between the accelerated sample and the
+                      full-computation sample from the same seed (trajectory
+                      faithfulness; primary).
+  * ``fid_proxy``   — Fréchet distance between Gaussian fits (ridge-
+                      regularised) of generated vs reference latent sets.
+  * ``cond_score``  — cosine alignment between each generated latent and
+                      its class template (ImageReward/CLIP-proxy: did the
+                      conditioning survive acceleration?).
+  * ``temporal``    — mean frame-to-frame correlation error vs the full
+                      sampler's value (VBench-proxy component, video only).
+
+Relative orderings across methods — not absolute values — are the claims
+being reproduced.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import time
+from functools import partial
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import restore_checkpoint, save_checkpoint
+from repro.configs import (DiffusionConfig, SpeCaConfig, TrainConfig,
+                           get_config, reduced)
+from repro.core import complexity as CX
+from repro.core.baselines import (CachePolicy, ab2, cached_sample, fora,
+                                  step_reduction_sample, taylorseer, teacache)
+from repro.core.speca import speca_sample
+from repro.data import synthetic as syn
+from repro.diffusion.pipeline import sample_full
+from repro.layers import model as M
+from repro.training.diffusion_trainer import train_diffusion
+
+ART = os.path.join(os.path.dirname(os.path.abspath(__file__)), "artifacts")
+MODELS = os.path.join(ART, "models")
+RESULTS = os.path.join(ART, "results")
+
+
+# ---------------------------------------------------------------------------
+# Model zoo (train once, cache on disk)
+# ---------------------------------------------------------------------------
+
+def zoo_config(name: str):
+    import dataclasses as dc
+    if name == "dit":
+        cfg = dc.replace(reduced(get_config("dit-xl2")), num_layers=4,
+                         d_model=128, d_ff=512, num_heads=4, num_kv_heads=4,
+                         num_classes=8)
+        dcfg = DiffusionConfig(num_inference_steps=50, latent_size=16,
+                               schedule="cosine")
+        tcfg = TrainConfig(global_batch=16, steps=300, lr=2e-3)
+    elif name == "flux":
+        cfg = dc.replace(reduced(get_config("flux-like")), num_layers=4,
+                         d_model=128, d_ff=512, num_heads=4, num_kv_heads=4,
+                         in_channels=4, cond_dim=32, num_classes=8)
+        dcfg = DiffusionConfig(num_inference_steps=50, latent_size=16,
+                               schedule="rectified_flow")
+        tcfg = TrainConfig(global_batch=16, steps=300, lr=2e-3)
+    elif name == "video":
+        cfg = dc.replace(reduced(get_config("hunyuan-video-like")),
+                         num_layers=3, d_model=96, d_ff=384, num_heads=4,
+                         num_kv_heads=4, in_channels=4, cond_dim=32,
+                         num_classes=8)
+        dcfg = DiffusionConfig(num_inference_steps=50, latent_size=8,
+                               schedule="rectified_flow", num_frames=4)
+        tcfg = TrainConfig(global_batch=8, steps=250, lr=2e-3)
+    else:
+        raise KeyError(name)
+    return cfg, dcfg, tcfg
+
+
+def _video_batch(cfg, dcfg, indices):
+    """Class-conditional video latents: spatial pattern drifting per frame."""
+    data_cfg = syn.GMLatentConfig(num_classes=max(cfg.num_classes, 1),
+                                  latent_size=dcfg.latent_size,
+                                  channels=cfg.in_channels)
+    base = syn.gm_latent_batch(data_cfg, indices)
+    lat = base["latents"]                       # [B, H, W, C]
+    frames = []
+    for f in range(dcfg.num_frames):
+        frames.append(jnp.roll(lat, shift=f, axis=2) * (1.0 - 0.05 * f))
+    return {"latents": jnp.stack(frames, axis=1), "labels": base["labels"]}
+
+
+def get_model(name: str, *, verbose: bool = True):
+    """Returns (cfg, dcfg, params), training + caching on first use."""
+    cfg, dcfg, tcfg = zoo_config(name)
+    path = os.path.join(MODELS, name)
+    key = jax.random.PRNGKey(0)
+    template = jax.eval_shape(lambda: M.init_params(cfg, key))
+    if os.path.isdir(path):
+        params = restore_checkpoint(
+            path, jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                               template))
+        return cfg, dcfg, params
+    if verbose:
+        print(f"[zoo] training {name} ({tcfg.steps} steps)...")
+    if name == "video":
+        params = _train_video(cfg, dcfg, tcfg)
+    else:
+        out = train_diffusion(cfg, dcfg, tcfg, verbose=verbose)
+        params = out["state"]["params"]
+    save_checkpoint(path, params, step=tcfg.steps)
+    return cfg, dcfg, params
+
+
+def _train_video(cfg, dcfg, tcfg):
+    from repro.optim.adamw import (AdamWConfig, cosine_warmup_schedule,
+                                   init_opt_state)
+    from repro.training.diffusion_trainer import diffusion_train_step
+    key = jax.random.PRNGKey(tcfg.seed)
+    params = M.init_params(cfg, jax.random.fold_in(key, 1))
+    opt = AdamWConfig(lr=tcfg.lr)
+    state = {"params": params, "opt": init_opt_state(params),
+             "step": jnp.zeros((), jnp.int32)}
+    step_fn = jax.jit(partial(diffusion_train_step, cfg, dcfg, opt))
+    sched = cosine_warmup_schedule(tcfg.warmup, tcfg.steps)
+    for step in range(tcfg.steps):
+        idx = jnp.arange(step * tcfg.global_batch,
+                         (step + 1) * tcfg.global_batch)
+        batch = _video_batch(cfg, dcfg, idx)
+        if cfg.cond_dim:
+            batch["cond"] = syn.cond_stub_batch(
+                tcfg.global_batch, 8, cfg.cond_dim, idx)
+        state, _ = step_fn(state, batch, jax.random.fold_in(key, step),
+                           sched(step))
+    return state["params"]
+
+
+def make_cond(cfg, dcfg, batch: int, seed: int = 123) -> Dict[str, Any]:
+    cond: Dict[str, Any] = {}
+    key = jax.random.PRNGKey(seed)
+    if cfg.num_classes:
+        cond["labels"] = jax.random.randint(key, (batch,), 0,
+                                            cfg.num_classes)
+    if cfg.cond_dim:
+        cond["cond"] = syn.cond_stub_batch(
+            batch, 8, cfg.cond_dim, jnp.arange(seed, seed + batch))
+    return cond
+
+
+# ---------------------------------------------------------------------------
+# Quality proxies
+# ---------------------------------------------------------------------------
+
+def rel_dev(x, x_ref) -> float:
+    return float(jnp.linalg.norm(x - x_ref) / jnp.linalg.norm(x_ref))
+
+
+def _gauss_fit(x: np.ndarray, ridge: float = 1e-3):
+    mu = x.mean(0)
+    xc = x - mu
+    cov = xc.T @ xc / max(len(x) - 1, 1) + ridge * np.eye(x.shape[1])
+    return mu, cov
+
+
+def frechet(gen, ref, ridge: float = 1e-3) -> float:
+    """FID-proxy: Fréchet distance between Gaussian fits (no scipy —
+    matrix square roots via eigendecomposition)."""
+    g = np.asarray(gen, np.float64).reshape(len(gen), -1)
+    r = np.asarray(ref, np.float64).reshape(len(ref), -1)
+    mu_g, cov_g = _gauss_fit(g, ridge)
+    mu_r, cov_r = _gauss_fit(r, ridge)
+    diff = float(((mu_g - mu_r) ** 2).sum())
+    # tr(Cg + Cr − 2·(Cg^{1/2} Cr Cg^{1/2})^{1/2}) via eigendecomposition
+    w, v = np.linalg.eigh(cov_g)
+    w = np.clip(w, 0, None)
+    sq = (v * np.sqrt(w)) @ v.T
+    inner = sq @ cov_r @ sq
+    wi = np.clip(np.linalg.eigvalsh(inner), 0, None)
+    tr = float(np.trace(cov_g) + np.trace(cov_r) - 2 * np.sqrt(wi).sum())
+    return diff + max(tr, 0.0)
+
+
+def class_templates(cfg, dcfg) -> np.ndarray:
+    data_cfg = syn.GMLatentConfig(num_classes=max(cfg.num_classes, 1),
+                                  latent_size=dcfg.latent_size,
+                                  channels=cfg.in_channels, noise_scale=0.0)
+    out = []
+    for c in range(data_cfg.num_classes):
+        out.append(np.asarray(syn._class_pattern(data_cfg,
+                                                 jnp.asarray(c))))
+    return np.stack(out)
+
+
+def cond_score(gen: np.ndarray, labels: np.ndarray, templates: np.ndarray
+               ) -> float:
+    """Mean cosine(generated latent, class template) — CLIP/reward proxy."""
+    sims = []
+    for x, lab in zip(gen, labels):
+        if x.ndim == 4:     # video: average frames
+            x = x.mean(0)
+        t = templates[int(lab)].reshape(-1)
+        xf = np.asarray(x, np.float64).reshape(-1)
+        sims.append(float(xf @ t / (np.linalg.norm(xf) * np.linalg.norm(t)
+                                    + 1e-9)))
+    return float(np.mean(sims))
+
+
+def temporal_consistency(gen: np.ndarray) -> float:
+    """Mean adjacent-frame correlation (video). gen [B,F,H,W,C]."""
+    sims = []
+    for x in gen:
+        for f in range(x.shape[0] - 1):
+            a = x[f].reshape(-1)
+            b = x[f + 1].reshape(-1)
+            sims.append(float(a @ b / (np.linalg.norm(a) * np.linalg.norm(b)
+                                       + 1e-9)))
+    return float(np.mean(sims))
+
+
+def reference_latents(cfg, dcfg, n: int = 64) -> np.ndarray:
+    data_cfg = syn.GMLatentConfig(num_classes=max(cfg.num_classes, 1),
+                                  latent_size=dcfg.latent_size,
+                                  channels=cfg.in_channels)
+    batch = syn.gm_latent_batch(data_cfg, jnp.arange(50_000, 50_000 + n))
+    return np.asarray(batch["latents"])
+
+
+# ---------------------------------------------------------------------------
+# Method runner + accounting
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class MethodResult:
+    name: str
+    samples: np.ndarray
+    num_full: int
+    num_spec: int
+    steps: int
+    flops: float
+    speedup: float
+    wall_s: float
+    alpha: float
+    extra: Dict[str, float] = dataclasses.field(default_factory=dict)
+
+
+def run_method(name: str, cfg, dcfg, params, cond, batch: int, key,
+               **kw) -> MethodResult:
+    """name: full | steps_<frac> | fora_<N> | taylorseer_<N>_<O> |
+    teacache_<l> | ab2_<N> | speca_<tau0>[_<draft>]"""
+    n_tok = (dcfg.latent_size // cfg.patch_size) ** 2 \
+        * max(dcfg.num_frames, 1)
+    full_flops = CX.forward_flops(cfg, n_tok) * batch
+    ver_flops = CX.verify_flops(cfg, n_tok) * batch
+    S = dcfg.num_inference_steps
+    t0 = time.time()
+
+    if name == "full":
+        x, _ = jax.jit(lambda k: sample_full(cfg, params, dcfg, k, cond,
+                                             batch))(key)
+        x = jax.block_until_ready(x)
+        fl = S * full_flops
+        return MethodResult(name, np.asarray(x), S, 0, S, fl, 1.0,
+                            time.time() - t0, 0.0)
+
+    parts = name.split("_")
+    kind = parts[0]
+    if kind == "steps":
+        frac = float(parts[1])
+        x, st = step_reduction_sample(cfg, params, dcfg, frac, key, cond,
+                                      batch)
+        x = jax.block_until_ready(x)
+        fl = st["num_steps"] * full_flops
+        return MethodResult(name, np.asarray(x), st["num_steps"], 0,
+                            st["num_steps"], fl, S * full_flops / fl,
+                            time.time() - t0, 0.0)
+
+    if kind == "speca":
+        tau0 = float(parts[1])
+        draft = parts[2] if len(parts) > 2 else "taylor"
+        scfg = kw.pop("scfg", None) or SpeCaConfig(
+            taylor_order=2, max_draft=8, tau0=tau0, beta=0.9, **kw)
+        x, st = jax.jit(lambda k: speca_sample(
+            cfg, params, dcfg, scfg, k, cond, batch,
+            draft_mode=draft))(key)
+        x = jax.block_until_ready(x)
+        nf, nsp = int(st["num_full"]), int(st["num_spec"])
+        fl = nf * full_flops + int(st["num_attempted"]) * ver_flops
+        return MethodResult(name, np.asarray(x), nf, nsp, S, fl,
+                            S * full_flops / fl, time.time() - t0,
+                            float(st["alpha"]),
+                            extra={"attempted": int(st["num_attempted"])})
+
+    if kind == "fora":
+        policy = fora(int(parts[1]))
+    elif kind == "taylorseer":
+        policy = taylorseer(int(parts[1]),
+                            int(parts[2]) if len(parts) > 2 else 2)
+    elif kind == "ab2":
+        policy = ab2(int(parts[1]))
+    elif kind == "teacache":
+        policy = teacache(float(parts[1]))
+    else:
+        raise KeyError(name)
+    x, st = jax.jit(lambda k: cached_sample(cfg, params, dcfg, policy, k,
+                                            cond, batch))(key)
+    x = jax.block_until_ready(x)
+    nf = int(st["num_full"])
+    # non-verifying policies pay only the draft glue on predicted steps
+    glue = CX.glue_flops(cfg, n_tok) * batch
+    fl = nf * full_flops + (S - nf) * glue
+    return MethodResult(name, np.asarray(x), nf, S - nf, S, fl,
+                        S * full_flops / fl, time.time() - t0,
+                        float(st["alpha"]))
+
+
+def evaluate(res: MethodResult, x_full: np.ndarray, cfg, dcfg, cond,
+             templates, ref: Optional[np.ndarray]) -> Dict[str, float]:
+    out = {
+        "method": res.name,
+        "steps_full": res.num_full,
+        "steps_spec": res.num_spec,
+        "alpha": round(res.alpha, 4),
+        "tflops": round(res.flops / 1e12, 6),
+        "speedup_flops": round(res.speedup, 3),
+        "wall_s": round(res.wall_s, 2),
+        "rel_dev": round(rel_dev(jnp.asarray(res.samples),
+                                 jnp.asarray(x_full)), 5),
+    }
+    if cfg.num_classes and "labels" in cond:
+        out["cond_score"] = round(
+            cond_score(res.samples, np.asarray(cond["labels"]), templates), 5)
+    if ref is not None and res.samples.ndim == 4:
+        out["fid_proxy"] = round(frechet(res.samples, ref), 4)
+    if res.samples.ndim == 5:
+        out["temporal"] = round(temporal_consistency(res.samples), 5)
+    return out
+
+
+def write_result(table: str, rows: List[Dict[str, Any]]) -> str:
+    os.makedirs(RESULTS, exist_ok=True)
+    path = os.path.join(RESULTS, f"{table}.json")
+    with open(path, "w") as f:
+        json.dump(rows, f, indent=1)
+    return path
+
+
+def print_table(title: str, rows: List[Dict[str, Any]]) -> None:
+    if not rows:
+        return
+    cols = list(rows[0].keys())
+    print(f"\n== {title} ==")
+    print(",".join(cols))
+    for r in rows:
+        print(",".join(str(r.get(c, "")) for c in cols))

@@ -1,0 +1,74 @@
+"""§Perf before/after: baseline vs optimized dry-run artifacts.
+
+Compares ``artifacts/dryrun_baseline/*_cal.json`` (pre-optimization,
+paper-faithful sharding) against ``artifacts/dryrun/*_cal.json`` (after
+the EXPERIMENTS.md §Perf iterations) for every (arch × shape).
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+ART = os.path.join(os.path.dirname(os.path.abspath(__file__)), "artifacts")
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+
+def _load(dirname):
+    out = {}
+    for p in glob.glob(os.path.join(ART, dirname, "*_cal.json")):
+        r = json.load(open(p))
+        out[(r["arch"].replace("+swa", ""), r["shape"])] = r
+    return out
+
+
+def run():
+    base = _load("dryrun_baseline")
+    opt = _load("dryrun")
+    rows = []
+    for key in sorted(base):
+        if key not in opt:
+            continue
+        b, o = base[key], opt[key]
+
+        def term(r):
+            return max(r["flops_per_device_corrected"] / PEAK_FLOPS,
+                       r["bytes_per_device_corrected"] / HBM_BW,
+                       r["collective_wire_bytes_corrected"] / ICI_BW)
+
+        tb, to = term(b), term(o)
+        rows.append({
+            "arch": key[0], "shape": key[1],
+            "bound_s_before": f"{tb:.3e}",
+            "bound_s_after": f"{to:.3e}",
+            "speedup": round(tb / max(to, 1e-12), 2),
+            "flops_ratio": round(
+                b["flops_per_device_corrected"]
+                / max(o["flops_per_device_corrected"], 1), 2),
+            "bytes_ratio": round(
+                b["bytes_per_device_corrected"]
+                / max(o["bytes_per_device_corrected"], 1), 2),
+            "wire_ratio": round(min(
+                b["collective_wire_bytes_corrected"]
+                / max(o["collective_wire_bytes_corrected"], 1), 999.0), 2),
+            "kind": b["kind"],
+        })
+    from benchmarks import common as C
+    C.print_table("perf before/after (dominant roofline term, per step)",
+                  rows)
+    C.write_result("perf_before_after", rows)
+    if rows:
+        import statistics
+        for kind in ("train", "prefill", "decode"):
+            sp = [r["speedup"] for r in rows if r["kind"] == kind]
+            if sp:
+                print(f"{kind:8s}: median {statistics.median(sp):.2f}× "
+                      f" max {max(sp):.2f}×  min {min(sp):.2f}×")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

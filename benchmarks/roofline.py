@@ -1,0 +1,127 @@
+"""§Roofline: three-term roofline per (arch × shape) from dry-run artifacts.
+
+  compute term    = HLO_FLOPs/device ÷ 197 TFLOP/s (bf16, v5e)
+  memory term     = HLO_bytes/device ÷ 819 GB/s HBM
+  collective term = wire_bytes/device ÷ 50 GB/s/link ICI
+
+Everything reads the JSON artifacts produced by ``repro.launch.dryrun``
+(single-pod 16×16 for the table; the 2×16×16 pass is a lowering proof).
+MODEL_FLOPS = 6·N_active·D (train, fwd+bwd) or 2·N_active·D (inference);
+the ratio MODEL_FLOPS/HLO_FLOPs flags remat/redundancy waste.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List
+
+from repro.configs import get_config
+from repro.core.complexity import model_flops_6nd
+
+PEAK_FLOPS = 197e12      # bf16 / chip
+HBM_BW = 819e9           # B/s
+ICI_BW = 50e9            # B/s per link
+
+ART = os.path.join(os.path.dirname(os.path.abspath(__file__)), "artifacts",
+                   "dryrun")
+
+
+def _advice(dominant: str, rec: Dict) -> str:
+    arch = rec["arch"]
+    kind = rec["kind"]
+    if dominant == "memory":
+        if kind == "decode":
+            return ("decode is KV/weight-streaming bound: quantise the "
+                    "cache to int8/fp8 or shrink windowed layers' caches")
+        return ("fuse/block the attention reads (flash kernel) and keep "
+                "the residual stream in bf16 to cut HBM traffic")
+    if dominant == "collective":
+        if "moe" in get_config(arch).arch_type:
+            return ("expert-parallel all-to-all dominates: overlap dispatch "
+                    "with expert GEMMs or switch to 2D expert+data sharding")
+        return ("shrink TP-boundary all-reduces: reduce-scatter + all-gather "
+                "(sequence sharding) or overlap collectives with compute")
+    return ("compute-bound (good); raise per-chip utilisation via larger "
+            "per-device batch or fewer, larger matmuls")
+
+
+def load_records(mesh: str = "pod16x16") -> List[Dict]:
+    """Full-L artifacts, with scan-corrected metrics merged in when the
+    calibrated (L=1/L=2 extrapolation) artifact exists — XLA counts a
+    scan body once, so the corrected numbers are the real roofline inputs."""
+    recs = []
+    for path in sorted(glob.glob(os.path.join(ART, f"*_{mesh}.json"))):
+        if path.endswith("_cal.json"):
+            continue
+        with open(path) as f:
+            rec = json.load(f)
+        cal_path = path.replace(".json", "_cal.json")
+        if os.path.exists(cal_path):
+            with open(cal_path) as f:
+                cal = json.load(f)
+            rec["flops_per_device"] = cal["flops_per_device_corrected"]
+            rec["bytes_per_device"] = cal["bytes_per_device_corrected"]
+            rec["collective_wire_bytes_per_device"] = \
+                cal["collective_wire_bytes_corrected"]
+            rec["scan_corrected"] = True
+        else:
+            rec["scan_corrected"] = False
+        recs.append(rec)
+    return recs
+
+
+def roofline_rows(mesh: str = "pod16x16") -> List[Dict]:
+    rows = []
+    for rec in load_records(mesh):
+        arch = rec["arch"]
+        cfg = get_config(arch)
+        t_c = rec["flops_per_device"] / PEAK_FLOPS
+        t_m = rec["bytes_per_device"] / HBM_BW
+        t_n = rec["collective_wire_bytes_per_device"] / ICI_BW
+        terms = {"compute": t_c, "memory": t_m, "collective": t_n}
+        dominant = max(terms, key=terms.get)
+        # useful model FLOPs per device: 6·N_active·tokens for training
+        # (fwd+bwd), 2·N_active·tokens for inference forwards
+        tokens = rec["seq_len"] * rec["global_batch"] if rec["kind"] != \
+            "decode" else rec["global_batch"]
+        per_tok = 6.0 if rec["kind"] == "train" else 2.0
+        mf = per_tok * cfg.active_param_count() * tokens
+        mf_dev = mf / rec["num_devices"]
+        ratio = mf_dev / max(rec["flops_per_device"], 1.0)
+        rows.append({
+            "arch": arch,
+            "shape": rec["shape"],
+            "kind": rec["kind"],
+            "compute_s": f"{t_c:.3e}",
+            "memory_s": f"{t_m:.3e}",
+            "collective_s": f"{t_n:.3e}",
+            "dominant": dominant,
+            "bound_s": f"{max(terms.values()):.3e}",
+            "model_flops_ratio": f"{ratio:.3f}",
+            "temp_GiB": round(rec["memory"]["temp_bytes"] / 2**30, 2),
+            "fits_16G": rec["memory"]["temp_bytes"] / 2**30 < 16.0,
+            "scan_corrected": rec["scan_corrected"],
+            "advice": _advice(dominant, rec),
+        })
+    return rows
+
+
+def run(mesh: str = "pod16x16"):
+    rows = roofline_rows(mesh)
+    from benchmarks import common as C
+    C.print_table(f"roofline ({mesh}, v5e constants)", rows)
+    C.write_result(f"roofline_{mesh}", rows)
+    # interesting-pair selection for the perf loop
+    if rows:
+        worst = min(rows, key=lambda r: float(r["model_flops_ratio"]))
+        coll = max(rows, key=lambda r: float(r["collective_s"]))
+        print(f"\nworst model-FLOPs ratio: {worst['arch']} × "
+              f"{worst['shape']} ({worst['model_flops_ratio']})")
+        print(f"most collective-bound:  {coll['arch']} × {coll['shape']} "
+              f"({coll['collective_s']}s)")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

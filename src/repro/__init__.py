@@ -1,0 +1,3 @@
+"""repro: SpeCa (speculative feature caching for diffusion transformers)
+reproduced as a production-grade multi-pod JAX framework."""
+__version__ = "0.1.0"

@@ -1,0 +1,2 @@
+from repro.checkpoint.io import (checkpoint_step,  # noqa: F401
+                                 restore_checkpoint, save_checkpoint)

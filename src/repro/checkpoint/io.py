@@ -1,0 +1,83 @@
+"""Sharding-aware pytree checkpointing: npz leaves + json manifest.
+
+No orbax dependency: each leaf is stored under a stable path-derived key in
+a single ``.npz``; the manifest records the treedef, dtypes and shapes so a
+restore can validate against (and re-shard onto) the live mesh.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _flatten_with_paths(tree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    out = {}
+    for path, leaf in flat:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        out[key] = leaf
+    return out, treedef
+
+
+def save_checkpoint(path: str, tree: Any, step: int = 0,
+                    extra: Optional[Dict] = None) -> None:
+    os.makedirs(path, exist_ok=True)
+    leaves, _ = _flatten_with_paths(tree)
+    arrays = {}
+    dtypes = {}
+    for k, v in leaves.items():
+        a = np.asarray(jax.device_get(v))
+        dtypes[k] = str(a.dtype)
+        if a.dtype.kind not in "biufc":   # ml_dtypes (bf16, fp8): upcast
+            a = a.astype(np.float32)      # lossless for bf16
+        arrays[k] = a
+    np.savez(os.path.join(path, "arrays.npz"), **arrays)
+    manifest = {
+        "step": step,
+        "extra": extra or {},
+        "leaves": {k: {"shape": list(v.shape), "dtype": dtypes[k]}
+                   for k, v in arrays.items()},
+    }
+    with open(os.path.join(path, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+
+
+def restore_checkpoint(path: str, like: Any, *, shardings: Any = None
+                       ) -> Any:
+    """Restore into the structure of ``like`` (values replaced)."""
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    data = np.load(os.path.join(path, "arrays.npz"))
+    leaves, treedef = _flatten_with_paths(like)
+    restored = {}
+    for key, ref in leaves.items():
+        if key not in data:
+            raise KeyError(f"checkpoint missing leaf {key!r}")
+        arr = data[key]
+        want = manifest["leaves"][key]
+        if list(arr.shape) != list(np.asarray(ref).shape):
+            raise ValueError(
+                f"shape mismatch for {key}: ckpt {arr.shape} vs "
+                f"model {np.asarray(ref).shape}")
+        restored[key] = jnp.asarray(arr, dtype=jnp.dtype(want["dtype"]))
+    flat, _ = jax.tree_util.tree_flatten_with_path(like)
+    ordered = []
+    for path_, _leaf in flat:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path_)
+        ordered.append(restored[key])
+    tree = jax.tree_util.tree_unflatten(treedef, ordered)
+    if shardings is not None:
+        tree = jax.tree.map(jax.device_put, tree, shardings)
+    return tree
+
+
+def checkpoint_step(path: str) -> int:
+    with open(os.path.join(path, "manifest.json")) as f:
+        return json.load(f)["step"]

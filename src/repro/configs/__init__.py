@@ -1,0 +1,74 @@
+"""Config registry — ``get_config(arch_id)`` resolves ``--arch`` ids."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List
+
+from repro.configs.base import (DiffusionConfig, MeshConfig, ModelConfig,
+                                ShapeConfig, SpeCaConfig, TrainConfig,
+                                reduced)
+from repro.configs.shapes import SHAPES, get_shape
+
+from repro.configs.granite_moe_1b_a400m import CONFIG as _granite_moe
+from repro.configs.llama3_8b import CONFIG as _llama3
+from repro.configs.mamba2_130m import CONFIG as _mamba2
+from repro.configs.qwen2_vl_72b import CONFIG as _qwen2vl
+from repro.configs.gemma3_27b import CONFIG as _gemma3
+from repro.configs.hymba_1_5b import CONFIG as _hymba
+from repro.configs.qwen1_5_0_5b import CONFIG as _qwen15
+from repro.configs.mixtral_8x7b import CONFIG as _mixtral
+from repro.configs.granite_20b import CONFIG as _granite20b
+from repro.configs.musicgen_medium import CONFIG as _musicgen
+from repro.configs.dit_xl2 import CONFIG as _dit
+from repro.configs.flux_like import CONFIG as _flux
+from repro.configs.hunyuan_video_like import CONFIG as _hunyuan
+
+# The 10 assigned architectures (public pool) + the paper's own 3 models.
+ASSIGNED: Dict[str, ModelConfig] = {
+    c.name: c for c in (
+        _granite_moe, _llama3, _mamba2, _qwen2vl, _gemma3,
+        _hymba, _qwen15, _mixtral, _granite20b, _musicgen,
+    )
+}
+PAPER_ARCHS: Dict[str, ModelConfig] = {
+    c.name: c for c in (_dit, _flux, _hunyuan)
+}
+REGISTRY: Dict[str, ModelConfig] = {**ASSIGNED, **PAPER_ARCHS}
+
+# Pure-full-attention assigned archs run long_500k only under the opt-in
+# sliding-window variant (DESIGN.md §4): "<arch>+swa".
+SUBQUADRATIC = {"mamba2-130m", "hymba-1.5b", "gemma3-27b", "mixtral-8x7b"}
+SWA_FALLBACK_WINDOW = 4096
+
+
+def get_config(arch: str) -> ModelConfig:
+    """Resolve an ``--arch`` id, including the ``+swa`` variant suffix."""
+    if arch.endswith("+swa"):
+        base = get_config(arch[: -len("+swa")])
+        return dataclasses.replace(base, attn_window=SWA_FALLBACK_WINDOW,
+                                   global_every=0,
+                                   name=base.name + "+swa")
+    if arch not in REGISTRY:
+        raise KeyError(
+            f"unknown arch {arch!r}; available: {sorted(REGISTRY)}")
+    return REGISTRY[arch]
+
+
+def list_archs() -> List[str]:
+    return sorted(REGISTRY)
+
+
+def long_context_arch(arch: str) -> str:
+    """Arch id to use for the long_500k shape (DESIGN.md §4)."""
+    cfg = get_config(arch)
+    if arch in SUBQUADRATIC or cfg.arch_type == "ssm":
+        return arch
+    return arch + "+swa"
+
+
+__all__ = [
+    "ASSIGNED", "PAPER_ARCHS", "REGISTRY", "SHAPES", "SUBQUADRATIC",
+    "DiffusionConfig", "MeshConfig", "ModelConfig", "ShapeConfig",
+    "SpeCaConfig", "TrainConfig", "get_config", "get_shape", "list_archs",
+    "long_context_arch", "reduced",
+]

@@ -1,0 +1,262 @@
+"""Configuration dataclasses for the repro framework.
+
+Every architecture in the assigned pool is described by a single
+:class:`ModelConfig`. The unified backbone (``repro.layers.model``) consumes
+these fields; arch-specific behaviour (MoE, SSM, hybrid, windowed attention,
+M-RoPE, multi-codebook audio heads, diffusion AdaLN conditioning) is switched
+on by the corresponding fields rather than by subclassing, so that every
+config is a plain, serialisable record.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Static architecture description.
+
+    ``arch_type`` is one of: ``dense``, ``moe``, ``ssm``, ``hybrid``,
+    ``vlm``, ``audio``, ``dit`` (diffusion transformer).
+    """
+
+    name: str
+    arch_type: str
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0  # 0 -> d_model // num_heads
+    # --- attention pattern ---
+    attn_window: int = 0          # 0 = full attention; >0 = sliding window
+    global_every: int = 0         # gemma3-style: every Nth layer is global
+    qkv_bias: bool = False
+    rope_theta: float = 10_000.0
+    mrope_sections: Tuple[int, ...] = ()   # qwen2-vl M-RoPE (t, h, w) splits
+    # --- MoE ---
+    num_experts: int = 0
+    num_experts_per_tok: int = 0
+    moe_aux_loss_weight: float = 0.01
+    moe_capacity_factor: float = 1.25
+    # --- SSM (mamba2 SSD) ---
+    ssm_state: int = 0
+    ssm_heads: int = 0            # 0 -> derived: d_inner // ssm_head_dim
+    ssm_head_dim: int = 64
+    ssm_expand: int = 2
+    ssm_conv: int = 4
+    ssm_chunk: int = 64
+    # --- audio (musicgen-style multi-codebook) ---
+    num_codebooks: int = 0
+    # --- vlm / frontend stub ---
+    frontend_tokens: int = 0      # number of stub patch/frame embeddings
+    frontend_dim: int = 0
+    # --- norm / act ---
+    norm_eps: float = 1e-5
+    act: str = "silu"             # silu (swiglu) | gelu
+    tie_embeddings: bool = False
+    # --- diffusion (dit mode) ---
+    is_diffusion: bool = False
+    patch_size: int = 2
+    in_channels: int = 4
+    num_classes: int = 0          # class-conditional diffusion
+    cond_dim: int = 0             # continuous conditioning (text-embed stub)
+    # --- misc ---
+    dtype: str = "bfloat16"
+    source: str = ""              # citation for the assigned config
+
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim or (self.d_model // max(self.num_heads, 1))
+
+    @property
+    def padded_vocab(self) -> int:
+        """Vocab rounded up to a TP-shardable multiple (perf iteration
+        A/E5): unshardable vocabs (49155, 32001, 50280…) otherwise force
+        either a 12.9 GB logits all-reduce (D-sharded embedding) or
+        replicated-head compute. Padding columns are masked to −inf in
+        ``lm_logits``; labels never index them."""
+        if self.vocab_size == 0:
+            return 0
+        return ((self.vocab_size + 255) // 256) * 256
+
+    @property
+    def is_moe(self) -> bool:
+        return self.num_experts > 0
+
+    @property
+    def is_ssm(self) -> bool:
+        return self.arch_type == "ssm"
+
+    @property
+    def is_hybrid(self) -> bool:
+        return self.arch_type == "hybrid"
+
+    @property
+    def has_attention(self) -> bool:
+        return self.arch_type != "ssm"
+
+    @property
+    def ssm_d_inner(self) -> int:
+        return self.ssm_expand * self.d_model
+
+    @property
+    def resolved_ssm_heads(self) -> int:
+        if self.ssm_heads:
+            return self.ssm_heads
+        return max(self.ssm_d_inner // self.ssm_head_dim, 1)
+
+    @property
+    def jnp_dtype(self):
+        return jnp.dtype(self.dtype)
+
+    def layer_window(self, layer_idx: int) -> int:
+        """Effective attention window for a layer (0 = global/full)."""
+        if self.attn_window <= 0:
+            return 0
+        if self.global_every > 0 and (layer_idx + 1) % self.global_every == 0:
+            return 0  # global layer in a local:global pattern
+        return self.attn_window
+
+    def param_count(self) -> int:
+        """Approximate parameter count (embeddings + blocks + head)."""
+        d, L = self.d_model, self.num_layers
+        hd = self.resolved_head_dim
+        n = self.vocab_size * d  # embed
+        if not self.tie_embeddings:
+            n += self.vocab_size * d  # lm head
+        per_layer = 0
+        if self.has_attention:
+            per_layer += d * self.num_heads * hd            # q
+            per_layer += 2 * d * self.num_kv_heads * hd     # k, v
+            per_layer += self.num_heads * hd * d            # o
+        if self.is_moe:
+            per_layer += d * self.num_experts               # router
+            per_layer += self.num_experts * 3 * d * self.d_ff
+        elif self.d_ff > 0:
+            mult = 3 if self.act == "silu" else 2
+            per_layer += mult * d * self.d_ff
+        if self.is_ssm or self.is_hybrid:
+            di, ns = self.ssm_d_inner, self.ssm_state
+            nh = self.resolved_ssm_heads
+            per_layer += d * (2 * di + 2 * ns * nh + nh)    # in_proj(x,z)+B,C,dt
+            per_layer += di * d                              # out_proj
+            per_layer += (di + 2 * ns * nh) * self.ssm_conv  # conv
+        per_layer += 2 * d  # norms
+        n += L * per_layer
+        return n
+
+    def active_param_count(self) -> int:
+        """Parameters active per token (MoE: top-k experts only)."""
+        if not self.is_moe:
+            return self.param_count()
+        full = self.param_count()
+        inactive = (self.num_experts - self.num_experts_per_tok)
+        inactive_ff = self.num_layers * inactive * 3 * self.d_model * self.d_ff
+        return full - inactive_ff
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    """One assigned input shape (workload)."""
+
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # train | prefill | decode
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshConfig:
+    shape: Tuple[int, ...] = (16, 16)
+    axes: Tuple[str, ...] = ("data", "model")
+
+    @property
+    def num_devices(self) -> int:
+        n = 1
+        for s in self.shape:
+            n *= s
+        return n
+
+    @property
+    def data_axes(self) -> Tuple[str, ...]:
+        return tuple(a for a in self.axes if a in ("pod", "data"))
+
+
+@dataclasses.dataclass(frozen=True)
+class SpeCaConfig:
+    """Paper hyper-parameters (§3.4, Appendix B)."""
+
+    taylor_order: int = 2          # m in eq. (2)
+    interval: int = 4              # N: forced full-compute period upper bound
+    max_draft: int = 8             # K: max consecutive speculative steps
+    tau0: float = 0.3              # base threshold τ0
+    beta: float = 0.9              # decay β in τ_t = τ0 · β^((T−t)/T)
+    verify_layer: int = -1         # block index verified each draft step
+    error_metric: str = "rel_l2"   # rel_l2 | rel_l1 | rel_linf | cosine
+    eps: float = 1e-8              # ε in eq. (4)
+    per_sample: bool = True        # sample-adaptive allocation (§1, bullet 2)
+
+
+@dataclasses.dataclass(frozen=True)
+class DiffusionConfig:
+    num_train_timesteps: int = 1000
+    num_inference_steps: int = 50
+    schedule: str = "cosine"       # linear | cosine | rectified_flow
+    prediction: str = "epsilon"    # epsilon | v | flow
+    latent_size: int = 32          # spatial latent H=W
+    guidance_scale: float = 1.0
+    num_frames: int = 1            # >1 => video (3D tokens)
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    seq_len: int = 1024
+    global_batch: int = 8
+    steps: int = 200
+    lr: float = 3e-4
+    warmup: int = 20
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    seed: int = 0
+    log_every: int = 20
+
+
+def reduced(cfg: ModelConfig, *, layers: int = 2, d_model: int = 256,
+            d_ff: int = 0, vocab: int = 512, experts: int = 0,
+            heads: int = 0) -> ModelConfig:
+    """Smoke-test variant of the same family (≤2 layers, d_model ≤ 512)."""
+    num_heads = heads or max(min(cfg.num_heads, 4), 1)
+    ratio = max(cfg.num_heads // max(cfg.num_kv_heads, 1), 1)
+    num_kv = max(num_heads // ratio, 1)
+    changes = dict(
+        num_layers=layers,
+        d_model=d_model,
+        num_heads=num_heads,
+        num_kv_heads=num_kv,
+        d_ff=d_ff or (d_model * 2 if cfg.d_ff else 0),
+        vocab_size=min(cfg.vocab_size, vocab),
+        head_dim=d_model // num_heads if cfg.has_attention else 0,
+        attn_window=min(cfg.attn_window, 64) if cfg.attn_window else 0,
+        global_every=min(cfg.global_every, 2) if cfg.global_every else 0,
+        dtype="float32",
+    )
+    if cfg.is_moe:
+        changes["num_experts"] = experts or min(cfg.num_experts, 4)
+        changes["num_experts_per_tok"] = min(cfg.num_experts_per_tok, 2)
+        changes["moe_capacity_factor"] = 4.0  # deterministic small-scale tests
+    if cfg.is_ssm or cfg.is_hybrid:
+        changes["ssm_state"] = min(cfg.ssm_state, 16)
+        changes["ssm_head_dim"] = 32
+        changes["ssm_chunk"] = 16
+    if cfg.mrope_sections:
+        hd = changes["head_dim"]
+        changes["mrope_sections"] = (hd // 2 - 2 * (hd // 8), hd // 8, hd // 8)
+    if cfg.frontend_tokens:
+        changes["frontend_tokens"] = 16
+        changes["frontend_dim"] = d_model
+    return dataclasses.replace(cfg, **changes)

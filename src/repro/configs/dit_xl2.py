@@ -1,0 +1,23 @@
+"""DiT-XL/2 — the paper's class-conditional image model. [arXiv:2212.09748]
+
+28 layers, d_model=1152, 16 heads, patch 2, ImageNet class conditioning.
+SpeCa verifies layer 27 (last) by default (paper Fig. 6 / Table 6).
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="dit-xl2",
+    arch_type="dit",
+    num_layers=28,
+    d_model=1152,
+    num_heads=16,
+    num_kv_heads=16,
+    d_ff=4608,
+    vocab_size=0,
+    act="gelu",
+    is_diffusion=True,
+    patch_size=2,
+    in_channels=4,
+    num_classes=1000,
+    source="arXiv:2212.09748 (paper's own model)",
+)

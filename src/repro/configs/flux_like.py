@@ -1,0 +1,25 @@
+"""FLUX.1-dev-like rectified-flow DiT. [github:black-forest-labs/flux]
+
+The real FLUX is a 12B dual-stream MMDiT; we model the single-stream-
+equivalent backbone with text-conditioning via a continuous embedding stub
+(the T5/CLIP encoders are frontends outside the paper's contribution).
+Rectified-flow sampling, 50 steps (paper §4.1).
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="flux-like",
+    arch_type="dit",
+    num_layers=38,
+    d_model=3072,
+    num_heads=24,
+    num_kv_heads=24,
+    d_ff=12288,
+    vocab_size=0,
+    act="gelu",
+    is_diffusion=True,
+    patch_size=2,
+    in_channels=16,
+    cond_dim=768,         # text-embedding stub dimension
+    source="FLUX.1-dev (paper's own model), rectified flow",
+)

@@ -1,0 +1,23 @@
+"""gemma3-27b [dense] — 5:1 local:global attention, 128k context.
+
+[hf:google/gemma-3-1b-pt]
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="gemma3-27b",
+    arch_type="dense",
+    num_layers=62,
+    d_model=5376,
+    num_heads=32,
+    num_kv_heads=16,
+    d_ff=21504,
+    vocab_size=262144,
+    head_dim=128,
+    attn_window=1024,   # local layers: sliding window
+    global_every=6,     # every 6th layer is global (5:1 local:global)
+    rope_theta=1_000_000.0,
+    act="gelu",
+    tie_embeddings=True,
+    source="hf:google/gemma-3-1b-pt",
+)

@@ -1,0 +1,24 @@
+"""HunyuanVideo-like 3D-token video DiT. [arXiv:2411.02265]
+
+Text-to-video model used by the paper (595 TFLOPs/forward at 480p/2s).
+We model the video DiT backbone over (frames × H × W) latent tokens with a
+text-conditioning stub.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="hunyuan-video-like",
+    arch_type="dit",
+    num_layers=40,
+    d_model=3072,
+    num_heads=24,
+    num_kv_heads=24,
+    d_ff=12288,
+    vocab_size=0,
+    act="gelu",
+    is_diffusion=True,
+    patch_size=2,
+    in_channels=16,
+    cond_dim=768,
+    source="HunyuanVideo (paper's own model)",
+)

@@ -1,0 +1,25 @@
+"""hymba-1.5b [hybrid] — parallel attention + mamba heads in each block.
+
+[arXiv:2411.13676]
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="hymba-1.5b",
+    arch_type="hybrid",
+    num_layers=32,
+    d_model=1600,
+    num_heads=25,
+    num_kv_heads=5,
+    d_ff=5504,
+    vocab_size=32001,
+    head_dim=64,
+    attn_window=1024,   # hymba uses SWA on most attention heads
+    global_every=16,
+    ssm_state=16,
+    ssm_head_dim=64,
+    ssm_expand=2,
+    ssm_conv=4,
+    ssm_chunk=64,
+    source="arXiv:2411.13676",
+)

@@ -1,0 +1,26 @@
+"""musicgen-medium [audio] — decoder-only over EnCodec tokens.
+
+[arXiv:2306.05284]
+
+The EnCodec conv codec (mel/frame frontend) is a STUB per the brief:
+``input_specs`` provides precomputed codebook token ids / frame embeddings;
+this config describes the decoder transformer. MusicGen uses 4 codebooks
+with a delay interleaving pattern; embeddings of the K codebooks are summed
+and K parallel heads predict the next code in each book.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="musicgen-medium",
+    arch_type="audio",
+    num_layers=48,
+    d_model=1536,
+    num_heads=24,
+    num_kv_heads=24,
+    d_ff=6144,
+    vocab_size=2048,
+    num_codebooks=4,
+    act="gelu",
+    rope_theta=10_000.0,
+    source="arXiv:2306.05284",
+)

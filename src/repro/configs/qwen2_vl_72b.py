@@ -1,0 +1,24 @@
+"""qwen2-vl-72b [vlm] — M-RoPE, dynamic resolution. [arXiv:2409.12191]
+
+The ViT/SigLIP vision frontend is a STUB per the brief: ``input_specs``
+provides precomputed patch embeddings of the right shape; this config
+describes the language/decoder backbone that consumes them.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen2-vl-72b",
+    arch_type="vlm",
+    num_layers=80,
+    d_model=8192,
+    num_heads=64,
+    num_kv_heads=8,
+    d_ff=29568,
+    vocab_size=152064,
+    qkv_bias=True,
+    rope_theta=1_000_000.0,
+    mrope_sections=(16, 24, 24),   # (t, h, w) of head_dim//2 = 64
+    frontend_tokens=1024,          # stub: #patch embeddings per image
+    frontend_dim=8192,
+    source="arXiv:2409.12191",
+)

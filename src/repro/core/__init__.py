@@ -1,0 +1,1 @@
+from repro.core import baselines, complexity, speca, taylor, verify  # noqa: F401

@@ -1,0 +1,155 @@
+"""Baseline acceleration methods the paper compares against (Tables 1–3).
+
+All share the cached-sampling loop; they differ only in (a) the anchor
+schedule and (b) the draft used on non-anchor steps:
+
+  * ``step_reduction`` — plain DDIM/RF with fewer steps (no caching).
+  * ``fora``       — full compute every N steps, order-0 reuse between
+                     (FORA; also Δ-DiT-like static reuse).
+  * ``taylorseer`` — anchors every N steps, m-th order Taylor forecast
+                     between, NO verification (the paper's SOTA baseline).
+  * ``ab2``        — Adams–Bashforth-2 draft, anchors every N steps
+                     (Table 7 ablation).
+  * ``teacache``   — order-0 reuse with *dynamic* anchor schedule driven by
+                     accumulated relative change of the timestep-conditioning
+                     signal (TeaCache-style, threshold ``l``).
+
+None of them verifies — this is exactly the contrast SpeCa's Fig. 2 draws:
+at high acceleration their prediction errors compound unchecked.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import DiffusionConfig, ModelConfig
+from repro.core import taylor
+from repro.core.verify import relative_error
+from repro.diffusion.pipeline import latent_shape, make_stepper, model_inputs
+from repro.layers import embeddings as emb
+from repro.layers import model as M
+
+
+@dataclasses.dataclass(frozen=True)
+class CachePolicy:
+    name: str
+    interval: int = 5          # N: anchor period (static policies)
+    order: int = 2             # Taylor order m
+    draft_mode: str = "taylor"  # taylor | reuse | ab2 | newton
+    tea_threshold: float = 0.3  # TeaCache accumulated-change threshold
+
+
+def fora(interval: int) -> CachePolicy:
+    return CachePolicy(name="fora", interval=interval, order=0,
+                       draft_mode="reuse")
+
+
+def taylorseer(interval: int, order: int = 2,
+               draft_mode: str = "taylor") -> CachePolicy:
+    return CachePolicy(name="taylorseer", interval=interval, order=order,
+                       draft_mode=draft_mode)
+
+
+def ab2(interval: int) -> CachePolicy:
+    return CachePolicy(name="ab2", interval=interval, order=2,
+                       draft_mode="ab2")
+
+
+def teacache(threshold: float) -> CachePolicy:
+    return CachePolicy(name="teacache", interval=10_000, order=0,
+                       draft_mode="reuse", tea_threshold=threshold)
+
+
+def cached_sample(cfg: ModelConfig, params: Dict[str, Any],
+                  dcfg: DiffusionConfig, policy: CachePolicy, key,
+                  cond: Dict[str, Any], batch: int, *,
+                  collect_trajectory: bool = False,
+                  use_flash: bool = False
+                  ) -> Tuple[jnp.ndarray, Dict[str, Any]]:
+    """Run a non-verifying cache-accelerated sampler."""
+    stepper = make_stepper(dcfg)
+    S = stepper.num_steps
+    L = cfg.num_layers
+    per_frame = (dcfg.latent_size // cfg.patch_size) ** 2
+    n_tok = per_frame * max(dcfg.num_frames, 1)
+
+    x0_shape = latent_shape(cfg, dcfg, batch)
+    x = jax.random.normal(key, x0_shape, jnp.float32)
+    feat_shape = taylor.feature_shape_for(L, batch, n_tok, cfg.d_model)
+    tstate = taylor.init_state(policy.order, feat_shape, cfg.jnp_dtype)
+    no_compute = jnp.zeros((L,), bool)
+
+    is_tea = policy.name == "teacache"
+
+    def tea_signal(s):
+        """Timestep-conditioning change proxy (TeaCache's modulated input)."""
+        return emb.timestep_embedding(stepper.t_model[s][None], cfg.d_model)
+
+    def body(carry, s):
+        x, tstate, since_anchor, tea_acc = carry
+        if is_tea:
+            prev = tea_signal(jnp.maximum(s - 1, 0))
+            cur = tea_signal(s)
+            delta = jnp.linalg.norm(cur - prev) / (jnp.linalg.norm(prev)
+                                                   + 1e-8)
+            tea_acc = tea_acc + delta
+            warm = tstate["n_anchors"] > policy.order
+            do_full = jnp.logical_or(~warm, tea_acc > policy.tea_threshold)
+        else:
+            warm = tstate["n_anchors"] > policy.order
+            do_full = jnp.logical_or(~warm,
+                                     since_anchor >= policy.interval - 1)
+
+        def full(opers):
+            x, tstate = opers
+            inputs = model_inputs(cfg, x, stepper.t_model[s], cond)
+            out, extras = M.dit_forward(cfg, params, inputs,
+                                        collect_branches=True,
+                                        use_flash=use_flash)
+            tstate = taylor.update(tstate, extras["branches"], s)
+            return out.astype(jnp.float32), tstate
+
+        def predict(opers):
+            x, tstate = opers
+            preds = taylor.predict(tstate, s, mode=policy.draft_mode)
+            inputs = model_inputs(cfg, x, stepper.t_model[s], cond)
+            out, _ = M.dit_forward(cfg, params, inputs, branch_preds=preds,
+                                   compute_mask=no_compute,
+                                   use_flash=use_flash)
+            return out.astype(jnp.float32), tstate
+
+        out, tstate = jax.lax.cond(do_full, full, predict, (x, tstate))
+        x_next = stepper.advance(x, out, s)
+        since_anchor = jnp.where(do_full, 0, since_anchor + 1)
+        tea_acc = jnp.where(do_full, 0.0, tea_acc)
+        ys = {"full_step": do_full}
+        if collect_trajectory:
+            ys["x"] = x_next
+        return (x_next, tstate, since_anchor, tea_acc), ys
+
+    init = (x, tstate, jnp.zeros((), jnp.int32), jnp.zeros((), jnp.float32))
+    (x, tstate, _, _), ys = jax.lax.scan(body, init, jnp.arange(S))
+    num_full = jnp.sum(ys["full_step"].astype(jnp.int32))
+    stats = {"num_steps": S, "num_full": num_full,
+             "num_spec": S - num_full, "full_step": ys["full_step"],
+             "alpha": 1.0 - num_full.astype(jnp.float32) / S}
+    if collect_trajectory:
+        stats["trajectory"] = ys["x"]
+    return x, stats
+
+
+def step_reduction_sample(cfg: ModelConfig, params, dcfg: DiffusionConfig,
+                          fraction: float, key, cond, batch,
+                          use_flash: bool = False):
+    """Plain sampler with reduced step count (e.g. DDIM-10 of 50)."""
+    import dataclasses as dc
+
+    from repro.diffusion.pipeline import sample_full
+    steps = max(int(round(dcfg.num_inference_steps * fraction)), 2)
+    dcfg2 = dc.replace(dcfg, num_inference_steps=steps)
+    x, _ = sample_full(cfg, params, dcfg2, key, cond, batch,
+                       use_flash=use_flash)
+    return x, {"num_steps": steps, "num_full": steps, "num_spec": 0}

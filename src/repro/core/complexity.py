@@ -1,0 +1,108 @@
+"""Analytic cost model — paper §3.5 / Theorem G.3.
+
+``S = 1 / (1 − α + α·γ)`` (eq. 8) with α the speculative-step fraction and
+γ the verification cost ratio. The per-forward FLOPs model below feeds both
+the speedup accounting in the benchmarks and the MODEL_FLOPS terms of the
+roofline analysis.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+from repro.configs.base import ModelConfig
+
+
+def _attn_flops(cfg: ModelConfig, tokens: int, kv_tokens: int = 0) -> float:
+    """QKVO projections + score/value matmuls for one layer."""
+    hd = cfg.resolved_head_dim
+    d = cfg.d_model
+    kv_tokens = kv_tokens or tokens
+    proj = 2.0 * tokens * d * hd * (2 * cfg.num_heads + 2 * cfg.num_kv_heads)
+    scores = 2.0 * tokens * kv_tokens * cfg.num_heads * hd * 2
+    return proj + scores
+
+
+def _ffn_flops(cfg: ModelConfig, tokens: int) -> float:
+    if cfg.is_moe:
+        return 2.0 * tokens * cfg.num_experts_per_tok * cfg.d_model \
+            * cfg.d_ff * 3
+    if cfg.d_ff == 0:
+        return 0.0
+    mult = 3 if cfg.act == "silu" else 2
+    return 2.0 * tokens * cfg.d_model * cfg.d_ff * mult
+
+
+def _ssm_flops(cfg: ModelConfig, tokens: int) -> float:
+    if not (cfg.is_ssm or cfg.is_hybrid):
+        return 0.0
+    di, ns, nh = cfg.ssm_d_inner, cfg.ssm_state, cfg.resolved_ssm_heads
+    d = cfg.d_model
+    proj = 2.0 * tokens * d * (2 * di + 2 * ns * nh // nh + nh) \
+        + 2.0 * tokens * di * d
+    q = cfg.ssm_chunk
+    # SSD dual form: intra-chunk [q,q] blocks + state propagation
+    intra = 2.0 * tokens * q * (ns + di) * 2
+    states = 2.0 * tokens * ns * di * 2
+    return proj + intra + states
+
+
+def block_flops(cfg: ModelConfig, tokens: int) -> float:
+    """One transformer block, full-sequence forward."""
+    f = 0.0
+    if cfg.has_attention and cfg.num_heads:
+        f += _attn_flops(cfg, tokens)
+    f += _ffn_flops(cfg, tokens)
+    f += _ssm_flops(cfg, tokens)
+    return f
+
+
+def glue_flops(cfg: ModelConfig, tokens: int) -> float:
+    """Embeddings, norms, AdaLN modulation, output head — never skipped."""
+    d = cfg.d_model
+    f = 2.0 * tokens * d  # embeds/adds
+    if cfg.arch_type == "dit":
+        p2c = cfg.patch_size ** 2 * cfg.in_channels
+        f += 2.0 * tokens * p2c * d * 2          # patch in + head out
+        f += 2.0 * cfg.num_layers * d * 6 * d    # per-layer AdaLN modulation
+    elif cfg.vocab_size:
+        f += 2.0 * tokens * d * cfg.vocab_size
+    return f
+
+
+def forward_flops(cfg: ModelConfig, tokens: int) -> float:
+    return cfg.num_layers * block_flops(cfg, tokens) + glue_flops(cfg, tokens)
+
+
+def verify_flops(cfg: ModelConfig, tokens: int) -> float:
+    """One speculative step: verify layer computed + glue + Taylor eval."""
+    taylor = 4.0 * cfg.num_layers * 2 * tokens * cfg.d_model  # fused FMA
+    return block_flops(cfg, tokens) + glue_flops(cfg, tokens) + taylor
+
+
+def gamma(cfg: ModelConfig, tokens: int) -> float:
+    """Verification cost ratio γ = C_verify / C (paper: 1.67%–3.5%)."""
+    return verify_flops(cfg, tokens) / forward_flops(cfg, tokens)
+
+
+def speedup_model(alpha: float, gamma_: float, overhead_ratio: float = 0.0
+                  ) -> float:
+    """Eq. (8) / Theorem G.3 lower bound."""
+    return 1.0 / (1.0 - alpha * (1.0 - gamma_ - overhead_ratio))
+
+
+def run_flops(cfg: ModelConfig, tokens: int, num_steps: int,
+              num_full: int) -> float:
+    """Total FLOPs of a cached sampling run with num_full anchor steps."""
+    n_spec = num_steps - num_full
+    return num_full * forward_flops(cfg, tokens) \
+        + n_spec * verify_flops(cfg, tokens)
+
+
+def train_step_flops(cfg: ModelConfig, tokens: int) -> float:
+    """fwd + bwd ≈ 3× forward matmul FLOPs."""
+    return 3.0 * forward_flops(cfg, tokens)
+
+
+def model_flops_6nd(cfg: ModelConfig, tokens: int) -> float:
+    """MODEL_FLOPS = 6·N_active·D (roofline 'useful compute' reference)."""
+    return 6.0 * cfg.active_param_count() * tokens

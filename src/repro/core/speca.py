@@ -1,0 +1,150 @@
+"""SpeCa forecast-then-verify sampling (paper §3.2–3.4, Fig. 1/3).
+
+The whole sampler compiles to one XLA program (``lax.scan`` over denoising
+steps). Per step:
+
+  1. If the difference table is warm and fewer than ``max_draft``
+     consecutive drafts were taken, a *speculative attempt* runs: TaylorSeer
+     predicts every block's residual increments; the backbone executes with
+     ``compute_mask`` True only at the verify layer (its real increments
+     are computed *from the predicted stream* inside a ``lax.cond``, so
+     skipped blocks cost nothing at runtime — DESIGN.md §3).
+  2. The per-sample relative error between real and predicted verify-layer
+     increments is compared against τ_t = τ0·β^((T−t)/T).
+  3. Accept → advance the latent with the speculative output. Reject (any
+     sample fails, or forced anchor) → a full forward runs, the difference
+     table refreshes, and drafting restarts — eq. (5)/(6) prefix semantics.
+
+Per-sample acceptance statistics are returned for the sample-adaptive
+computation-allocation analysis; the batch-level accept decision is
+``all(e_k ≤ τ)`` so quality semantics are faithful for every sample.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import DiffusionConfig, ModelConfig, SpeCaConfig
+from repro.core import taylor
+from repro.core.verify import relative_error, threshold_schedule
+from repro.diffusion.pipeline import (Stepper, latent_shape, make_stepper,
+                                      model_inputs)
+from repro.layers import model as M
+
+
+def _verify_layer(cfg: ModelConfig, scfg: SpeCaConfig) -> int:
+    vl = scfg.verify_layer
+    return vl % cfg.num_layers
+
+
+def _num_tokens(cfg: ModelConfig, dcfg: DiffusionConfig) -> int:
+    per_frame = (dcfg.latent_size // cfg.patch_size) ** 2
+    return per_frame * max(dcfg.num_frames, 1)
+
+
+def speca_sample(cfg: ModelConfig, params: Dict[str, Any],
+                 dcfg: DiffusionConfig, scfg: SpeCaConfig, key,
+                 cond: Dict[str, Any], batch: int, *,
+                 draft_mode: str = "taylor",
+                 collect_trajectory: bool = False,
+                 use_flash: bool = False
+                 ) -> Tuple[jnp.ndarray, Dict[str, Any]]:
+    """Run SpeCa-accelerated sampling. Returns (x0, stats)."""
+    stepper = make_stepper(dcfg)
+    S = stepper.num_steps
+    vl = _verify_layer(cfg, scfg)
+    L = cfg.num_layers
+    n_tok = _num_tokens(cfg, dcfg)
+
+    x0_shape = latent_shape(cfg, dcfg, batch)
+    x = jax.random.normal(key, x0_shape, jnp.float32)
+    feat_shape = taylor.feature_shape_for(L, batch, n_tok, cfg.d_model)
+    tstate = taylor.init_state(scfg.taylor_order, feat_shape, cfg.jnp_dtype)
+    cmask_spec = jnp.arange(L) == vl
+
+    def full_fwd(x, s):
+        inputs = model_inputs(cfg, x, stepper.t_model[s], cond)
+        out, extras = M.dit_forward(cfg, params, inputs,
+                                    collect_branches=True,
+                                    use_flash=use_flash)
+        return out, extras["branches"]
+
+    def spec_fwd(x, s, preds):
+        inputs = model_inputs(cfg, x, stepper.t_model[s], cond)
+        out, extras = M.dit_forward(cfg, params, inputs,
+                                    branch_preds=preds,
+                                    compute_mask=cmask_spec,
+                                    collect_branches=True,
+                                    use_flash=use_flash)
+        return out, extras["branches"]
+
+    def body(carry, s):
+        x, tstate, since_anchor = carry
+        warm = tstate["n_anchors"] > scfg.taylor_order
+        want_spec = jnp.logical_and(warm, since_anchor < scfg.max_draft)
+
+        def attempt(x):
+            preds = taylor.predict(tstate, s, mode=draft_mode)
+            out, branches = spec_fwd(x, s, preds)
+            real_vl = branches[vl][0] + branches[vl][1]
+            pred_vl = preds[vl][0] + preds[vl][1]
+            err = relative_error(pred_vl, real_vl, metric=scfg.error_metric,
+                                 eps=scfg.eps, batch_axis=0)
+            return out, err
+
+        def skip(x):
+            return (jnp.zeros(x0_shape, cfg.jnp_dtype),
+                    jnp.full((batch,), jnp.inf, jnp.float32))
+
+        out_spec, err = jax.lax.cond(want_spec, attempt, skip, x)
+        tau = threshold_schedule(stepper.t_frac[s], scfg.tau0, scfg.beta)
+        ok_b = err <= tau
+        accept = jnp.logical_and(want_spec, jnp.all(ok_b))
+
+        def keep_spec(opers):
+            x, tstate = opers
+            return out_spec.astype(jnp.float32), tstate
+
+        def do_full(opers):
+            x, tstate = opers
+            out, branches = full_fwd(x, s)
+            tstate = taylor.update(tstate, branches, s)
+            return out.astype(jnp.float32), tstate
+
+        out, tstate = jax.lax.cond(accept, keep_spec, do_full, (x, tstate))
+        x_next = stepper.advance(x, out, s)
+        since_anchor = jnp.where(accept, since_anchor + 1, 0)
+
+        ys = {
+            "spec_step": accept,
+            "spec_attempted": want_spec,
+            "err": err,
+            "tau": tau,
+            "accept_b": jnp.logical_and(want_spec, ok_b),
+        }
+        if collect_trajectory:
+            ys["x"] = x_next
+        return (x_next, tstate, since_anchor), ys
+
+    init = (x, tstate, jnp.zeros((), jnp.int32))
+    (x, tstate, _), ys = jax.lax.scan(body, init, jnp.arange(S))
+
+    stats = {
+        "num_steps": S,
+        "num_spec": jnp.sum(ys["spec_step"].astype(jnp.int32)),
+        "num_full": S - jnp.sum(ys["spec_step"].astype(jnp.int32)),
+        "num_attempted": jnp.sum(ys["spec_attempted"].astype(jnp.int32)),
+        "alpha": jnp.mean(ys["spec_step"].astype(jnp.float32)),
+        "per_sample_accepts": jnp.sum(ys["accept_b"].astype(jnp.int32),
+                                      axis=0),
+        "err": ys["err"],
+        "tau": ys["tau"],
+        "spec_step": ys["spec_step"],
+        "spec_attempted": ys["spec_attempted"],
+        "accept_b": ys["accept_b"],
+    }
+    if collect_trajectory:
+        stats["trajectory"] = ys["x"]
+    return x, stats

@@ -1,0 +1,113 @@
+"""TaylorSeer draft model: finite-difference feature forecasting (paper §3.3).
+
+The difference table holds Δ⁰..Δᵐ of the cached features at the most recent
+anchor (fully computed) step. On each anchor the table refreshes with the
+standard recursive update
+
+    Δ⁰_new = F,    Δⁱ_new = Δⁱ⁻¹_new − Δⁱ⁻¹_old   (i = 1..m)
+
+which realises eq. (3) without re-reading old anchors. Prediction for a step
+``d`` sampler-steps past the anchor follows eq. (2):
+
+    F_pred(d) = Σ_{i=0}^{m}  Δⁱ / (i! · Nᵉᶠᶠⁱ) · dⁱ
+
+with Nᵉᶠᶠ the measured spacing between the two most recent anchors (the
+paper uses a fixed N; under SpeCa's dynamic acceptance the spacing floats,
+so we track it — with the forced period N of the paper's config both
+coincide).
+
+A ``newton`` variant (beyond-paper, DESIGN.md §1) replaces the Taylor
+weights dⁱ/(i!·Nⁱ) with binomial extrapolation weights C(d/N+i−1, i), which
+is exact for polynomial trajectories of degree ≤ m.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+
+def init_state(order: int, feat_shape, dtype) -> Dict[str, Any]:
+    """order = m (taylor order); table holds m+1 difference planes."""
+    return {
+        "diffs": jnp.zeros((order + 1,) + tuple(feat_shape), dtype),
+        "n_anchors": jnp.zeros((), jnp.int32),
+        "anchor_step": jnp.full((), -1, jnp.int32),
+        "gap": jnp.ones((), jnp.float32),
+    }
+
+
+def update(state: Dict[str, Any], feats: jnp.ndarray, step) -> Dict[str, Any]:
+    """Anchor refresh: recursive difference-table update."""
+    old = state["diffs"]
+    m1 = old.shape[0]
+    new_rows = [feats.astype(old.dtype)]
+    for i in range(1, m1):
+        new_rows.append(new_rows[i - 1] - old[i - 1])
+    diffs = jnp.stack(new_rows)
+    step = jnp.asarray(step, jnp.int32)
+    gap = jnp.where(state["anchor_step"] >= 0,
+                    (step - state["anchor_step"]).astype(jnp.float32),
+                    jnp.ones((), jnp.float32))
+    return {"diffs": diffs,
+            "n_anchors": state["n_anchors"] + 1,
+            "anchor_step": step,
+            "gap": jnp.maximum(gap, 1.0)}
+
+
+def prediction_weights(order: int, d, gap, n_anchors,
+                       mode: str = "taylor") -> jnp.ndarray:
+    """Per-order scalar weights w_i with validity masking.
+
+    Only Δⁱ built from ≥ i+1 anchors are trusted; higher orders get w=0.
+    """
+    d = jnp.asarray(d, jnp.float32)
+    gap = jnp.asarray(gap, jnp.float32)
+    ws = []
+    for i in range(order + 1):
+        if mode == "newton":
+            # C(d/gap + i - 1, i) — product form, exact for polynomials
+            x = d / gap
+            w = jnp.ones((), jnp.float32)
+            for j in range(i):
+                w = w * (x + i - 1 - j) / (j + 1)
+        elif mode == "reuse":
+            # order-0 feature reuse (FORA / "SpeCa w/o TaylorSeer")
+            w = jnp.asarray(1.0 if i == 0 else 0.0, jnp.float32)
+        elif mode == "ab2":
+            # Adams–Bashforth-2 on difference-estimated derivatives:
+            # F0 + (d/N)·(1.5·Δ¹ − 0.5·Δ¹_old) = F0 + (d/N)·Δ¹ + 0.5(d/N)·Δ²
+            if i == 0:
+                w = jnp.ones((), jnp.float32)
+            elif i == 1:
+                w = d / gap
+            elif i == 2:
+                w = 0.5 * d / gap
+            else:
+                w = jnp.zeros((), jnp.float32)
+        else:
+            w = (d ** i) / (math.factorial(i) * (gap ** i))
+        ws.append(w)
+    w = jnp.stack(ws)
+    valid = jnp.arange(order + 1) < n_anchors
+    return jnp.where(valid, w, 0.0)
+
+
+def predict(state: Dict[str, Any], step, mode: str = "taylor"
+            ) -> jnp.ndarray:
+    """Forecast features at ``step`` (> anchor_step). Returns feat array."""
+    d = (jnp.asarray(step, jnp.int32) - state["anchor_step"]
+         ).astype(jnp.float32)
+    order = state["diffs"].shape[0] - 1
+    w = prediction_weights(order, d, state["gap"], state["n_anchors"], mode)
+    w = w.astype(jnp.float32)
+    diffs = state["diffs"].astype(jnp.float32)
+    pred = jnp.tensordot(w, diffs, axes=(0, 0))
+    return pred.astype(state["diffs"].dtype)
+
+
+def feature_shape_for(num_layers: int, batch: int, tokens: int, d_model: int):
+    """Cached-feature tensor layout: per-layer, per-branch increments."""
+    return (num_layers, 2, batch, tokens, d_model)

@@ -1,0 +1,52 @@
+"""SpeCa verification: relative error metrics (eq. 4) + τ schedule (§3.4.2).
+
+The verification compares the *real* verify-layer residual increments
+(computed from the predicted stream) against their TaylorSeer prediction,
+per sample, and accepts iff e_k ≤ τ_t. Metrics beyond rel-L2 implement the
+paper's Appendix E ablation (ℓ1, ℓ∞, cosine).
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax.numpy as jnp
+
+
+def _flatten_per_sample(x: jnp.ndarray, batch_axis: int) -> jnp.ndarray:
+    x = jnp.moveaxis(x, batch_axis, 0)
+    return x.reshape(x.shape[0], -1).astype(jnp.float32)
+
+
+def relative_error(pred: jnp.ndarray, ref: jnp.ndarray, *,
+                   metric: str = "rel_l2", eps: float = 1e-8,
+                   batch_axis: int = 0) -> jnp.ndarray:
+    """Per-sample relative error e_k; shape [B]."""
+    p = _flatten_per_sample(pred, batch_axis)
+    r = _flatten_per_sample(ref, batch_axis)
+    if metric == "rel_l2":
+        num = jnp.linalg.norm(p - r, axis=-1)
+        den = jnp.linalg.norm(r, axis=-1)
+    elif metric == "rel_l1":
+        num = jnp.sum(jnp.abs(p - r), axis=-1)
+        den = jnp.sum(jnp.abs(r), axis=-1)
+    elif metric == "rel_linf":
+        num = jnp.max(jnp.abs(p - r), axis=-1)
+        den = jnp.max(jnp.abs(r), axis=-1)
+    elif metric == "cosine":
+        # distance form: 1 − cos(p, r); same accept-iff-small semantics
+        dot = jnp.sum(p * r, axis=-1)
+        den = jnp.linalg.norm(p, axis=-1) * jnp.linalg.norm(r, axis=-1)
+        return 1.0 - dot / (den + eps)
+    else:
+        raise ValueError(f"unknown metric {metric!r}")
+    return num / (den + eps)
+
+
+def threshold_schedule(t_frac: jnp.ndarray, tau0: float, beta: float
+                       ) -> jnp.ndarray:
+    """τ_t = τ0 · β^((T−t)/T).
+
+    ``t_frac`` = t/T ∈ [0, 1], 1 at the start (noise) and 0 at the end, so
+    the exponent (T−t)/T runs 0 → 1: permissive early, strict late.
+    """
+    return tau0 * jnp.power(beta, 1.0 - t_frac)

@@ -1,0 +1,119 @@
+"""Deterministic synthetic datasets.
+
+Everything is index-addressable (``sample(i)`` is a pure function of the
+global example index), which makes the pipelines shardable across hosts
+without coordination: host h of H reads indices ``i*H + h``.
+
+Datasets:
+  * LM token streams — Zipf-distributed tokens with Markov structure so the
+    LM loss is learnable (not pure noise).
+  * Gaussian-mixture image latents — K class-conditional anisotropic
+    Gaussian blobs rendered into [H, W, C] latents; used to *train* the
+    reduced DiT so that SpeCa quality experiments run against a model with
+    real structure (cf. DESIGN.md §8 scale adaptation).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Iterator, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class LMStreamConfig:
+    vocab_size: int
+    seq_len: int
+    num_codebooks: int = 0   # audio archs: tokens [K, T]
+
+
+def lm_batch(cfg: LMStreamConfig, indices: jnp.ndarray) -> Dict[str, jnp.ndarray]:
+    """Deterministic pseudo-Markov token batch for example indices [B]."""
+    def one(idx):
+        key = jax.random.fold_in(jax.random.PRNGKey(0), idx)
+        shape = ((cfg.num_codebooks, cfg.seq_len + 1) if cfg.num_codebooks
+                 else (cfg.seq_len + 1,))
+        base = jax.random.categorical(
+            key, jnp.zeros((cfg.vocab_size,)), shape=shape)
+        # Markov-ish structure: next token correlated with previous
+        rolled = jnp.roll(base, 1, axis=-1)
+        mix = jax.random.bernoulli(jax.random.fold_in(key, 1), 0.5,
+                                   base.shape)
+        return jnp.where(mix, base, (rolled * 7 + 13) % cfg.vocab_size)
+
+    toks = jax.vmap(one)(indices)
+    return {"tokens": toks[..., :-1].astype(jnp.int32),
+            "labels": toks[..., 1:].astype(jnp.int32)}
+
+
+@dataclasses.dataclass(frozen=True)
+class GMLatentConfig:
+    num_classes: int
+    latent_size: int = 16
+    channels: int = 4
+    noise_scale: float = 0.15
+
+
+def _class_pattern(cfg: GMLatentConfig, label: jnp.ndarray) -> jnp.ndarray:
+    """Smooth class-dependent pattern: mixture of 2-D cosine modes."""
+    s = cfg.latent_size
+    yy, xx = jnp.meshgrid(jnp.linspace(0, 1, s), jnp.linspace(0, 1, s),
+                          indexing="ij")
+    lab = label.astype(jnp.float32)
+    out = []
+    for c in range(cfg.channels):
+        fx = 1.0 + (lab % 4) + 0.5 * c
+        fy = 1.0 + (lab // 4 % 4) + 0.25 * c
+        phase = 0.7 * lab + 1.3 * c
+        out.append(jnp.cos(2 * jnp.pi * (fx * xx + fy * yy) + phase))
+    return jnp.stack(out, axis=-1)          # [H, W, C]
+
+
+def gm_latent_batch(cfg: GMLatentConfig, indices: jnp.ndarray
+                    ) -> Dict[str, jnp.ndarray]:
+    """Class-conditional latents for example indices [B]."""
+    def one(idx):
+        key = jax.random.fold_in(jax.random.PRNGKey(1), idx)
+        label = jax.random.randint(key, (), 0, cfg.num_classes)
+        base = _class_pattern(cfg, label)
+        noise = cfg.noise_scale * jax.random.normal(
+            jax.random.fold_in(key, 2), base.shape)
+        return base + noise, label
+
+    lat, labels = jax.vmap(one)(indices)
+    return {"latents": lat.astype(jnp.float32),
+            "labels": labels.astype(jnp.int32)}
+
+
+def cond_stub_batch(batch: int, tokens: int, dim: int, indices: jnp.ndarray
+                    ) -> jnp.ndarray:
+    """Continuous conditioning stub (text-embedding surrogate) [B,T,dim]."""
+    def one(idx):
+        key = jax.random.fold_in(jax.random.PRNGKey(2), idx)
+        return jax.random.normal(key, (tokens, dim)) * 0.1
+    return jax.vmap(one)(indices).astype(jnp.float32)
+
+
+class ShardedIterator:
+    """Host-sharded, deterministic, prefetching batch iterator."""
+
+    def __init__(self, batch_fn, global_batch: int, *, host_id: int = 0,
+                 num_hosts: int = 1, start_step: int = 0):
+        assert global_batch % num_hosts == 0
+        self._fn = jax.jit(batch_fn)
+        self._local = global_batch // num_hosts
+        self._host = host_id
+        self._hosts = num_hosts
+        self._step = start_step
+        self._global = global_batch
+
+    def __iter__(self) -> Iterator:
+        return self
+
+    def __next__(self):
+        base = self._step * self._global + self._host * self._local
+        idx = jnp.arange(base, base + self._local, dtype=jnp.int32)
+        self._step += 1
+        return self._fn(idx)

@@ -1,0 +1,1 @@
+from repro.diffusion import loss, pipeline, schedule  # noqa: F401

@@ -1,0 +1,37 @@
+"""Diffusion training losses: ε-prediction (DDPM) and flow matching (RF)."""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import DiffusionConfig, ModelConfig
+from repro.diffusion import schedule as sch
+from repro.layers import model as M
+
+
+def diffusion_loss(cfg: ModelConfig, dcfg: DiffusionConfig,
+                   params: Dict[str, Any], key, x0: jnp.ndarray,
+                   cond: Dict[str, Any]) -> Tuple[jnp.ndarray, Dict]:
+    B = x0.shape[0]
+    k_t, k_n = jax.random.split(key)
+    noise = jax.random.normal(k_n, x0.shape, jnp.float32)
+
+    if dcfg.schedule == "rectified_flow":
+        sigma = jax.random.uniform(k_t, (B,), jnp.float32)
+        x_t = sch.rf_interpolate(x0, noise, sigma)
+        target = sch.rf_velocity_target(x0, noise)
+        t_model = sigma * 1000.0
+    else:
+        sched = sch.make_schedule(dcfg.schedule, dcfg.num_train_timesteps)
+        t = jax.random.randint(k_t, (B,), 0, dcfg.num_train_timesteps)
+        x_t = sch.q_sample(sched, x0, t, noise)
+        target = noise
+        t_model = t.astype(jnp.float32)
+
+    inputs: Dict[str, Any] = {"latents": x_t, "t": t_model}
+    inputs.update(cond)
+    pred, extras = M.dit_forward(cfg, params, inputs)
+    loss = jnp.mean(jnp.square(pred.astype(jnp.float32) - target))
+    return loss, {"mse": loss, "aux": extras["aux_loss"]}

@@ -1,0 +1,89 @@
+"""Diffusion sampling pipeline — the non-accelerated reference path.
+
+``make_stepper`` abstracts DDPM/DDIM vs rectified-flow so the SpeCa loop
+(``repro.core.speca``) and every baseline share one stepping interface.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import DiffusionConfig, ModelConfig
+from repro.diffusion import schedule as sch
+from repro.layers import model as M
+
+
+@dataclasses.dataclass(frozen=True)
+class Stepper:
+    """Per-step arrays for a fixed inference schedule of S steps."""
+
+    num_steps: int
+    t_model: jnp.ndarray      # [S] value fed to the model's t input
+    t_frac: jnp.ndarray       # [S] t/T in [0,1] (for the τ schedule; 1=start)
+    _advance: Callable        # (x, out, s) -> x_next
+
+    def advance(self, x, out, s):
+        return self._advance(x, out, s)
+
+
+def make_stepper(dcfg: DiffusionConfig) -> Stepper:
+    S = dcfg.num_inference_steps
+    if dcfg.schedule == "rectified_flow":
+        sigmas = sch.rf_timesteps(S)
+        sigmas_next = jnp.concatenate([sigmas[1:], jnp.zeros((1,))])
+
+        def advance(x, v, s):
+            return sch.rf_euler_step(x, v, sigmas[s], sigmas_next[s])
+
+        return Stepper(num_steps=S, t_model=sigmas * 1000.0,
+                       t_frac=sigmas, _advance=advance)
+
+    sched = sch.make_schedule(dcfg.schedule, dcfg.num_train_timesteps)
+    ts = sch.inference_timesteps(dcfg.num_train_timesteps, S)
+    ts_prev = jnp.concatenate([ts[1:], jnp.full((1,), -1, jnp.int32)])
+
+    def advance(x, eps, s):
+        return sch.ddim_step(sched, x, eps, ts[s], ts_prev[s])
+
+    return Stepper(num_steps=S, t_model=ts.astype(jnp.float32),
+                   t_frac=ts.astype(jnp.float32)
+                   / float(dcfg.num_train_timesteps), _advance=advance)
+
+
+def latent_shape(cfg: ModelConfig, dcfg: DiffusionConfig, batch: int
+                 ) -> Tuple[int, ...]:
+    s = dcfg.latent_size
+    if dcfg.num_frames > 1:
+        return (batch, dcfg.num_frames, s, s, cfg.in_channels)
+    return (batch, s, s, cfg.in_channels)
+
+
+def model_inputs(cfg: ModelConfig, x: jnp.ndarray, t_model: jnp.ndarray,
+                 cond: Dict[str, Any]) -> Dict[str, Any]:
+    B = x.shape[0]
+    inputs: Dict[str, Any] = {"latents": x,
+                              "t": jnp.broadcast_to(t_model, (B,))}
+    inputs.update(cond)
+    return inputs
+
+
+def sample_full(cfg: ModelConfig, params: Dict[str, Any],
+                dcfg: DiffusionConfig, key, cond: Dict[str, Any],
+                batch: int, *, collect_trajectory: bool = False,
+                use_flash: bool = False):
+    """Reference sampler: full forward at every step (1.00× baseline)."""
+    stepper = make_stepper(dcfg)
+    x = jax.random.normal(key, latent_shape(cfg, dcfg, batch), jnp.float32)
+
+    def body(x, s):
+        inputs = model_inputs(cfg, x, stepper.t_model[s], cond)
+        out, _ = M.dit_forward(cfg, params, inputs, use_flash=use_flash)
+        x_next = stepper.advance(x, out, s)
+        ys = x_next if collect_trajectory else jnp.zeros((), jnp.float32)
+        return x_next, ys
+
+    x, traj = jax.lax.scan(body, x, jnp.arange(stepper.num_steps))
+    return (x, traj) if collect_trajectory else (x, None)

@@ -1,0 +1,92 @@
+"""Noise schedules: DDPM (linear/cosine) and rectified flow.
+
+SpeCa is schedule-agnostic (paper Appendix E.1); both families are provided
+so the FLUX-like model runs rectified flow and DiT runs DDIM, as in §4.1.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class DDPMSchedule:
+    betas: jnp.ndarray            # [T]
+    alphas_bar: jnp.ndarray       # [T]
+
+    @property
+    def num_steps(self) -> int:
+        return int(self.betas.shape[0])
+
+
+def make_schedule(kind: str, num_steps: int) -> DDPMSchedule:
+    if kind == "linear":
+        betas = np.linspace(1e-4, 0.02, num_steps, dtype=np.float64)
+    elif kind == "cosine":
+        s = 0.008
+        ts = np.arange(num_steps + 1, dtype=np.float64) / num_steps
+        f = np.cos((ts + s) / (1 + s) * math.pi / 2) ** 2
+        ab = f / f[0]
+        betas = np.clip(1 - ab[1:] / ab[:-1], 0, 0.999)
+    else:
+        raise ValueError(f"unknown schedule {kind!r}")
+    alphas_bar = np.cumprod(1.0 - betas)
+    return DDPMSchedule(betas=jnp.asarray(betas, jnp.float32),
+                        alphas_bar=jnp.asarray(alphas_bar, jnp.float32))
+
+
+def inference_timesteps(num_train: int, num_inference: int) -> jnp.ndarray:
+    """Evenly spaced decreasing timestep indices, e.g. 50 of 1000."""
+    step = num_train // num_inference
+    ts = (np.arange(num_inference) * step)[::-1].copy()
+    return jnp.asarray(ts, jnp.int32)
+
+
+def ddim_step(sched: DDPMSchedule, x: jnp.ndarray, eps: jnp.ndarray,
+              t: jnp.ndarray, t_prev: jnp.ndarray) -> jnp.ndarray:
+    """Deterministic DDIM (η=0) update from timestep t to t_prev."""
+    ab_t = sched.alphas_bar[t]
+    ab_p = jnp.where(t_prev >= 0, sched.alphas_bar[jnp.maximum(t_prev, 0)],
+                     jnp.ones_like(ab_t))
+    bshape = (-1,) + (1,) * (x.ndim - 1) if ab_t.ndim else ab_t.shape
+    ab_t = ab_t.reshape(bshape) if ab_t.ndim else ab_t
+    ab_p = ab_p.reshape(bshape) if ab_p.ndim else ab_p
+    x = x.astype(jnp.float32)
+    eps = eps.astype(jnp.float32)
+    x0 = (x - jnp.sqrt(1.0 - ab_t) * eps) / jnp.sqrt(ab_t)
+    return jnp.sqrt(ab_p) * x0 + jnp.sqrt(1.0 - ab_p) * eps
+
+
+def q_sample(sched: DDPMSchedule, x0: jnp.ndarray, t: jnp.ndarray,
+             noise: jnp.ndarray) -> jnp.ndarray:
+    """Forward process: x_t = √ᾱ_t·x0 + √(1−ᾱ_t)·ε. t [B] ints."""
+    ab = sched.alphas_bar[t].reshape((-1,) + (1,) * (x0.ndim - 1))
+    return jnp.sqrt(ab) * x0 + jnp.sqrt(1.0 - ab) * noise
+
+
+# --- rectified flow -------------------------------------------------------
+
+def rf_timesteps(num_inference: int) -> jnp.ndarray:
+    """σ grid 1 → 0 (exclusive of final 0), FLUX-style uniform."""
+    return jnp.linspace(1.0, 0.0, num_inference + 1)[:-1].astype(jnp.float32)
+
+
+def rf_interpolate(x0: jnp.ndarray, noise: jnp.ndarray, sigma: jnp.ndarray
+                   ) -> jnp.ndarray:
+    """x_σ = (1−σ)·x_data + σ·ε."""
+    s = sigma.reshape((-1,) + (1,) * (x0.ndim - 1))
+    return (1.0 - s) * x0 + s * noise
+
+
+def rf_velocity_target(x0: jnp.ndarray, noise: jnp.ndarray) -> jnp.ndarray:
+    """dx/dσ = ε − x_data (model regresses this)."""
+    return noise - x0
+
+
+def rf_euler_step(x: jnp.ndarray, v: jnp.ndarray, sigma: jnp.ndarray,
+                  sigma_next: jnp.ndarray) -> jnp.ndarray:
+    return x.astype(jnp.float32) + (sigma_next - sigma) * v.astype(jnp.float32)

@@ -1,0 +1,115 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+On CPU (this container) the kernels execute in ``interpret=True`` mode —
+the kernel body runs as traced Python for correctness validation; on a TPU
+backend the same calls compile to Mosaic. ``REPRO_FORCE_INTERPRET=0`` can
+force compiled mode for real-TPU runs.
+"""
+from __future__ import annotations
+
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import flash_attention as _fa
+from repro.kernels import taylor_predict as _tp
+from repro.kernels import verify_error as _ve
+from repro.kernels import ref as ref  # noqa: F401 (re-export for tests)
+
+
+def _interpret() -> bool:
+    env = os.environ.get("REPRO_FORCE_INTERPRET")
+    if env is not None:
+        return env not in ("0", "false", "False")
+    return jax.default_backend() != "tpu"
+
+
+def _pad_to(x: jnp.ndarray, axis: int, mult: int) -> jnp.ndarray:
+    pad = (-x.shape[axis]) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+@functools.partial(jax.jit, static_argnames=("block_r", "block_c"))
+def taylor_predict(diffs: jnp.ndarray, weights: jnp.ndarray, *,
+                   block_r: int = 256, block_c: int = 512) -> jnp.ndarray:
+    """diffs [m+1, ...feat], weights [m+1] -> prediction [...feat]."""
+    shape = diffs.shape[1:]
+    n = 1
+    for s in shape:
+        n *= s
+    m1 = diffs.shape[0]
+    # fold into an (8, C) plane for float32 (8, 128) VREG tiling
+    flat = _pad_to(diffs.reshape(m1, n), 1, 8 * 128)
+    c = flat.shape[1] // 8
+    flat = flat.reshape(m1, 8, c)
+    bc = min(block_c, c)
+    while c % bc:
+        bc //= 2
+    out = _tp.taylor_predict_2d(flat, weights, block_r=8, block_c=bc,
+                                interpret=_interpret())
+    return out.reshape(-1)[:n].reshape(shape)
+
+
+@functools.partial(jax.jit, static_argnames=("block_r", "block_c"))
+def taylor_update(old_diffs: jnp.ndarray, feats: jnp.ndarray, *,
+                  block_r: int = 256, block_c: int = 512) -> jnp.ndarray:
+    """old_diffs [m+1, ...feat], feats [...feat] -> new diffs."""
+    m1 = old_diffs.shape[0]
+    shape = old_diffs.shape[1:]
+    n = 1
+    for s in shape:
+        n *= s
+    od = _pad_to(old_diffs.reshape(m1, 1, n), 2, 128)
+    f = _pad_to(feats.reshape(1, n), 1, 128)
+    c = od.shape[2]
+    bc = min(block_c, c)
+    while c % bc:
+        bc //= 2
+    out = _tp.taylor_update_2d(od.reshape(m1, 1, c), f.reshape(1, c),
+                               block_r=1, block_c=bc,
+                               interpret=_interpret())
+    return out.reshape(m1, -1)[:, :n].reshape((m1,) + shape)
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "block_c"))
+def verify_error(pred: jnp.ndarray, ref_: jnp.ndarray, *, eps: float = 1e-8,
+                 block_c: int = 1024) -> jnp.ndarray:
+    """Per-sample rel-L2 (eq. 4). pred/ref [B, ...] -> [B]."""
+    B = pred.shape[0]
+    p = pred.reshape(B, -1)
+    r = ref_.reshape(B, -1)
+    p = _pad_to(p, 1, 128)
+    r = _pad_to(r, 1, 128)
+    bc = min(block_c, p.shape[1])
+    while p.shape[1] % bc:
+        bc //= 2
+    return _ve.verify_error(p, r, eps=eps, block_c=bc,
+                            interpret=_interpret())
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("causal", "window", "block_q", "block_k"))
+def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                    causal: bool = True, window: int = 0,
+                    block_q: int = 128, block_k: int = 128) -> jnp.ndarray:
+    """q/k/v [B, S, H, hd] (equal head counts) -> [B, S, H, hd]."""
+    b, s, h, hd = q.shape
+    qt = q.transpose(0, 2, 1, 3).reshape(b * h, s, hd)
+    kt = k.transpose(0, 2, 1, 3).reshape(b * h, s, hd)
+    vt = v.transpose(0, 2, 1, 3).reshape(b * h, s, hd)
+    bq = min(block_q, s)
+    bk = min(block_k, s)
+    while s % bq:
+        bq //= 2
+    while s % bk:
+        bk //= 2
+    out = _fa.flash_attention_bhsd(qt, kt, vt, causal=causal, window=window,
+                                   block_q=bq, block_k=bk,
+                                   interpret=_interpret())
+    return out.reshape(b, h, s, hd).transpose(0, 2, 1, 3)

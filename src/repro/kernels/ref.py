@@ -1,0 +1,53 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose references)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def taylor_predict_ref(diffs: jnp.ndarray, weights: jnp.ndarray
+                       ) -> jnp.ndarray:
+    """diffs [m+1, ...], weights [m+1] -> Σ_i w_i · Δⁱ (f32 accumulate)."""
+    w = weights.astype(jnp.float32)
+    flat = diffs.astype(jnp.float32).reshape(diffs.shape[0], -1)
+    return jnp.tensordot(w, flat, axes=(0, 0)).reshape(
+        diffs.shape[1:]).astype(diffs.dtype)
+
+
+def verify_error_ref(pred: jnp.ndarray, ref: jnp.ndarray,
+                     eps: float = 1e-8) -> jnp.ndarray:
+    """Per-sample relative L2: ‖p−r‖₂ / (‖r‖₂ + ε). pred/ref [B, N] -> [B]."""
+    p = pred.astype(jnp.float32)
+    r = ref.astype(jnp.float32)
+    num = jnp.sqrt(jnp.sum(jnp.square(p - r), axis=-1))
+    den = jnp.sqrt(jnp.sum(jnp.square(r), axis=-1))
+    return num / (den + eps)
+
+
+def flash_attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                        causal: bool = True, window: int = 0) -> jnp.ndarray:
+    """Reference attention. q/k/v [B, S, H, hd] (same head count)."""
+    s = q.shape[1]
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) / jnp.sqrt(float(q.shape[-1]))
+    if causal or window > 0:
+        qi = jnp.arange(s)[:, None]
+        ki = jnp.arange(s)[None, :]
+        ok = jnp.ones((s, s), bool)
+        if causal:
+            ok &= ki <= qi
+        if window > 0:
+            ok &= (qi - ki) < window
+        scores = jnp.where(ok[None, None], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", probs, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def taylor_update_ref(old_diffs: jnp.ndarray, feats: jnp.ndarray
+                      ) -> jnp.ndarray:
+    """Recursive difference refresh: Δ⁰=F, Δⁱ = Δⁱ⁻¹_new − Δⁱ⁻¹_old."""
+    rows = [feats.astype(old_diffs.dtype)]
+    for i in range(1, old_diffs.shape[0]):
+        rows.append(rows[i - 1] - old_diffs[i - 1])
+    return jnp.stack(rows)

@@ -1,0 +1,80 @@
+"""Fused TaylorSeer prediction kernel (pl.pallas_call + BlockSpec).
+
+The draft step is memory-bound: it reads m+1 difference planes and writes
+one prediction. Staged jnp code would round-trip HBM per order; this kernel
+loads all m+1 planes of a (rows, lanes) VMEM tile once and evaluates
+Σ wᵢ·Δⁱ in registers — one HBM read per plane, one write.
+
+Tile choice: (block_r, block_c) multiples of (8, 128) — float32 VREG tiling
+on TPU; the weight vector sits in a tiny replicated VMEM block.
+
+The matching recursive *update* kernel fuses the anchor-step difference
+refresh the same way (Δⁱ chain needs old Δⁱ⁻¹ exactly once).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _predict_kernel(w_ref, d_ref, o_ref, *, order: int):
+    acc = w_ref[0] * d_ref[0].astype(jnp.float32)
+    for i in range(1, order + 1):
+        acc += w_ref[i] * d_ref[i].astype(jnp.float32)
+    o_ref[...] = acc.astype(o_ref.dtype)
+
+
+def taylor_predict_2d(diffs: jnp.ndarray, weights: jnp.ndarray, *,
+                      block_r: int = 256, block_c: int = 512,
+                      interpret: bool = False) -> jnp.ndarray:
+    """diffs [m+1, R, C] (R%8==0, C%128==0), weights [m+1] -> pred [R, C]."""
+    m1, R, C = diffs.shape
+    block_r = min(block_r, R)
+    block_c = min(block_c, C)
+    assert R % block_r == 0 and C % block_c == 0, (R, C, block_r, block_c)
+    grid = (R // block_r, C // block_c)
+    return pl.pallas_call(
+        functools.partial(_predict_kernel, order=m1 - 1),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((m1,), lambda r, c: (0,)),
+            pl.BlockSpec((m1, block_r, block_c), lambda r, c: (0, r, c)),
+        ],
+        out_specs=pl.BlockSpec((block_r, block_c), lambda r, c: (r, c)),
+        out_shape=jax.ShapeDtypeStruct((R, C), diffs.dtype),
+        interpret=interpret,
+    )(weights.astype(jnp.float32), diffs)
+
+
+def _update_kernel(d_ref, f_ref, o_ref, *, order: int):
+    new = [f_ref[...].astype(jnp.float32)]
+    for i in range(1, order + 1):
+        new.append(new[i - 1] - d_ref[i - 1].astype(jnp.float32))
+    for i in range(order + 1):
+        o_ref[i] = new[i].astype(o_ref.dtype)
+
+
+def taylor_update_2d(old_diffs: jnp.ndarray, feats: jnp.ndarray, *,
+                     block_r: int = 256, block_c: int = 512,
+                     interpret: bool = False) -> jnp.ndarray:
+    """old_diffs [m+1, R, C], feats [R, C] -> new diffs [m+1, R, C]."""
+    m1, R, C = old_diffs.shape
+    block_r = min(block_r, R)
+    block_c = min(block_c, C)
+    assert R % block_r == 0 and C % block_c == 0
+    grid = (R // block_r, C // block_c)
+    return pl.pallas_call(
+        functools.partial(_update_kernel, order=m1 - 1),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((m1, block_r, block_c), lambda r, c: (0, r, c)),
+            pl.BlockSpec((block_r, block_c), lambda r, c: (r, c)),
+        ],
+        out_specs=pl.BlockSpec((m1, block_r, block_c),
+                               lambda r, c: (0, r, c)),
+        out_shape=jax.ShapeDtypeStruct((m1, R, C), old_diffs.dtype),
+        interpret=interpret,
+    )(old_diffs, feats)

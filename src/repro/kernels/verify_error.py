@@ -1,0 +1,59 @@
+"""Fused relative-L2 verification kernel (pl.pallas_call + BlockSpec).
+
+Computes per-sample Σ(p−r)² and Σr² in ONE pass over the feature plane.
+The unfused jnp version materialises (p−r) and reads both operands twice;
+here each (1, block_c) VMEM tile is read once and both partial sums are
+accumulated into the output block across the sequential column grid — the
+TPU grid executes in order, so read-modify-write accumulation on the
+output ref is safe (this is the standard Pallas reduction idiom).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _verify_kernel(p_ref, r_ref, o_ref):
+    c = pl.program_id(1)
+    p = p_ref[...].astype(jnp.float32)
+    r = r_ref[...].astype(jnp.float32)
+    d = p - r
+    num = jnp.sum(d * d, axis=-1, keepdims=True)      # [1, 1]
+    den = jnp.sum(r * r, axis=-1, keepdims=True)
+    part = jnp.concatenate([num, den], axis=-1)        # [1, 2]
+
+    @pl.when(c == 0)
+    def _init():
+        o_ref[...] = part
+
+    @pl.when(c > 0)
+    def _acc():
+        o_ref[...] += part
+
+
+def verify_sums(pred: jnp.ndarray, ref: jnp.ndarray, *,
+                block_c: int = 1024, interpret: bool = False) -> jnp.ndarray:
+    """pred/ref [B, N] (N%128==0) -> [B, 2] = (Σ(p−r)², Σr²) per sample."""
+    B, N = pred.shape
+    block_c = min(block_c, N)
+    assert N % block_c == 0, (N, block_c)
+    grid = (B, N // block_c)
+    return pl.pallas_call(
+        _verify_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_c), lambda b, c: (b, c)),
+            pl.BlockSpec((1, block_c), lambda b, c: (b, c)),
+        ],
+        out_specs=pl.BlockSpec((1, 2), lambda b, c: (b, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, 2), jnp.float32),
+        interpret=interpret,
+    )(pred, ref)
+
+
+def verify_error(pred: jnp.ndarray, ref: jnp.ndarray, *, eps: float = 1e-8,
+                 block_c: int = 1024, interpret: bool = False) -> jnp.ndarray:
+    """Per-sample relative L2 error (eq. 4). pred/ref [B, N] -> [B]."""
+    sums = verify_sums(pred, ref, block_c=block_c, interpret=interpret)
+    return jnp.sqrt(sums[:, 0]) / (jnp.sqrt(sums[:, 1]) + eps)

@@ -1,0 +1,1 @@
+# NOTE: do not import repro.launch.dryrun here — it sets XLA_FLAGS at import.

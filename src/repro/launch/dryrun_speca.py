@@ -1,0 +1,171 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""SpeCa-step dry-run (perf pair C — the paper's own technique).
+
+Lowers the two step kinds of the forecast-then-verify loop for the
+FLUX-like model on the production mesh:
+
+  * ``full_step``  — anchor: full forward + difference-table refresh
+  * ``spec_step``  — draft: TaylorSeer predict + verify-layer-only compute
+                     + rel-L2 error
+
+Config axes explored by §Perf C:
+  --table-dtype f32|bf16   difference-table storage (paper GPU impl keeps
+                           features in model precision; f32 is the
+                           conservative baseline)
+  --order m                Taylor order (table holds m+1 planes)
+  --tokens/--batch         serving shape (default 4096 tokens ≈ 1024² img,
+                           batch 16)
+
+Usage: python -m repro.launch.dryrun_speca --table-dtype f32
+"""
+import argparse
+import dataclasses
+import json
+import time
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import DiffusionConfig, SpeCaConfig, get_config
+from repro.core import taylor
+from repro.core.verify import relative_error
+from repro.diffusion.pipeline import make_stepper, model_inputs
+from repro.launch.dryrun import ARTIFACT_DIR
+from repro.launch.hlo_analysis import parse_collectives, total_wire_bytes
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import params_shapes
+from repro.layers import model as M
+from repro.sharding import specs as S
+
+
+def build(cfg, dcfg, scfg, *, batch: int, table_dtype, mesh):
+    n_tok = (dcfg.latent_size // cfg.patch_size) ** 2
+    L = cfg.num_layers
+    vl = scfg.verify_layer % L
+    stepper = make_stepper(dcfg)
+    cmask = jnp.arange(L) == vl
+
+    def full_step(params, x, tstate, s, labels_or_cond):
+        inputs = model_inputs(cfg, x, stepper.t_model[s], labels_or_cond)
+        out, extras = M.dit_forward(cfg, params, inputs,
+                                    collect_branches=True)
+        tstate = taylor.update(tstate, extras["branches"], s)
+        return stepper.advance(x, out, s), tstate
+
+    def spec_step(params, x, tstate, s, labels_or_cond):
+        preds = taylor.predict(tstate, s)
+        inputs = model_inputs(cfg, x, stepper.t_model[s], labels_or_cond)
+        out, extras = M.dit_forward(cfg, params, inputs, branch_preds=preds,
+                                    compute_mask=cmask,
+                                    collect_branches=True)
+        real_vl = extras["branches"][vl][0] + extras["branches"][vl][1]
+        pred_vl = preds[vl][0] + preds[vl][1]
+        err = relative_error(pred_vl, real_vl, metric=scfg.error_metric)
+        return stepper.advance(x, out, s), err
+
+    # --- shapes ---
+    lat = jax.ShapeDtypeStruct(
+        (batch, dcfg.latent_size, dcfg.latent_size, cfg.in_channels),
+        jnp.float32)
+    feat = taylor.feature_shape_for(L, batch, n_tok, cfg.d_model)
+    tstate = {
+        "diffs": jax.ShapeDtypeStruct((scfg.taylor_order + 1,) + feat,
+                                      table_dtype),
+        "n_anchors": jax.ShapeDtypeStruct((), jnp.int32),
+        "anchor_step": jax.ShapeDtypeStruct((), jnp.int32),
+        "gap": jax.ShapeDtypeStruct((), jnp.float32),
+    }
+    cond = {"cond": jax.ShapeDtypeStruct((batch, 8, cfg.cond_dim),
+                                         jnp.float32)} if cfg.cond_dim \
+        else {"labels": jax.ShapeDtypeStruct((batch,), jnp.int32)}
+
+    params_sh = S.params_shardings(cfg, mesh, params_shapes(cfg))
+    dp = S.data_axes(mesh)
+    x_sh = NamedSharding(mesh, P(dp, None, None, None))
+    # difference table: [m+1, L, 2, B, T, D] — batch over data, tokens over
+    # model (the H4-style sequence sharding applied to the cached features)
+    table_sh = {
+        "diffs": NamedSharding(mesh, P(None, None, None, dp, "model", None)),
+        "n_anchors": S.replicated(mesh),
+        "anchor_step": S.replicated(mesh),
+        "gap": S.replicated(mesh),
+    }
+    cond_sh = {k: NamedSharding(mesh, P(dp) if v.ndim == 1
+                                else P(dp, None, None))
+               for k, v in cond.items()}
+    repl = S.replicated(mesh)
+
+    args = (params_shapes(cfg), lat, tstate,
+            jax.ShapeDtypeStruct((), jnp.int32), cond)
+    in_sh = (params_sh, x_sh, table_sh, repl, cond_sh)
+    out_full = (x_sh, table_sh)
+    out_spec = (x_sh, NamedSharding(mesh, P(dp)))
+    return (full_step, spec_step), args, in_sh, (out_full, out_spec)
+
+
+def run(arch: str = "flux-like", *, batch: int = 16, latent: int = 128,
+        table_dtype: str = "bfloat16", order: int = 2, tag: str = "",
+        multi_pod: bool = False,
+        save_dir: str = ARTIFACT_DIR) -> Dict[str, Any]:
+    cfg = get_config(arch)
+    dcfg = DiffusionConfig(num_inference_steps=50, latent_size=latent,
+                           schedule="rectified_flow")
+    scfg = SpeCaConfig(taylor_order=order)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    fns, args, in_sh, out_shs = build(cfg, dcfg, scfg, batch=batch,
+                                      table_dtype=jnp.dtype(table_dtype),
+                                      mesh=mesh)
+    rec: Dict[str, Any] = {
+        "arch": arch, "batch": batch, "latent": latent,
+        "tokens": (latent // cfg.patch_size) ** 2,
+        "table_dtype": table_dtype, "order": order, "tag": tag,
+        "mesh": "pod2x16x16" if multi_pod else "pod16x16",
+    }
+    for fn, out_sh, name in zip(fns, out_shs, ("full_step", "spec_step")):
+        t0 = time.time()
+        with mesh:
+            c = jax.jit(fn, in_shardings=in_sh,
+                        out_shardings=out_sh).lower(*args).compile()
+        cost = c.cost_analysis()
+        mem = c.memory_analysis()
+        colls = parse_collectives(c.as_text())
+        rec[name] = {
+            "flops_per_device": float(cost.get("flops", 0.0)),
+            "bytes_per_device": float(cost.get("bytes accessed", 0.0)),
+            "wire_bytes": total_wire_bytes(colls),
+            "temp_GiB": round(mem.temp_size_in_bytes / 2**30, 3),
+            "arg_GiB": round(mem.argument_size_in_bytes / 2**30, 3),
+            "compile_s": round(time.time() - t0, 1),
+        }
+        print(f"[speca-dryrun:{tag or 'base'}] {name}: "
+              + " ".join(f"{k}={v}" for k, v in rec[name].items()))
+    if save_dir:
+        os.makedirs(save_dir, exist_ok=True)
+        fname = f"speca_step_{arch}_{table_dtype}_m{order}" \
+                + (f"_{tag}" if tag else "") + ".json"
+        with open(os.path.join(save_dir, fname), "w") as f:
+            json.dump(rec, f, indent=1)
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="flux-like")
+    ap.add_argument("--batch", type=int, default=16)
+    ap.add_argument("--latent", type=int, default=128)
+    ap.add_argument("--table-dtype", default="bfloat16")
+    ap.add_argument("--order", type=int, default=2)
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--multi-pod", action="store_true")
+    args = ap.parse_args()
+    run(args.arch, batch=args.batch, latent=args.latent,
+        table_dtype=args.table_dtype, order=args.order, tag=args.tag,
+        multi_pod=args.multi_pod)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,98 @@
+"""Collective-traffic extraction from compiled (post-SPMD) HLO text.
+
+``cost_analysis()`` has no collective term, so the roofline's third term is
+derived here: every all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute instruction is located in ``compiled.as_text()``, its
+per-device result shape(s) parsed, and converted to *wire bytes per device*
+with ring-algorithm factors over the parsed replica-group size k:
+
+    all-reduce       2·(k−1)/k · result
+    all-gather         (k−1)/k · result        (result = gathered tensor)
+    reduce-scatter     (k−1)   · result        (result = scattered shard)
+    all-to-all         (k−1)/k · result
+    collective-permute          result
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict, List, Tuple
+
+_DTYPE_BYTES = {
+    "f64": 8, "s64": 8, "u64": 8, "c64": 8,
+    "f32": 4, "s32": 4, "u32": 4,
+    "bf16": 2, "f16": 2, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_ONE_SHAPE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_SET_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims.strip():
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_RE.search(line)
+    if m:
+        return max(int(m.group(2)), 1)
+    m = _GROUPS_SET_RE.search(line)
+    if m:
+        return max(len(m.group(1).split(",")), 1)
+    return 2
+
+
+def _wire_factor(op: str, k: int) -> float:
+    if op == "all-reduce":
+        return 2.0 * (k - 1) / k
+    if op == "all-gather":
+        return (k - 1) / k
+    if op == "reduce-scatter":
+        return float(k - 1)
+    if op == "all-to-all":
+        return (k - 1) / k
+    return 1.0  # collective-permute
+
+
+def parse_collectives(hlo_text: str) -> Dict[str, Dict[str, float]]:
+    """Returns {op: {count, result_bytes, wire_bytes}} per collective kind."""
+    out: Dict[str, Dict[str, float]] = {}
+    for line in hlo_text.splitlines():
+        op = None
+        for cand in _COLLECTIVES:
+            if re.search(rf"\s{cand}(?:-start|-done)?\(", line):
+                op = cand
+                break
+        if op is None:
+            continue
+        if f"{op}-done(" in line:
+            continue  # bytes counted at the -start instruction
+        # HLO: `%name = <result shape(s)> <op>(...)`; shapes sit between
+        # '=' and the op token.
+        eq = line.find("=")
+        op_pos = line.find(f" {op}", eq)
+        if eq < 0 or op_pos < 0:
+            continue
+        nbytes = sum(_shape_bytes(d, dims)
+                     for d, dims in _ONE_SHAPE.findall(line[eq:op_pos]))
+        if nbytes == 0:
+            continue
+        k = _group_size(line)
+        rec = out.setdefault(op, {"count": 0, "result_bytes": 0.0,
+                                  "wire_bytes": 0.0})
+        rec["count"] += 1
+        rec["result_bytes"] += nbytes
+        rec["wire_bytes"] += nbytes * _wire_factor(op, k)
+    return out
+
+
+def total_wire_bytes(collectives: Dict[str, Dict[str, float]]) -> float:
+    return sum(rec["wire_bytes"] for rec in collectives.values())

@@ -1,0 +1,43 @@
+"""Production mesh construction (MULTI-POD DRY-RUN step 1).
+
+``make_production_mesh`` is a FUNCTION so importing this module never
+touches jax device state. Single pod = (16, 16) = 256 chips (data, model);
+multi-pod = (2, 16, 16) = 512 chips (pod, data, model).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import numpy as np
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    import jax
+    from jax.sharding import Mesh
+
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    need = int(np.prod(shape))
+    devices = jax.devices()
+    if len(devices) < need:
+        raise RuntimeError(
+            f"mesh {shape} needs {need} devices but only {len(devices)} "
+            "are visible; the dry-run entrypoint must set "
+            "XLA_FLAGS=--xla_force_host_platform_device_count=512 before "
+            "any jax import")
+    if len(devices) == need:
+        return jax.make_mesh(shape, axes)
+    # 512 placeholder devices, single-pod mesh: take the first 256
+    arr = np.asarray(devices[:need]).reshape(shape)
+    return Mesh(arr, axes)
+
+
+def make_local_mesh(shape: Tuple[int, ...] = (1, 1),
+                    axes: Tuple[str, ...] = ("data", "model")):
+    """Tiny mesh over however many devices the test process has."""
+    import jax
+    from jax.sharding import Mesh
+
+    need = int(np.prod(shape))
+    devices = jax.devices()[:need]
+    return Mesh(np.asarray(devices).reshape(shape), axes)

@@ -1,0 +1,119 @@
+"""Step construction for dry-runs and launchers (no env side-effects).
+
+Everything here is pure: ShapeDtypeStruct stand-ins for model inputs,
+parameter/optimizer shape trees, and the jitted-step (fn, args, shardings)
+quadruples for train / prefill / decode. ``repro.launch.dryrun`` (which
+sets XLA_FLAGS at import) re-exports these.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.layers import model as M
+from repro.optim.adamw import AdamWConfig, init_opt_state
+from repro.sharding import specs as S
+from repro.training import lm as T
+
+
+# ---------------------------------------------------------------------------
+# ShapeDtypeStruct stand-ins for every model input (no allocation)
+# ---------------------------------------------------------------------------
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.dtype(dtype))
+
+
+def params_shapes(cfg: ModelConfig):
+    return jax.eval_shape(lambda: M.init_params(cfg, jax.random.PRNGKey(0)))
+
+
+def train_state_shapes(cfg: ModelConfig):
+    p = params_shapes(cfg)
+    opt = jax.eval_shape(lambda: init_opt_state(
+        M.init_params(cfg, jax.random.PRNGKey(0))))
+    return {"params": p, "opt": opt, "step": _sds((), jnp.int32)}
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    """Model-input stand-ins for one workload shape."""
+    B, T = shape.global_batch, shape.seq_len
+    if shape.kind in ("train", "prefill"):
+        if cfg.arch_type == "audio":
+            batch = {"tokens": _sds((B, cfg.num_codebooks, T), jnp.int32)}
+            if shape.kind == "train":
+                batch["labels"] = _sds((B, cfg.num_codebooks, T), jnp.int32)
+        elif cfg.arch_type == "vlm" and cfg.frontend_tokens:
+            n_img = min(cfg.frontend_tokens, T // 2)
+            batch = {
+                "patch_embeds": _sds((B, n_img, cfg.d_model), cfg.dtype),
+                "tokens": _sds((B, T - n_img), jnp.int32),
+            }
+            if shape.kind == "train":
+                batch["labels"] = _sds((B, T - n_img), jnp.int32)
+        else:
+            batch = {"tokens": _sds((B, T), jnp.int32)}
+            if shape.kind == "train":
+                batch["labels"] = _sds((B, T), jnp.int32)
+        return batch
+    # decode: ONE new token + a seq_len cache
+    cache = jax.eval_shape(lambda: M.init_cache(cfg, B, T))
+    if cfg.arch_type == "audio":
+        tokens = _sds((B, cfg.num_codebooks, 1), jnp.int32)
+    else:
+        tokens = _sds((B, 1), jnp.int32)
+    return {"tokens": tokens, "cache": cache,
+            "pos": _sds((), jnp.int32)}
+
+
+# ---------------------------------------------------------------------------
+# Step construction: (fn, arg shapes, in/out shardings)
+# ---------------------------------------------------------------------------
+
+def build_step(cfg: ModelConfig, shape: ShapeConfig, mesh):
+    B = shape.global_batch
+    repl = S.replicated(mesh)
+
+    if shape.kind == "train":
+        opt = AdamWConfig()
+        state_sh = S.train_state_shardings(cfg, mesh, params_shapes(cfg))
+        batch = input_specs(cfg, shape)
+        batch_sh = {k: S.batch_sharding(mesh, B, len(v.shape))
+                    for k, v in batch.items()}
+        fn = partial(T.train_step, cfg, opt)
+        args = (train_state_shapes(cfg), batch)
+        in_sh = (state_sh, batch_sh)
+        out_sh = (state_sh, None)           # metrics: let XLA choose
+        return fn, args, in_sh, out_sh
+
+    params_sh = S.params_shardings(cfg, mesh, params_shapes(cfg))
+    if shape.kind == "prefill":
+        batch = input_specs(cfg, shape)
+        batch_sh = {k: S.batch_sharding(mesh, B, len(v.shape))
+                    for k, v in batch.items()}
+        cache_shapes = jax.eval_shape(
+            lambda: M.init_cache(cfg, B, shape.seq_len))
+        # prefill emits a cache laid out exactly like the decode-side cache
+        cache_sh = S.cache_shardings(cfg, mesh, B, cache_shapes)
+        fn = partial(T.prefill_step, cfg)
+        args = (params_shapes(cfg), batch)
+        in_sh = (params_sh, batch_sh)
+        out_sh = (S.batch_sharding(mesh, B, 3), cache_sh)
+        return fn, args, in_sh, out_sh
+
+    # decode
+    spec = input_specs(cfg, shape)
+    cache_sh = S.cache_shardings(cfg, mesh, B, spec["cache"])
+    tok_sh = S.batch_sharding(mesh, B, len(spec["tokens"].shape))
+    fn = partial(T.serve_step, cfg)
+    args = (params_shapes(cfg), spec["tokens"], spec["cache"], spec["pos"])
+    in_sh = (params_sh, tok_sh, cache_sh, repl)
+    logits_ndim = 4 if cfg.arch_type == "audio" else 3
+    out_sh = (S.batch_sharding(mesh, B, logits_ndim), cache_sh)
+    return fn, args, in_sh, out_sh
+
+

@@ -1,0 +1,71 @@
+"""Distributed LM training launcher.
+
+On real hardware this runs under ``jax.distributed`` with the production
+mesh; on this container it runs the reduced configs on a local mesh. The
+same ``train_step`` is what the train_4k dry-run lowers for 256/512 chips.
+
+Usage:
+  python -m repro.launch.train --arch qwen1.5-0.5b --steps 50 \
+      --seq-len 256 --batch 8 --reduced
+"""
+from __future__ import annotations
+
+import argparse
+import time
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config, reduced
+from repro.data import synthetic as syn
+from repro.launch.mesh import make_local_mesh
+from repro.optim.adamw import AdamWConfig, cosine_warmup_schedule
+from repro.training import lm as T
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--seq-len", type=int, default=256)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--reduced", action="store_true",
+                    help="use the smoke-scale variant of the arch")
+    ap.add_argument("--ckpt", default=None)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = reduced(cfg)
+    opt = AdamWConfig(lr=args.lr)
+    key = jax.random.PRNGKey(0)
+    state = T.make_train_state(cfg, key, opt)
+    n_params = sum(x.size for x in jax.tree.leaves(state["params"]))
+    print(f"[train] {cfg.name}: {n_params/1e6:.1f}M params, "
+          f"{jax.device_count()} device(s)")
+
+    data_cfg = syn.LMStreamConfig(
+        vocab_size=cfg.vocab_size, seq_len=args.seq_len,
+        num_codebooks=cfg.num_codebooks)
+    it = syn.ShardedIterator(partial(syn.lm_batch, data_cfg), args.batch)
+    sched = cosine_warmup_schedule(max(args.steps // 10, 1), args.steps)
+    step_fn = jax.jit(partial(T.train_step, cfg, opt))
+
+    t0 = time.time()
+    for step in range(args.steps):
+        state, metrics = step_fn(state, next(it), sched(step))
+        if step % max(args.steps // 10, 1) == 0 or step == args.steps - 1:
+            print(f"step {step:5d} loss {float(metrics['loss']):.4f} "
+                  f"ce {float(metrics['ce']):.4f} "
+                  f"gnorm {float(metrics['grad_norm']):.2f} "
+                  f"({time.time()-t0:.1f}s)")
+    if args.ckpt:
+        from repro.checkpoint import save_checkpoint
+        save_checkpoint(args.ckpt, state["params"], step=args.steps)
+        print(f"[train] saved checkpoint to {args.ckpt}")
+
+
+if __name__ == "__main__":
+    main()

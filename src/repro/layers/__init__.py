@@ -1,0 +1,2 @@
+from repro.layers import (attention, blocks, embeddings, mlp, model, moe,
+                          norms, rope, ssm)  # noqa: F401

@@ -1,0 +1,178 @@
+"""Multi-head / grouped-query attention with window patterns and KV cache.
+
+The per-layer attention window arrives as a *traced* int32 scalar so the
+whole layer stack can be ``lax.scan``-ned with stacked parameters (gemma3's
+5:1 local:global pattern and hymba's SWA become data, not structure).
+``window <= 0`` means full (global) attention.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def repeat_kv(x: jnp.ndarray, n_rep: int) -> jnp.ndarray:
+    """[B, S, KV, hd] -> [B, S, KV*n_rep, hd] (GQA head duplication)."""
+    if n_rep == 1:
+        return x
+    b, s, kv, hd = x.shape
+    x = jnp.broadcast_to(x[:, :, :, None, :], (b, s, kv, n_rep, hd))
+    return x.reshape(b, s, kv * n_rep, hd)
+
+
+def _mask_bias(q_pos: jnp.ndarray, k_pos: jnp.ndarray, window) -> jnp.ndarray:
+    """Additive mask bias [Sq, Sk] from absolute positions.
+
+    Causal (k <= q) plus sliding window (q - k < window) when window > 0.
+    """
+    diff = q_pos[:, None] - k_pos[None, :]          # [Sq, Sk]
+    ok = diff >= 0
+    windowed = jnp.logical_and(ok, diff < jnp.maximum(window, 1))
+    use_window = window > 0
+    ok = jnp.where(use_window, windowed, ok)
+    return jnp.where(ok, 0.0, NEG_INF).astype(jnp.float32)
+
+
+def attention_core(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                   bias: Optional[jnp.ndarray]) -> jnp.ndarray:
+    """Reference dot-product attention. q [B,Sq,H,hd], k/v [B,Sk,H,hd]."""
+    dtype = q.dtype
+    hd = q.shape[-1]
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) / jnp.sqrt(float(hd))
+    if bias is not None:
+        scores = scores + bias
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", probs, v.astype(jnp.float32))
+    return out.astype(dtype)
+
+
+import os
+
+# Query-chunked attention threshold: sequences at or above this length use
+# the scan-over-query-blocks formulation (O(chunk·S) transient memory, the
+# XLA-level analogue of flash attention — DESIGN.md §3). Override with
+# REPRO_ATTN_CHUNK=0 to force the naive O(S²) path (perf-iteration baseline)
+# or any other chunk size.
+_CHUNK_THRESHOLD = 4096
+
+
+def _attn_chunk_size() -> int:
+    env = os.environ.get("REPRO_ATTN_CHUNK")
+    if env is not None:
+        return int(env)
+    return 1024
+
+
+def full_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                   window, *, q_offset=0, use_flash: bool = False
+                   ) -> jnp.ndarray:
+    """Causal (optionally windowed) self-attention over a full sequence."""
+    n_rep = q.shape[2] // k.shape[2]
+    if use_flash and isinstance(window, int):
+        from repro.kernels import ops as kops
+        return kops.flash_attention(q, repeat_kv(k, n_rep),
+                                    repeat_kv(v, n_rep), causal=True,
+                                    window=window)
+    k, v = repeat_kv(k, n_rep), repeat_kv(v, n_rep)
+    sq = q.shape[1]
+    chunk = _attn_chunk_size()
+    if chunk and sq >= _CHUNK_THRESHOLD and sq % chunk == 0 and sq > chunk:
+        return _chunked_attention(q, k, v, window, q_offset)
+    sk = k.shape[1]
+    q_pos = jnp.arange(sq, dtype=jnp.int32) + q_offset
+    k_pos = jnp.arange(sk, dtype=jnp.int32)
+    bias = _mask_bias(q_pos, k_pos, window)[None, None]
+    return attention_core(q, k, v, bias)
+
+
+def _chunked_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                       window, q_offset) -> jnp.ndarray:
+    """Scan over query blocks: transient memory O(chunk·S) not O(S²)."""
+    b, sq, h, hd = q.shape
+    chunk = _attn_chunk_size()
+    nq = sq // chunk
+    k_pos = jnp.arange(k.shape[1], dtype=jnp.int32)
+    qc = q.reshape(b, nq, chunk, h, hd).transpose(1, 0, 2, 3, 4)
+
+    def body(_, xs):
+        qi, blk = xs
+        q_pos = qi * chunk + jnp.arange(chunk, dtype=jnp.int32) + q_offset
+        bias = _mask_bias(q_pos, k_pos, window)[None, None]
+        return None, attention_core(blk, k, v, bias)
+
+    # Perf iteration B/H3 (EXPERIMENTS.md §Perf): without this checkpoint
+    # the backward pass saves every chunk's [chunk, S] score block — the
+    # full O(S²) again. Recomputing scores in the backward is the
+    # flash-attention trade expressed at the XLA level.
+    body = jax.checkpoint(body)
+    _, out = jax.lax.scan(body, None,
+                          (jnp.arange(nq, dtype=jnp.int32), qc))
+    return out.transpose(1, 0, 2, 3, 4).reshape(b, sq, h, hd)
+
+
+def decode_attention(q: jnp.ndarray, k_cache: jnp.ndarray,
+                     v_cache: jnp.ndarray, cur_pos, window) -> jnp.ndarray:
+    """One-token decode: q [B,1,H,hd] vs cache [B,S,KV,hd].
+
+    ``cur_pos`` is the (traced) position of the query token; cache slots at
+    positions > cur_pos (or outside the window) are masked out.
+    """
+    n_rep = q.shape[2] // k_cache.shape[2]
+    k = repeat_kv(k_cache, n_rep)
+    v = repeat_kv(v_cache, n_rep)
+    sk = k.shape[1]
+    k_pos = jnp.arange(sk, dtype=jnp.int32)
+    q_pos = jnp.asarray(cur_pos, jnp.int32)[None]
+    bias = _mask_bias(q_pos, k_pos, window)[None, None]   # [1,1,1,Sk]
+    return attention_core(q, k, v, bias)
+
+
+def decode_attention_ring(q: jnp.ndarray, k_cache: jnp.ndarray,
+                          v_cache: jnp.ndarray, cur_pos) -> jnp.ndarray:
+    """Ring-buffer decode for fully-windowed attention (§Perf residuals).
+
+    The cache holds only the last W=cache_len positions; slot i currently
+    stores absolute position  p_i = cur_pos − ((cur_pos − i) mod W), the
+    most recent position congruent to i. Slots with p_i < 0 (not yet
+    written) are masked. This cuts the decode cache (and its HBM
+    streaming) from seq_len to window — 128× at long_500k/W=4096.
+    """
+    n_rep = q.shape[2] // k_cache.shape[2]
+    k = repeat_kv(k_cache, n_rep)
+    v = repeat_kv(v_cache, n_rep)
+    w = k.shape[1]
+    i = jnp.arange(w, dtype=jnp.int32)
+    pos = jnp.asarray(cur_pos, jnp.int32)
+    abs_pos = pos - jnp.mod(pos - i, w)
+    ok = abs_pos >= 0
+    bias = jnp.where(ok, 0.0, NEG_INF).astype(jnp.float32)[None, None, None]
+    return attention_core(q, k, v, bias)
+
+
+def update_kv_cache_ring(k_cache: jnp.ndarray, v_cache: jnp.ndarray,
+                         k_new: jnp.ndarray, v_new: jnp.ndarray, pos
+                         ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Insert one-token K/V at slot pos mod cache_len."""
+    w = k_cache.shape[1]
+    slot = jnp.mod(jnp.asarray(pos, jnp.int32), w)
+    k_cache = jax.lax.dynamic_update_slice(
+        k_cache, k_new.astype(k_cache.dtype), (0, slot, 0, 0))
+    v_cache = jax.lax.dynamic_update_slice(
+        v_cache, v_new.astype(v_cache.dtype), (0, slot, 0, 0))
+    return k_cache, v_cache
+
+
+def update_kv_cache(k_cache: jnp.ndarray, v_cache: jnp.ndarray,
+                    k_new: jnp.ndarray, v_new: jnp.ndarray, pos
+                    ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Insert new K/V ([B, S_new, KV, hd]) at ``pos`` into the cache."""
+    k_cache = jax.lax.dynamic_update_slice(
+        k_cache, k_new.astype(k_cache.dtype), (0, pos, 0, 0))
+    v_cache = jax.lax.dynamic_update_slice(
+        v_cache, v_new.astype(v_cache.dtype), (0, pos, 0, 0))
+    return k_cache, v_cache

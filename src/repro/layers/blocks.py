@@ -1,0 +1,233 @@
+"""Transformer blocks for every assigned architecture family.
+
+Each block exposes its two residual-branch increments ``(inc0, inc1)``
+separately — the stream update is ``h = h + inc0`` then ``h = h + inc1``.
+This is the seam SpeCa plugs into: a speculative step substitutes the
+TaylorSeer-predicted increments instead of computing the branch, and the
+verification layer computes the real increments from the predicted stream
+(DESIGN.md §1). Branch layout per family:
+
+  dense/vlm/audio : inc0 = attention, inc1 = MLP
+  moe             : inc0 = attention, inc1 = MoE FFN
+  ssm (mamba2)    : inc0 = SSD mixer, inc1 = 0
+  hybrid (hymba)  : inc0 = mean(attention, SSD), inc1 = MLP
+  dit             : inc0 = gate_msa·attn(AdaLN(h)), inc1 = gate_mlp·mlp(AdaLN(h))
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.layers import attention as attn_lib
+from repro.layers import mlp as mlp_lib
+from repro.layers import moe as moe_lib
+from repro.layers import ssm as ssm_lib
+from repro.layers.norms import layer_norm, rms_norm
+from repro.layers.rope import apply_rope
+
+
+def _qkv(cfg: ModelConfig, bp: Dict[str, Any], x: jnp.ndarray):
+    hd = cfg.resolved_head_dim
+    B, S, _ = x.shape
+    q = jnp.einsum("bsd,de->bse", x, bp["wq"])
+    k = jnp.einsum("bsd,de->bse", x, bp["wk"])
+    v = jnp.einsum("bsd,de->bse", x, bp["wv"])
+    if cfg.qkv_bias:
+        q, k, v = q + bp["bq"], k + bp["bk"], v + bp["bv"]
+    q = q.reshape(B, S, cfg.num_heads, hd)
+    k = k.reshape(B, S, cfg.num_kv_heads, hd)
+    v = v.reshape(B, S, cfg.num_kv_heads, hd)
+    return q, k, v
+
+
+def attn_branch_full(cfg: ModelConfig, bp: Dict[str, Any], x: jnp.ndarray,
+                     *, angles, window, use_flash: bool) -> Tuple[jnp.ndarray,
+                                                                  Tuple]:
+    """Full-sequence attention branch; returns (out, (k, v)) for the cache."""
+    q, k, v = _qkv(cfg, bp, x)
+    if angles is not None:
+        q = apply_rope(q, angles)
+        k = apply_rope(k, angles)
+    if cfg.is_diffusion:
+        out = attn_lib.attention_core(q, k, v, None)   # bidirectional
+    else:
+        out = attn_lib.full_attention(q, k, v, window, use_flash=use_flash)
+    B, S = x.shape[:2]
+    out = jnp.einsum("bse,ed->bsd",
+                     out.reshape(B, S, cfg.num_heads * cfg.resolved_head_dim),
+                     bp["wo"])
+    return out, (k, v)
+
+
+def uses_ring_cache(cfg: ModelConfig) -> bool:
+    """Ring-buffer decode cache: every layer sliding-window (no globals)."""
+    return cfg.attn_window > 0 and cfg.global_every == 0
+
+
+def attn_branch_decode(cfg: ModelConfig, bp: Dict[str, Any], x: jnp.ndarray,
+                       *, angles, window, k_cache, v_cache, pos):
+    """One-token attention; returns (out, (k_cache', v_cache'))."""
+    q, k, v = _qkv(cfg, bp, x)
+    if angles is not None:
+        q = apply_rope(q, angles)
+        k = apply_rope(k, angles)
+    if uses_ring_cache(cfg):
+        k_cache, v_cache = attn_lib.update_kv_cache_ring(
+            k_cache, v_cache, k, v, pos)
+        out = attn_lib.decode_attention_ring(q, k_cache, v_cache, pos)
+    else:
+        k_cache, v_cache = attn_lib.update_kv_cache(k_cache, v_cache, k, v,
+                                                    pos)
+        out = attn_lib.decode_attention(q, k_cache, v_cache, pos, window)
+    B = x.shape[0]
+    out = jnp.einsum("bse,ed->bsd",
+                     out.reshape(B, 1, cfg.num_heads * cfg.resolved_head_dim),
+                     bp["wo"])
+    return out, (k_cache, v_cache)
+
+
+def ffn_branch(cfg: ModelConfig, bp: Dict[str, Any], x: jnp.ndarray
+               ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """MLP or MoE branch; returns (out, aux_loss)."""
+    if cfg.is_moe:
+        out, aux = moe_lib.moe_forward(
+            bp["moe"], x, num_experts=cfg.num_experts,
+            top_k=cfg.num_experts_per_tok, act=cfg.act,
+            capacity_factor=cfg.moe_capacity_factor)
+        return out, aux
+    out = mlp_lib.mlp_forward(bp["mlp"], x, cfg.act)
+    return out, jnp.zeros((), jnp.float32)
+
+
+def ssm_branch_full(cfg: ModelConfig, bp: Dict[str, Any], x: jnp.ndarray):
+    out, final_state, conv_tail = ssm_lib.mamba2_forward(
+        bp["ssm"], x, d_inner=cfg.ssm_d_inner, n_state=cfg.ssm_state,
+        n_heads=cfg.resolved_ssm_heads, head_dim=cfg.ssm_head_dim,
+        chunk=cfg.ssm_chunk, norm_eps=cfg.norm_eps)
+    return out, (final_state, conv_tail)
+
+
+def dit_modulation(bp: Dict[str, Any], t_emb: jnp.ndarray):
+    """AdaLN-Zero: six modulation vectors from the conditioning embedding."""
+    mod = jnp.einsum("bd,de->be", jax.nn.silu(t_emb), bp["mod_w"]) \
+        + bp["mod_b"]
+    return jnp.split(mod, 6, axis=-1)
+
+
+def _ln(x: jnp.ndarray, eps: float) -> jnp.ndarray:
+    """Parameter-free LayerNorm (DiT blocks)."""
+    ones = jnp.ones((x.shape[-1],), jnp.float32)
+    zeros = jnp.zeros((x.shape[-1],), jnp.float32)
+    return layer_norm(x, ones, zeros, eps)
+
+
+# ---------------------------------------------------------------------------
+# Full-sequence block: returns per-branch closures so SpeCa can substitute.
+# ---------------------------------------------------------------------------
+
+def block_branches_full(cfg: ModelConfig, bp: Dict[str, Any], *, angles,
+                        window, t_emb, use_flash: bool):
+    """Returns (fn0, fn1): fn_i(h) -> (inc_i, aux_i, cache_i)."""
+    eps = cfg.norm_eps
+
+    if cfg.arch_type == "dit":
+        sh_a, sc_a, g_a, sh_m, sc_m, g_m = dit_modulation(bp, t_emb)
+
+        def fn0(h):
+            x = _ln(h, eps) * (1 + sc_a[:, None]) + sh_a[:, None]
+            out, kv = attn_branch_full(cfg, bp, x.astype(h.dtype),
+                                       angles=None, window=window,
+                                       use_flash=use_flash)
+            return g_a[:, None] * out, jnp.zeros((), jnp.float32), kv
+
+        def fn1(h):
+            x = _ln(h, eps) * (1 + sc_m[:, None]) + sh_m[:, None]
+            out, aux = ffn_branch(cfg, bp, x.astype(h.dtype))
+            return g_m[:, None] * out, aux, ()
+        return fn0, fn1
+
+    if cfg.arch_type == "ssm":
+        def fn0(h):
+            x = rms_norm(h, bp["ln1"], eps)
+            out, state = ssm_branch_full(cfg, bp, x)
+            return out, jnp.zeros((), jnp.float32), state
+
+        def fn1(h):
+            return (jnp.zeros_like(h), jnp.zeros((), jnp.float32), ())
+        return fn0, fn1
+
+    if cfg.arch_type == "hybrid":
+        def fn0(h):
+            x = rms_norm(h, bp["ln1"], eps)
+            a_out, kv = attn_branch_full(cfg, bp, x, angles=angles,
+                                         window=window, use_flash=use_flash)
+            s_out, state = ssm_branch_full(cfg, bp, x)
+            return 0.5 * (a_out + s_out), jnp.zeros((), jnp.float32), \
+                kv + state
+
+        def fn1(h):
+            x = rms_norm(h, bp["ln2"], eps)
+            out, aux = ffn_branch(cfg, bp, x)
+            return out, aux, ()
+        return fn0, fn1
+
+    # dense / moe / vlm / audio
+    def fn0(h):
+        x = rms_norm(h, bp["ln1"], eps)
+        out, kv = attn_branch_full(cfg, bp, x, angles=angles, window=window,
+                                   use_flash=use_flash)
+        return out, jnp.zeros((), jnp.float32), kv
+
+    def fn1(h):
+        x = rms_norm(h, bp["ln2"], eps)
+        out, aux = ffn_branch(cfg, bp, x)
+        return out, aux, ()
+    return fn0, fn1
+
+
+# ---------------------------------------------------------------------------
+# Decode block (single token, cache in/out).
+# ---------------------------------------------------------------------------
+
+def block_decode(cfg: ModelConfig, bp: Dict[str, Any], h: jnp.ndarray,
+                 cache_slice: Dict[str, Any], *, angles, window, pos
+                 ) -> Tuple[jnp.ndarray, Dict[str, Any]]:
+    eps = cfg.norm_eps
+    new_cache: Dict[str, Any] = {}
+
+    if cfg.arch_type == "ssm":
+        x = rms_norm(h, bp["ln1"], eps)
+        out, s, c = ssm_lib.mamba2_decode(
+            bp["ssm"], x, cache_slice["ssm_state"], cache_slice["conv_state"],
+            d_inner=cfg.ssm_d_inner, n_state=cfg.ssm_state,
+            n_heads=cfg.resolved_ssm_heads, head_dim=cfg.ssm_head_dim,
+            norm_eps=eps)
+        new_cache["ssm_state"], new_cache["conv_state"] = s, c
+        return h + out, new_cache
+
+    if cfg.arch_type == "hybrid":
+        x = rms_norm(h, bp["ln1"], eps)
+        a_out, (kc, vc) = attn_branch_decode(
+            cfg, bp, x, angles=angles, window=window,
+            k_cache=cache_slice["k"], v_cache=cache_slice["v"], pos=pos)
+        s_out, s, c = ssm_lib.mamba2_decode(
+            bp["ssm"], x, cache_slice["ssm_state"], cache_slice["conv_state"],
+            d_inner=cfg.ssm_d_inner, n_state=cfg.ssm_state,
+            n_heads=cfg.resolved_ssm_heads, head_dim=cfg.ssm_head_dim,
+            norm_eps=eps)
+        h = h + 0.5 * (a_out + s_out)
+        out, _ = ffn_branch(cfg, bp, rms_norm(h, bp["ln2"], eps))
+        new_cache.update(k=kc, v=vc, ssm_state=s, conv_state=c)
+        return h + out, new_cache
+
+    x = rms_norm(h, bp["ln1"], eps)
+    a_out, (kc, vc) = attn_branch_decode(
+        cfg, bp, x, angles=angles, window=window,
+        k_cache=cache_slice["k"], v_cache=cache_slice["v"], pos=pos)
+    h = h + a_out
+    out, _ = ffn_branch(cfg, bp, rms_norm(h, bp["ln2"], eps))
+    new_cache.update(k=kc, v=vc)
+    return h + out, new_cache

@@ -1,0 +1,74 @@
+"""Input embeddings: tokens, multi-codebook audio, patches, timesteps, labels."""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def token_embed(table: jnp.ndarray, tokens: jnp.ndarray) -> jnp.ndarray:
+    return jnp.take(table, tokens, axis=0)
+
+
+def codebook_embed(tables: jnp.ndarray, tokens: jnp.ndarray) -> jnp.ndarray:
+    """MusicGen-style: sum of per-codebook embeddings.
+
+    tables [K, V, D]; tokens [B, K, T] -> [B, T, D].
+    """
+    K = tables.shape[0]
+    embs = jax.vmap(lambda tab, tok: jnp.take(tab, tok, axis=0),
+                    in_axes=(0, 1), out_axes=1)(tables, tokens)  # [B,K,T,D]
+    return jnp.sum(embs, axis=1)
+
+
+def patchify(latents: jnp.ndarray, patch: int) -> jnp.ndarray:
+    """[B, (F,) H, W, C] -> [B, T, p*p*C] tokens (frames flattened first)."""
+    if latents.ndim == 5:
+        b, f, h, w, c = latents.shape
+        latents = latents.reshape(b * f, h, w, c)
+    else:
+        f = 1
+        b, h, w, c = latents.shape
+    hp, wp = h // patch, w // patch
+    x = latents.reshape(-1, hp, patch, wp, patch, c)
+    x = x.transpose(0, 1, 3, 2, 4, 5).reshape(-1, hp * wp, patch * patch * c)
+    return x.reshape(b, f * hp * wp, patch * patch * c)
+
+
+def unpatchify(tokens: jnp.ndarray, patch: int, h: int, w: int, c: int,
+               frames: int = 1) -> jnp.ndarray:
+    """[B, T, p*p*C] -> [B, (F,) H, W, C]."""
+    b = tokens.shape[0]
+    hp, wp = h // patch, w // patch
+    x = tokens.reshape(b * frames, hp, wp, patch, patch, c)
+    x = x.transpose(0, 1, 3, 2, 4, 5).reshape(b * frames, h, w, c)
+    if frames > 1:
+        return x.reshape(b, frames, h, w, c)
+    return x
+
+
+def timestep_embedding(t: jnp.ndarray, dim: int,
+                       max_period: float = 10_000.0) -> jnp.ndarray:
+    """Sinusoidal embedding of (possibly fractional) timesteps. t [B]."""
+    half = dim // 2
+    freqs = jnp.exp(-math.log(max_period)
+                    * jnp.arange(half, dtype=jnp.float32) / half)
+    args = t.astype(jnp.float32)[:, None] * freqs[None]
+    emb = jnp.concatenate([jnp.cos(args), jnp.sin(args)], axis=-1)
+    if dim % 2:
+        emb = jnp.pad(emb, ((0, 0), (0, 1)))
+    return emb
+
+
+def time_mlp(params: dict, t: jnp.ndarray, dim: int) -> jnp.ndarray:
+    """DiT timestep conditioning: sinusoid -> MLP -> [B, D]."""
+    h = timestep_embedding(t, dim)
+    h = jax.nn.silu(h @ params["w1"].astype(jnp.float32) + params["b1"])
+    return (h @ params["w2"].astype(jnp.float32) + params["b2"])
+
+
+def label_embed(table: jnp.ndarray, labels: jnp.ndarray) -> jnp.ndarray:
+    """Class-conditional embedding; last row is the CFG null class."""
+    return jnp.take(table, labels, axis=0)

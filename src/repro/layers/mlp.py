@@ -1,0 +1,30 @@
+"""Feed-forward layers: SwiGLU (silu) and GELU MLPs."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def swiglu(x: jnp.ndarray, w_gate: jnp.ndarray, w_up: jnp.ndarray,
+           w_down: jnp.ndarray) -> jnp.ndarray:
+    g = jnp.einsum("...d,df->...f", x, w_gate)
+    u = jnp.einsum("...d,df->...f", x, w_up)
+    return jnp.einsum("...f,fd->...d", jax.nn.silu(g) * u, w_down)
+
+
+def gelu_mlp(x: jnp.ndarray, w_up: jnp.ndarray, w_down: jnp.ndarray,
+             b_up=None, b_down=None) -> jnp.ndarray:
+    h = jnp.einsum("...d,df->...f", x, w_up)
+    if b_up is not None:
+        h = h + b_up
+    h = jax.nn.gelu(h, approximate=True)
+    out = jnp.einsum("...f,fd->...d", h, w_down)
+    if b_down is not None:
+        out = out + b_down
+    return out
+
+
+def mlp_forward(params: dict, x: jnp.ndarray, act: str) -> jnp.ndarray:
+    if act == "silu":
+        return swiglu(x, params["w_gate"], params["w_up"], params["w_down"])
+    return gelu_mlp(x, params["w_up"], params["w_down"])

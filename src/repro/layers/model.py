@@ -1,0 +1,480 @@
+"""Unified backbone: init, embed, scan-over-layers forward, decode, heads.
+
+Every architecture in the registry is executed by the same
+``lax.scan``-over-stacked-layers program; arch differences (window pattern,
+MoE, SSD, hybrid, AdaLN conditioning) are data or per-arch branch functions
+(``repro.layers.blocks``). SpeCa hooks in through ``branch_preds`` /
+``compute_mask``: a speculative diffusion step passes predicted residual
+increments for every layer and a mask that is True only for the verification
+layer, so only that block's real compute is executed (inside ``lax.cond`` —
+the skipped branch costs nothing at runtime).
+"""
+from __future__ import annotations
+
+import math
+import os
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.layers import blocks as blk
+from repro.layers import embeddings as emb
+from repro.layers.norms import layer_norm, rms_norm
+from repro.layers.rope import mrope_angles, rope_angles
+
+
+# ---------------------------------------------------------------------------
+# Initialisation
+# ---------------------------------------------------------------------------
+
+def _dense(key, shape, dtype, scale: Optional[float] = None):
+    fan_in = shape[0] if len(shape) >= 2 else shape[-1]
+    scale = scale if scale is not None else 1.0 / math.sqrt(fan_in)
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+def _init_block(cfg: ModelConfig, key, dtype) -> Dict[str, Any]:
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    ks = iter(jax.random.split(key, 24))
+    bp: Dict[str, Any] = {}
+    if cfg.arch_type != "dit":
+        bp["ln1"] = jnp.zeros((d,), dtype)
+        if cfg.arch_type != "ssm":
+            bp["ln2"] = jnp.zeros((d,), dtype)
+    if cfg.has_attention and cfg.num_heads > 0:
+        bp["wq"] = _dense(next(ks), (d, cfg.num_heads * hd), dtype)
+        bp["wk"] = _dense(next(ks), (d, cfg.num_kv_heads * hd), dtype)
+        bp["wv"] = _dense(next(ks), (d, cfg.num_kv_heads * hd), dtype)
+        bp["wo"] = _dense(next(ks), (cfg.num_heads * hd, d), dtype,
+                          scale=1.0 / math.sqrt(cfg.num_heads * hd))
+        if cfg.qkv_bias:
+            bp["bq"] = jnp.zeros((cfg.num_heads * hd,), dtype)
+            bp["bk"] = jnp.zeros((cfg.num_kv_heads * hd,), dtype)
+            bp["bv"] = jnp.zeros((cfg.num_kv_heads * hd,), dtype)
+    if cfg.is_moe:
+        f = cfg.d_ff
+        bp["moe"] = {
+            "router": _dense(next(ks), (d, cfg.num_experts), dtype),
+            "w_gate": _dense(next(ks), (cfg.num_experts, d, f), dtype,
+                             scale=1.0 / math.sqrt(d)),
+            "w_up": _dense(next(ks), (cfg.num_experts, d, f), dtype,
+                           scale=1.0 / math.sqrt(d)),
+            "w_down": _dense(next(ks), (cfg.num_experts, f, d), dtype,
+                             scale=1.0 / math.sqrt(f)),
+        }
+    elif cfg.d_ff > 0:
+        f = cfg.d_ff
+        mlp = {"w_up": _dense(next(ks), (d, f), dtype),
+               "w_down": _dense(next(ks), (f, d), dtype)}
+        if cfg.act == "silu":
+            mlp["w_gate"] = _dense(next(ks), (d, f), dtype)
+        bp["mlp"] = mlp
+    if cfg.is_ssm or cfg.is_hybrid:
+        di, ns = cfg.ssm_d_inner, cfg.ssm_state
+        nh = cfg.resolved_ssm_heads
+        cc = di + 2 * ns
+        k1, k2 = jax.random.split(next(ks))
+        bp["ssm"] = {
+            "w_in": _dense(next(ks), (d, 2 * di + 2 * ns + nh), dtype),
+            "conv_w": _dense(next(ks), (cfg.ssm_conv, cc), dtype,
+                             scale=1.0 / math.sqrt(cfg.ssm_conv)),
+            "conv_b": jnp.zeros((cc,), dtype),
+            "A_log": jnp.log(jax.random.uniform(
+                k1, (nh,), jnp.float32, 1.0, 16.0)).astype(jnp.float32),
+            "Dp": jnp.ones((nh,), jnp.float32),
+            "dt_bias": jnp.log(jnp.expm1(jax.random.uniform(
+                k2, (nh,), jnp.float32, 1e-3, 1e-1))).astype(jnp.float32),
+            "ssm_norm": jnp.zeros((di,), dtype),
+            "w_out": _dense(next(ks), (di, d), dtype),
+        }
+    if cfg.arch_type == "dit":
+        bp["mod_w"] = jnp.zeros((d, 6 * d), dtype)   # AdaLN-Zero
+        bp["mod_b"] = jnp.zeros((6 * d,), dtype)
+    return bp
+
+
+def init_params(cfg: ModelConfig, key) -> Dict[str, Any]:
+    dtype = cfg.jnp_dtype
+    k_emb, k_blocks, k_head, k_extra = jax.random.split(key, 4)
+    params: Dict[str, Any] = {}
+
+    # --- embeddings ---
+    d = cfg.d_model
+    if cfg.arch_type == "dit":
+        in_dim = cfg.patch_size * cfg.patch_size * cfg.in_channels
+        ke = iter(jax.random.split(k_emb, 8))
+        embed: Dict[str, Any] = {
+            "patch_w": _dense(next(ke), (in_dim, d), dtype),
+            "patch_b": jnp.zeros((d,), dtype),
+            "time": {"w1": _dense(next(ke), (d, d), jnp.float32),
+                     "b1": jnp.zeros((d,), jnp.float32),
+                     "w2": _dense(next(ke), (d, d), jnp.float32),
+                     "b2": jnp.zeros((d,), jnp.float32)},
+        }
+        if cfg.num_classes:
+            embed["label"] = _dense(next(ke), (cfg.num_classes + 1, d),
+                                    dtype, scale=0.02)
+        if cfg.cond_dim:
+            embed["cond_w"] = _dense(next(ke), (cfg.cond_dim, d), dtype)
+            embed["cond_b"] = jnp.zeros((d,), dtype)
+    elif cfg.arch_type == "audio":
+        embed = {"codebooks": _dense(
+            k_emb, (cfg.num_codebooks, cfg.padded_vocab, d), dtype,
+            scale=0.02)}
+    else:
+        embed = {"tok": _dense(k_emb, (cfg.padded_vocab, d), dtype,
+                               scale=0.02)}
+    params["embed"] = embed
+
+    # --- stacked blocks ---
+    block_keys = jax.random.split(k_blocks, cfg.num_layers)
+    params["blocks"] = jax.vmap(
+        lambda k: _init_block(cfg, k, dtype))(block_keys)
+
+    # --- final norm + head ---
+    if cfg.arch_type == "dit":
+        out_dim = cfg.patch_size * cfg.patch_size * cfg.in_channels
+        params["head"] = {
+            "w": jnp.zeros((d, out_dim), dtype),      # zero-init final layer
+            "b": jnp.zeros((out_dim,), dtype),
+            "mod_w": jnp.zeros((d, 2 * d), dtype),
+            "mod_b": jnp.zeros((2 * d,), dtype),
+        }
+    else:
+        params["final_norm"] = jnp.zeros((d,), dtype)
+        if cfg.arch_type == "audio":
+            params["head"] = {"w": _dense(
+                k_head, (cfg.num_codebooks, d, cfg.padded_vocab), dtype)}
+        elif not cfg.tie_embeddings:
+            params["head"] = {"w": _dense(k_head, (d, cfg.padded_vocab),
+                                          dtype)}
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Embedding of model inputs
+# ---------------------------------------------------------------------------
+
+def _scan_unroll():
+    """REPRO_SCAN_UNROLL=1 fully unrolls the layer scan.
+
+    Used by the calibrated dry-run: XLA's cost_analysis counts a while-loop
+    body once, so per-layer costs are only visible in unrolled HLO.
+    """
+    return True if os.environ.get("REPRO_SCAN_UNROLL") == "1" else 1
+
+
+def layer_windows(cfg: ModelConfig) -> jnp.ndarray:
+    return jnp.asarray([cfg.layer_window(i) for i in range(cfg.num_layers)],
+                       jnp.int32)
+
+
+def _angles_for(cfg: ModelConfig, positions: jnp.ndarray) -> jnp.ndarray:
+    hd = cfg.resolved_head_dim
+    if cfg.mrope_sections:
+        return mrope_angles(positions, hd, cfg.rope_theta,
+                            cfg.mrope_sections)
+    return rope_angles(positions, hd, cfg.rope_theta)
+
+
+def _sincos_pos(seq: int, d: int) -> jnp.ndarray:
+    pos = jnp.arange(seq, dtype=jnp.float32)
+    return emb.timestep_embedding(pos, d)
+
+
+def embed_inputs(cfg: ModelConfig, params: Dict[str, Any],
+                 inputs: Dict[str, Any]) -> Dict[str, Any]:
+    """Returns dict(h, t_emb, angles) for the full-sequence forward."""
+    t_emb = None
+    angles = None
+    if cfg.arch_type == "dit":
+        tokens = emb.patchify(inputs["latents"], cfg.patch_size)
+        h = jnp.einsum("btp,pd->btd", tokens.astype(cfg.jnp_dtype),
+                       params["embed"]["patch_w"]) + params["embed"]["patch_b"]
+        h = h + _sincos_pos(h.shape[1], cfg.d_model)[None].astype(h.dtype)
+        t_emb = emb.time_mlp(params["embed"]["time"], inputs["t"],
+                             cfg.d_model)
+        if cfg.num_classes and "labels" in inputs:
+            t_emb = t_emb + emb.label_embed(
+                params["embed"]["label"], inputs["labels"]).astype(jnp.float32)
+        if cfg.cond_dim and "cond" in inputs:
+            c = jnp.einsum("btc,cd->btd", inputs["cond"].astype(cfg.jnp_dtype),
+                           params["embed"]["cond_w"]) + params["embed"]["cond_b"]
+            t_emb = t_emb + jnp.mean(c, axis=1).astype(jnp.float32)
+        t_emb = t_emb.astype(cfg.jnp_dtype)
+        return dict(h=h, t_emb=t_emb, angles=None)
+
+    if cfg.arch_type == "audio":
+        h = emb.codebook_embed(params["embed"]["codebooks"], inputs["tokens"])
+        B, T = h.shape[0], h.shape[1]
+    elif cfg.arch_type == "vlm" and "patch_embeds" in inputs:
+        tok = emb.token_embed(params["embed"]["tok"], inputs["tokens"])
+        h = jnp.concatenate(
+            [inputs["patch_embeds"].astype(tok.dtype), tok], axis=1)
+        B, T = h.shape[0], h.shape[1]
+    else:
+        h = emb.token_embed(params["embed"]["tok"], inputs["tokens"])
+        B, T = h.shape[0], h.shape[1]
+
+    positions = inputs.get("positions")
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(T, dtype=jnp.int32)[None],
+                                     (B, T))
+        if cfg.mrope_sections:
+            positions = jnp.broadcast_to(positions[..., None], (B, T, 3))
+    if cfg.has_attention:
+        angles = _angles_for(cfg, positions)
+    return dict(h=h, t_emb=None, angles=angles)
+
+
+# ---------------------------------------------------------------------------
+# Full-sequence forward (train / prefill / diffusion step)
+# ---------------------------------------------------------------------------
+
+def _empty_cache_like(cfg: ModelConfig, B: int, S: int, dtype):
+    """Zero cache slices matching block_branches_full's cache outputs."""
+    hd = cfg.resolved_head_dim
+    kv = (jnp.zeros((B, S, cfg.num_kv_heads, hd), dtype),) * 2
+    if cfg.arch_type == "ssm":
+        return (jnp.zeros((B, cfg.resolved_ssm_heads, cfg.ssm_head_dim,
+                           cfg.ssm_state), jnp.float32),
+                jnp.zeros((B, cfg.ssm_conv, cfg.ssm_d_inner
+                           + 2 * cfg.ssm_state), dtype))
+    if cfg.arch_type == "hybrid":
+        return kv + (jnp.zeros((B, cfg.resolved_ssm_heads, cfg.ssm_head_dim,
+                                cfg.ssm_state), jnp.float32),
+                     jnp.zeros((B, cfg.ssm_conv, cfg.ssm_d_inner
+                                + 2 * cfg.ssm_state), dtype))
+    if cfg.arch_type == "dit":
+        return kv
+    return kv
+
+
+def forward_full(cfg: ModelConfig, params: Dict[str, Any], h: jnp.ndarray,
+                 *, t_emb=None, angles=None,
+                 branch_preds: Optional[jnp.ndarray] = None,
+                 compute_mask: Optional[jnp.ndarray] = None,
+                 collect_branches: bool = False,
+                 collect_cache: bool = False,
+                 use_flash: bool = False,
+                 remat: bool = False
+                 ) -> Tuple[jnp.ndarray, Dict[str, Any]]:
+    """Scan over stacked blocks.
+
+    branch_preds: [L, 2, B, S, D] predicted residual increments (SpeCa).
+    compute_mask: [L] bool — True = run the block for real. None = all True.
+    remat: checkpoint the scan body (recompute activations in backward) —
+    the production default for training (see EXPERIMENTS.md §Perf).
+    Returns (h_final, dict(aux_loss, branches [L,2,B,S,D]?, cache?)).
+    """
+    windows = layer_windows(cfg)
+    B, S = h.shape[0], h.shape[1]
+    dtype = h.dtype
+    L = cfg.num_layers
+
+    if branch_preds is None:
+        branch_preds = jnp.zeros((L, 2) + h.shape, dtype)
+    else:
+        # the difference table may be stored in another precision (§Perf C)
+        branch_preds = branch_preds.astype(dtype)
+    if compute_mask is None:
+        compute_mask = jnp.ones((L,), bool)
+
+    def body(carry, xs):
+        hh, aux = carry
+        bp, window, preds, cmask = xs
+
+        # Perf iteration B/H4 (EXPERIMENTS.md §Perf): sequence-parallel
+        # residual stream — the scan carry (which remat saves per layer)
+        # lives token-sharded over 'model'; XLA turns the TP boundary
+        # all-reduces into all-gather + reduce-scatter pairs (same wire,
+        # 1/TP the saved-activation memory).
+        from repro.layers.moe import _constrain
+        hh = _constrain(hh, ("pod", "data"), "model", None)
+
+        fn0, fn1 = blk.block_branches_full(
+            cfg, bp, angles=angles, window=window, t_emb=t_emb,
+            use_flash=use_flash)
+
+        def real(hh):
+            inc0, aux0, cache = fn0(hh)
+            h1 = hh + inc0
+            inc1, aux1, _ = fn1(h1)
+            return inc0, inc1, aux0 + aux1, cache
+
+        def spec(hh):
+            return (preds[0], preds[1], jnp.zeros((), jnp.float32),
+                    _empty_cache_like(cfg, B, S, dtype))
+
+        inc0, inc1, aux_l, cache = jax.lax.cond(cmask, real, spec, hh)
+        hh = hh + inc0 + inc1
+        ys = {}
+        if collect_branches:
+            ys["branches"] = jnp.stack([inc0, inc1])
+        if collect_cache:
+            ys["cache"] = cache
+        return (hh, aux + aux_l), ys
+
+    if remat:
+        body = jax.checkpoint(body)
+    (h, aux), ys = jax.lax.scan(
+        body, (h, jnp.zeros((), jnp.float32)),
+        (params["blocks"], windows, branch_preds, compute_mask),
+        unroll=_scan_unroll())
+    out: Dict[str, Any] = {"aux_loss": aux}
+    if collect_branches:
+        out["branches"] = ys["branches"]
+    if collect_cache:
+        out["cache"] = _pack_cache(cfg, ys["cache"])
+    return h, out
+
+
+def _pack_cache(cfg: ModelConfig, raw) -> Dict[str, Any]:
+    if cfg.arch_type == "ssm":
+        state, conv = raw
+        return {"ssm_state": state, "conv_state": conv}
+    if cfg.arch_type == "hybrid":
+        k, v, state, conv = raw
+        return {"k": k, "v": v, "ssm_state": state, "conv_state": conv}
+    k, v = raw
+    return {"k": k, "v": v}
+
+
+# ---------------------------------------------------------------------------
+# Decode (single token with cache)
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> Dict[str, Any]:
+    dtype = cfg.jnp_dtype
+    L, hd = cfg.num_layers, cfg.resolved_head_dim
+    cache: Dict[str, Any] = {}
+    if cfg.has_attention:
+        kv_len = max_len
+        if blk.uses_ring_cache(cfg):
+            # ring buffer: only the window is ever attended (§Perf)
+            kv_len = min(max_len, cfg.attn_window)
+        cache["k"] = jnp.zeros((L, batch, kv_len, cfg.num_kv_heads, hd),
+                               dtype)
+        cache["v"] = jnp.zeros((L, batch, kv_len, cfg.num_kv_heads, hd),
+                               dtype)
+    if cfg.is_ssm or cfg.is_hybrid:
+        cache["ssm_state"] = jnp.zeros(
+            (L, batch, cfg.resolved_ssm_heads, cfg.ssm_head_dim,
+             cfg.ssm_state), jnp.float32)
+        cache["conv_state"] = jnp.zeros(
+            (L, batch, cfg.ssm_conv, cfg.ssm_d_inner + 2 * cfg.ssm_state),
+            dtype)
+    return cache
+
+
+def decode_step_h(cfg: ModelConfig, params: Dict[str, Any], h: jnp.ndarray,
+                  cache: Dict[str, Any], pos) -> Tuple[jnp.ndarray,
+                                                       Dict[str, Any]]:
+    """One decode step on embedded input h [B,1,D]; pos traced scalar."""
+    windows = layer_windows(cfg)
+    angles = None
+    if cfg.has_attention and not cfg.is_diffusion:
+        B = h.shape[0]
+        positions = jnp.broadcast_to(
+            jnp.asarray(pos, jnp.int32)[None, None], (B, 1))
+        if cfg.mrope_sections:
+            positions = jnp.broadcast_to(positions[..., None], (B, 1, 3))
+        angles = _angles_for(cfg, positions)
+
+    def body(hh, xs):
+        bp, window, cache_slice = xs
+        hh, new_slice = blk.block_decode(cfg, bp, hh, cache_slice,
+                                         angles=angles, window=window,
+                                         pos=pos)
+        return hh, new_slice
+
+    h, new_cache = jax.lax.scan(body, h, (params["blocks"], windows, cache),
+                                unroll=_scan_unroll())
+    return h, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Heads
+# ---------------------------------------------------------------------------
+
+def lm_logits(cfg: ModelConfig, params: Dict[str, Any], h: jnp.ndarray
+              ) -> jnp.ndarray:
+    h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+    if cfg.arch_type == "audio":
+        logits = jnp.einsum("btd,kdv->btkv", h, params["head"]["w"])
+    elif cfg.tie_embeddings:
+        logits = jnp.einsum("btd,vd->btv", h, params["embed"]["tok"])
+    else:
+        logits = jnp.einsum("btd,dv->btv", h, params["head"]["w"])
+    if cfg.padded_vocab != cfg.vocab_size:
+        # vocab-padding columns (E5) must never win a softmax/argmax
+        col = jnp.arange(cfg.padded_vocab)
+        logits = jnp.where(col < cfg.vocab_size, logits, -1e30)
+    return logits
+
+
+def dit_output(cfg: ModelConfig, params: Dict[str, Any], h: jnp.ndarray,
+               t_emb: jnp.ndarray, spatial: Tuple[int, ...]) -> jnp.ndarray:
+    """Final AdaLN + linear + unpatchify. spatial = (H, W) or (F, H, W)."""
+    hp = params["head"]
+    mod = jnp.einsum("bd,de->be", jax.nn.silu(t_emb), hp["mod_w"]) \
+        + hp["mod_b"]
+    shift, scale = jnp.split(mod, 2, axis=-1)
+    ones = jnp.ones((h.shape[-1],), jnp.float32)
+    zeros = jnp.zeros((h.shape[-1],), jnp.float32)
+    x = layer_norm(h, ones, zeros, cfg.norm_eps)
+    x = x * (1 + scale[:, None]) + shift[:, None]
+    x = jnp.einsum("btd,dp->btp", x.astype(h.dtype), hp["w"]) + hp["b"]
+    if len(spatial) == 3:
+        f, hh, ww = spatial
+        return emb.unpatchify(x, cfg.patch_size, hh, ww, cfg.in_channels,
+                              frames=f)
+    hh, ww = spatial
+    return emb.unpatchify(x, cfg.patch_size, hh, ww, cfg.in_channels)
+
+
+# ---------------------------------------------------------------------------
+# Convenience top-level entry points
+# ---------------------------------------------------------------------------
+
+def lm_forward(cfg: ModelConfig, params: Dict[str, Any],
+               inputs: Dict[str, Any], *, collect_cache: bool = False,
+               use_flash: bool = False, remat: bool = False
+               ) -> Tuple[jnp.ndarray, Dict[str, Any]]:
+    e = embed_inputs(cfg, params, inputs)
+    h, extras = forward_full(cfg, params, e["h"], t_emb=e["t_emb"],
+                             angles=e["angles"], collect_cache=collect_cache,
+                             use_flash=use_flash, remat=remat)
+    return lm_logits(cfg, params, h), extras
+
+
+def lm_decode_step(cfg: ModelConfig, params: Dict[str, Any],
+                   tokens: jnp.ndarray, cache: Dict[str, Any], pos
+                   ) -> Tuple[jnp.ndarray, Dict[str, Any]]:
+    """tokens [B,1] (or [B,K,1] audio) -> (logits, new cache)."""
+    if cfg.arch_type == "audio":
+        h = emb.codebook_embed(params["embed"]["codebooks"], tokens)
+    else:
+        h = emb.token_embed(params["embed"]["tok"], tokens)
+    h, new_cache = decode_step_h(cfg, params, h, cache, pos)
+    return lm_logits(cfg, params, h), new_cache
+
+
+def dit_forward(cfg: ModelConfig, params: Dict[str, Any],
+                inputs: Dict[str, Any], *,
+                branch_preds=None, compute_mask=None,
+                collect_branches: bool = False, use_flash: bool = False
+                ) -> Tuple[jnp.ndarray, Dict[str, Any]]:
+    """Denoiser forward: latents [B,(F,)H,W,C], t [B] -> eps prediction."""
+    lat = inputs["latents"]
+    spatial = lat.shape[1:-1]
+    e = embed_inputs(cfg, params, inputs)
+    h, extras = forward_full(cfg, params, e["h"], t_emb=e["t_emb"],
+                             angles=None, branch_preds=branch_preds,
+                             compute_mask=compute_mask,
+                             collect_branches=collect_branches,
+                             use_flash=use_flash)
+    out = dit_output(cfg, params, h, e["t_emb"], spatial)
+    return out, extras

@@ -1,0 +1,176 @@
+"""Top-k mixture-of-experts with static-capacity scatter dispatch.
+
+TPU adaptation note (DESIGN.md §3): GPU MoE kernels (megablocks) use dynamic
+grouped GEMMs; the TPU-native formulation keeps shapes static by routing
+tokens into a per-expert capacity buffer (GShard/Switch style). We use a
+scatter/gather dispatch instead of the classic one-hot dispatch einsum — the
+[tokens, experts, capacity] one-hot tensor is O(T²k/E) memory and dominates
+HBM at 32k-token prefill, while the scatter buffer is O(E·C·D).
+
+FLOPs scale with top-k (active experts), not total experts, matching the
+6·N_active·D training-FLOPs model used in the roofline analysis.
+"""
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+def _constrain(x: jnp.ndarray, *spec):
+    """Apply a sharding constraint iff tracing under a mesh with 'model'.
+
+    Perf iteration A/E2 (EXPERIMENTS.md §Perf): without this the dispatch
+    buffer is replicated and every scatter triggers a full-buffer
+    all-reduce (2.7 GB/device/layer on granite-moe train_4k).
+    """
+    try:
+        from jax._src.mesh import thread_resources
+        mesh = thread_resources.env.physical_mesh
+        if mesh.empty or "model" not in mesh.axis_names:
+            return x
+        clean = []
+        for dim, axis in zip(x.shape, spec):
+            if isinstance(axis, tuple):
+                axis = tuple(a for a in axis if a in mesh.axis_names)
+                axis = axis if axis else None
+            size = 1
+            if axis is not None:
+                axes = axis if isinstance(axis, tuple) else (axis,)
+                for a in axes:
+                    size *= mesh.shape[a]
+            if axis is not None and dim % size != 0:
+                return x                     # divisibility guard
+            clean.append(axis)
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(mesh, P(*clean)))
+    except Exception:  # noqa: BLE001 — constraint is an optimisation only
+        return x
+
+
+def _model_axis_size() -> int:
+    try:
+        from jax._src.mesh import thread_resources
+        mesh = thread_resources.env.physical_mesh
+        if mesh.empty or "model" not in mesh.axis_names:
+            return 1
+        return mesh.shape["model"]
+    except Exception:  # noqa: BLE001
+        return 1
+
+
+def _dispatch_groups(n_tok: int) -> int:
+    """Number of local dispatch groups = size of the ambient data axes.
+
+    Perf iteration A/E3 (EXPERIMENTS.md §Perf): with G matching the batch
+    sharding, the rank cumsum and capacity scatter carry an explicit G
+    batch dim that SPMD partitions locally (no cross-shard scan chain, no
+    replicated-buffer all-reduce); the G↔E regroup between dispatch and
+    expert compute is then a clean all-to-all — the GShard layout, which
+    is the TPU-native form of the paper-era GPU grouped-GEMM dispatch.
+    """
+    try:
+        from jax._src.mesh import thread_resources
+        mesh = thread_resources.env.physical_mesh
+        if mesh.empty:
+            return 1
+        g = 1
+        for a in ("pod", "data"):
+            if a in mesh.axis_names:
+                g *= mesh.shape[a]
+        return g if g > 1 and n_tok % g == 0 else 1
+    except Exception:  # noqa: BLE001
+        return 1
+
+
+def moe_forward(params: dict, x: jnp.ndarray, *, num_experts: int,
+                top_k: int, act: str = "silu",
+                capacity_factor: float = 1.25
+                ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Returns (output [B,T,D], aux load-balance loss scalar)."""
+    B, T, D = x.shape
+    E, K = num_experts, top_k
+    n_tok = B * T
+    x_flat = x.reshape(n_tok, D)
+
+    logits = jnp.einsum("nd,de->ne", x_flat, params["router"]
+                        ).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)                    # [N0, E]
+    gate_vals, gate_idx = jax.lax.top_k(probs, K)              # [N0, K]
+    gate_vals = gate_vals / jnp.sum(gate_vals, axis=-1, keepdims=True)
+
+    # Switch-style load-balance auxiliary loss: E * Σ_e f_e · p̄_e.
+    assign = jax.nn.one_hot(gate_idx[:, 0], E, dtype=jnp.float32)
+    f = jnp.mean(assign, axis=0)
+    p = jnp.mean(probs, axis=0)
+    aux_loss = E * jnp.sum(f * p)
+
+    # --- grouped static-capacity dispatch (local rank + scatter per group)
+    G = _dispatch_groups(n_tok)
+    Ng = (n_tok // G) * K                                      # slots/group
+    cap_g = round_up(max(int(math.ceil(capacity_factor * Ng / E)), 8), 8)
+    dp = ("pod", "data") if G > 1 else None
+
+    flat_e = gate_idx.reshape(G, Ng)                           # expert ids
+    flat_g = gate_vals.reshape(G, Ng)
+    tok_of = jnp.arange(Ng, dtype=jnp.int32) // K              # local token
+    xg = x_flat.reshape(G, n_tok // G, D)
+
+    onehot = jax.nn.one_hot(flat_e, E, dtype=jnp.int32)        # [G, Ng, E]
+    pos_all = jnp.cumsum(onehot, axis=1) - 1                   # local rank
+    pos = jnp.take_along_axis(pos_all, flat_e[..., None],
+                              axis=2)[..., 0]                  # [G, Ng]
+    keep = pos < cap_g                                         # drop overflow
+    slot = flat_e * cap_g + jnp.minimum(pos, cap_g - 1)        # [G, Ng]
+
+    contrib = jnp.where(keep[..., None], xg[:, tok_of, :], 0.0)
+
+    def scatter_one(sl, up):
+        return jnp.zeros((E * cap_g, D), x.dtype).at[sl].add(
+            up.astype(x.dtype), mode="drop")
+
+    buf = jax.vmap(scatter_one)(slot, contrib)                 # [G, E·cap, D]
+    if dp:
+        buf = _constrain(buf, dp, None, None)
+    # G↔E regroup: data-sharded groups -> expert-sharded rows (all-to-all)
+    xe = buf.reshape(G, E, cap_g, D).transpose(1, 0, 2, 3) \
+        .reshape(E, G * cap_g, D)
+    if E % _model_axis_size() == 0:
+        xe = _constrain(xe, "model", None, None)   # expert parallel
+    else:
+        # E4: experts don't divide the model axis (mixtral: 8 on 16) —
+        # shard the capacity dim instead so the F-TP expert GEMMs read
+        # local activations (EXPERIMENTS.md §Perf A).
+        xe = _constrain(xe, None, "model", None)
+
+    # --- per-expert FFN ---
+    if act == "silu":
+        g = jnp.einsum("ecd,edf->ecf", xe, params["w_gate"])
+        u = jnp.einsum("ecd,edf->ecf", xe, params["w_up"])
+        h = jax.nn.silu(g) * u
+    else:
+        h = jax.nn.gelu(jnp.einsum("ecd,edf->ecf", xe, params["w_up"]),
+                        approximate=True)
+    ye = jnp.einsum("ecf,efd->ecd", h, params["w_down"])
+    if E % _model_axis_size() == 0:
+        ye = _constrain(ye, "model", None, None)
+    else:
+        ye = _constrain(ye, None, "model", None)
+
+    # --- combine (inverse regroup, local gather per group) ---
+    ye = ye.reshape(E, G, cap_g, D).transpose(1, 0, 2, 3) \
+        .reshape(G, E * cap_g, D)
+    if dp:
+        ye = _constrain(ye, dp, None, None)
+    out_k = jax.vmap(lambda y_g, sl: y_g[sl])(ye, slot)        # [G, Ng, D]
+    out_k = out_k * (flat_g * keep.astype(jnp.float32)
+                     ).astype(x.dtype)[..., None]
+    y = out_k.reshape(G, n_tok // G, K, D).sum(axis=2).reshape(B, T, D)
+    return y, aux_loss

@@ -1,0 +1,28 @@
+"""Normalisation layers: RMSNorm, LayerNorm, AdaLN-Zero modulation."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def rms_norm(x: jnp.ndarray, weight: jnp.ndarray, eps: float = 1e-5):
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x / jnp.sqrt(var + eps)
+    return (x * (1.0 + weight.astype(jnp.float32))).astype(dtype)
+
+
+def layer_norm(x: jnp.ndarray, weight: jnp.ndarray, bias: jnp.ndarray,
+               eps: float = 1e-5):
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    mean = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    x = (x - mean) / jnp.sqrt(var + eps)
+    return (x * weight.astype(jnp.float32)
+            + bias.astype(jnp.float32)).astype(dtype)
+
+
+def modulate(x: jnp.ndarray, shift: jnp.ndarray, scale: jnp.ndarray):
+    """AdaLN modulation: x * (1 + scale) + shift, broadcast over tokens."""
+    return x * (1.0 + scale[:, None, :]) + shift[:, None, :]

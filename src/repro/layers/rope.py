@@ -1,0 +1,65 @@
+"""Rotary position embeddings: standard RoPE and Qwen2-VL M-RoPE."""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    """Inverse frequencies, shape [head_dim // 2], float32."""
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+
+
+def rope_angles(positions: jnp.ndarray, head_dim: int,
+                theta: float) -> jnp.ndarray:
+    """positions [...,] -> angles [..., head_dim//2]."""
+    inv = rope_freqs(head_dim, theta)
+    return positions.astype(jnp.float32)[..., None] * inv
+
+
+def mrope_angles(positions: jnp.ndarray, head_dim: int, theta: float,
+                 sections: Tuple[int, ...]) -> jnp.ndarray:
+    """Qwen2-VL multimodal RoPE.
+
+    ``positions`` has shape [..., 3] carrying (temporal, height, width)
+    indices per token; ``sections`` partitions the head_dim//2 frequency
+    slots into (t, h, w) groups. Text tokens carry identical indices in all
+    three channels, which makes M-RoPE coincide with 1-D RoPE there.
+    """
+    assert sum(sections) == head_dim // 2, (sections, head_dim)
+    inv = rope_freqs(head_dim, theta)
+    ang_per_axis = positions.astype(jnp.float32)[..., None, :] \
+        * inv[..., :, None]                      # [..., half, 3]
+    idx = jnp.concatenate([
+        jnp.full((s,), i, dtype=jnp.int32) for i, s in enumerate(sections)
+    ])                                           # [half]
+    sel = jax.nn.one_hot(idx, len(sections), dtype=jnp.float32)  # [half, 3]
+    return jnp.sum(ang_per_axis * sel, axis=-1)
+
+
+def apply_rope(x: jnp.ndarray, angles: jnp.ndarray) -> jnp.ndarray:
+    """Rotate pairs. x [B, S, H, hd]; angles [B, S, hd//2] or [S, hd//2]."""
+    dtype = x.dtype
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half].astype(jnp.float32), x[..., half:].astype(jnp.float32)
+    if angles.ndim == 2:  # [S, half] -> broadcast batch
+        cos = jnp.cos(angles)[None, :, None, :]
+        sin = jnp.sin(angles)[None, :, None, :]
+    else:                 # [B, S, half]
+        cos = jnp.cos(angles)[:, :, None, :]
+        sin = jnp.sin(angles)[:, :, None, :]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(dtype)
+
+
+def positions_for(batch: int, seq: int, offset=0,
+                  mrope: bool = False) -> jnp.ndarray:
+    """Default position ids; offset may be a traced scalar (decode)."""
+    pos = jnp.arange(seq, dtype=jnp.int32)[None, :] + offset
+    pos = jnp.broadcast_to(pos, (batch, seq))
+    if mrope:
+        pos = jnp.broadcast_to(pos[..., None], (batch, seq, 3))
+    return pos

@@ -1,0 +1,199 @@
+"""Mamba2 SSD (state-space duality) mixer — chunked parallel form + decode.
+
+TPU adaptation (DESIGN.md §3): the GPU reference uses a fused Triton scan;
+on TPU the SSD *dual form* is the natural fit — intra-chunk work becomes
+MXU-friendly batched matmuls over [chunk, chunk] blocks and the inter-chunk
+recurrence is a short ``lax`` cumulative pass over chunk states, so the
+sequential dimension shrinks from T to T/chunk.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.layers.norms import rms_norm
+
+
+def segsum(x: jnp.ndarray) -> jnp.ndarray:
+    """Segment sums: out[..., i, j] = sum_{k=j+1..i} x[..., k] (−inf above diag)."""
+    cs = jnp.cumsum(x, axis=-1)
+    d = cs[..., :, None] - cs[..., None, :]
+    q = x.shape[-1]
+    mask = jnp.tril(jnp.ones((q, q), dtype=bool))
+    return jnp.where(mask, d, -jnp.inf)
+
+
+def ssd_chunked(x: jnp.ndarray, dA: jnp.ndarray, B: jnp.ndarray,
+                C: jnp.ndarray, chunk: int,
+                initial_state: Optional[jnp.ndarray] = None
+                ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """SSD dual-form scan.
+
+    x  [b, t, h, p]  (already multiplied by dt)
+    dA [b, t, h]     (dt * A, negative)
+    B  [b, t, n], C [b, t, n]  (single group, shared across heads)
+    Returns (y [b, t, h, p], final_state [b, h, p, n]).
+    """
+    b, t, h, p = x.shape
+    n = B.shape[-1]
+    assert t % chunk == 0, (t, chunk)
+    c = t // chunk
+    f32 = jnp.float32
+    # Perf iteration B/H1 (EXPERIMENTS.md §Perf): the decay/cumsum math
+    # stays f32 (exp of sums — numerically delicate) but the large
+    # intra-chunk tensors and einsums run in the input dtype; on bf16
+    # configs this halves the dominant HBM traffic of the SSD dual form.
+    # REPRO_SSD_F32=1 restores the all-f32 baseline for A/B measurement.
+    import os as _os
+    cdt = f32 if _os.environ.get("REPRO_SSD_F32") == "1" else x.dtype
+
+    xb = x.reshape(b, c, chunk, h, p)
+    Bb = B.reshape(b, c, chunk, n).astype(cdt)
+    Cb = C.reshape(b, c, chunk, n).astype(cdt)
+    Ab = dA.reshape(b, c, chunk, h).transpose(0, 3, 1, 2).astype(f32)
+    A_cumsum = jnp.cumsum(Ab, axis=-1)                     # [b,h,c,q]
+
+    # 1. intra-chunk (diagonal blocks)
+    L = jnp.exp(segsum(Ab)).astype(cdt)                    # [b,h,c,q,q]
+    Y_diag = jnp.einsum("bcln,bcsn,bhcls,bcshp->bclhp", Cb, Bb, L, xb,
+                        preferred_element_type=f32)
+
+    # 2. per-chunk output states
+    decay_states = jnp.exp(A_cumsum[..., -1:] - A_cumsum).astype(cdt)
+    states = jnp.einsum("bcln,bhcl,bclhp->bchpn", Bb, decay_states, xb,
+                        preferred_element_type=f32)
+
+    # 3. inter-chunk recurrence over chunk states
+    if initial_state is None:
+        init = jnp.zeros((b, 1, h, p, n), dtype=f32)
+    else:
+        init = initial_state.astype(f32)[:, None]
+    states = jnp.concatenate([init, states], axis=1)       # [b,c+1,h,p,n]
+    chunk_decay = A_cumsum[..., -1]                        # [b,h,c]
+    padded = jnp.pad(chunk_decay, ((0, 0), (0, 0), (1, 0)))
+    decay_chunk = jnp.exp(segsum(padded))                  # [b,h,c+1,c+1]
+    decay_chunk = jnp.where(jnp.isfinite(decay_chunk), decay_chunk, 0.0)
+    new_states = jnp.einsum("bhzc,bchpn->bzhpn", decay_chunk, states)
+    prev_states, final_state = new_states[:, :-1], new_states[:, -1]
+
+    # 4. state -> output contribution
+    state_decay_out = jnp.exp(A_cumsum)                    # [b,h,c,q]
+    Y_off = jnp.einsum("bcln,bchpn,bhcl->bclhp", Cb,
+                       prev_states.astype(cdt),
+                       state_decay_out.astype(cdt),
+                       preferred_element_type=f32)
+
+    y = (Y_diag + Y_off).reshape(b, t, h, p)
+    return y.astype(x.dtype), final_state
+
+
+def causal_conv(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray
+                ) -> jnp.ndarray:
+    """Depthwise causal conv. x [B,T,C], w [W,C], b [C]."""
+    width = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (width - 1, 0), (0, 0)))
+    out = jax.lax.conv_general_dilated(
+        xp.astype(jnp.float32),
+        w.astype(jnp.float32)[:, None, :],           # [W, 1, C]
+        window_strides=(1,),
+        padding="VALID",
+        dimension_numbers=("NWC", "WIO", "NWC"),
+        feature_group_count=x.shape[-1])
+    return (out + b.astype(jnp.float32)).astype(x.dtype)
+
+
+def _split_proj(zxbcdt: jnp.ndarray, d_inner: int, n_state: int,
+                n_heads: int):
+    z = zxbcdt[..., :d_inner]
+    xBC = zxbcdt[..., d_inner:2 * d_inner + 2 * n_state]
+    dt = zxbcdt[..., 2 * d_inner + 2 * n_state:]
+    return z, xBC, dt
+
+
+def mamba2_forward(params: dict, x_in: jnp.ndarray, *, d_inner: int,
+                   n_state: int, n_heads: int, head_dim: int, chunk: int,
+                   norm_eps: float = 1e-5,
+                   initial_state: Optional[jnp.ndarray] = None
+                   ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Full-sequence Mamba2 mixer.
+
+    Returns (out [B,T,D], final ssm state [B,h,p,n], conv tail [B,W,C]) —
+    the conv tail is the last ``conv_width`` *pre-conv* xBC rows, handed to
+    ``mamba2_decode`` as the initial conv state after prefill.
+    """
+    B_, T, _ = x_in.shape
+    zxbcdt = jnp.einsum("btd,de->bte", x_in, params["w_in"])
+    z, xBC, dt = _split_proj(zxbcdt, d_inner, n_state, n_heads)
+
+    width = params["conv_w"].shape[0]
+    tail_src = jnp.pad(xBC, ((0, 0), (width, 0), (0, 0)))
+    conv_tail = tail_src[:, -width:, :]
+
+    xBC = jax.nn.silu(causal_conv(xBC, params["conv_w"], params["conv_b"]))
+    x_part = xBC[..., :d_inner]
+    Bmat = xBC[..., d_inner:d_inner + n_state]
+    Cmat = xBC[..., d_inner + n_state:]
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + params["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))        # [nh]
+
+    pad = (-T) % chunk
+    xh = x_part.reshape(B_, T, n_heads, head_dim)
+    xdt = xh * dt[..., None].astype(xh.dtype)
+    dA = dt * A
+    if pad:
+        xdt = jnp.pad(xdt, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dA = jnp.pad(dA, ((0, 0), (0, pad), (0, 0)))
+        Bmat = jnp.pad(Bmat, ((0, 0), (0, pad), (0, 0)))
+        Cmat = jnp.pad(Cmat, ((0, 0), (0, pad), (0, 0)))
+    y, final_state = ssd_chunked(xdt, dA, Bmat, Cmat, chunk,
+                                 initial_state=initial_state)
+    y = y[:, :T]
+    y = y + params["Dp"].astype(y.dtype)[None, None, :, None] * xh
+    y = y.reshape(B_, T, d_inner)
+    y = rms_norm(y * jax.nn.silu(z), params["ssm_norm"], norm_eps)
+    out = jnp.einsum("bte,ed->btd", y, params["w_out"])
+    return out, final_state, conv_tail
+
+
+def mamba2_decode(params: dict, x_in: jnp.ndarray, ssm_state: jnp.ndarray,
+                  conv_state: jnp.ndarray, *, d_inner: int, n_state: int,
+                  n_heads: int, head_dim: int, norm_eps: float = 1e-5
+                  ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Single-token recurrent step.
+
+    x_in [B,1,D]; ssm_state [B,h,p,n]; conv_state [B,W,C_conv].
+    Returns (out [B,1,D], ssm_state', conv_state').
+    """
+    B_ = x_in.shape[0]
+    zxbcdt = jnp.einsum("btd,de->bte", x_in, params["w_in"])[:, 0]
+    z, xBC, dt = _split_proj(zxbcdt, d_inner, n_state, n_heads)
+
+    conv_state = jnp.concatenate(
+        [conv_state[:, 1:], xBC[:, None, :].astype(conv_state.dtype)], axis=1)
+    w = params["conv_w"].astype(jnp.float32)                 # [W, C]
+    xBC = jnp.einsum("bwc,wc->bc", conv_state.astype(jnp.float32), w)
+    xBC = jax.nn.silu(xBC + params["conv_b"].astype(jnp.float32)
+                      ).astype(x_in.dtype)
+    x_part = xBC[..., :d_inner]
+    Bmat = xBC[..., d_inner:d_inner + n_state].astype(jnp.float32)
+    Cmat = xBC[..., d_inner + n_state:].astype(jnp.float32)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + params["dt_bias"].astype(jnp.float32))  # [B,nh]
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))
+    dA = jnp.exp(dt * A)                                     # [B,nh]
+
+    xh = x_part.reshape(B_, n_heads, head_dim).astype(jnp.float32)
+    ssm_state = (dA[:, :, None, None] * ssm_state.astype(jnp.float32)
+                 + dt[:, :, None, None] * xh[..., None]
+                 * Bmat[:, None, None, :])
+    y = jnp.einsum("bhpn,bn->bhp", ssm_state, Cmat)
+    y = y + params["Dp"].astype(jnp.float32)[None, :, None] * xh
+    y = y.reshape(B_, d_inner).astype(x_in.dtype)
+    y = rms_norm(y * jax.nn.silu(z), params["ssm_norm"], norm_eps)
+    out = jnp.einsum("bd,de->be", y, params["w_out"])[:, None, :]
+    return out, ssm_state.astype(jnp.float32), conv_state

@@ -1,0 +1,3 @@
+from repro.optim.adamw import (AdamWConfig, adamw_update,  # noqa: F401
+                               cosine_warmup_schedule, global_norm,
+                               init_opt_state)

@@ -1,0 +1,1 @@
+from repro.serving.engine import Request, Result, SpeCaEngine, allocation_report  # noqa: F401

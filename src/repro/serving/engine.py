@@ -1,0 +1,168 @@
+"""SpeCa diffusion serving engine — where sample-adaptive compute pays off.
+
+The paper's sample-adaptive allocation (§1) is realised at request
+granularity: each request (or same-cond bucket) runs its own SpeCa loop, so
+easy samples finish with more accepted drafts (fewer full forwards) than
+hard ones. The engine runs a host-driven loop over two jitted step
+functions (spec-attempt / full) and keeps per-request accounting that the
+Table-2-style benchmark aggregates (57.5%/42.5% split analysis).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from functools import partial
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import DiffusionConfig, ModelConfig, SpeCaConfig
+from repro.core import taylor
+from repro.core.complexity import forward_flops, verify_flops
+from repro.core.speca import _num_tokens, _verify_layer
+from repro.core.verify import relative_error, threshold_schedule
+from repro.diffusion.pipeline import latent_shape, make_stepper, model_inputs
+from repro.layers import model as M
+
+
+@dataclasses.dataclass
+class Request:
+    request_id: int
+    cond: Dict[str, Any]
+    seed: int = 0
+
+
+@dataclasses.dataclass
+class Result:
+    request_id: int
+    sample: Any
+    num_full: int
+    num_spec: int
+    flops: float
+    wall_s: float
+
+    @property
+    def alpha(self) -> float:
+        return self.num_spec / max(self.num_full + self.num_spec, 1)
+
+
+class SpeCaEngine:
+    """Batched diffusion serving with per-request speculative caching."""
+
+    def __init__(self, cfg: ModelConfig, params, dcfg: DiffusionConfig,
+                 scfg: SpeCaConfig, *, draft_mode: str = "taylor"):
+        self.cfg, self.params = cfg, params
+        self.dcfg, self.scfg = dcfg, scfg
+        self.stepper = make_stepper(dcfg)
+        self.vl = _verify_layer(cfg, scfg)
+        self.n_tok = _num_tokens(cfg, dcfg)
+        self.draft_mode = draft_mode
+        self._full_flops = forward_flops(cfg, self.n_tok)
+        self._verify_flops = verify_flops(cfg, self.n_tok)
+        self._spec_fn = None
+        self._full_fn = None
+
+    # --- jitted single steps -------------------------------------------
+    def _build(self, batch: int):
+        cfg, params, stepper = self.cfg, self.params, self.stepper
+        cmask = jnp.arange(cfg.num_layers) == self.vl
+
+        def full_step(x, tstate, s, cond):
+            inputs = model_inputs(cfg, x, stepper.t_model[s], cond)
+            out, extras = M.dit_forward(cfg, params, inputs,
+                                        collect_branches=True)
+            tstate = taylor.update(tstate, extras["branches"], s)
+            return stepper.advance(x, out, s), tstate
+
+        def spec_step(x, tstate, s, cond):
+            preds = taylor.predict(tstate, s, mode=self.draft_mode)
+            inputs = model_inputs(cfg, x, stepper.t_model[s], cond)
+            out, extras = M.dit_forward(cfg, params, inputs,
+                                        branch_preds=preds,
+                                        compute_mask=cmask,
+                                        collect_branches=True)
+            real_vl = extras["branches"][self.vl][0] \
+                + extras["branches"][self.vl][1]
+            pred_vl = preds[self.vl][0] + preds[self.vl][1]
+            err = relative_error(pred_vl, real_vl,
+                                 metric=self.scfg.error_metric,
+                                 eps=self.scfg.eps)
+            return stepper.advance(x, out, s), err
+
+        self._full_fn = jax.jit(full_step)
+        self._spec_fn = jax.jit(spec_step)
+
+    # --- serving --------------------------------------------------------
+    def run_request(self, req: Request) -> Result:
+        """Serve one request (batch=1 — per-sample adaptivity is exact)."""
+        if self._full_fn is None:
+            self._build(1)
+        cfg, scfg, stepper = self.cfg, self.scfg, self.stepper
+        key = jax.random.PRNGKey(req.seed)
+        x = jax.random.normal(key, latent_shape(cfg, self.dcfg, 1),
+                              jnp.float32)
+        feat_shape = taylor.feature_shape_for(cfg.num_layers, 1, self.n_tok,
+                                              cfg.d_model)
+        tstate = taylor.init_state(scfg.taylor_order, feat_shape,
+                                   cfg.jnp_dtype)
+        num_full = num_spec = 0
+        since = 0
+        flops = 0.0
+        t0 = time.time()
+        for s in range(stepper.num_steps):
+            warm = int(tstate["n_anchors"]) > scfg.taylor_order
+            if warm and since < scfg.max_draft:
+                x_cand, err = self._spec_fn(x, tstate, s, req.cond)
+                tau = float(threshold_schedule(
+                    stepper.t_frac[s], scfg.tau0, scfg.beta))
+                flops += self._verify_flops
+                if float(err[0]) <= tau:
+                    x = x_cand
+                    num_spec += 1
+                    since += 1
+                    continue
+            x, tstate = self._full_fn(x, tstate, s, req.cond)
+            flops += self._full_flops
+            num_full += 1
+            since = 0
+        return Result(request_id=req.request_id, sample=jax.device_get(x),
+                      num_full=num_full, num_spec=num_spec, flops=flops,
+                      wall_s=time.time() - t0)
+
+    def serve(self, requests: List[Request]) -> List[Result]:
+        return [self.run_request(r) for r in requests]
+
+
+def allocation_report(results: List[Result],
+                      full_flops_per_step: float) -> Dict[str, float]:
+    """Sample-adaptive allocation summary (paper §1: 57.5% @6.48× etc.).
+
+    Splits requests at the median acceptance rate into easy/hard buckets
+    and reports the realised FLOPs speedup of each bucket vs always-full.
+    """
+    if not results:
+        return {}
+    alphas = sorted(r.alpha for r in results)
+    median = alphas[len(alphas) // 2]
+    easy = [r for r in results if r.alpha >= median]
+    hard = [r for r in results if r.alpha < median]
+
+    def bucket_speedup(rs: List[Result]) -> float:
+        if not rs:
+            return 1.0
+        ref = sum((r.num_full + r.num_spec) * full_flops_per_step
+                  for r in rs)
+        return ref / max(sum(r.flops for r in rs), 1e-9)
+
+    return {
+        "n_requests": len(results),
+        "frac_easy": len(easy) / len(results),
+        "frac_hard": len(hard) / len(results),
+        "speedup_easy": bucket_speedup(easy),
+        "speedup_hard": bucket_speedup(hard),
+        "speedup_all": bucket_speedup(results),
+        "alpha_easy": sum(r.alpha for r in easy) / max(len(easy), 1),
+        "alpha_hard": sum(r.alpha for r in hard) / max(len(hard), 1),
+        "alpha_mean": sum(r.alpha for r in results) / len(results),
+    }

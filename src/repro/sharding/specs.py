@@ -1,0 +1,196 @@
+"""Per-architecture partition rules (DESIGN.md §5).
+
+Scheme on the production mesh (pod?, data, model):
+  * batch over ('pod','data'); tensor parallel over 'model' on attention
+    heads / FFN hidden / MoE experts; vocab-parallel embeddings/head when
+    divisible.
+  * GQA KV projections replicate when kv_heads doesn't divide the model
+    axis (standard KV duplication).
+  * decode KV caches: batch over data when divisible, else (long_500k,
+    batch=1) the cache *sequence* is sharded over every mesh axis —
+    flash-decoding-style distributed softmax, XLA inserts the reductions.
+  * optimizer moments follow their parameter's spec; scalars replicate.
+
+All rules are divisibility-guarded: a dimension is sharded only if the
+axis size divides it, so every (arch × shape) lowers on both the 256- and
+512-chip meshes without padding.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+
+
+def _axis_size(mesh: Mesh, name) -> int:
+    if name is None:
+        return 1
+    if isinstance(name, tuple):
+        n = 1
+        for a in name:
+            n *= mesh.shape[a]
+        return n
+    return mesh.shape[name]
+
+
+def data_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def _key_path_str(path) -> str:
+    return "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                    for p in path)
+
+
+def param_spec(cfg: ModelConfig, mesh: Mesh, path: str, shape: Tuple[int, ...]
+               ) -> P:
+    """Partition spec for one parameter leaf (path in the params tree)."""
+    ms = mesh.shape["model"]
+
+    def last_if(dim: int) -> P:
+        """Shard the last axis over 'model' if divisible, else replicate."""
+        nones = (None,) * (len(shape) - 1)
+        return P(*nones, "model") if dim % ms == 0 else P()
+
+    name = path.split("/")[-1]
+
+    # --- embeddings & heads ---
+    if path.startswith("embed/tok") or path.startswith("embed/codebooks"):
+        v, d = shape[-2], shape[-1]
+        lead = (None,) * (len(shape) - 2)
+        if v % ms == 0:
+            return P(*lead, "model", None)
+        # Perf iteration A/E1 (EXPERIMENTS.md §Perf): sharding D here makes
+        # the (tied) LM head a contracting-dim matmul whose f32 logits
+        # [B,T,V] get all-reduced — 12.9 GB/device wire for granite-moe.
+        # Replicating the embedding (≤100 MB) keeps logits local.
+        return P()
+    if path.startswith("embed/"):
+        return P()                       # patch/time/label/cond: tiny
+    if path == "final_norm":
+        return P()
+    if path.startswith("head/"):
+        if name == "w" and len(shape) >= 2 and cfg.vocab_size \
+                and shape[-1] == cfg.padded_vocab:
+            return last_if(shape[-1])
+        return P()
+
+    # --- stacked blocks (leading L axis) ---
+    if path.startswith("blocks/"):
+        if name in ("ln1", "ln2", "mod_b"):
+            return P()
+        if name in ("wq", "wk", "wv"):
+            return P(None, None, "model") if shape[-1] % ms == 0 else P()
+        if name in ("bq", "bk", "bv"):
+            return P(None, "model") if shape[-1] % ms == 0 else P()
+        if name == "wo":
+            return P(None, "model", None) if shape[-2] % ms == 0 else P()
+        if name == "mod_w":
+            return P(None, None, "model") if shape[-1] % ms == 0 else P()
+        if "moe" in path:
+            if name == "router":
+                return P()
+            e = shape[1]
+            if name in ("w_gate", "w_up"):       # [L, E, D, F]
+                if e % ms == 0:
+                    return P(None, "model", None, None)
+                return P(None, None, None, "model") \
+                    if shape[-1] % ms == 0 else P()
+            if name == "w_down":                  # [L, E, F, D]
+                if e % ms == 0:
+                    return P(None, "model", None, None)
+                return P(None, None, "model", None) \
+                    if shape[-2] % ms == 0 else P()
+        if "mlp" in path:
+            if name in ("w_gate", "w_up"):
+                return P(None, None, "model") if shape[-1] % ms == 0 else P()
+            if name == "w_down":
+                return P(None, "model", None) if shape[-2] % ms == 0 else P()
+        if "ssm" in path:
+            return P()                   # recurrent mixer params replicate
+        return P()
+    return P()
+
+
+def params_shardings(cfg: ModelConfig, mesh: Mesh, params_shape) -> Any:
+    """NamedSharding pytree matching a params (or moments) shape tree."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params_shape)
+    out = []
+    for path, leaf in flat:
+        spec = param_spec(cfg, mesh, _key_path_str(path), tuple(leaf.shape))
+        out.append(NamedSharding(mesh, spec))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def opt_state_shardings(cfg: ModelConfig, mesh: Mesh, params_shape) -> Dict:
+    psh = params_shardings(cfg, mesh, params_shape)
+    return {"mu": psh, "nu": psh,
+            "count": NamedSharding(mesh, P())}
+
+
+def train_state_shardings(cfg: ModelConfig, mesh: Mesh, params_shape
+                          ) -> Dict:
+    return {"params": params_shardings(cfg, mesh, params_shape),
+            "opt": opt_state_shardings(cfg, mesh, params_shape),
+            "step": NamedSharding(mesh, P())}
+
+
+def batch_sharding(mesh: Mesh, batch: int, ndim: int) -> NamedSharding:
+    """Shard the leading batch dim over the data axes when divisible."""
+    dp = data_axes(mesh)
+    if batch % _axis_size(mesh, dp) == 0:
+        return NamedSharding(mesh, P(dp, *(None,) * (ndim - 1)))
+    return NamedSharding(mesh, P())
+
+
+def cache_shardings(cfg: ModelConfig, mesh: Mesh, batch: int,
+                    cache_shape) -> Dict:
+    """KV/SSM cache specs: [L, B, S, KV, hd] / [L, B, nh, hp, ns] etc."""
+    dp = data_axes(mesh)
+    dp_size = _axis_size(mesh, dp)
+    ms = mesh.shape["model"]
+    batch_ok = batch % dp_size == 0
+
+    def kv_spec(shape):
+        # [L, B, S, KV, hd]
+        if batch_ok:
+            if shape[3] % ms == 0:
+                return P(None, dp, None, "model", None)
+            return P(None, dp, "model", None, None)   # shard sequence
+        # batch=1 long-context: shard the sequence over EVERY axis
+        all_axes = tuple(mesh.axis_names)
+        return P(None, None, all_axes, None, None)
+
+    def ssm_spec(shape):
+        # [L, B, nh, hp, ns]
+        if batch_ok:
+            if shape[2] % ms == 0:
+                return P(None, dp, "model", None, None)
+            return P(None, dp, None, None, None)
+        if shape[2] % ms == 0:
+            return P(None, None, "model", None, None)
+        return P()
+
+    def conv_spec(shape):
+        # [L, B, W, C]
+        if batch_ok:
+            return P(None, dp, None, None)
+        return P()
+
+    out = {}
+    for key, leaf in cache_shape.items():
+        if key in ("k", "v"):
+            out[key] = NamedSharding(mesh, kv_spec(leaf.shape))
+        elif key == "ssm_state":
+            out[key] = NamedSharding(mesh, ssm_spec(leaf.shape))
+        else:
+            out[key] = NamedSharding(mesh, conv_spec(leaf.shape))
+    return out
+
+
+def replicated(mesh: Mesh) -> NamedSharding:
+    return NamedSharding(mesh, P())

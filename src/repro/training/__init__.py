@@ -1,0 +1,1 @@
+from repro.training import lm  # noqa: F401

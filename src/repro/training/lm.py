@@ -1,0 +1,66 @@
+"""LM training: cross-entropy loss + AdamW step (used by train_4k dry-run)."""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.layers import model as M
+from repro.optim.adamw import AdamWConfig, adamw_update, init_opt_state
+
+
+def cross_entropy(logits: jnp.ndarray, labels: jnp.ndarray) -> jnp.ndarray:
+    """Mean CE. logits [..., V]; labels [...] ints (audio: [B,K,T])."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(logz - gold)
+
+
+def lm_loss(cfg: ModelConfig, params, batch: Dict[str, Any],
+            remat: bool = True
+            ) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    logits, extras = M.lm_forward(cfg, params, batch, remat=remat)
+    labels = batch["labels"]
+    if cfg.arch_type == "audio":
+        # logits [B,T,K,V]; labels [B,K,T]
+        labels = jnp.swapaxes(labels, 1, 2)
+    if "patch_embeds" in batch:
+        # VLM: loss on text positions only (patch prefix has no labels)
+        logits = logits[:, batch["patch_embeds"].shape[1]:]
+    loss = cross_entropy(logits, labels)
+    total = loss + cfg.moe_aux_loss_weight * extras["aux_loss"]
+    return total, {"ce": loss, "aux": extras["aux_loss"]}
+
+
+def make_train_state(cfg: ModelConfig, key, opt: AdamWConfig):
+    params = M.init_params(cfg, key)
+    return {"params": params, "opt": init_opt_state(params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def train_step(cfg: ModelConfig, opt: AdamWConfig, state, batch,
+               lr_scale=1.0, remat: bool = True):
+    """One optimizer step; the function lowered by the train_4k dry-run."""
+    grad_fn = jax.value_and_grad(
+        lambda p: lm_loss(cfg, p, batch, remat=remat), has_aux=True)
+    (loss, metrics), grads = grad_fn(state["params"])
+    params, opt_state, opt_metrics = adamw_update(
+        opt, state["params"], grads, state["opt"], lr_scale)
+    new_state = {"params": params, "opt": opt_state,
+                 "step": state["step"] + 1}
+    metrics = dict(metrics, loss=loss, **opt_metrics)
+    return new_state, metrics
+
+
+def prefill_step(cfg: ModelConfig, params, batch: Dict[str, Any]):
+    """Prefill: forward + KV/SSM cache materialisation (inference-prefill)."""
+    logits, extras = M.lm_forward(cfg, params, batch, collect_cache=True)
+    return logits[:, -1:], extras["cache"]
+
+
+def serve_step(cfg: ModelConfig, params, tokens, cache, pos):
+    """Decode: ONE new token against a seq_len KV cache (inference-decode)."""
+    return M.lm_decode_step(cfg, params, tokens, cache, pos)

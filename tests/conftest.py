@@ -1,0 +1,32 @@
+import dataclasses
+import os
+
+import jax
+import pytest
+
+# Tests must see exactly ONE device (the dry-run sets 512 in its own
+# process); fail fast if someone leaks XLA_FLAGS into the test env.
+assert "xla_force_host_platform_device_count" not in \
+    os.environ.get("XLA_FLAGS", ""), \
+    "tests must not run with forced device counts"
+
+
+@pytest.fixture(scope="session")
+def tiny_trained_dit():
+    """A 2-layer DiT trained briefly on synthetic latents.
+
+    SpeCa's premise is smooth feature trajectories, which only hold for a
+    *trained* denoiser (verified in EXPERIMENTS.md) — so the SpeCa
+    integration tests share this session-scoped model.
+    """
+    from repro.configs import DiffusionConfig, TrainConfig, get_config, reduced
+    from repro.training.diffusion_trainer import train_diffusion
+
+    cfg = dataclasses.replace(reduced(get_config("dit-xl2")),
+                              num_layers=2, d_model=128, d_ff=256,
+                              num_heads=4, num_kv_heads=4, num_classes=8)
+    dcfg = DiffusionConfig(num_inference_steps=20, latent_size=8,
+                           schedule="cosine")
+    tcfg = TrainConfig(global_batch=16, steps=120, lr=2e-3, log_every=1000)
+    out = train_diffusion(cfg, dcfg, tcfg, verbose=False)
+    return cfg, dcfg, out["state"]["params"]

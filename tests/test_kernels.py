@@ -1,0 +1,98 @@
+"""Per-kernel shape/dtype sweeps, allclose vs the pure-jnp oracles."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops
+from repro.kernels import ref as R
+
+
+def _tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 \
+        else dict(rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("shape", [
+    (1, 64), (3, 17), (4, 2, 2, 33, 40), (2, 1000), (5, 8, 128),
+])
+def test_taylor_predict_kernel(shape, dtype):
+    key = jax.random.PRNGKey(hash(shape) % 2**31)
+    diffs = jax.random.normal(key, shape, jnp.float32).astype(dtype)
+    w = jax.random.normal(jax.random.fold_in(key, 1), (shape[0],))
+    got = ops.taylor_predict(diffs, w)
+    want = R.taylor_predict_ref(diffs, w)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), **_tol(dtype))
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("shape", [(2, 40), (4, 3, 130), (3, 8, 128)])
+def test_taylor_update_kernel(shape, dtype):
+    key = jax.random.PRNGKey(0)
+    old = jax.random.normal(key, shape, jnp.float32).astype(dtype)
+    feats = jax.random.normal(jax.random.fold_in(key, 1), shape[1:],
+                              jnp.float32).astype(dtype)
+    got = ops.taylor_update(old, feats)
+    want = R.taylor_update_ref(old, feats)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), **_tol(dtype))
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("n", [64, 127, 1000, 4096])
+def test_verify_error_kernel(n, dtype):
+    key = jax.random.PRNGKey(n)
+    p = jax.random.normal(key, (3, n), jnp.float32).astype(dtype)
+    r = p + 0.05 * jax.random.normal(jax.random.fold_in(key, 1), (3, n)
+                                     ).astype(dtype)
+    got = ops.verify_error(p, r)
+    want = R.verify_error_ref(p.astype(jnp.float32).reshape(3, -1),
+                              r.astype(jnp.float32).reshape(3, -1))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=5e-2 if dtype == jnp.bfloat16 else 1e-4,
+                               atol=1e-5)
+
+
+def test_verify_error_zero_pred_equals_ref():
+    p = jnp.ones((2, 256))
+    got = ops.verify_error(p, p)
+    np.testing.assert_allclose(np.asarray(got), 0.0, atol=1e-6)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("s,h,hd,causal,window", [
+    (64, 2, 32, True, 0),
+    (64, 2, 32, True, 16),
+    (128, 4, 64, True, 0),
+    (64, 2, 32, False, 0),
+    (96, 1, 16, True, 8),
+])
+def test_flash_attention_kernel(s, h, hd, causal, window, dtype):
+    key = jax.random.PRNGKey(s + h)
+    q = jax.random.normal(key, (2, s, h, hd), jnp.float32).astype(dtype)
+    k = jax.random.normal(jax.random.fold_in(key, 1), (2, s, h, hd)
+                          ).astype(dtype)
+    v = jax.random.normal(jax.random.fold_in(key, 2), (2, s, h, hd)
+                          ).astype(dtype)
+    got = ops.flash_attention(q, k, v, causal=causal, window=window,
+                              block_q=32, block_k=32)
+    want = R.flash_attention_ref(q, k, v, causal=causal, window=window)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=5e-2 if dtype == jnp.bfloat16 else 1e-4,
+                               atol=5e-2 if dtype == jnp.bfloat16 else 1e-4)
+
+
+def test_flash_matches_model_attention_path():
+    """use_flash=True in the backbone gives the same attention output."""
+    from repro.layers import attention as A
+    key = jax.random.PRNGKey(3)
+    q = jax.random.normal(key, (1, 64, 4, 32))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (1, 64, 2, 32))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (1, 64, 2, 32))
+    naive = A.full_attention(q, k, v, 0)
+    flash = A.full_attention(q, k, v, 0, use_flash=True)
+    np.testing.assert_allclose(np.asarray(flash), np.asarray(naive),
+                               rtol=1e-4, atol=1e-4)

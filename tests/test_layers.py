@@ -1,0 +1,153 @@
+"""Layer-level unit tests: rope/M-RoPE, attention paths, SSD, MoE."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.layers import attention as A
+from repro.layers import moe as Mo
+from repro.layers import rope as Rp
+from repro.layers import ssm as Ss
+
+
+def test_mrope_equals_rope_for_text_tokens():
+    """Equal (t,h,w) indices make M-RoPE coincide with 1-D RoPE."""
+    hd, theta = 64, 10_000.0
+    pos = jnp.arange(16, dtype=jnp.int32)
+    a1 = Rp.rope_angles(pos, hd, theta)
+    pos3 = jnp.broadcast_to(pos[:, None], (16, 3))
+    a2 = Rp.mrope_angles(pos3, hd, theta, (16, 8, 8))
+    np.testing.assert_allclose(np.asarray(a1), np.asarray(a2), rtol=1e-6)
+
+
+def test_rope_preserves_norm_and_relative_position():
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (1, 8, 2, 32))
+    ang = Rp.rope_angles(jnp.arange(8), 32, 10_000.0)
+    y = Rp.apply_rope(x, ang)
+    np.testing.assert_allclose(np.asarray(jnp.linalg.norm(y, axis=-1)),
+                               np.asarray(jnp.linalg.norm(x, axis=-1)),
+                               rtol=1e-5)
+    # relative property: <R(p)q, R(p+k)v> depends only on k
+    q = jax.random.normal(key, (1, 1, 1, 32))
+    dots = []
+    for p in [0, 5]:
+        angq = Rp.rope_angles(jnp.array([p]), 32, 10_000.0)
+        angk = Rp.rope_angles(jnp.array([p + 3]), 32, 10_000.0)
+        rq = Rp.apply_rope(q, angq)
+        rk = Rp.apply_rope(q, angk)
+        dots.append(float(jnp.sum(rq * rk)))
+    assert abs(dots[0] - dots[1]) < 1e-4
+
+
+def test_chunked_attention_matches_naive(monkeypatch):
+    key = jax.random.PRNGKey(1)
+    q = jax.random.normal(key, (2, 8192, 2, 16))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (2, 8192, 1, 16))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (2, 8192, 1, 16))
+    monkeypatch.setenv("REPRO_ATTN_CHUNK", "0")
+    naive = A.full_attention(q, k, v, 0)
+    monkeypatch.setenv("REPRO_ATTN_CHUNK", "1024")
+    chunked = A.full_attention(q, k, v, 0)
+    np.testing.assert_allclose(np.asarray(chunked), np.asarray(naive),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_window_mask_limits_attention():
+    """With window=1 each token attends only to itself."""
+    key = jax.random.PRNGKey(2)
+    q = jax.random.normal(key, (1, 8, 1, 16))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (1, 8, 1, 16))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (1, 8, 1, 16))
+    out = A.full_attention(q, k, v, 1)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(v), rtol=1e-5)
+
+
+def test_decode_attention_masks_future_cache_slots():
+    key = jax.random.PRNGKey(3)
+    q = jax.random.normal(key, (1, 1, 2, 16))
+    k_cache = jax.random.normal(jax.random.fold_in(key, 1), (1, 8, 2, 16))
+    v_cache = jax.random.normal(jax.random.fold_in(key, 2), (1, 8, 2, 16))
+    out_a = A.decode_attention(q, k_cache, v_cache, 3, 0)
+    # corrupt cache beyond pos 3 — output must not change
+    k2 = k_cache.at[:, 4:].set(99.0)
+    v2 = v_cache.at[:, 4:].set(-99.0)
+    out_b = A.decode_attention(q, k2, v2, 3, 0)
+    np.testing.assert_allclose(np.asarray(out_a), np.asarray(out_b),
+                               rtol=1e-6)
+
+
+def test_ssd_chunked_matches_sequential_recurrence():
+    """SSD dual form == naive per-step recurrence."""
+    key = jax.random.PRNGKey(4)
+    b, t, h, p, n, chunk = 2, 32, 3, 4, 8, 8
+    x = jax.random.normal(key, (b, t, h, p)) * 0.5
+    dt = jax.nn.softplus(jax.random.normal(jax.random.fold_in(key, 1),
+                                           (b, t, h)))
+    A_ = -jnp.exp(jax.random.normal(jax.random.fold_in(key, 2), (h,)) * 0.3)
+    B_ = jax.random.normal(jax.random.fold_in(key, 3), (b, t, n)) * 0.5
+    C_ = jax.random.normal(jax.random.fold_in(key, 4), (b, t, n)) * 0.5
+
+    y_fast, state_fast = Ss.ssd_chunked(x * dt[..., None], dt * A_, B_, C_,
+                                        chunk)
+    # naive recurrence
+    state = jnp.zeros((b, h, p, n))
+    ys = []
+    for s in range(t):
+        da = jnp.exp(dt[:, s] * A_)                       # [b,h]
+        upd = (dt[:, s][..., None, None] * x[:, s][..., None]
+               * B_[:, s][:, None, None, :])
+        state = da[..., None, None] * state + upd
+        ys.append(jnp.einsum("bhpn,bn->bhp", state, C_[:, s]))
+    y_ref = jnp.stack(ys, axis=1)
+    np.testing.assert_allclose(np.asarray(y_fast), np.asarray(y_ref),
+                               rtol=2e-3, atol=2e-3)
+    np.testing.assert_allclose(np.asarray(state_fast), np.asarray(state),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_moe_no_drop_matches_dense_topk():
+    """With ample capacity the scatter dispatch equals explicit top-k mix."""
+    key = jax.random.PRNGKey(5)
+    B, T, D, F, E, K = 2, 6, 8, 16, 4, 2
+    x = jax.random.normal(key, (B, T, D))
+    params = {
+        "router": jax.random.normal(jax.random.fold_in(key, 1), (D, E)),
+        "w_gate": jax.random.normal(jax.random.fold_in(key, 2), (E, D, F)) / np.sqrt(D),
+        "w_up": jax.random.normal(jax.random.fold_in(key, 3), (E, D, F)) / np.sqrt(D),
+        "w_down": jax.random.normal(jax.random.fold_in(key, 4), (E, F, D)) / np.sqrt(F),
+    }
+    got, aux = Mo.moe_forward(params, x, num_experts=E, top_k=K,
+                              capacity_factor=8.0)
+    # dense reference: run every expert on every token, mix top-k
+    logits = jnp.einsum("btd,de->bte", x, params["router"])
+    probs = jax.nn.softmax(logits, axis=-1)
+    vals, idx = jax.lax.top_k(probs, K)
+    vals = vals / vals.sum(-1, keepdims=True)
+    h = jnp.einsum("btd,edf->btef", x, params["w_gate"])
+    u = jnp.einsum("btd,edf->btef", x, params["w_up"])
+    ye = jnp.einsum("btef,efd->bted", jax.nn.silu(h) * u, params["w_down"])
+    mix = jnp.take_along_axis(ye, idx[..., None], axis=2)    # [B,T,K,D]
+    want = (mix * vals[..., None]).sum(2)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-3, atol=1e-3)
+    assert float(aux) > 0
+
+
+def test_moe_capacity_drops_are_bounded():
+    """Tiny capacity drops tokens but output stays finite."""
+    key = jax.random.PRNGKey(6)
+    B, T, D, F, E = 1, 64, 8, 8, 2
+    x = jax.random.normal(key, (B, T, D))
+    params = {
+        "router": jnp.zeros((D, E)).at[0, 0].set(10.0),  # all to expert 0
+        "w_gate": jnp.ones((E, D, F)) * 0.1,
+        "w_up": jnp.ones((E, D, F)) * 0.1,
+        "w_down": jnp.ones((E, F, D)) * 0.1,
+    }
+    got, _ = Mo.moe_forward(params, x, num_experts=E, top_k=1,
+                            capacity_factor=0.25)
+    assert bool(jnp.isfinite(got).all())
+    # some rows must be zero (dropped)
+    norms = jnp.linalg.norm(got.reshape(T, D), axis=-1)
+    assert float(norms.min()) == 0.0

@@ -1,0 +1,118 @@
+"""Hypothesis property-based tests on system invariants."""
+import math
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+
+from repro.core import taylor
+from repro.core.complexity import speedup_model
+from repro.core.verify import relative_error, threshold_schedule
+
+hypothesis.settings.register_profile(
+    "ci", deadline=None, max_examples=25,
+    suppress_health_check=list(hypothesis.HealthCheck))
+hypothesis.settings.load_profile("ci")
+
+floats = st.floats(-100, 100, allow_nan=False, allow_infinity=False)
+
+
+@given(coef=st.lists(floats, min_size=1, max_size=2), d=st.integers(1, 6),
+       n=st.integers(1, 4))
+def test_taylor_exact_on_degree_le1_polynomials(coef, d, n):
+    """Taylor-form extrapolation reproduces affine trajectories exactly."""
+    poly = lambda s: sum(c * s ** i for i, c in enumerate(coef))
+    steps = [0, n, 2 * n]
+    state = taylor.init_state(2, (1,), jnp.float32)
+    for s in steps:
+        state = taylor.update(state, jnp.full((1,), poly(s)), s)
+    pred = float(taylor.predict(state, steps[-1] + d)[0])
+    expect = poly(steps[-1] + d)
+    assert abs(pred - expect) <= 1e-3 * (1 + abs(expect))
+
+
+@given(coef=st.lists(floats, min_size=1, max_size=4), d=st.integers(1, 5),
+       n=st.integers(1, 3))
+def test_newton_exact_on_degree_le3_polynomials(coef, d, n):
+    """Newton (binomial) weights are exact for degree ≤ m polynomials."""
+    m = 3
+    poly = lambda s: sum(c * s ** i for i, c in enumerate(coef))
+    steps = [i * n for i in range(m + 1)]
+    state = taylor.init_state(m, (1,), jnp.float32)
+    for s in steps:
+        state = taylor.update(state, jnp.full((1,), poly(s)), s)
+    pred = float(taylor.predict(state, steps[-1] + d * n, mode="newton")[0])
+    expect = poly(steps[-1] + d * n)
+    assert abs(pred - expect) <= 1e-2 * (1 + abs(expect))
+
+
+@given(data=st.data())
+def test_relative_error_properties(data):
+    n = data.draw(st.integers(4, 64))
+    arr = data.draw(st.lists(st.floats(-10, 10, allow_nan=False,
+                                       allow_infinity=False, width=32),
+                             min_size=n, max_size=n))
+    r = jnp.asarray(arr, jnp.float32).reshape(1, -1)
+    hypothesis.assume(float(jnp.linalg.norm(r)) > 1e-3)
+    # identity => zero error
+    assert float(relative_error(r, r)[0]) < 1e-6
+    # scale invariance: e(c·p, c·r) == e(p, r)
+    p = r + 0.5
+    c = data.draw(st.floats(0.1, 10.0))
+    e1 = float(relative_error(p, r)[0])
+    e2 = float(relative_error(c * p, c * r)[0])
+    assert abs(e1 - e2) <= 1e-3 * (1 + e1)
+    # symmetry in magnitude: error nonnegative
+    assert e1 >= 0.0
+
+
+@given(tau0=st.floats(0.01, 2.0), beta=st.floats(0.01, 0.99),
+       t1=st.floats(0.0, 1.0), t2=st.floats(0.0, 1.0))
+def test_threshold_schedule_monotone_decay(tau0, beta, t1, t2):
+    """τ_t decays as sampling progresses (t_frac: 1 → 0)."""
+    lo, hi = min(t1, t2), max(t1, t2)
+    tau_hi = float(threshold_schedule(jnp.asarray(hi), tau0, beta))
+    tau_lo = float(threshold_schedule(jnp.asarray(lo), tau0, beta))
+    assert tau_lo <= tau_hi + 1e-9
+    assert float(threshold_schedule(jnp.asarray(1.0), tau0, beta)) \
+        == np.float32(tau0)
+
+
+@given(alpha=st.floats(0.0, 0.99), gamma=st.floats(0.0, 0.5))
+def test_speedup_model_bounds(alpha, gamma):
+    s = speedup_model(alpha, gamma)
+    assert s >= 1.0 - 1e-9                      # never a slowdown
+    assert s <= 1.0 / max(gamma, 1e-9) + 1e-6   # theoretical max 1/γ
+    # monotone in alpha
+    assert speedup_model(min(alpha + 0.01, 0.999), gamma) >= s - 1e-9
+
+
+@given(n=st.integers(1, 8), k=st.integers(1, 4))
+def test_moe_combine_weights_normalised(n, k):
+    """Top-k gate values renormalise to a convex combination."""
+    key = jax.random.PRNGKey(n * 13 + k)
+    e = max(k, 4)
+    logits = jax.random.normal(key, (n, e))
+    probs = jax.nn.softmax(logits, axis=-1)
+    vals, _ = jax.lax.top_k(probs, k)
+    vals = vals / vals.sum(-1, keepdims=True)
+    np.testing.assert_allclose(np.asarray(vals.sum(-1)), 1.0, rtol=1e-5)
+    assert bool((vals >= 0).all())
+
+
+@given(seed=st.integers(0, 2**16), steps=st.integers(2, 16))
+def test_data_pipeline_deterministic_and_disjoint(seed, steps):
+    from repro.data.synthetic import LMStreamConfig, lm_batch
+    cfg = LMStreamConfig(vocab_size=97, seq_len=8)
+    idx = jnp.arange(seed, seed + 4, dtype=jnp.int32)
+    a = lm_batch(cfg, idx)
+    b = lm_batch(cfg, idx)
+    np.testing.assert_array_equal(np.asarray(a["tokens"]),
+                                  np.asarray(b["tokens"]))
+    # shifted indices give different content (w.h.p.)
+    c = lm_batch(cfg, idx + 1000)
+    assert not np.array_equal(np.asarray(a["tokens"]),
+                              np.asarray(c["tokens"]))

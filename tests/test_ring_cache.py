@@ -1,0 +1,42 @@
+"""Ring-buffer decode cache: windowed archs keep only W slots (§Perf)."""
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import get_config, reduced
+from repro.layers import model as M
+from repro.layers.blocks import uses_ring_cache
+
+
+def test_ring_applies_only_to_fully_windowed_archs():
+    assert uses_ring_cache(get_config("mixtral-8x7b"))
+    assert uses_ring_cache(get_config("llama3-8b+swa"))
+    assert not uses_ring_cache(get_config("gemma3-27b"))   # 5:1 has globals
+    assert not uses_ring_cache(get_config("llama3-8b"))
+    assert not uses_ring_cache(get_config("hymba-1.5b"))   # global_every=16
+
+
+def test_ring_cache_shape_is_window():
+    cfg = get_config("mixtral-8x7b")
+    cache = jax.eval_shape(lambda: M.init_cache(cfg, 1, 32768))
+    assert cache["k"].shape[2] == cfg.attn_window == 4096
+
+
+def test_ring_decode_matches_full_forward_beyond_window():
+    cfg = dataclasses.replace(reduced(get_config("mixtral-8x7b")),
+                              attn_window=8)
+    key = jax.random.PRNGKey(0)
+    params = M.init_params(cfg, key)
+    B, T = 2, 20                                  # T >> window
+    toks = jax.random.randint(key, (B, T + 1), 0, cfg.vocab_size)
+    full_logits, _ = M.lm_forward(cfg, params, {"tokens": toks})
+    cache = M.init_cache(cfg, B, 32)
+    assert cache["k"].shape[2] == 8
+    step = jax.jit(functools.partial(M.lm_decode_step, cfg, params))
+    for pos in range(T + 1):
+        logits, cache = step(toks[:, pos:pos + 1], cache, pos)
+    err = float(jnp.max(jnp.abs(logits[:, 0] - full_logits[:, T])))
+    assert err < 2e-3, err

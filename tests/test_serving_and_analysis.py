@@ -1,0 +1,80 @@
+"""Serving engine behaviour + HLO collective parser + complexity model."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import SpeCaConfig, get_config
+from repro.core import complexity as CX
+from repro.launch.hlo_analysis import parse_collectives, total_wire_bytes
+
+
+def test_hlo_collective_parser():
+    txt = """
+  %all-reduce.1 = f32[8,256]{1,0} all-reduce(%dot.1), channel_id=1, replica_groups=[2,4]<=[8], use_global_device_ids=true
+  %all-gather.2 = bf16[16,128]{1,0} all-gather(%p), replica_groups={{0,1,2,3},{4,5,6,7}}, dimensions={0}
+  %rs = f32[4,64]{1,0} reduce-scatter(%x), replica_groups=[1,8]<=[8]
+  %nothing = f32[2,2]{1,0} add(%a, %b)
+  %ar2 = (f32[10]{0}, f32[20]{0}) all-reduce(%a, %b), replica_groups=[2,4]<=[8]
+"""
+    out = parse_collectives(txt)
+    assert out["all-reduce"]["count"] == 2
+    # 8*256*4 = 8192 B; ring factor 2*(4-1)/4 = 1.5
+    assert out["all-reduce"]["result_bytes"] == 8192 + (10 + 20) * 4
+    assert out["all-gather"]["count"] == 1
+    assert out["all-gather"]["result_bytes"] == 16 * 128 * 2
+    assert out["reduce-scatter"]["wire_bytes"] == 4 * 64 * 4 * 7
+    assert total_wire_bytes(out) > 0
+
+
+def test_complexity_model_orderings():
+    """Analytic FLOPs: MoE FFN scales with top-k, not total experts."""
+    moe = get_config("mixtral-8x7b")
+    tokens = 4096
+    ffn = CX._ffn_flops(moe, tokens)
+    dense_equiv = 2.0 * tokens * moe.num_experts * moe.d_model \
+        * moe.d_ff * 3
+    assert ffn == pytest.approx(
+        dense_equiv * moe.num_experts_per_tok / moe.num_experts)
+    g = CX.gamma(get_config("dit-xl2"), 1024)
+    assert 0.0 < g < 0.1, f"verify cost ratio {g} outside paper range"
+    assert CX.speedup_model(0.85, 0.035) == pytest.approx(
+        1.0 / (1 - 0.85 * (1 - 0.035)))
+
+
+def test_gamma_matches_paper_magnitude():
+    """Paper: γ=3.5% (DiT-28L), 1.75% (FLUX), 1.67% (HunyuanVideo) — our
+    analytic γ ≈ 1/L + glue, same magnitude."""
+    for arch, hi in [("dit-xl2", 0.08), ("flux-like", 0.06),
+                     ("hunyuan-video-like", 0.06)]:
+        cfg = get_config(arch)
+        g = CX.gamma(cfg, 4096)
+        assert 1.0 / (2 * cfg.num_layers) < g < hi, (arch, g)
+
+
+def test_serving_engine_counts(tiny_trained_dit):
+    from repro.core.complexity import forward_flops
+    from repro.serving import Request, SpeCaEngine, allocation_report
+    cfg, dcfg, params = tiny_trained_dit
+    scfg = SpeCaConfig(taylor_order=2, max_draft=8, tau0=0.4, beta=0.9)
+    engine = SpeCaEngine(cfg, params, dcfg, scfg)
+    reqs = [Request(request_id=i, cond={"labels": jnp.asarray([i % 8])},
+                    seed=i) for i in range(3)]
+    results = engine.serve(reqs)
+    S = dcfg.num_inference_steps
+    for r in results:
+        assert r.num_full + r.num_spec == S
+        assert r.num_full >= 3           # warmup anchors
+        assert r.flops > 0
+    n_tok = (dcfg.latent_size // cfg.patch_size) ** 2
+    rep = allocation_report(results, forward_flops(cfg, n_tok))
+    assert rep["n_requests"] == 3
+    assert rep["speedup_all"] >= 1.0
+    assert 0.0 <= rep["alpha_mean"] <= 1.0
+
+
+def test_speca_config_verify_layer_wraps():
+    from repro.core.speca import _verify_layer
+    cfg = get_config("dit-xl2")
+    assert _verify_layer(cfg, SpeCaConfig(verify_layer=-1)) == 27
+    assert _verify_layer(cfg, SpeCaConfig(verify_layer=5)) == 5

@@ -1,0 +1,103 @@
+"""Sharding-spec unit tests + an 8-device mini dry-run in a subprocess.
+
+The subprocess isolates XLA_FLAGS (forced device count) from this test
+process, which must keep seeing exactly one device.
+"""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import pytest
+
+from repro.configs import get_config
+from repro.launch.mesh import make_local_mesh
+from repro.sharding import specs as S
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def test_param_specs_divisibility_guard():
+    """Every sharded dim must be divisible by its mesh axis."""
+    mesh = make_local_mesh((1, 1), ("data", "model"))
+    # simulate a 16-wide model axis via a fake mesh shape lookup
+    import numpy as np
+    from jax.sharding import Mesh
+    for arch in ["llama3-8b", "mixtral-8x7b", "granite-moe-1b-a400m",
+                 "mamba2-130m", "musicgen-medium", "gemma3-27b"]:
+        cfg = get_config(arch)
+        # use shapes only — no allocation
+        shapes = jax.eval_shape(
+            lambda cfg=cfg: __import__("repro.layers.model",
+                                       fromlist=["x"]).init_params(
+                cfg, jax.random.PRNGKey(0)))
+        flat, _ = jax.tree_util.tree_flatten_with_path(shapes)
+        ms = 16
+        mesh16 = Mesh(np.asarray(jax.devices() * 1)[:1].reshape(1, 1),
+                      ("data", "model"))
+
+        class FakeMesh:
+            axis_names = ("data", "model")
+            shape = {"data": 16, "model": 16}
+        for path, leaf in flat:
+            p = "/".join(str(getattr(x, "key", getattr(x, "idx", x)))
+                         for x in path)
+            spec = S.param_spec(cfg, FakeMesh(), p, tuple(leaf.shape))
+            for dim, axis in zip(leaf.shape, spec):
+                if axis is None:
+                    continue
+                size = 16 if not isinstance(axis, tuple) else 16
+                assert dim % size == 0, (arch, p, leaf.shape, spec)
+
+
+@pytest.mark.slow
+def test_mini_dryrun_8_devices_subprocess():
+    """Lower + compile train/prefill/decode on a (2,4) mesh of 8 host
+    devices for a reduced arch — the same code path as the 512-chip run."""
+    code = textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        import jax, numpy as np
+        import jax.numpy as jnp
+        from jax.sharding import Mesh
+        from functools import partial
+        from repro.configs import get_config, reduced
+        import dataclasses
+        from repro.launch import steps as D
+        from repro.sharding import specs as S
+        from repro.configs.base import ShapeConfig
+
+        cfg = dataclasses.replace(reduced(get_config("mixtral-8x7b")),
+                                  num_experts=4, d_model=256)
+        mesh = Mesh(np.asarray(jax.devices()).reshape(2, 4),
+                    ("data", "model"))
+        results = {}
+        for kind, seq, batch in [("train", 64, 4), ("prefill", 64, 4),
+                                 ("decode", 64, 4)]:
+            shape = ShapeConfig(name=kind, seq_len=seq, global_batch=batch,
+                                kind=kind)
+            fn, args, in_sh, out_sh = D.build_step(cfg, shape, mesh)
+            with mesh:
+                c = jax.jit(fn, in_shardings=in_sh,
+                            out_shardings=out_sh).lower(*args).compile()
+            results[kind] = float(c.cost_analysis().get("flops", 0))
+        import json
+        print(json.dumps(results))
+    """)
+    env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run([sys.executable, "-c", code], env=env,
+                         capture_output=True, text=True, timeout=560)
+    assert out.returncode == 0, out.stderr[-2000:]
+    res = json.loads(out.stdout.strip().splitlines()[-1])
+    assert set(res) == {"train", "prefill", "decode"}
+    assert all(v > 0 for v in res.values())
+
+
+def test_batch_sharding_falls_back_when_indivisible():
+    mesh = make_local_mesh((1, 1), ("data", "model"))
+    sh = S.batch_sharding(mesh, batch=7, ndim=2)
+    assert sh.spec == jax.sharding.PartitionSpec() or \
+        sh.spec[0] is None or mesh.shape["data"] == 1

@@ -1,0 +1,114 @@
+"""SpeCa end-to-end behaviour on a trained tiny DiT (paper §4 semantics)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import SpeCaConfig
+from repro.core.baselines import cached_sample, fora, taylorseer
+from repro.core.speca import speca_sample
+from repro.diffusion.pipeline import sample_full
+
+
+def _rel_dev(a, b):
+    return float(jnp.linalg.norm(a - b) / jnp.linalg.norm(b))
+
+
+@pytest.fixture(scope="module")
+def sampled(tiny_trained_dit):
+    cfg, dcfg, params = tiny_trained_dit
+    key = jax.random.PRNGKey(11)
+    cond = {"labels": jnp.array([1, 5])}
+    x_full, _ = jax.jit(
+        lambda k: sample_full(cfg, params, dcfg, k, cond, 2))(key)
+    return cfg, dcfg, params, key, cond, x_full
+
+
+def test_speca_threshold_controls_acceptance(sampled):
+    cfg, dcfg, params, key, cond, x_full = sampled
+    alphas, devs = [], []
+    for tau0 in [0.02, 0.3, 1.0]:
+        scfg = SpeCaConfig(taylor_order=2, max_draft=8, tau0=tau0, beta=0.9)
+        x, st = jax.jit(lambda k: speca_sample(
+            cfg, params, dcfg, scfg, k, cond, 2))(key)
+        alphas.append(float(st["alpha"]))
+        devs.append(_rel_dev(x, x_full))
+    # higher tau0 => more accepted drafts => more deviation
+    assert alphas == sorted(alphas)
+    assert devs == sorted(devs)
+    assert alphas[0] <= 0.1          # near-zero threshold: almost no accepts
+    assert alphas[-1] >= 0.4         # permissive: most drafts accepted
+
+
+def test_speca_acceptance_is_prefix_per_anchor_window(sampled):
+    """Eq. (5)/(6): within a draft window accepts form a prefix."""
+    cfg, dcfg, params, key, cond, _ = sampled
+    scfg = SpeCaConfig(taylor_order=2, max_draft=8, tau0=0.3, beta=0.9)
+    _, st = jax.jit(lambda k: speca_sample(
+        cfg, params, dcfg, scfg, k, cond, 2))(key)
+    spec = np.asarray(st["spec_step"])
+    attempted = np.asarray(st["spec_attempted"])
+    # a rejected attempt is always followed by a full step (reset):
+    for s in range(len(spec)):
+        if attempted[s] and not spec[s]:
+            assert not spec[s], "rejected draft must fall back to full"
+    # verify prefix: between consecutive anchors, spec steps are contiguous
+    runs = []
+    run = 0
+    for s in spec:
+        if s:
+            run += 1
+        elif run:
+            runs.append(run)
+            run = 0
+    assert all(r <= scfg.max_draft for r in runs)
+
+
+def test_speca_beats_fora_at_matched_acceleration(sampled):
+    """The paper's central claim at small scale: verified forecasting
+    preserves the trajectory far better than unverified reuse."""
+    cfg, dcfg, params, key, cond, x_full = sampled
+    scfg = SpeCaConfig(taylor_order=2, max_draft=8, tau0=0.6, beta=0.9)
+    x_sp, st = jax.jit(lambda k: speca_sample(
+        cfg, params, dcfg, scfg, k, cond, 2))(key)
+    n = max(int(round(1.0 / max(1.0 - float(st["alpha"]), 1e-3))), 2)
+    x_fo, st_fo = jax.jit(lambda k: cached_sample(
+        cfg, params, dcfg, fora(n), k, cond, 2))(key)
+    assert _rel_dev(x_sp, x_full) < _rel_dev(x_fo, x_full)
+
+
+def test_verification_error_decreases_after_anchor(sampled):
+    """Immediately after an anchor the draft error is smallest."""
+    cfg, dcfg, params, key, cond, _ = sampled
+    scfg = SpeCaConfig(taylor_order=2, max_draft=8, tau0=0.3, beta=0.9)
+    _, st = jax.jit(lambda k: speca_sample(
+        cfg, params, dcfg, scfg, k, cond, 2))(key)
+    err = np.asarray(st["err"])  # [S, B], inf where not attempted
+    spec = np.asarray(st["spec_step"])
+    # mean error of first-draft steps vs later drafts
+    firsts, laters = [], []
+    run = 0
+    for s in range(len(spec)):
+        if np.isfinite(err[s]).all():
+            (firsts if run == 0 else laters).append(err[s].mean())
+        run = run + 1 if spec[s] else 0
+    if firsts and laters:
+        assert np.mean(firsts) <= np.mean(laters) * 1.5
+
+
+def test_draft_mode_taylor_tracks_trajectory_better_than_reuse(sampled):
+    """Table 7: a predictive draft (TaylorSeer) preserves the sampling
+    trajectory better than direct feature reuse at the same threshold —
+    reuse gets *accepted* often (per-step error is small) but the
+    accumulated drift of the final sample is larger."""
+    cfg, dcfg, params, key, cond, x_full = sampled
+    scfg = SpeCaConfig(taylor_order=2, max_draft=8, tau0=0.3, beta=0.9)
+    x_t, st_t = jax.jit(lambda k: speca_sample(
+        cfg, params, dcfg, scfg, k, cond, 2, draft_mode="taylor"))(key)
+    x_r, st_r = jax.jit(lambda k: speca_sample(
+        cfg, params, dcfg, scfg, k, cond, 2, draft_mode="reuse"))(key)
+    # both must actually speculate for the comparison to mean anything
+    assert float(st_t["alpha"]) > 0.2 and float(st_r["alpha"]) > 0.2
+    assert _rel_dev(x_t, x_full) <= _rel_dev(x_r, x_full) * 1.25

@@ -1,0 +1,84 @@
+"""TaylorSeer difference-table unit tests (paper eq. 2–3)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import taylor
+
+
+def _run_anchors(order, values, steps):
+    state = taylor.init_state(order, values[0].shape, jnp.float32)
+    for v, s in zip(values, steps):
+        state = taylor.update(state, v, s)
+    return state
+
+
+def test_recursive_update_matches_binomial():
+    """Δⁱ from the recursive chain equals the explicit eq.(3) alternating sum."""
+    order = 3
+    vals = [jnp.full((2,), float(v)) for v in [1.0, 4.0, 9.0, 16.0, 25.0]]
+    state = _run_anchors(order, vals, steps=range(5))
+    # explicit backward differences at the last anchor (newest first)
+    hist = [25.0, 16.0, 9.0, 4.0]
+    import math
+    for i in range(order + 1):
+        expect = sum((-1) ** j * math.comb(i, j) * hist[j]
+                     for j in range(i + 1))
+        np.testing.assert_allclose(np.asarray(state["diffs"][i])[0], expect,
+                                   rtol=1e-6)
+
+
+def test_taylor_exact_for_linear_trajectories():
+    order = 2
+    slope, intercept = 3.0, -1.0
+    vals = [jnp.full((4,), slope * s + intercept) for s in range(3)]
+    state = _run_anchors(order, vals, steps=range(3))
+    for d in [1, 2, 5]:
+        pred = taylor.predict(state, 2 + d)
+        np.testing.assert_allclose(
+            np.asarray(pred), slope * (2 + d) + intercept, rtol=1e-5)
+
+
+def test_newton_exact_for_quadratic_trajectories():
+    order = 2
+    f = lambda s: 0.5 * s * s - 2.0 * s + 3.0
+    N = 2
+    vals = [jnp.full((2,), f(s)) for s in [0, 2, 4]]
+    state = _run_anchors(order, vals, steps=[0, 2, 4])
+    for step in [5, 6, 8]:
+        pred = taylor.predict(state, step, mode="newton")
+        np.testing.assert_allclose(np.asarray(pred), f(step), rtol=1e-5)
+
+
+def test_taylor_order2_error_smaller_than_order0():
+    f = lambda s: np.sin(0.3 * s)
+    vals = [jnp.full((2,), float(f(s))) for s in range(4)]
+    s2 = _run_anchors(2, vals, range(4))
+    s0 = _run_anchors(0, vals, range(4))
+    target = f(5)
+    e2 = abs(float(taylor.predict(s2, 5)[0]) - target)
+    e0 = abs(float(taylor.predict(s0, 5)[0]) - target)
+    assert e2 < e0
+
+
+def test_validity_masking_before_warm():
+    """With one anchor only, prediction falls back to order-0 reuse."""
+    state = taylor.init_state(2, (3,), jnp.float32)
+    state = taylor.update(state, jnp.array([1.0, 2.0, 3.0]), 0)
+    pred = taylor.predict(state, 4)
+    np.testing.assert_allclose(np.asarray(pred), [1.0, 2.0, 3.0])
+
+
+def test_gap_tracking():
+    state = taylor.init_state(1, (1,), jnp.float32)
+    state = taylor.update(state, jnp.ones((1,)), 0)
+    state = taylor.update(state, jnp.ones((1,)) * 2, 5)
+    assert float(state["gap"]) == 5.0
+    # prediction at d=5 with gap=5 -> one full forward difference ahead
+    pred = taylor.predict(state, 10)
+    np.testing.assert_allclose(np.asarray(pred), 3.0, rtol=1e-6)
+
+
+def test_ab2_weights():
+    w = taylor.prediction_weights(2, d=2.0, gap=1.0, n_anchors=3, mode="ab2")
+    np.testing.assert_allclose(np.asarray(w), [1.0, 2.0, 1.0])
