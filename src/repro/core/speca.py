@@ -16,8 +16,17 @@ steps). Per step:
      table refreshes, and drafting restarts — eq. (5)/(6) prefix semantics.
 
 Per-sample acceptance statistics are returned for the sample-adaptive
-computation-allocation analysis; the batch-level accept decision is
-``all(e_k ≤ τ)`` so quality semantics are faithful for every sample.
+computation-allocation analysis. Two accept modes are provided:
+
+  * ``accept_mode="batch"`` (default, reproduction parity): the whole
+    batch accepts iff ``all(e_k ≤ τ)`` — one hard sample forces a full
+    forward for everyone, exactly the seed semantics.
+  * ``accept_mode="per_sample"`` (§1 sample-adaptive allocation): every
+    sample keeps its own ``since_anchor`` counter and anchor metadata;
+    accepted samples advance on the speculative output while rejected
+    samples are served by a full forward whose difference-table refresh is
+    masked to their lanes only (``jnp.where`` select between the two
+    outputs).
 """
 from __future__ import annotations
 
@@ -48,10 +57,14 @@ def speca_sample(cfg: ModelConfig, params: Dict[str, Any],
                  dcfg: DiffusionConfig, scfg: SpeCaConfig, key,
                  cond: Dict[str, Any], batch: int, *,
                  draft_mode: str = "taylor",
+                 accept_mode: str = "batch",
                  collect_trajectory: bool = False,
                  use_flash: bool = False
                  ) -> Tuple[jnp.ndarray, Dict[str, Any]]:
     """Run SpeCa-accelerated sampling. Returns (x0, stats)."""
+    if accept_mode not in ("batch", "per_sample"):
+        raise ValueError(f"unknown accept_mode {accept_mode!r}")
+    per_sample = accept_mode == "per_sample"
     stepper = make_stepper(dcfg)
     S = stepper.num_steps
     vl = _verify_layer(cfg, scfg)
@@ -61,7 +74,8 @@ def speca_sample(cfg: ModelConfig, params: Dict[str, Any],
     x0_shape = latent_shape(cfg, dcfg, batch)
     x = jax.random.normal(key, x0_shape, jnp.float32)
     feat_shape = taylor.feature_shape_for(L, batch, n_tok, cfg.d_model)
-    tstate = taylor.init_state(scfg.taylor_order, feat_shape, cfg.jnp_dtype)
+    tstate = taylor.init_state(scfg.taylor_order, feat_shape, cfg.jnp_dtype,
+                               lanes=batch if per_sample else None)
     cmask_spec = jnp.arange(L) == vl
 
     def full_fwd(x, s):
@@ -80,25 +94,28 @@ def speca_sample(cfg: ModelConfig, params: Dict[str, Any],
                                     use_flash=use_flash)
         return out, extras["branches"]
 
+    def spec_attempt(x, tstate, s, predict_fn):
+        preds = predict_fn(tstate, s, mode=draft_mode)
+        out, branches = spec_fwd(x, s, preds)
+        real_vl = branches[vl][0] + branches[vl][1]
+        pred_vl = preds[vl][0] + preds[vl][1]
+        err = relative_error(pred_vl, real_vl, metric=scfg.error_metric,
+                             eps=scfg.eps, batch_axis=0)
+        return out, err
+
+    def spec_skip(x):
+        return (jnp.zeros(x0_shape, cfg.jnp_dtype),
+                jnp.full((batch,), jnp.inf, jnp.float32))
+
     def body(carry, s):
         x, tstate, since_anchor = carry
         warm = tstate["n_anchors"] > scfg.taylor_order
         want_spec = jnp.logical_and(warm, since_anchor < scfg.max_draft)
 
-        def attempt(x):
-            preds = taylor.predict(tstate, s, mode=draft_mode)
-            out, branches = spec_fwd(x, s, preds)
-            real_vl = branches[vl][0] + branches[vl][1]
-            pred_vl = preds[vl][0] + preds[vl][1]
-            err = relative_error(pred_vl, real_vl, metric=scfg.error_metric,
-                                 eps=scfg.eps, batch_axis=0)
-            return out, err
-
-        def skip(x):
-            return (jnp.zeros(x0_shape, cfg.jnp_dtype),
-                    jnp.full((batch,), jnp.inf, jnp.float32))
-
-        out_spec, err = jax.lax.cond(want_spec, attempt, skip, x)
+        out_spec, err = jax.lax.cond(
+            want_spec,
+            lambda x: spec_attempt(x, tstate, s, taylor.predict),
+            spec_skip, x)
         tau = threshold_schedule(stepper.t_frac[s], scfg.tau0, scfg.beta)
         ok_b = err <= tau
         accept = jnp.logical_and(want_spec, jnp.all(ok_b))
@@ -128,8 +145,51 @@ def speca_sample(cfg: ModelConfig, params: Dict[str, Any],
             ys["x"] = x_next
         return (x_next, tstate, since_anchor), ys
 
-    init = (x, tstate, jnp.zeros((), jnp.int32))
-    (x, tstate, _), ys = jax.lax.scan(body, init, jnp.arange(S))
+    def body_per_sample(carry, s):
+        x, tstate, since_anchor = carry
+        warm_b = tstate["n_anchors"] > scfg.taylor_order       # [B]
+        want_b = jnp.logical_and(warm_b, since_anchor < scfg.max_draft)
+
+        out_spec, err = jax.lax.cond(
+            jnp.any(want_b),
+            lambda x: spec_attempt(x, tstate, s, taylor.predict_lanes),
+            spec_skip, x)
+        tau = threshold_schedule(stepper.t_frac[s], scfg.tau0, scfg.beta)
+        accept_b = jnp.logical_and(want_b, err <= tau)          # [B]
+
+        def keep_spec(opers):
+            x, tstate = opers
+            return jnp.zeros(x0_shape, jnp.float32), tstate
+
+        def do_full(opers):
+            x, tstate = opers
+            out, branches = full_fwd(x, s)
+            tstate = taylor.update_lanes(tstate, branches, s,
+                                         jnp.logical_not(accept_b))
+            return out.astype(jnp.float32), tstate
+
+        out_full, tstate = jax.lax.cond(jnp.all(accept_b), keep_spec,
+                                        do_full, (x, tstate))
+        sel = accept_b.reshape((batch,) + (1,) * (x.ndim - 1))
+        out = jnp.where(sel, out_spec.astype(jnp.float32), out_full)
+        x_next = stepper.advance(x, out, s)
+        since_anchor = jnp.where(accept_b, since_anchor + 1, 0)
+
+        ys = {
+            "spec_step": jnp.all(accept_b),       # no full forward ran
+            "spec_attempted": jnp.any(want_b),
+            "err": err,
+            "tau": tau,
+            "accept_b": accept_b,
+        }
+        if collect_trajectory:
+            ys["x"] = x_next
+        return (x_next, tstate, since_anchor), ys
+
+    since0 = jnp.zeros((batch,) if per_sample else (), jnp.int32)
+    init = (x, tstate, since0)
+    (x, tstate, _), ys = jax.lax.scan(
+        body_per_sample if per_sample else body, init, jnp.arange(S))
 
     stats = {
         "num_steps": S,
@@ -139,6 +199,7 @@ def speca_sample(cfg: ModelConfig, params: Dict[str, Any],
         "alpha": jnp.mean(ys["spec_step"].astype(jnp.float32)),
         "per_sample_accepts": jnp.sum(ys["accept_b"].astype(jnp.int32),
                                       axis=0),
+        "alpha_b": jnp.mean(ys["accept_b"].astype(jnp.float32), axis=0),
         "err": ys["err"],
         "tau": ys["tau"],
         "spec_step": ys["spec_step"],

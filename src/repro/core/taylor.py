@@ -19,23 +19,37 @@ coincide).
 A ``newton`` variant (beyond-paper, DESIGN.md §1) replaces the Taylor
 weights dⁱ/(i!·Nⁱ) with binomial extrapolation weights C(d/N+i−1, i), which
 is exact for polynomial trajectories of degree ≤ m.
+
+Per-lane serving (PR 1): the anchor metadata (``n_anchors``,
+``anchor_step``, ``gap``) can be held per *lane* — one entry per sample in
+the batch axis of the feature layout — so each request in a batched
+serving step keeps its own anchor history. ``update_lanes`` refreshes only
+a masked subset of lanes (the ones whose draft was rejected) and
+``predict_lanes`` evaluates lane-specific weights in a single einsum.
 """
 from __future__ import annotations
 
 import math
-from typing import Any, Dict
+from typing import Any, Dict, Optional
 
 import jax
 import jax.numpy as jnp
 
 
-def init_state(order: int, feat_shape, dtype) -> Dict[str, Any]:
-    """order = m (taylor order); table holds m+1 difference planes."""
+def init_state(order: int, feat_shape, dtype,
+               lanes: Optional[int] = None) -> Dict[str, Any]:
+    """order = m (taylor order); table holds m+1 difference planes.
+
+    ``lanes=None`` keeps the metadata scalar (whole-batch anchors, the
+    reproduction path); ``lanes=B`` gives every lane its own anchor
+    metadata for per-sample adaptive serving.
+    """
+    meta = () if lanes is None else (int(lanes),)
     return {
         "diffs": jnp.zeros((order + 1,) + tuple(feat_shape), dtype),
-        "n_anchors": jnp.zeros((), jnp.int32),
-        "anchor_step": jnp.full((), -1, jnp.int32),
-        "gap": jnp.ones((), jnp.float32),
+        "n_anchors": jnp.zeros(meta, jnp.int32),
+        "anchor_step": jnp.full(meta, -1, jnp.int32),
+        "gap": jnp.ones(meta, jnp.float32),
     }
 
 
@@ -57,14 +71,50 @@ def update(state: Dict[str, Any], feats: jnp.ndarray, step) -> Dict[str, Any]:
             "gap": jnp.maximum(gap, 1.0)}
 
 
+def update_lanes(state: Dict[str, Any], feats: jnp.ndarray, step, mask,
+                 *, lane_axis: int = 2) -> Dict[str, Any]:
+    """Masked per-lane anchor refresh (the batched-serving path).
+
+    ``mask`` [B] selects the lanes whose draft was rejected: their table
+    rows and anchor metadata refresh exactly as :func:`update` would;
+    accepted lanes keep table and metadata untouched. ``step`` may be a
+    scalar or per-lane [B]. ``lane_axis`` is the lane (batch) axis of the
+    *feature* layout — 2 for the (L, 2, B, T, D) increments table.
+    """
+    old = state["diffs"]
+    m1 = old.shape[0]
+    rows = [feats.astype(old.dtype)]
+    for i in range(1, m1):
+        rows.append(rows[i - 1] - old[i - 1])
+    new_diffs = jnp.stack(rows)
+    mask = jnp.asarray(mask, bool)
+    step = jnp.broadcast_to(jnp.asarray(step, jnp.int32), mask.shape)
+    gap = jnp.where(state["anchor_step"] >= 0,
+                    (step - state["anchor_step"]).astype(jnp.float32),
+                    jnp.ones(mask.shape, jnp.float32))
+    mshape = [1] * old.ndim
+    mshape[lane_axis + 1] = mask.shape[0]      # +1: leading diff-order axis
+    bmask = mask.reshape(mshape)
+    return {
+        "diffs": jnp.where(bmask, new_diffs, old),
+        "n_anchors": jnp.where(mask, state["n_anchors"] + 1,
+                               state["n_anchors"]),
+        "anchor_step": jnp.where(mask, step, state["anchor_step"]),
+        "gap": jnp.where(mask, jnp.maximum(gap, 1.0), state["gap"]),
+    }
+
+
 def prediction_weights(order: int, d, gap, n_anchors,
                        mode: str = "taylor") -> jnp.ndarray:
-    """Per-order scalar weights w_i with validity masking.
+    """Per-order weights w_i with validity masking.
 
     Only Δⁱ built from ≥ i+1 anchors are trusted; higher orders get w=0.
+    ``d`` / ``gap`` / ``n_anchors`` may be scalars (whole-batch anchors) or
+    per-lane [B] arrays, giving weights [m+1] or [m+1, B] respectively.
     """
     d = jnp.asarray(d, jnp.float32)
     gap = jnp.asarray(gap, jnp.float32)
+    shape = jnp.broadcast_shapes(jnp.shape(d), jnp.shape(gap))
     ws = []
     for i in range(order + 1):
         if mode == "newton":
@@ -89,9 +139,10 @@ def prediction_weights(order: int, d, gap, n_anchors,
                 w = jnp.zeros((), jnp.float32)
         else:
             w = (d ** i) / (math.factorial(i) * (gap ** i))
-        ws.append(w)
+        ws.append(jnp.broadcast_to(jnp.asarray(w, jnp.float32), shape))
     w = jnp.stack(ws)
-    valid = jnp.arange(order + 1) < n_anchors
+    valid = jnp.arange(order + 1).reshape((-1,) + (1,) * len(shape)) \
+        < n_anchors
     return jnp.where(valid, w, 0.0)
 
 
@@ -105,6 +156,26 @@ def predict(state: Dict[str, Any], step, mode: str = "taylor"
     w = w.astype(jnp.float32)
     diffs = state["diffs"].astype(jnp.float32)
     pred = jnp.tensordot(w, diffs, axes=(0, 0))
+    return pred.astype(state["diffs"].dtype)
+
+
+def predict_lanes(state: Dict[str, Any], step, mode: str = "taylor",
+                  *, lane_axis: int = 2) -> jnp.ndarray:
+    """Per-lane forecast: each lane extrapolates from its own anchor.
+
+    ``step`` may be a scalar or per-lane [B]; the state must hold per-lane
+    metadata (``init_state(..., lanes=B)``). ``lane_axis`` is the lane axis
+    of the feature layout — 2 for (L, 2, B, T, D).
+    """
+    d = (jnp.asarray(step, jnp.int32) - state["anchor_step"]
+         ).astype(jnp.float32)
+    order = state["diffs"].shape[0] - 1
+    w = prediction_weights(order, d, state["gap"], state["n_anchors"], mode)
+    diffs = state["diffs"].astype(jnp.float32)
+    subs = "".join(chr(ord("a") + i) for i in range(diffs.ndim - 1))
+    lane = subs[lane_axis]
+    pred = jnp.einsum(f"z{lane},z{subs}->{subs}", w.astype(jnp.float32),
+                      diffs)
     return pred.astype(state["diffs"].dtype)
 
 

@@ -89,4 +89,7 @@ def rf_velocity_target(x0: jnp.ndarray, noise: jnp.ndarray) -> jnp.ndarray:
 
 def rf_euler_step(x: jnp.ndarray, v: jnp.ndarray, sigma: jnp.ndarray,
                   sigma_next: jnp.ndarray) -> jnp.ndarray:
-    return x.astype(jnp.float32) + (sigma_next - sigma) * v.astype(jnp.float32)
+    dt = sigma_next - sigma
+    if dt.ndim:            # per-lane σ (batched serving): broadcast over x
+        dt = dt.reshape((-1,) + (1,) * (x.ndim - 1))
+    return x.astype(jnp.float32) + dt * v.astype(jnp.float32)

@@ -93,6 +93,24 @@ def verify_error(pred: jnp.ndarray, ref_: jnp.ndarray, *, eps: float = 1e-8,
                             interpret=_interpret())
 
 
+@functools.partial(jax.jit, static_argnames=("eps", "block_c"))
+def verify_accept(pred: jnp.ndarray, ref_: jnp.ndarray, tau: jnp.ndarray, *,
+                  eps: float = 1e-8, block_c: int = 1024):
+    """Fused per-lane verification (serving path): one pass over the
+    feature plane yields each lane's rel-L2 error AND its accept bit
+    against that lane's threshold. pred/ref [B, ...], tau [B] ->
+    (err [B] f32, accept [B] bool)."""
+    B = pred.shape[0]
+    p = _pad_to(pred.reshape(B, -1), 1, 128)
+    r = _pad_to(ref_.reshape(B, -1), 1, 128)
+    bc = min(block_c, p.shape[1])
+    while p.shape[1] % bc:
+        bc //= 2
+    out = _ve.verify_sums(p, r, tau=jnp.asarray(tau, jnp.float32), eps=eps,
+                          block_c=bc, interpret=_interpret())
+    return out[:, 2], out[:, 3] > 0.0
+
+
 @functools.partial(jax.jit,
                    static_argnames=("causal", "window", "block_q", "block_k"))
 def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,

@@ -6,8 +6,17 @@ here each (1, block_c) VMEM tile is read once and both partial sums are
 accumulated into the output block across the sequential column grid — the
 TPU grid executes in order, so read-modify-write accumulation on the
 output ref is safe (this is the standard Pallas reduction idiom).
+
+The per-lane threshold variant (``tau`` given) additionally finalises the
+accept decision inside the same pass: on the last column tile each lane's
+relative error e = √num/(√den+ε) is formed in-register and compared with
+that lane's τ, so the serving engine's accept bit never needs a second
+read of the feature plane (eq. 4 + §3.4.2 in one kernel).
 """
 from __future__ import annotations
+
+import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -32,24 +41,74 @@ def _verify_kernel(p_ref, r_ref, o_ref):
         o_ref[...] += part
 
 
+def _verify_tau_kernel(p_ref, r_ref, tau_ref, o_ref, *, eps: float):
+    c = pl.program_id(1)
+    p = p_ref[...].astype(jnp.float32)
+    r = r_ref[...].astype(jnp.float32)
+    d = p - r
+    num = jnp.sum(d * d, axis=-1, keepdims=True)      # [1, 1]
+    den = jnp.sum(r * r, axis=-1, keepdims=True)
+    zero = jnp.zeros_like(num)
+    part = jnp.concatenate([num, den, zero, zero], axis=-1)   # [1, 4]
+
+    @pl.when(c == 0)
+    def _init():
+        o_ref[...] = part
+
+    @pl.when(c > 0)
+    def _acc():
+        o_ref[...] += part
+
+    # Finalise on the last column tile: the accumulated sums are already in
+    # the output block (grid runs in order), so err/accept are pure
+    # register math — no extra pass over the feature plane.
+    @pl.when(c == pl.num_programs(1) - 1)
+    def _fin():
+        err = jnp.sqrt(o_ref[0, 0]) / (jnp.sqrt(o_ref[0, 1]) + eps)
+        o_ref[0, 2] = err
+        o_ref[0, 3] = (err <= tau_ref[0, 0]).astype(jnp.float32)
+
+
 def verify_sums(pred: jnp.ndarray, ref: jnp.ndarray, *,
+                tau: Optional[jnp.ndarray] = None, eps: float = 1e-8,
                 block_c: int = 1024, interpret: bool = False) -> jnp.ndarray:
-    """pred/ref [B, N] (N%128==0) -> [B, 2] = (Σ(p−r)², Σr²) per sample."""
+    """One-pass per-sample verification sums. pred/ref [B, N] (N%128==0).
+
+    Without ``tau``: returns [B, 2] = (Σ(p−r)², Σr²).
+    With per-lane thresholds ``tau`` [B]: returns [B, 4] =
+    (Σ(p−r)², Σr², e, accept) with e = √num/(√den+ε) and
+    accept = float(e ≤ τ_lane), finalised inside the same fused pass.
+    """
     B, N = pred.shape
     block_c = min(block_c, N)
     assert N % block_c == 0, (N, block_c)
     grid = (B, N // block_c)
+    if tau is None:
+        return pl.pallas_call(
+            _verify_kernel,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, block_c), lambda b, c: (b, c)),
+                pl.BlockSpec((1, block_c), lambda b, c: (b, c)),
+            ],
+            out_specs=pl.BlockSpec((1, 2), lambda b, c: (b, 0)),
+            out_shape=jax.ShapeDtypeStruct((B, 2), jnp.float32),
+            interpret=interpret,
+        )(pred, ref)
+    # tau travels as a [B, 1] plane so its block stays 2-D like every
+    # other VMEM operand (rank-1 blocks are a Mosaic lowering hazard)
     return pl.pallas_call(
-        _verify_kernel,
+        functools.partial(_verify_tau_kernel, eps=eps),
         grid=grid,
         in_specs=[
             pl.BlockSpec((1, block_c), lambda b, c: (b, c)),
             pl.BlockSpec((1, block_c), lambda b, c: (b, c)),
+            pl.BlockSpec((1, 1), lambda b, c: (b, 0)),
         ],
-        out_specs=pl.BlockSpec((1, 2), lambda b, c: (b, 0)),
-        out_shape=jax.ShapeDtypeStruct((B, 2), jnp.float32),
+        out_specs=pl.BlockSpec((1, 4), lambda b, c: (b, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, 4), jnp.float32),
         interpret=interpret,
-    )(pred, ref)
+    )(pred, ref, tau.astype(jnp.float32).reshape(B, 1))
 
 
 def verify_error(pred: jnp.ndarray, ref: jnp.ndarray, *, eps: float = 1e-8,

@@ -27,7 +27,8 @@ from repro.configs import (SHAPES, get_config, list_archs,
                            long_context_arch)
 from repro.configs.base import ModelConfig, ShapeConfig
 from repro.layers import model as M
-from repro.launch.hlo_analysis import parse_collectives, total_wire_bytes
+from repro.launch.hlo_analysis import (cost_dict, parse_collectives,
+                                        total_wire_bytes)
 from repro.launch.steps import (build_step, input_specs, params_shapes,
                                 train_state_shapes)
 from repro.launch.mesh import make_production_mesh
@@ -61,7 +62,7 @@ def run_dryrun(arch: str, shape_name: str, *, multi_pod: bool = False,
         compiled = lowered.compile()
         t_compile = time.time() - t0
 
-    cost = compiled.cost_analysis()
+    cost = cost_dict(compiled)
     mem = compiled.memory_analysis()
     colls = parse_collectives(compiled.as_text())
 
@@ -140,7 +141,7 @@ def run_calibrated(arch: str, shape_name: str, *, multi_pod: bool = False,
                 compiled = jax.jit(
                     fn, in_shardings=in_sh,
                     out_shardings=out_sh).lower(*args).compile()
-            cost = compiled.cost_analysis()
+            cost = cost_dict(compiled)
             colls = parse_collectives(compiled.as_text())
             metrics[L] = {
                 "flops": float(cost.get("flops", 0.0)),

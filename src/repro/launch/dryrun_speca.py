@@ -35,7 +35,8 @@ from repro.core import taylor
 from repro.core.verify import relative_error
 from repro.diffusion.pipeline import make_stepper, model_inputs
 from repro.launch.dryrun import ARTIFACT_DIR
-from repro.launch.hlo_analysis import parse_collectives, total_wire_bytes
+from repro.launch.hlo_analysis import (cost_dict, parse_collectives,
+                                        total_wire_bytes)
 from repro.launch.mesh import make_production_mesh
 from repro.launch.steps import params_shapes
 from repro.layers import model as M
@@ -130,7 +131,7 @@ def run(arch: str = "flux-like", *, batch: int = 16, latent: int = 128,
         with mesh:
             c = jax.jit(fn, in_shardings=in_sh,
                         out_shardings=out_sh).lower(*args).compile()
-        cost = c.cost_analysis()
+        cost = cost_dict(c)
         mem = c.memory_analysis()
         colls = parse_collectives(c.as_text())
         rec[name] = {

@@ -28,6 +28,18 @@ _COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
                 "collective-permute")
 
 _ONE_SHAPE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def cost_dict(compiled) -> Dict[str, float]:
+    """``compiled.cost_analysis()`` normalised to a dict.
+
+    Some jax versions return a single dict, others a one-per-device list
+    of dicts — callers always want the per-device dict.
+    """
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return ca
 _GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
 _GROUPS_SET_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
 

@@ -1,8 +1,11 @@
 """Serving launcher: SpeCa diffusion serving or LM decode, reduced scale.
 
 Usage:
-  python -m repro.launch.serve --mode diffusion --requests 6
+  python -m repro.launch.serve --mode diffusion --requests 6 --lanes 4
   python -m repro.launch.serve --mode lm --arch mamba2-130m --gen 32
+
+``--lanes N`` (N>1) serves through the per-lane adaptive batched scheduler
+(docs/serving.md); ``--lanes 1`` keeps the sequential batch=1 loop.
 """
 from __future__ import annotations
 
@@ -31,15 +34,24 @@ def serve_diffusion(args) -> None:
                           TrainConfig(global_batch=16, steps=120, lr=2e-3),
                           verbose=False)
     scfg = SpeCaConfig(taylor_order=2, max_draft=8, tau0=args.tau0, beta=0.9)
-    engine = SpeCaEngine(cfg, out["state"]["params"], dcfg, scfg)
+    engine = SpeCaEngine(cfg, out["state"]["params"], dcfg, scfg,
+                         accept_mode=args.accept_mode)
     reqs = [Request(request_id=i,
                     cond={"labels": jnp.asarray([i % cfg.num_classes])},
                     seed=i)
             for i in range(args.requests)]
-    results = engine.serve(reqs)
+    # warm at the served lane width so compile time stays out of req/s
+    engine.warmup({"labels": jnp.asarray([0])},
+                  lanes=min(args.lanes, args.requests))
+    t0 = time.time()
+    results = engine.serve(reqs, lanes=args.lanes)
+    wall = time.time() - t0
     for r in results:
         print(f"req {r.request_id}: full={r.num_full} spec={r.num_spec} "
               f"alpha={r.alpha:.2f}")
+    mode = f"{args.lanes} lanes" if args.lanes > 1 else "batch=1"
+    print(f"served {len(reqs)} requests in {wall:.1f}s "
+          f"({len(reqs)/wall:.2f} req/s, {mode})")
     n_tok = (dcfg.latent_size // cfg.patch_size) ** 2
     print(allocation_report(results, forward_flops(cfg, n_tok)))
 
@@ -91,6 +103,10 @@ def main() -> None:
                     default="diffusion")
     ap.add_argument("--arch", default="qwen1.5-0.5b")
     ap.add_argument("--requests", type=int, default=4)
+    ap.add_argument("--lanes", type=int, default=4,
+                    help="serving lane width; 1 = sequential batch=1 loop")
+    ap.add_argument("--accept-mode", default="per_sample",
+                    choices=["per_sample", "batch"])
     ap.add_argument("--steps", type=int, default=30)
     ap.add_argument("--tau0", type=float, default=0.4)
     ap.add_argument("--batch", type=int, default=2)

@@ -1,21 +1,44 @@
-"""SpeCa diffusion serving engine — where sample-adaptive compute pays off.
+"""SpeCa diffusion serving engine — per-lane adaptive batched serving.
 
-The paper's sample-adaptive allocation (§1) is realised at request
-granularity: each request (or same-cond bucket) runs its own SpeCa loop, so
-easy samples finish with more accepted drafts (fewer full forwards) than
-hard ones. The engine runs a host-driven loop over two jitted step
-functions (spec-attempt / full) and keeps per-request accounting that the
-Table-2-style benchmark aggregates (57.5%/42.5% split analysis).
+The paper's sample-adaptive allocation (§1) says each sample should get
+exactly as much computation as its complexity demands. The seed engine
+realised that only at batch=1 (one request at a time through a host loop);
+this engine packs N concurrent requests into a fixed-width *lane* batch and
+runs ONE jitted step over all lanes per scheduler tick:
+
+  * every lane carries its own TaylorSeer difference table metadata
+    (``n_anchors`` / ``anchor_step`` / ``gap``), ``since_anchor`` counter,
+    denoising step index and accept/reject decision;
+  * a speculative attempt runs whenever ANY lane is warm enough to draft;
+    the fused verification kernel (``kernels.verify_accept``) turns each
+    lane's verify-layer error into an accept bit against that lane's
+    τ-schedule value in one pass;
+  * accepted lanes advance on the speculative output; rejected lanes are
+    served by a masked full forward that refreshes ONLY their slice of the
+    difference table (``taylor.update_lanes``) — a hard sample no longer
+    resets anyone else's draft schedule, and when every lane accepts the
+    full forward is skipped entirely (when at least one lane rejects, the
+    packed forward still computes all W lanes — batching trades those
+    wasted lane-FLOPs for far fewer dispatches);
+  * lanes live at *different* denoising steps: when a lane finishes, the
+    scheduler immediately refills it from the request queue (continuous
+    batching), so the accelerator stays saturated while every request keeps
+    its exact batch=1 accept trajectory.
+
+``run_request`` (batch=1 host loop) is kept as the per-sample-exact
+reference; it shares the per-lane taylor/verify primitives with the lane
+scheduler so a lane-batched run reproduces its trajectories bit-for-bit —
+tested in ``tests/test_serving_lanes.py``.
 """
 from __future__ import annotations
 
 import dataclasses
 import time
-from functools import partial
 from typing import Any, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs.base import DiffusionConfig, ModelConfig, SpeCaConfig
 from repro.core import taylor
@@ -23,6 +46,7 @@ from repro.core.complexity import forward_flops, verify_flops
 from repro.core.speca import _num_tokens, _verify_layer
 from repro.core.verify import relative_error, threshold_schedule
 from repro.diffusion.pipeline import latent_shape, make_stepper, model_inputs
+from repro.kernels import ops
 from repro.layers import model as M
 
 
@@ -39,8 +63,13 @@ class Result:
     sample: Any
     num_full: int
     num_spec: int
+    # algorithmic per-request cost of the request's own SpeCa schedule
+    # (batch=1 equivalent) — lane packing never changes it, so sequential
+    # and lane-batched runs account identically; device FLOPs of a packed
+    # step additionally cover the accepted lanes' discarded forward rows
     flops: float
     wall_s: float
+    accepts: Optional[List[bool]] = None   # per-step accept trajectory
 
     @property
     def alpha(self) -> float:
@@ -48,35 +77,74 @@ class Result:
 
 
 class SpeCaEngine:
-    """Batched diffusion serving with per-request speculative caching."""
+    """Batched diffusion serving with per-lane speculative caching.
+
+    accept_mode:
+      * ``"per_sample"`` (default) — every lane accepts/rejects on its own
+        error; rejected lanes get a masked full forward.
+      * ``"batch"`` — reproduction parity with the seed sampler: all
+        currently-drafting lanes must pass verification or all of them
+        take the full forward.
+    verify_backend:
+      * ``"fused"`` (default) — the Pallas one-pass sums+threshold kernel.
+      * ``"jnp"`` — unfused ``relative_error``; forced automatically for
+        non-rel-L2 error metrics (the kernel implements eq. 4 only).
+    """
 
     def __init__(self, cfg: ModelConfig, params, dcfg: DiffusionConfig,
-                 scfg: SpeCaConfig, *, draft_mode: str = "taylor"):
+                 scfg: SpeCaConfig, *, draft_mode: str = "taylor",
+                 accept_mode: str = "per_sample",
+                 verify_backend: str = "fused"):
+        if accept_mode not in ("per_sample", "batch"):
+            raise ValueError(f"unknown accept_mode {accept_mode!r}")
+        if verify_backend not in ("fused", "jnp"):
+            raise ValueError(f"unknown verify_backend {verify_backend!r}")
         self.cfg, self.params = cfg, params
         self.dcfg, self.scfg = dcfg, scfg
         self.stepper = make_stepper(dcfg)
         self.vl = _verify_layer(cfg, scfg)
         self.n_tok = _num_tokens(cfg, dcfg)
         self.draft_mode = draft_mode
+        self.accept_mode = accept_mode
+        if scfg.error_metric != "rel_l2":
+            verify_backend = "jnp"
+        self.verify_backend = verify_backend
         self._full_flops = forward_flops(cfg, self.n_tok)
         self._verify_flops = verify_flops(cfg, self.n_tok)
         self._spec_fn = None
         self._full_fn = None
+        self._lane_fns: Dict[int, Any] = {}
 
-    # --- jitted single steps -------------------------------------------
-    def _build(self, batch: int):
-        cfg, params, stepper = self.cfg, self.params, self.stepper
+    # --- shared verification (traced inside both step builders) ---------
+    def _verify(self, pred_vl, real_vl, tau):
+        """(err [B], accept [B]) — identical math on every engine path."""
+        B = pred_vl.shape[0]
+        tau = jnp.broadcast_to(jnp.asarray(tau, jnp.float32), (B,))
+        if self.verify_backend == "fused":
+            return ops.verify_accept(pred_vl.reshape(B, -1),
+                                     real_vl.reshape(B, -1), tau,
+                                     eps=self.scfg.eps)
+        err = relative_error(pred_vl, real_vl,
+                             metric=self.scfg.error_metric,
+                             eps=self.scfg.eps, batch_axis=0)
+        return err, err <= tau
+
+    # --- jitted single steps (batch=1 reference path) -------------------
+    def _build(self):
+        cfg, params, stepper, scfg = self.cfg, self.params, self.stepper, \
+            self.scfg
         cmask = jnp.arange(cfg.num_layers) == self.vl
 
         def full_step(x, tstate, s, cond):
             inputs = model_inputs(cfg, x, stepper.t_model[s], cond)
             out, extras = M.dit_forward(cfg, params, inputs,
                                         collect_branches=True)
-            tstate = taylor.update(tstate, extras["branches"], s)
+            tstate = taylor.update_lanes(tstate, extras["branches"], s,
+                                         jnp.ones((1,), bool))
             return stepper.advance(x, out, s), tstate
 
         def spec_step(x, tstate, s, cond):
-            preds = taylor.predict(tstate, s, mode=self.draft_mode)
+            preds = taylor.predict_lanes(tstate, s, mode=self.draft_mode)
             inputs = model_inputs(cfg, x, stepper.t_model[s], cond)
             out, extras = M.dit_forward(cfg, params, inputs,
                                         branch_preds=preds,
@@ -85,19 +153,18 @@ class SpeCaEngine:
             real_vl = extras["branches"][self.vl][0] \
                 + extras["branches"][self.vl][1]
             pred_vl = preds[self.vl][0] + preds[self.vl][1]
-            err = relative_error(pred_vl, real_vl,
-                                 metric=self.scfg.error_metric,
-                                 eps=self.scfg.eps)
-            return stepper.advance(x, out, s), err
+            tau = threshold_schedule(stepper.t_frac[s], scfg.tau0, scfg.beta)
+            err, ok = self._verify(pred_vl, real_vl, tau)
+            return stepper.advance(x, out, s), err, ok
 
         self._full_fn = jax.jit(full_step)
         self._spec_fn = jax.jit(spec_step)
 
-    # --- serving --------------------------------------------------------
+    # --- batch=1 serving (per-sample adaptivity is trivially exact) -----
     def run_request(self, req: Request) -> Result:
-        """Serve one request (batch=1 — per-sample adaptivity is exact)."""
+        """Serve one request through the host-driven reference loop."""
         if self._full_fn is None:
-            self._build(1)
+            self._build()
         cfg, scfg, stepper = self.cfg, self.scfg, self.stepper
         key = jax.random.PRNGKey(req.seed)
         x = jax.random.normal(key, latent_shape(cfg, self.dcfg, 1),
@@ -105,33 +172,237 @@ class SpeCaEngine:
         feat_shape = taylor.feature_shape_for(cfg.num_layers, 1, self.n_tok,
                                               cfg.d_model)
         tstate = taylor.init_state(scfg.taylor_order, feat_shape,
-                                   cfg.jnp_dtype)
+                                   cfg.jnp_dtype, lanes=1)
         num_full = num_spec = 0
         since = 0
         flops = 0.0
+        accepts: List[bool] = []
         t0 = time.time()
         for s in range(stepper.num_steps):
-            warm = int(tstate["n_anchors"]) > scfg.taylor_order
+            warm = int(tstate["n_anchors"][0]) > scfg.taylor_order
             if warm and since < scfg.max_draft:
-                x_cand, err = self._spec_fn(x, tstate, s, req.cond)
-                tau = float(threshold_schedule(
-                    stepper.t_frac[s], scfg.tau0, scfg.beta))
+                x_cand, err, ok = self._spec_fn(x, tstate, s, req.cond)
                 flops += self._verify_flops
-                if float(err[0]) <= tau:
+                if bool(ok[0]):
                     x = x_cand
                     num_spec += 1
                     since += 1
+                    accepts.append(True)
                     continue
             x, tstate = self._full_fn(x, tstate, s, req.cond)
             flops += self._full_flops
             num_full += 1
             since = 0
+            accepts.append(False)
         return Result(request_id=req.request_id, sample=jax.device_get(x),
                       num_full=num_full, num_spec=num_spec, flops=flops,
-                      wall_s=time.time() - t0)
+                      wall_s=time.time() - t0, accepts=accepts)
 
-    def serve(self, requests: List[Request]) -> List[Result]:
-        return [self.run_request(r) for r in requests]
+    # --- lane-batched serving (the scheduler) ---------------------------
+    def _build_lane_step(self, W: int):
+        cfg, params, stepper, scfg = self.cfg, self.params, self.stepper, \
+            self.scfg
+        cmask = jnp.arange(cfg.num_layers) == self.vl
+        S = stepper.num_steps
+        x_shape = latent_shape(cfg, self.dcfg, W)
+        vl = self.vl
+
+        def step(state):
+            x, since, s, active = (state["x"], state["since"], state["step"],
+                                   state["active"])
+            cond = state["cond"]
+            tstate = {k: state[k] for k in
+                      ("diffs", "n_anchors", "anchor_step", "gap")}
+            s_eff = jnp.minimum(s, S - 1)
+            t_model = stepper.t_model[s_eff]                       # [W]
+            warm = tstate["n_anchors"] > scfg.taylor_order
+            want = active & warm & (since < scfg.max_draft)
+            tau = threshold_schedule(stepper.t_frac[s_eff], scfg.tau0,
+                                     scfg.beta)                    # [W]
+
+            def attempt(x):
+                preds = taylor.predict_lanes(tstate, s_eff,
+                                             mode=self.draft_mode)
+                inputs = model_inputs(cfg, x, t_model, cond)
+                out, extras = M.dit_forward(cfg, params, inputs,
+                                            branch_preds=preds,
+                                            compute_mask=cmask,
+                                            collect_branches=True)
+                real_vl = extras["branches"][vl][0] \
+                    + extras["branches"][vl][1]
+                pred_vl = preds[vl][0] + preds[vl][1]
+                err, ok = self._verify(pred_vl, real_vl, tau)
+                return out.astype(jnp.float32), err, ok
+
+            def skip(x):
+                return (jnp.zeros(x_shape, jnp.float32),
+                        jnp.full((W,), jnp.inf, jnp.float32),
+                        jnp.zeros((W,), bool))
+
+            out_spec, err, ok = jax.lax.cond(jnp.any(want), attempt, skip, x)
+            if self.accept_mode == "batch":
+                # parity mode: every drafting lane must pass or all reject
+                accept = want & jnp.all(ok | ~want)
+            else:
+                accept = want & ok
+            need_full = jnp.any(active & ~accept)
+
+            def do_full(opers):
+                x, tstate = opers
+                inputs = model_inputs(cfg, x, t_model, cond)
+                out, extras = M.dit_forward(cfg, params, inputs,
+                                            collect_branches=True)
+                tstate = taylor.update_lanes(tstate, extras["branches"],
+                                             s_eff, active & ~accept)
+                return out.astype(jnp.float32), tstate
+
+            def keep(opers):
+                x, tstate = opers
+                return jnp.zeros(x_shape, jnp.float32), tstate
+
+            out_full, tstate = jax.lax.cond(need_full, do_full, keep,
+                                            (x, tstate))
+            sel = accept.reshape((W,) + (1,) * (x.ndim - 1))
+            out = jnp.where(sel, out_spec, out_full)
+            x_next = stepper.advance(x, out, s_eff)
+            amask = active.reshape(sel.shape)
+            x = jnp.where(amask, x_next, x)
+            since = jnp.where(accept, since + 1,
+                              jnp.where(active, 0, since))
+            s = s + active.astype(jnp.int32)
+            new_state = dict(state)
+            new_state.update(x=x, since=since, step=s, active=active,
+                             **tstate)
+            flags = {"attempted": want, "accepted": accept,
+                     "full": active & ~accept}
+            return new_state, flags
+
+        return jax.jit(step)
+
+    def _lane_step(self, W: int):
+        if W not in self._lane_fns:
+            self._lane_fns[W] = self._build_lane_step(W)
+        return self._lane_fns[W]
+
+    def _empty_lane_state(self, W: int, cond_template: Dict[str, Any]
+                          ) -> Dict[str, Any]:
+        cfg, scfg = self.cfg, self.scfg
+        feat_shape = taylor.feature_shape_for(cfg.num_layers, W, self.n_tok,
+                                              cfg.d_model)
+        tstate = taylor.init_state(scfg.taylor_order, feat_shape,
+                                   cfg.jnp_dtype, lanes=W)
+        cond = {k: jnp.zeros((W,) + v.shape[1:], v.dtype)
+                for k, v in cond_template.items()}
+        return {
+            "x": jnp.zeros(latent_shape(cfg, self.dcfg, W), jnp.float32),
+            "since": jnp.zeros((W,), jnp.int32),
+            "step": jnp.zeros((W,), jnp.int32),
+            "active": jnp.zeros((W,), bool),
+            "cond": cond,
+            **tstate,
+        }
+
+    @staticmethod
+    def _fill_lane(state: Dict[str, Any], lane: int, req: Request,
+                   noise: jnp.ndarray) -> Dict[str, Any]:
+        """Reset one lane's slice for a fresh request (host-side)."""
+        state = dict(state)
+        state["x"] = state["x"].at[lane].set(noise[0])
+        state["diffs"] = state["diffs"].at[:, :, :, lane].set(0.0)
+        state["n_anchors"] = state["n_anchors"].at[lane].set(0)
+        state["anchor_step"] = state["anchor_step"].at[lane].set(-1)
+        state["gap"] = state["gap"].at[lane].set(1.0)
+        state["since"] = state["since"].at[lane].set(0)
+        state["step"] = state["step"].at[lane].set(0)
+        state["active"] = state["active"].at[lane].set(True)
+        state["cond"] = {k: v.at[lane].set(req.cond[k][0])
+                         for k, v in state["cond"].items()}
+        return state
+
+    def serve_batched(self, requests: List[Request], *, lanes: int = 4
+                      ) -> List[Result]:
+        """Serve a request list through the lane scheduler.
+
+        Packs up to ``lanes`` concurrent requests per jitted step;
+        finished lanes are refilled from the queue immediately
+        (continuous batching). Per-request accept trajectories are
+        identical to ``run_request`` — only the packing differs.
+        """
+        if not requests:
+            return []
+        W = max(min(lanes, len(requests)), 1)
+        step_fn = self._lane_step(W)
+        S = self.stepper.num_steps
+        # queue/results key on queue position, not request_id, so
+        # duplicate ids still get their own Result (matching lanes=1)
+        queue = list(enumerate(requests))
+        state = self._empty_lane_state(W, requests[0].cond)
+        lane_req: List[Optional[Request]] = [None] * W
+        lane_idx = [-1] * W
+        lane_acc: List[List[bool]] = [[] for _ in range(W)]
+        lane_flops = [0.0] * W
+        lane_t0 = [0.0] * W
+        results: Dict[int, Result] = {}
+
+        while queue or any(r is not None for r in lane_req):
+            for lane in range(W):
+                if lane_req[lane] is None and queue:
+                    idx, req = queue.pop(0)
+                    noise = jax.random.normal(
+                        jax.random.PRNGKey(req.seed),
+                        latent_shape(self.cfg, self.dcfg, 1), jnp.float32)
+                    state = self._fill_lane(state, lane, req, noise)
+                    lane_req[lane] = req
+                    lane_idx[lane] = idx
+                    lane_acc[lane] = []
+                    lane_flops[lane] = 0.0
+                    lane_t0[lane] = time.time()
+            state, flags = step_fn(state)
+            attempted = np.asarray(flags["attempted"])
+            accepted = np.asarray(flags["accepted"])
+            full = np.asarray(flags["full"])
+            steps = np.asarray(state["step"])
+            for lane in range(W):
+                req = lane_req[lane]
+                if req is None:
+                    continue
+                if attempted[lane]:
+                    lane_flops[lane] += self._verify_flops
+                if full[lane]:
+                    lane_flops[lane] += self._full_flops
+                lane_acc[lane].append(bool(accepted[lane]))
+                if steps[lane] >= S:
+                    num_spec = sum(lane_acc[lane])
+                    results[lane_idx[lane]] = Result(
+                        request_id=req.request_id,
+                        sample=jax.device_get(state["x"][lane:lane + 1]),
+                        num_full=S - num_spec, num_spec=num_spec,
+                        flops=lane_flops[lane],
+                        wall_s=time.time() - lane_t0[lane],
+                        accepts=list(lane_acc[lane]))
+                    lane_req[lane] = None
+                    state["active"] = state["active"].at[lane].set(False)
+        return [results[i] for i in range(len(requests))]
+
+    def serve(self, requests: List[Request], *, lanes: int = 1
+              ) -> List[Result]:
+        """Effective width <= 1: sequential batch=1 loop; else the lane
+        scheduler (width is clamped to the request count, so a single
+        request always takes the reference path)."""
+        if min(lanes, len(requests)) <= 1:
+            return [self.run_request(r) for r in requests]
+        return self.serve_batched(requests, lanes=lanes)
+
+    def warmup(self, cond: Dict[str, Any], *, lanes: int = 1) -> None:
+        """Compile the serving step(s) for ``lanes`` outside any timed
+        window by serving that many dummy requests end-to-end (this also
+        warms the host loop and both lax.cond branches). ``cond`` is a
+        conditioning template with leading axis 1; the lane step compiles
+        per lane width, so warm at the width — ``min(lanes, n_requests)``
+        — the real serve will use."""
+        reqs = [Request(request_id=-1 - i, cond=cond, seed=90_000 + i)
+                for i in range(max(lanes, 1))]
+        self.serve(reqs, lanes=lanes)
 
 
 def allocation_report(results: List[Result],

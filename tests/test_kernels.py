@@ -62,6 +62,72 @@ def test_verify_error_zero_pred_equals_ref():
 
 
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("n,block_c", [
+    (128, 128),       # single-column grid: init and finalise in one program
+    (384, 128),       # multi-column accumulation
+    (1024, 256),
+    (2048, 1024),
+])
+def test_verify_sums_matches_unfused_reference(n, block_c, dtype):
+    """Fused one-pass sums vs the unfused two-read jnp version."""
+    from repro.kernels.verify_error import verify_sums
+    key = jax.random.PRNGKey(n + block_c)
+    p = jax.random.normal(key, (4, n), jnp.float32).astype(dtype)
+    r = (p + 0.1 * jax.random.normal(jax.random.fold_in(key, 1), (4, n))
+         ).astype(dtype)
+    got = verify_sums(p, r, block_c=block_c, interpret=True)
+    pf, rf = p.astype(jnp.float32), r.astype(jnp.float32)
+    want = jnp.stack([jnp.sum((pf - rf) ** 2, -1), jnp.sum(rf * rf, -1)],
+                     axis=-1)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=5e-2 if dtype == jnp.bfloat16 else 1e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("n", [64, 127, 333, 1000])
+def test_verify_accept_per_lane_thresholds(n, dtype):
+    """The fused τ variant: per-lane err AND accept bit in one pass,
+    odd (padded) edges included."""
+    key = jax.random.PRNGKey(n)
+    B = 6
+    p = jax.random.normal(key, (B, n), jnp.float32).astype(dtype)
+    r = (p + 0.07 * jax.random.normal(jax.random.fold_in(key, 1), (B, n))
+         ).astype(dtype)
+    want_err = R.verify_error_ref(p.astype(jnp.float32),
+                                  r.astype(jnp.float32))
+    # straddle each lane's own error so both outcomes appear
+    tau = jnp.asarray(want_err) * jnp.asarray(
+        [0.5, 2.0, 0.9, 1.1, 0.0, 10.0])
+    err, ok = ops.verify_accept(p, r, tau)
+    np.testing.assert_allclose(np.asarray(err), np.asarray(want_err),
+                               rtol=5e-2 if dtype == jnp.bfloat16 else 1e-4,
+                               atol=1e-6)
+    assert np.array_equal(np.asarray(ok),
+                          np.asarray(err) <= np.asarray(tau))
+    assert np.asarray(ok).dtype == bool
+
+
+@pytest.mark.parametrize("order", [1, 2, 3])
+def test_taylor_predict_kernel_matches_core_predict(order):
+    """ops.taylor_predict (Pallas, interpret) == core taylor.predict for
+    a difference table built by real anchor updates, orders 1-3."""
+    from repro.core import taylor as T
+    feat = (2, 2, 1, 12, 24)          # (L, 2, B, T, D)
+    key = jax.random.PRNGKey(order)
+    state = T.init_state(order, feat, jnp.float32)
+    for i, s in enumerate(range(0, 4 * (order + 1), 4)):
+        f = jax.random.normal(jax.random.fold_in(key, i), feat)
+        state = T.update(state, f, s)
+    step = int(state["anchor_step"]) + 2
+    want = T.predict(state, step)
+    w = T.prediction_weights(order, step - state["anchor_step"],
+                             state["gap"], state["n_anchors"])
+    got = ops.taylor_predict(state["diffs"], w)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
 @pytest.mark.parametrize("s,h,hd,causal,window", [
     (64, 2, 32, True, 0),
     (64, 2, 32, True, 16),

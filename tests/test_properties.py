@@ -1,7 +1,14 @@
-"""Hypothesis property-based tests on system invariants."""
+"""Hypothesis property-based tests on system invariants.
+
+``hypothesis`` is an optional test extra (``pip install -e .[test]``);
+without it the whole module skips instead of failing collection.
+"""
 import math
 
-import hypothesis
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+
 import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp

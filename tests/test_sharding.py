@@ -66,6 +66,7 @@ def test_mini_dryrun_8_devices_subprocess():
         from repro.configs import get_config, reduced
         import dataclasses
         from repro.launch import steps as D
+        from repro.launch.hlo_analysis import cost_dict
         from repro.sharding import specs as S
         from repro.configs.base import ShapeConfig
 
@@ -82,7 +83,7 @@ def test_mini_dryrun_8_devices_subprocess():
             with mesh:
                 c = jax.jit(fn, in_shardings=in_sh,
                             out_shardings=out_sh).lower(*args).compile()
-            results[kind] = float(c.cost_analysis().get("flops", 0))
+            results[kind] = float(cost_dict(c).get("flops", 0))
         import json
         print(json.dumps(results))
     """)
