@@ -37,7 +37,11 @@ def _ssm_flops(cfg: ModelConfig, tokens: int) -> float:
         return 0.0
     di, ns, nh = cfg.ssm_d_inner, cfg.ssm_state, cfg.resolved_ssm_heads
     d = cfg.d_model
-    proj = 2.0 * tokens * d * (2 * di + 2 * ns * nh // nh + nh) \
+    # in-projection: z+x (2·di), per-head B/C streams (2·ns·nh), dt (nh);
+    # out-projection di·d. (A precedence bug — `2 * ns * nh // nh` — used
+    # to collapse the B/C term to 2·ns, undercounting every SSM/hybrid γ
+    # and the speedups derived from it.)
+    proj = 2.0 * tokens * d * (2 * di + 2 * ns * nh + nh) \
         + 2.0 * tokens * di * d
     q = cfg.ssm_chunk
     # SSD dual form: intra-chunk [q,q] blocks + state propagation

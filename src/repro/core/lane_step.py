@@ -1,0 +1,210 @@
+"""The ONE forecast-then-verify step (paper §3.2–3.4) over a lane batch.
+
+Every SpeCa execution path — the reproduction sampler
+(``repro.core.speca.speca_sample``, where the sample batch is the lane
+batch), the batch=1 serving reference (``SpeCaEngine.run_request``, the
+lanes=1 degenerate case) and the lane scheduler
+(``SpeCaEngine.serve_batched``) — advances its state through the step
+function built here. There is deliberately no second implementation of the
+accept/refresh logic anywhere in the tree: the four hand-copied variants
+that previously lived in ``speca.py`` (both scan bodies) and ``engine.py``
+(``_build`` + ``_build_lane_step``) are collapsed into this module, so a
+semantics change (or bugfix) is a single-site edit.
+
+One step, entirely inside the traced function:
+
+  1. *Draft* (``lax.cond``, runs iff ANY lane is warm and under its draft
+     budget): ``taylor.predict_lanes`` forecasts every lane's residual
+     increments from its own anchor through the fused per-lane Pallas
+     kernel, and the backbone executes with compute masked to the verify
+     layer.
+  2. *Verify*: each lane's relative error against its own τ_t — either the
+     fused one-pass Pallas kernel (``verify_backend="fused"``, rel-L2
+     only) or the metric-general jnp path.
+  3. *Accept combiner*: ``per_sample`` accepts each lane on its own bit;
+     ``batch`` (reproduction parity) accepts iff every currently-drafting
+     lane passes.
+  4. *Masked refresh* (``lax.cond``, runs iff ANY active lane rejected):
+     the full forward serves the rejected lanes and
+     ``taylor.update_lanes`` refreshes only their table slices through the
+     one-pass masked kernel; accepted lanes advance on the speculative
+     output via a per-lane select.
+
+State layout (all device-side; the host never has to read any of it to
+decide the next dispatch):
+
+  ``x`` [W,…] latents · ``since``/``step``/``active`` [W] ·
+  ``cond`` {k: [W,…]} · ``diffs`` [m+1, L, 2, W, T, D] ·
+  ``n_anchors``/``anchor_step``/``gap`` [W]  (``taylor.init_state(lanes=W)``)
+
+Flags returned per tick (all [W]): ``attempted`` (the lane drafted),
+``ok`` (its error passed its τ), ``accepted`` (post-combiner decision that
+advanced the lane), ``full`` (the lane was served by the full forward),
+``err`` (verification error, NaN where the lane did not draft — see the
+sentinel semantics in ``speca_sample``), ``tau``.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import DiffusionConfig, ModelConfig, SpeCaConfig
+from repro.core import taylor
+from repro.core.verify import relative_error, threshold_schedule
+from repro.diffusion.pipeline import latent_shape, make_stepper, model_inputs
+from repro.layers import model as M
+
+ACCEPT_MODES = ("batch", "per_sample")
+VERIFY_BACKENDS = ("fused", "jnp")
+
+
+def verify_layer(cfg: ModelConfig, scfg: SpeCaConfig) -> int:
+    return scfg.verify_layer % cfg.num_layers
+
+
+def num_tokens(cfg: ModelConfig, dcfg: DiffusionConfig) -> int:
+    per_frame = (dcfg.latent_size // cfg.patch_size) ** 2
+    return per_frame * max(dcfg.num_frames, 1)
+
+
+def init_lane_state(cfg: ModelConfig, dcfg: DiffusionConfig,
+                    scfg: SpeCaConfig, lanes: int,
+                    cond_template: Dict[str, Any], *,
+                    x: Optional[jnp.ndarray] = None,
+                    active: bool = False) -> Dict[str, Any]:
+    """Fresh lane-batch state. ``cond_template`` supplies per-key shapes
+    (leading axis is replaced by ``lanes``); pass ``x`` to start from a
+    concrete latent (the sampler) instead of zeros (the scheduler)."""
+    W = lanes
+    feat_shape = taylor.feature_shape_for(cfg.num_layers, W,
+                                          num_tokens(cfg, dcfg), cfg.d_model)
+    tstate = taylor.init_state(scfg.taylor_order, feat_shape, cfg.jnp_dtype,
+                               lanes=W)
+    cond = {k: jnp.broadcast_to(jnp.asarray(v), (W,) + jnp.shape(v)[1:])
+            for k, v in cond_template.items()}
+    if x is None:
+        x = jnp.zeros(latent_shape(cfg, dcfg, W), jnp.float32)
+    return {
+        "x": x,
+        "since": jnp.zeros((W,), jnp.int32),
+        "step": jnp.zeros((W,), jnp.int32),
+        "active": jnp.full((W,), bool(active)),
+        "cond": cond,
+        **tstate,
+    }
+
+
+def build_lane_step(cfg: ModelConfig, params: Dict[str, Any],
+                    dcfg: DiffusionConfig, scfg: SpeCaConfig, *,
+                    lanes: int, draft_mode: str = "taylor",
+                    accept_mode: str = "per_sample",
+                    verify_backend: str = "jnp",
+                    use_flash: bool = False
+                    ) -> Callable[[Dict[str, Any]],
+                                  Tuple[Dict[str, Any], Dict[str, Any]]]:
+    """Build the traced lane step: ``state -> (state, flags)``.
+
+    Not jitted here — the sampler scans it inside one XLA program, the
+    engine jits it per lane width.
+    """
+    if accept_mode not in ACCEPT_MODES:
+        raise ValueError(f"unknown accept_mode {accept_mode!r}")
+    if verify_backend not in VERIFY_BACKENDS:
+        raise ValueError(f"unknown verify_backend {verify_backend!r}")
+    if scfg.error_metric != "rel_l2":
+        verify_backend = "jnp"     # the fused kernel implements eq. 4 only
+    stepper = make_stepper(dcfg)
+    W = lanes
+    S = stepper.num_steps
+    vl = verify_layer(cfg, scfg)
+    cmask = jnp.arange(cfg.num_layers) == vl
+    x_shape = latent_shape(cfg, dcfg, W)
+
+    def verify(pred_vl, real_vl, tau):
+        """(err [W], ok [W]) — identical math on every execution path."""
+        tau = jnp.broadcast_to(jnp.asarray(tau, jnp.float32), (W,))
+        if verify_backend == "fused":
+            from repro.kernels import ops
+            return ops.verify_accept(pred_vl.reshape(W, -1),
+                                     real_vl.reshape(W, -1), tau,
+                                     eps=scfg.eps)
+        err = relative_error(pred_vl, real_vl, metric=scfg.error_metric,
+                             eps=scfg.eps, batch_axis=0)
+        return err, err <= tau
+
+    def step(state: Dict[str, Any]
+             ) -> Tuple[Dict[str, Any], Dict[str, Any]]:
+        x, since, s, active = (state["x"], state["since"], state["step"],
+                               state["active"])
+        cond = state["cond"]
+        tstate = {k: state[k] for k in
+                  ("diffs", "n_anchors", "anchor_step", "gap")}
+        s_eff = jnp.minimum(s, S - 1)
+        t_model = stepper.t_model[s_eff]                          # [W]
+        warm = tstate["n_anchors"] > scfg.taylor_order
+        want = active & warm & (since < scfg.max_draft)
+        tau = threshold_schedule(stepper.t_frac[s_eff], scfg.tau0,
+                                 scfg.beta)                       # [W]
+
+        def attempt(x):
+            preds = taylor.predict_lanes(tstate, s_eff, mode=draft_mode)
+            inputs = model_inputs(cfg, x, t_model, cond)
+            out, extras = M.dit_forward(cfg, params, inputs,
+                                        branch_preds=preds,
+                                        compute_mask=cmask,
+                                        collect_branches=True,
+                                        use_flash=use_flash)
+            real_vl = extras["branches"][vl][0] + extras["branches"][vl][1]
+            pred_vl = preds[vl][0] + preds[vl][1]
+            err, ok = verify(pred_vl, real_vl, tau)
+            # NaN marks "did not draft": it cannot poison downstream
+            # means/percentiles the way the old inf sentinel did, and it
+            # still fails every `err <= tau` comparison.
+            return (out.astype(jnp.float32),
+                    jnp.where(want, err, jnp.nan), ok & want)
+
+        def skip(x):
+            return (jnp.zeros(x_shape, jnp.float32),
+                    jnp.full((W,), jnp.nan, jnp.float32),
+                    jnp.zeros((W,), bool))
+
+        out_spec, err, ok = jax.lax.cond(jnp.any(want), attempt, skip, x)
+        if accept_mode == "batch":
+            # parity mode: every drafting lane must pass or all reject
+            accept = want & jnp.all(ok | ~want)
+        else:
+            accept = want & ok
+        need_full = jnp.any(active & ~accept)
+
+        def do_full(opers):
+            x, tstate = opers
+            inputs = model_inputs(cfg, x, t_model, cond)
+            out, extras = M.dit_forward(cfg, params, inputs,
+                                        collect_branches=True,
+                                        use_flash=use_flash)
+            tstate = taylor.update_lanes(tstate, extras["branches"],
+                                         s_eff, active & ~accept)
+            return out.astype(jnp.float32), tstate
+
+        def keep(opers):
+            x, tstate = opers
+            return jnp.zeros(x_shape, jnp.float32), tstate
+
+        out_full, tstate = jax.lax.cond(need_full, do_full, keep,
+                                        (x, tstate))
+        sel = accept.reshape((W,) + (1,) * (x.ndim - 1))
+        out = jnp.where(sel, out_spec, out_full)
+        x_next = stepper.advance(x, out, s_eff)
+        amask = active.reshape(sel.shape)
+        x = jnp.where(amask, x_next, x)
+        since = jnp.where(accept, since + 1, jnp.where(active, 0, since))
+        s = s + active.astype(jnp.int32)
+        new_state = dict(state)
+        new_state.update(x=x, since=since, step=s, active=active, **tstate)
+        flags = {"attempted": want, "ok": ok, "accepted": accept,
+                 "full": active & ~accept, "err": err, "tau": tau}
+        return new_state, flags
+
+    return step

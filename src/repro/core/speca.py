@@ -1,56 +1,51 @@
 """SpeCa forecast-then-verify sampling (paper §3.2–3.4, Fig. 1/3).
 
-The whole sampler compiles to one XLA program (``lax.scan`` over denoising
-steps). Per step:
-
-  1. If the difference table is warm and fewer than ``max_draft``
-     consecutive drafts were taken, a *speculative attempt* runs: TaylorSeer
-     predicts every block's residual increments; the backbone executes with
-     ``compute_mask`` True only at the verify layer (its real increments
-     are computed *from the predicted stream* inside a ``lax.cond``, so
-     skipped blocks cost nothing at runtime — DESIGN.md §3).
-  2. The per-sample relative error between real and predicted verify-layer
-     increments is compared against τ_t = τ0·β^((T−t)/T).
-  3. Accept → advance the latent with the speculative output. Reject (any
-     sample fails, or forced anchor) → a full forward runs, the difference
-     table refreshes, and drafting restarts — eq. (5)/(6) prefix semantics.
-
-Per-sample acceptance statistics are returned for the sample-adaptive
-computation-allocation analysis. Two accept modes are provided:
+The whole sampler compiles to one XLA program: a ``lax.scan`` over the
+unified lane step (``repro.core.lane_step`` — the single implementation of
+the draft/verify/refresh logic shared with the serving engine). The sample
+batch *is* the lane batch: every sample occupies one always-active lane,
+and the paper's two acceptance semantics are the two accept combiners:
 
   * ``accept_mode="batch"`` (default, reproduction parity): the whole
     batch accepts iff ``all(e_k ≤ τ)`` — one hard sample forces a full
-    forward for everyone, exactly the seed semantics.
+    forward for everyone, the seed's accept semantics. With every lane
+    sharing the same anchor history this is the lanes=B degenerate case of
+    the per-lane machinery (the table refresh is elementwise per lane).
+    Accept trajectories reproduce the seed sampler exactly; latents match
+    it to f32 summation-order tolerance — the fused kernels accumulate
+    Σ wᵢ·Δⁱ in sequential-FMA order where the seed's tensordot used XLA's
+    reduction order (ulp-level; tests/test_lane_step.py pins both
+    properties, and the step-logic refactor itself is bit-for-bit).
   * ``accept_mode="per_sample"`` (§1 sample-adaptive allocation): every
     sample keeps its own ``since_anchor`` counter and anchor metadata;
     accepted samples advance on the speculative output while rejected
     samples are served by a full forward whose difference-table refresh is
-    masked to their lanes only (``jnp.where`` select between the two
-    outputs).
+    masked to their lanes only.
+
+The TaylorSeer table evaluation and masked refresh run through the fused
+per-lane Pallas kernels (see ``repro.core.taylor`` backends); verification
+uses the metric-general jnp path so every ``error_metric`` keeps working.
+
+Sentinel semantics: ``stats["err"]`` is NaN at (step, sample) entries where
+that sample did not draft (cold table, draft budget exhausted, or the whole
+step skipped speculation). NaN — unlike the previous ``inf`` sentinel —
+keeps downstream means/percentiles usable via ``nanmean``/``nanpercentile``
+and still fails every ``err ≤ τ`` comparison.
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.configs.base import DiffusionConfig, ModelConfig, SpeCaConfig
-from repro.core import taylor
-from repro.core.verify import relative_error, threshold_schedule
-from repro.diffusion.pipeline import (Stepper, latent_shape, make_stepper,
-                                      model_inputs)
-from repro.layers import model as M
+from repro.core import lane_step as LS
+from repro.diffusion.pipeline import latent_shape, make_stepper
 
-
-def _verify_layer(cfg: ModelConfig, scfg: SpeCaConfig) -> int:
-    vl = scfg.verify_layer
-    return vl % cfg.num_layers
-
-
-def _num_tokens(cfg: ModelConfig, dcfg: DiffusionConfig) -> int:
-    per_frame = (dcfg.latent_size // cfg.patch_size) ** 2
-    return per_frame * max(dcfg.num_frames, 1)
+# Backwards-compatible aliases (the canonical home is lane_step).
+_verify_layer = LS.verify_layer
+_num_tokens = LS.num_tokens
 
 
 def speca_sample(cfg: ModelConfig, params: Dict[str, Any],
@@ -62,150 +57,56 @@ def speca_sample(cfg: ModelConfig, params: Dict[str, Any],
                  use_flash: bool = False
                  ) -> Tuple[jnp.ndarray, Dict[str, Any]]:
     """Run SpeCa-accelerated sampling. Returns (x0, stats)."""
-    if accept_mode not in ("batch", "per_sample"):
+    if accept_mode not in LS.ACCEPT_MODES:
         raise ValueError(f"unknown accept_mode {accept_mode!r}")
-    per_sample = accept_mode == "per_sample"
     stepper = make_stepper(dcfg)
     S = stepper.num_steps
-    vl = _verify_layer(cfg, scfg)
-    L = cfg.num_layers
-    n_tok = _num_tokens(cfg, dcfg)
+    step = LS.build_lane_step(cfg, params, dcfg, scfg, lanes=batch,
+                              draft_mode=draft_mode,
+                              accept_mode=accept_mode,
+                              verify_backend="jnp", use_flash=use_flash)
+    x = jax.random.normal(key, latent_shape(cfg, dcfg, batch), jnp.float32)
+    state = LS.init_lane_state(cfg, dcfg, scfg, batch, cond, x=x,
+                               active=True)
 
-    x0_shape = latent_shape(cfg, dcfg, batch)
-    x = jax.random.normal(key, x0_shape, jnp.float32)
-    feat_shape = taylor.feature_shape_for(L, batch, n_tok, cfg.d_model)
-    tstate = taylor.init_state(scfg.taylor_order, feat_shape, cfg.jnp_dtype,
-                               lanes=batch if per_sample else None)
-    cmask_spec = jnp.arange(L) == vl
-
-    def full_fwd(x, s):
-        inputs = model_inputs(cfg, x, stepper.t_model[s], cond)
-        out, extras = M.dit_forward(cfg, params, inputs,
-                                    collect_branches=True,
-                                    use_flash=use_flash)
-        return out, extras["branches"]
-
-    def spec_fwd(x, s, preds):
-        inputs = model_inputs(cfg, x, stepper.t_model[s], cond)
-        out, extras = M.dit_forward(cfg, params, inputs,
-                                    branch_preds=preds,
-                                    compute_mask=cmask_spec,
-                                    collect_branches=True,
-                                    use_flash=use_flash)
-        return out, extras["branches"]
-
-    def spec_attempt(x, tstate, s, predict_fn):
-        preds = predict_fn(tstate, s, mode=draft_mode)
-        out, branches = spec_fwd(x, s, preds)
-        real_vl = branches[vl][0] + branches[vl][1]
-        pred_vl = preds[vl][0] + preds[vl][1]
-        err = relative_error(pred_vl, real_vl, metric=scfg.error_metric,
-                             eps=scfg.eps, batch_axis=0)
-        return out, err
-
-    def spec_skip(x):
-        return (jnp.zeros(x0_shape, cfg.jnp_dtype),
-                jnp.full((batch,), jnp.inf, jnp.float32))
-
-    def body(carry, s):
-        x, tstate, since_anchor = carry
-        warm = tstate["n_anchors"] > scfg.taylor_order
-        want_spec = jnp.logical_and(warm, since_anchor < scfg.max_draft)
-
-        out_spec, err = jax.lax.cond(
-            want_spec,
-            lambda x: spec_attempt(x, tstate, s, taylor.predict),
-            spec_skip, x)
-        tau = threshold_schedule(stepper.t_frac[s], scfg.tau0, scfg.beta)
-        ok_b = err <= tau
-        accept = jnp.logical_and(want_spec, jnp.all(ok_b))
-
-        def keep_spec(opers):
-            x, tstate = opers
-            return out_spec.astype(jnp.float32), tstate
-
-        def do_full(opers):
-            x, tstate = opers
-            out, branches = full_fwd(x, s)
-            tstate = taylor.update(tstate, branches, s)
-            return out.astype(jnp.float32), tstate
-
-        out, tstate = jax.lax.cond(accept, keep_spec, do_full, (x, tstate))
-        x_next = stepper.advance(x, out, s)
-        since_anchor = jnp.where(accept, since_anchor + 1, 0)
-
+    def body(state, _):
+        state, flags = step(state)
         ys = {
-            "spec_step": accept,
-            "spec_attempted": want_spec,
-            "err": err,
-            "tau": tau,
-            "accept_b": jnp.logical_and(want_spec, ok_b),
+            # per-sample pass bits (which samples would have accepted),
+            # independent of the combiner — the seed's `accept_b` stat
+            "accept_b": flags["attempted"] & flags["ok"],
+            # post-combiner accepts that actually advanced the lanes
+            "accepted": flags["accepted"],
+            "spec_attempted": jnp.any(flags["attempted"]),
+            "err": flags["err"],
+            "tau": flags["tau"][0],   # lanes share the step ⇒ shared τ
         }
         if collect_trajectory:
-            ys["x"] = x_next
-        return (x_next, tstate, since_anchor), ys
+            ys["x"] = state["x"]
+        return state, ys
 
-    def body_per_sample(carry, s):
-        x, tstate, since_anchor = carry
-        warm_b = tstate["n_anchors"] > scfg.taylor_order       # [B]
-        want_b = jnp.logical_and(warm_b, since_anchor < scfg.max_draft)
-
-        out_spec, err = jax.lax.cond(
-            jnp.any(want_b),
-            lambda x: spec_attempt(x, tstate, s, taylor.predict_lanes),
-            spec_skip, x)
-        tau = threshold_schedule(stepper.t_frac[s], scfg.tau0, scfg.beta)
-        accept_b = jnp.logical_and(want_b, err <= tau)          # [B]
-
-        def keep_spec(opers):
-            x, tstate = opers
-            return jnp.zeros(x0_shape, jnp.float32), tstate
-
-        def do_full(opers):
-            x, tstate = opers
-            out, branches = full_fwd(x, s)
-            tstate = taylor.update_lanes(tstate, branches, s,
-                                         jnp.logical_not(accept_b))
-            return out.astype(jnp.float32), tstate
-
-        out_full, tstate = jax.lax.cond(jnp.all(accept_b), keep_spec,
-                                        do_full, (x, tstate))
-        sel = accept_b.reshape((batch,) + (1,) * (x.ndim - 1))
-        out = jnp.where(sel, out_spec.astype(jnp.float32), out_full)
-        x_next = stepper.advance(x, out, s)
-        since_anchor = jnp.where(accept_b, since_anchor + 1, 0)
-
-        ys = {
-            "spec_step": jnp.all(accept_b),       # no full forward ran
-            "spec_attempted": jnp.any(want_b),
-            "err": err,
-            "tau": tau,
-            "accept_b": accept_b,
-        }
-        if collect_trajectory:
-            ys["x"] = x_next
-        return (x_next, tstate, since_anchor), ys
-
-    since0 = jnp.zeros((batch,) if per_sample else (), jnp.int32)
-    init = (x, tstate, since0)
-    (x, tstate, _), ys = jax.lax.scan(
-        body_per_sample if per_sample else body, init, jnp.arange(S))
+    state, ys = jax.lax.scan(body, state, None, length=S)
+    # "spec step" = no full forward ran: all lanes accepted. In batch mode
+    # the combiner makes accepts all-or-none, so this is the seed's scalar
+    # accept; in per_sample mode it is the all-accept tick indicator.
+    spec_step = jnp.all(ys["accepted"], axis=-1)
+    num_spec = jnp.sum(spec_step.astype(jnp.int32))
 
     stats = {
         "num_steps": S,
-        "num_spec": jnp.sum(ys["spec_step"].astype(jnp.int32)),
-        "num_full": S - jnp.sum(ys["spec_step"].astype(jnp.int32)),
+        "num_spec": num_spec,
+        "num_full": S - num_spec,
         "num_attempted": jnp.sum(ys["spec_attempted"].astype(jnp.int32)),
-        "alpha": jnp.mean(ys["spec_step"].astype(jnp.float32)),
+        "alpha": jnp.mean(spec_step.astype(jnp.float32)),
         "per_sample_accepts": jnp.sum(ys["accept_b"].astype(jnp.int32),
                                       axis=0),
         "alpha_b": jnp.mean(ys["accept_b"].astype(jnp.float32), axis=0),
-        "err": ys["err"],
+        "err": ys["err"],             # NaN where the sample did not draft
         "tau": ys["tau"],
-        "spec_step": ys["spec_step"],
+        "spec_step": spec_step,
         "spec_attempted": ys["spec_attempted"],
         "accept_b": ys["accept_b"],
     }
     if collect_trajectory:
         stats["trajectory"] = ys["x"]
-    return x, stats
+    return state["x"], stats

@@ -25,15 +25,35 @@ Per-lane serving (PR 1): the anchor metadata (``n_anchors``,
 the batch axis of the feature layout — so each request in a batched
 serving step keeps its own anchor history. ``update_lanes`` refreshes only
 a masked subset of lanes (the ones whose draft was rejected) and
-``predict_lanes`` evaluates lane-specific weights in a single einsum.
+``predict_lanes`` evaluates lane-specific weights.
+
+Backends (PR 2): the lane-table hot path (``predict_lanes`` /
+``update_lanes``) executes through the fused lane-masked Pallas kernels by
+default — one pass over the table, no float32 whole-table temporary. The
+staged jnp implementations are kept as the ``ref``/interpret oracle and
+selected with ``REPRO_TABLE_BACKEND=jnp`` (or ``backend="jnp"``); the
+kernel update path is bit-identical to the jnp oracle, the kernel predict
+path accumulates the same f32 math in sequential-FMA order (allclose, and
+accept-trajectory-identical on the reduced configs — see
+``tests/test_lane_step.py``).
 """
 from __future__ import annotations
 
 import math
+import os
 from typing import Any, Dict, Optional
 
 import jax
 import jax.numpy as jnp
+
+
+def _table_backend(backend: Optional[str] = None) -> str:
+    """'kernel' (fused Pallas, default) or 'jnp' (staged oracle)."""
+    if backend is None:
+        backend = os.environ.get("REPRO_TABLE_BACKEND", "kernel")
+    if backend not in ("kernel", "jnp"):
+        raise ValueError(f"unknown table backend {backend!r}")
+    return backend
 
 
 def init_state(order: int, feat_shape, dtype,
@@ -72,7 +92,8 @@ def update(state: Dict[str, Any], feats: jnp.ndarray, step) -> Dict[str, Any]:
 
 
 def update_lanes(state: Dict[str, Any], feats: jnp.ndarray, step, mask,
-                 *, lane_axis: int = 2) -> Dict[str, Any]:
+                 *, lane_axis: int = 2,
+                 backend: Optional[str] = None) -> Dict[str, Any]:
     """Masked per-lane anchor refresh (the batched-serving path).
 
     ``mask`` [B] selects the lanes whose draft was rejected: their table
@@ -80,23 +101,31 @@ def update_lanes(state: Dict[str, Any], feats: jnp.ndarray, step, mask,
     accepted lanes keep table and metadata untouched. ``step`` may be a
     scalar or per-lane [B]. ``lane_axis`` is the lane (batch) axis of the
     *feature* layout — 2 for the (L, 2, B, T, D) increments table.
+
+    The table refresh runs through the one-pass masked Pallas kernel by
+    default; ``backend="jnp"`` selects the staged (stack + where) oracle,
+    which is bit-identical.
     """
     old = state["diffs"]
-    m1 = old.shape[0]
-    rows = [feats.astype(old.dtype)]
-    for i in range(1, m1):
-        rows.append(rows[i - 1] - old[i - 1])
-    new_diffs = jnp.stack(rows)
     mask = jnp.asarray(mask, bool)
+    if _table_backend(backend) == "kernel":
+        from repro.kernels import ops
+        diffs = ops.taylor_update_lanes(old, feats, mask,
+                                        lane_axis=lane_axis)
+    else:
+        m1 = old.shape[0]
+        rows = [feats.astype(old.dtype)]
+        for i in range(1, m1):
+            rows.append(rows[i - 1] - old[i - 1])
+        mshape = [1] * old.ndim
+        mshape[lane_axis + 1] = mask.shape[0]  # +1: leading diff-order axis
+        diffs = jnp.where(mask.reshape(mshape), jnp.stack(rows), old)
     step = jnp.broadcast_to(jnp.asarray(step, jnp.int32), mask.shape)
     gap = jnp.where(state["anchor_step"] >= 0,
                     (step - state["anchor_step"]).astype(jnp.float32),
                     jnp.ones(mask.shape, jnp.float32))
-    mshape = [1] * old.ndim
-    mshape[lane_axis + 1] = mask.shape[0]      # +1: leading diff-order axis
-    bmask = mask.reshape(mshape)
     return {
-        "diffs": jnp.where(bmask, new_diffs, old),
+        "diffs": diffs,
         "n_anchors": jnp.where(mask, state["n_anchors"] + 1,
                                state["n_anchors"]),
         "anchor_step": jnp.where(mask, step, state["anchor_step"]),
@@ -160,17 +189,27 @@ def predict(state: Dict[str, Any], step, mode: str = "taylor"
 
 
 def predict_lanes(state: Dict[str, Any], step, mode: str = "taylor",
-                  *, lane_axis: int = 2) -> jnp.ndarray:
+                  *, lane_axis: int = 2,
+                  backend: Optional[str] = None) -> jnp.ndarray:
     """Per-lane forecast: each lane extrapolates from its own anchor.
 
     ``step`` may be a scalar or per-lane [B]; the state must hold per-lane
     metadata (``init_state(..., lanes=B)``). ``lane_axis`` is the lane axis
     of the feature layout — 2 for (L, 2, B, T, D).
+
+    The table evaluation runs through the fused per-lane Pallas kernel by
+    default (one table read, no f32 table copy); ``backend="jnp"`` selects
+    the staged einsum oracle.
     """
     d = (jnp.asarray(step, jnp.int32) - state["anchor_step"]
          ).astype(jnp.float32)
     order = state["diffs"].shape[0] - 1
     w = prediction_weights(order, d, state["gap"], state["n_anchors"], mode)
+    if _table_backend(backend) == "kernel":
+        from repro.kernels import ops
+        return ops.taylor_predict_lanes(state["diffs"],
+                                        w.astype(jnp.float32),
+                                        lane_axis=lane_axis)
     diffs = state["diffs"].astype(jnp.float32)
     subs = "".join(chr(ord("a") + i) for i in range(diffs.ndim - 1))
     lane = subs[lane_axis]

@@ -77,6 +77,67 @@ def taylor_update(old_diffs: jnp.ndarray, feats: jnp.ndarray, *,
     return out.reshape(m1, -1)[:, :n].reshape((m1,) + shape)
 
 
+def _lane_fold(shape, lane_axis: int):
+    """(G, B, C) row/lane/col factorisation of a feature layout."""
+    B = shape[lane_axis]
+    G = 1
+    for s in shape[:lane_axis]:
+        G *= s
+    C = 1
+    for s in shape[lane_axis + 1:]:
+        C *= s
+    return G, B, C
+
+
+@functools.partial(jax.jit, static_argnames=("lane_axis", "block_c"))
+def taylor_predict_lanes(diffs: jnp.ndarray, weights: jnp.ndarray, *,
+                         lane_axis: int = 2,
+                         block_c: int = 8192) -> jnp.ndarray:
+    """Per-lane fused Taylor evaluation over a feature-layout table.
+
+    diffs [m+1, ...feat] with ``lane_axis`` indexing the lane (batch) axis
+    of the *feature* part, weights [m+1, B] -> prediction [...feat]. The
+    folds below are pure reshapes (the lane axis stays an inner row
+    factor), so aligned shapes move zero extra bytes; a trailing-axis pad
+    to the 128-lane tile is the only copy for odd shapes.
+    """
+    m1 = diffs.shape[0]
+    feat = diffs.shape[1:]
+    G, B, C = _lane_fold(feat, lane_axis)
+    flat = _pad_to(diffs.reshape(m1, G * B, C), 2, 128)
+    cp = flat.shape[2]
+    bc = min(block_c, cp)
+    while cp % bc:
+        bc //= 2
+    out = _tp.taylor_predict_lanes_2d(flat, weights, lanes=B, block_c=bc,
+                                      interpret=_interpret())
+    return out[:, :C].reshape(feat)
+
+
+@functools.partial(jax.jit, static_argnames=("lane_axis", "block_c"))
+def taylor_update_lanes(old_diffs: jnp.ndarray, feats: jnp.ndarray,
+                        mask: jnp.ndarray, *, lane_axis: int = 2,
+                        block_c: int = 8192) -> jnp.ndarray:
+    """Masked per-lane recursive difference refresh (one pass).
+
+    old_diffs [m+1, ...feat], feats [...feat], mask [B] (True = refresh
+    that lane) -> new diffs [m+1, ...feat]. Accepted lanes' rows pass
+    through unchanged.
+    """
+    m1 = old_diffs.shape[0]
+    feat = old_diffs.shape[1:]
+    G, B, C = _lane_fold(feat, lane_axis)
+    od = _pad_to(old_diffs.reshape(m1, G * B, C), 2, 128)
+    f = _pad_to(feats.astype(old_diffs.dtype).reshape(G * B, C), 1, 128)
+    cp = od.shape[2]
+    bc = min(block_c, cp)
+    while cp % bc:
+        bc //= 2
+    out = _tp.taylor_update_lanes_2d(od, f, mask, lanes=B, block_c=bc,
+                                     interpret=_interpret())
+    return out[:, :, :C].reshape((m1,) + feat)
+
+
 @functools.partial(jax.jit, static_argnames=("eps", "block_c"))
 def verify_error(pred: jnp.ndarray, ref_: jnp.ndarray, *, eps: float = 1e-8,
                  block_c: int = 1024) -> jnp.ndarray:

@@ -14,6 +14,34 @@ def taylor_predict_ref(diffs: jnp.ndarray, weights: jnp.ndarray
         diffs.shape[1:]).astype(diffs.dtype)
 
 
+def taylor_predict_lanes_ref(diffs: jnp.ndarray, weights: jnp.ndarray, *,
+                             lane_axis: int = 2) -> jnp.ndarray:
+    """Per-lane forecast oracle: einsum of each lane's weight column.
+
+    diffs [m+1, ...feat], weights [m+1, B] with ``lane_axis`` the lane axis
+    of the feature layout -> prediction [...feat] (f32 accumulate).
+    """
+    subs = "".join(chr(ord("a") + i) for i in range(diffs.ndim - 1))
+    lane = subs[lane_axis]
+    pred = jnp.einsum(f"z{lane},z{subs}->{subs}",
+                      weights.astype(jnp.float32),
+                      diffs.astype(jnp.float32))
+    return pred.astype(diffs.dtype)
+
+
+def taylor_update_lanes_ref(old_diffs: jnp.ndarray, feats: jnp.ndarray,
+                            mask: jnp.ndarray, *, lane_axis: int = 2
+                            ) -> jnp.ndarray:
+    """Masked per-lane refresh oracle: full recursive table + where-select."""
+    rows = [feats.astype(old_diffs.dtype)]
+    for i in range(1, old_diffs.shape[0]):
+        rows.append(rows[i - 1] - old_diffs[i - 1])
+    new = jnp.stack(rows)
+    mshape = [1] * old_diffs.ndim
+    mshape[lane_axis + 1] = mask.shape[0]
+    return jnp.where(jnp.asarray(mask, bool).reshape(mshape), new, old_diffs)
+
+
 def verify_error_ref(pred: jnp.ndarray, ref: jnp.ndarray,
                      eps: float = 1e-8) -> jnp.ndarray:
     """Per-sample relative L2: ‖p−r‖₂ / (‖r‖₂ + ε). pred/ref [B, N] -> [B]."""

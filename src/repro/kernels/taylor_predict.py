@@ -10,6 +10,13 @@ on TPU; the weight vector sits in a tiny replicated VMEM block.
 
 The matching recursive *update* kernel fuses the anchor-step difference
 refresh the same way (Δⁱ chain needs old Δⁱ⁻¹ exactly once).
+
+The *lane* variants (``taylor_predict_lanes_2d`` / ``taylor_update_lanes_2d``)
+are the serving/sampler hot path: the difference table carries one lane per
+request (layout row = group·lanes + lane), each lane evaluates its own
+weight column w[:, b] and the anchor refresh is masked per lane — rejected
+lanes refresh, accepted lanes pass their old rows through — all in ONE pass
+over the table with no float32 whole-table temporary.
 """
 from __future__ import annotations
 
@@ -47,6 +54,98 @@ def taylor_predict_2d(diffs: jnp.ndarray, weights: jnp.ndarray, *,
         out_shape=jax.ShapeDtypeStruct((R, C), diffs.dtype),
         interpret=interpret,
     )(weights.astype(jnp.float32), diffs)
+
+
+def _predict_lanes_kernel(w_ref, d_ref, o_ref, *, order: int):
+    # w_ref block is this lane's weight column [m+1, 1]; d_ref block is one
+    # (1, block_c) row-tile of each difference plane. Sequential FMA in f32
+    # registers — the table is read once, nothing but the prediction is
+    # written.
+    acc = w_ref[0, 0] * d_ref[0].astype(jnp.float32)
+    for i in range(1, order + 1):
+        acc += w_ref[i, 0] * d_ref[i].astype(jnp.float32)
+    o_ref[...] = acc.astype(o_ref.dtype)
+
+
+def taylor_predict_lanes_2d(diffs: jnp.ndarray, weights: jnp.ndarray, *,
+                            lanes: int, block_c: int = 512,
+                            interpret: bool = False) -> jnp.ndarray:
+    """Per-lane fused Taylor evaluation.
+
+    diffs [m+1, R, C] with R = G·lanes (lane index = row % lanes, i.e. the
+    lane axis is the innermost row factor), weights [m+1, lanes] (each
+    lane's w_i column), C % block_c == 0 -> pred [R, C]. Every row-tile
+    reads its own lane's weight column via the BlockSpec index map — no
+    gather, no broadcast table.
+    """
+    m1, R, C = diffs.shape
+    assert R % lanes == 0, (R, lanes)
+    assert weights.shape == (m1, lanes), (weights.shape, m1, lanes)
+    block_c = min(block_c, C)
+    assert C % block_c == 0, (C, block_c)
+    G = R // lanes
+    grid = (G, lanes, C // block_c)
+    return pl.pallas_call(
+        functools.partial(_predict_lanes_kernel, order=m1 - 1),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((m1, 1), lambda g, b, c: (0, b)),
+            pl.BlockSpec((m1, 1, block_c),
+                         lambda g, b, c: (0, g * lanes + b, c)),
+        ],
+        out_specs=pl.BlockSpec((1, block_c),
+                               lambda g, b, c: (g * lanes + b, c)),
+        out_shape=jax.ShapeDtypeStruct((R, C), diffs.dtype),
+        interpret=interpret,
+    )(weights.astype(jnp.float32), diffs)
+
+
+def _update_lanes_kernel(m_ref, d_ref, f_ref, o_ref, *, order: int):
+    # One pass: each old plane is read exactly once, each new plane written
+    # exactly once; lanes whose mask is 0 copy their old rows through
+    # untouched (the masked in-place-style refresh). The Δ chain runs in
+    # the table dtype so the kernel is bit-identical to the jnp oracle.
+    refresh = m_ref[0, 0] > 0.0
+    new = f_ref[...].astype(o_ref.dtype)
+    for i in range(order + 1):
+        old_i = d_ref[i]
+        o_ref[i] = jnp.where(refresh, new, old_i)
+        new = new - old_i
+
+
+def taylor_update_lanes_2d(old_diffs: jnp.ndarray, feats: jnp.ndarray,
+                           mask: jnp.ndarray, *, lanes: int,
+                           block_c: int = 512,
+                           interpret: bool = False) -> jnp.ndarray:
+    """Masked per-lane recursive difference refresh.
+
+    old_diffs [m+1, R, C] (R = G·lanes, lane = row % lanes), feats [R, C]
+    (the new anchor features in the same layout), mask [lanes] (nonzero =
+    refresh that lane) -> new diffs [m+1, R, C]. Single pass over the
+    table; no whole-table temporary.
+    """
+    m1, R, C = old_diffs.shape
+    assert R % lanes == 0 and feats.shape == (R, C)
+    block_c = min(block_c, C)
+    assert C % block_c == 0, (C, block_c)
+    G = R // lanes
+    grid = (G, lanes, C // block_c)
+    # mask travels as a [lanes, 1] f32 plane so its block stays 2-D like
+    # every other VMEM operand (rank-1 blocks are a Mosaic lowering hazard)
+    return pl.pallas_call(
+        functools.partial(_update_lanes_kernel, order=m1 - 1),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda g, b, c: (b, 0)),
+            pl.BlockSpec((m1, 1, block_c),
+                         lambda g, b, c: (0, g * lanes + b, c)),
+            pl.BlockSpec((1, block_c), lambda g, b, c: (g * lanes + b, c)),
+        ],
+        out_specs=pl.BlockSpec((m1, 1, block_c),
+                               lambda g, b, c: (0, g * lanes + b, c)),
+        out_shape=jax.ShapeDtypeStruct((m1, R, C), old_diffs.dtype),
+        interpret=interpret,
+    )(mask.astype(jnp.float32).reshape(lanes, 1), old_diffs, feats)
 
 
 def _update_kernel(d_ref, f_ref, o_ref, *, order: int):

@@ -1,38 +1,40 @@
 """SpeCa diffusion serving engine — per-lane adaptive batched serving.
 
 The paper's sample-adaptive allocation (§1) says each sample should get
-exactly as much computation as its complexity demands. The seed engine
-realised that only at batch=1 (one request at a time through a host loop);
-this engine packs N concurrent requests into a fixed-width *lane* batch and
-runs ONE jitted step over all lanes per scheduler tick:
+exactly as much computation as its complexity demands. The engine realises
+that at production batch sizes with a *lane scheduler*: N concurrent
+requests are packed into a fixed-width lane batch and ONE jitted step — the
+unified forecast-verify step from ``repro.core.lane_step``, the same
+implementation the reproduction sampler scans — advances all lanes per
+scheduler tick:
 
-  * every lane carries its own TaylorSeer difference table metadata
-    (``n_anchors`` / ``anchor_step`` / ``gap``), ``since_anchor`` counter,
-    denoising step index and accept/reject decision;
-  * a speculative attempt runs whenever ANY lane is warm enough to draft;
-    the fused verification kernel (``kernels.verify_accept``) turns each
-    lane's verify-layer error into an accept bit against that lane's
-    τ-schedule value in one pass;
+  * every lane carries its own TaylorSeer difference-table metadata,
+    ``since_anchor`` counter, denoising step index and accept decision;
+  * drafting runs through the fused per-lane Pallas Taylor kernels and the
+    one-pass verification kernel (``kernels.ops.verify_accept``);
   * accepted lanes advance on the speculative output; rejected lanes are
     served by a masked full forward that refreshes ONLY their slice of the
-    difference table (``taylor.update_lanes``) — a hard sample no longer
-    resets anyone else's draft schedule, and when every lane accepts the
-    full forward is skipped entirely (when at least one lane rejects, the
-    packed forward still computes all W lanes — batching trades those
-    wasted lane-FLOPs for far fewer dispatches);
+    difference table — when every lane accepts, the full forward is
+    skipped entirely;
   * lanes live at *different* denoising steps: when a lane finishes, the
     scheduler immediately refills it from the request queue (continuous
-    batching), so the accelerator stays saturated while every request keeps
-    its exact batch=1 accept trajectory.
+    batching).
 
-``run_request`` (batch=1 host loop) is kept as the per-sample-exact
-reference; it shares the per-lane taylor/verify primitives with the lane
-scheduler so a lane-batched run reproduces its trajectories bit-for-bit —
-tested in ``tests/test_serving_lanes.py``.
+Host/device discipline: the step function needs NOTHING from the host to
+decide warm/draft/accept — all decision state lives on-device, and lane
+completion is host-predictable (an active lane advances exactly one
+denoising step per tick). The scheduler therefore dispatches ticks without
+ever blocking on a device value; per-tick flags are fetched only when a
+request completes (its sample must be read anyway). The previous engine
+blocked on ``int(tstate["n_anchors"][0])`` every step of ``run_request`` —
+a full host↔device round-trip per denoising step for a value the host
+could derive — and kept a second, hand-copied batch=1 step implementation.
+Both are gone: ``run_request`` IS the lanes=1 case of the scheduler.
 """
 from __future__ import annotations
 
 import dataclasses
+import math
 import time
 from typing import Any, Dict, List, Optional
 
@@ -41,13 +43,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import DiffusionConfig, ModelConfig, SpeCaConfig
-from repro.core import taylor
+from repro.core import lane_step as LS
 from repro.core.complexity import forward_flops, verify_flops
-from repro.core.speca import _num_tokens, _verify_layer
-from repro.core.verify import relative_error, threshold_schedule
-from repro.diffusion.pipeline import latent_shape, make_stepper, model_inputs
-from repro.kernels import ops
-from repro.layers import model as M
+from repro.diffusion.pipeline import latent_shape, make_stepper
 
 
 @dataclasses.dataclass
@@ -95,15 +93,15 @@ class SpeCaEngine:
                  scfg: SpeCaConfig, *, draft_mode: str = "taylor",
                  accept_mode: str = "per_sample",
                  verify_backend: str = "fused"):
-        if accept_mode not in ("per_sample", "batch"):
+        if accept_mode not in LS.ACCEPT_MODES:
             raise ValueError(f"unknown accept_mode {accept_mode!r}")
-        if verify_backend not in ("fused", "jnp"):
+        if verify_backend not in LS.VERIFY_BACKENDS:
             raise ValueError(f"unknown verify_backend {verify_backend!r}")
         self.cfg, self.params = cfg, params
         self.dcfg, self.scfg = dcfg, scfg
         self.stepper = make_stepper(dcfg)
-        self.vl = _verify_layer(cfg, scfg)
-        self.n_tok = _num_tokens(cfg, dcfg)
+        self.vl = LS.verify_layer(cfg, scfg)
+        self.n_tok = LS.num_tokens(cfg, dcfg)
         self.draft_mode = draft_mode
         self.accept_mode = accept_mode
         if scfg.error_metric != "rel_l2":
@@ -111,197 +109,22 @@ class SpeCaEngine:
         self.verify_backend = verify_backend
         self._full_flops = forward_flops(cfg, self.n_tok)
         self._verify_flops = verify_flops(cfg, self.n_tok)
-        self._spec_fn = None
-        self._full_fn = None
         self._lane_fns: Dict[int, Any] = {}
-
-    # --- shared verification (traced inside both step builders) ---------
-    def _verify(self, pred_vl, real_vl, tau):
-        """(err [B], accept [B]) — identical math on every engine path."""
-        B = pred_vl.shape[0]
-        tau = jnp.broadcast_to(jnp.asarray(tau, jnp.float32), (B,))
-        if self.verify_backend == "fused":
-            return ops.verify_accept(pred_vl.reshape(B, -1),
-                                     real_vl.reshape(B, -1), tau,
-                                     eps=self.scfg.eps)
-        err = relative_error(pred_vl, real_vl,
-                             metric=self.scfg.error_metric,
-                             eps=self.scfg.eps, batch_axis=0)
-        return err, err <= tau
-
-    # --- jitted single steps (batch=1 reference path) -------------------
-    def _build(self):
-        cfg, params, stepper, scfg = self.cfg, self.params, self.stepper, \
-            self.scfg
-        cmask = jnp.arange(cfg.num_layers) == self.vl
-
-        def full_step(x, tstate, s, cond):
-            inputs = model_inputs(cfg, x, stepper.t_model[s], cond)
-            out, extras = M.dit_forward(cfg, params, inputs,
-                                        collect_branches=True)
-            tstate = taylor.update_lanes(tstate, extras["branches"], s,
-                                         jnp.ones((1,), bool))
-            return stepper.advance(x, out, s), tstate
-
-        def spec_step(x, tstate, s, cond):
-            preds = taylor.predict_lanes(tstate, s, mode=self.draft_mode)
-            inputs = model_inputs(cfg, x, stepper.t_model[s], cond)
-            out, extras = M.dit_forward(cfg, params, inputs,
-                                        branch_preds=preds,
-                                        compute_mask=cmask,
-                                        collect_branches=True)
-            real_vl = extras["branches"][self.vl][0] \
-                + extras["branches"][self.vl][1]
-            pred_vl = preds[self.vl][0] + preds[self.vl][1]
-            tau = threshold_schedule(stepper.t_frac[s], scfg.tau0, scfg.beta)
-            err, ok = self._verify(pred_vl, real_vl, tau)
-            return stepper.advance(x, out, s), err, ok
-
-        self._full_fn = jax.jit(full_step)
-        self._spec_fn = jax.jit(spec_step)
-
-    # --- batch=1 serving (per-sample adaptivity is trivially exact) -----
-    def run_request(self, req: Request) -> Result:
-        """Serve one request through the host-driven reference loop."""
-        if self._full_fn is None:
-            self._build()
-        cfg, scfg, stepper = self.cfg, self.scfg, self.stepper
-        key = jax.random.PRNGKey(req.seed)
-        x = jax.random.normal(key, latent_shape(cfg, self.dcfg, 1),
-                              jnp.float32)
-        feat_shape = taylor.feature_shape_for(cfg.num_layers, 1, self.n_tok,
-                                              cfg.d_model)
-        tstate = taylor.init_state(scfg.taylor_order, feat_shape,
-                                   cfg.jnp_dtype, lanes=1)
-        num_full = num_spec = 0
-        since = 0
-        flops = 0.0
-        accepts: List[bool] = []
-        t0 = time.time()
-        for s in range(stepper.num_steps):
-            warm = int(tstate["n_anchors"][0]) > scfg.taylor_order
-            if warm and since < scfg.max_draft:
-                x_cand, err, ok = self._spec_fn(x, tstate, s, req.cond)
-                flops += self._verify_flops
-                if bool(ok[0]):
-                    x = x_cand
-                    num_spec += 1
-                    since += 1
-                    accepts.append(True)
-                    continue
-            x, tstate = self._full_fn(x, tstate, s, req.cond)
-            flops += self._full_flops
-            num_full += 1
-            since = 0
-            accepts.append(False)
-        return Result(request_id=req.request_id, sample=jax.device_get(x),
-                      num_full=num_full, num_spec=num_spec, flops=flops,
-                      wall_s=time.time() - t0, accepts=accepts)
-
-    # --- lane-batched serving (the scheduler) ---------------------------
-    def _build_lane_step(self, W: int):
-        cfg, params, stepper, scfg = self.cfg, self.params, self.stepper, \
-            self.scfg
-        cmask = jnp.arange(cfg.num_layers) == self.vl
-        S = stepper.num_steps
-        x_shape = latent_shape(cfg, self.dcfg, W)
-        vl = self.vl
-
-        def step(state):
-            x, since, s, active = (state["x"], state["since"], state["step"],
-                                   state["active"])
-            cond = state["cond"]
-            tstate = {k: state[k] for k in
-                      ("diffs", "n_anchors", "anchor_step", "gap")}
-            s_eff = jnp.minimum(s, S - 1)
-            t_model = stepper.t_model[s_eff]                       # [W]
-            warm = tstate["n_anchors"] > scfg.taylor_order
-            want = active & warm & (since < scfg.max_draft)
-            tau = threshold_schedule(stepper.t_frac[s_eff], scfg.tau0,
-                                     scfg.beta)                    # [W]
-
-            def attempt(x):
-                preds = taylor.predict_lanes(tstate, s_eff,
-                                             mode=self.draft_mode)
-                inputs = model_inputs(cfg, x, t_model, cond)
-                out, extras = M.dit_forward(cfg, params, inputs,
-                                            branch_preds=preds,
-                                            compute_mask=cmask,
-                                            collect_branches=True)
-                real_vl = extras["branches"][vl][0] \
-                    + extras["branches"][vl][1]
-                pred_vl = preds[vl][0] + preds[vl][1]
-                err, ok = self._verify(pred_vl, real_vl, tau)
-                return out.astype(jnp.float32), err, ok
-
-            def skip(x):
-                return (jnp.zeros(x_shape, jnp.float32),
-                        jnp.full((W,), jnp.inf, jnp.float32),
-                        jnp.zeros((W,), bool))
-
-            out_spec, err, ok = jax.lax.cond(jnp.any(want), attempt, skip, x)
-            if self.accept_mode == "batch":
-                # parity mode: every drafting lane must pass or all reject
-                accept = want & jnp.all(ok | ~want)
-            else:
-                accept = want & ok
-            need_full = jnp.any(active & ~accept)
-
-            def do_full(opers):
-                x, tstate = opers
-                inputs = model_inputs(cfg, x, t_model, cond)
-                out, extras = M.dit_forward(cfg, params, inputs,
-                                            collect_branches=True)
-                tstate = taylor.update_lanes(tstate, extras["branches"],
-                                             s_eff, active & ~accept)
-                return out.astype(jnp.float32), tstate
-
-            def keep(opers):
-                x, tstate = opers
-                return jnp.zeros(x_shape, jnp.float32), tstate
-
-            out_full, tstate = jax.lax.cond(need_full, do_full, keep,
-                                            (x, tstate))
-            sel = accept.reshape((W,) + (1,) * (x.ndim - 1))
-            out = jnp.where(sel, out_spec, out_full)
-            x_next = stepper.advance(x, out, s_eff)
-            amask = active.reshape(sel.shape)
-            x = jnp.where(amask, x_next, x)
-            since = jnp.where(accept, since + 1,
-                              jnp.where(active, 0, since))
-            s = s + active.astype(jnp.int32)
-            new_state = dict(state)
-            new_state.update(x=x, since=since, step=s, active=active,
-                             **tstate)
-            flags = {"attempted": want, "accepted": accept,
-                     "full": active & ~accept}
-            return new_state, flags
-
-        return jax.jit(step)
 
     def _lane_step(self, W: int):
         if W not in self._lane_fns:
-            self._lane_fns[W] = self._build_lane_step(W)
+            self._lane_fns[W] = jax.jit(LS.build_lane_step(
+                self.cfg, self.params, self.dcfg, self.scfg, lanes=W,
+                draft_mode=self.draft_mode, accept_mode=self.accept_mode,
+                verify_backend=self.verify_backend))
         return self._lane_fns[W]
 
-    def _empty_lane_state(self, W: int, cond_template: Dict[str, Any]
-                          ) -> Dict[str, Any]:
-        cfg, scfg = self.cfg, self.scfg
-        feat_shape = taylor.feature_shape_for(cfg.num_layers, W, self.n_tok,
-                                              cfg.d_model)
-        tstate = taylor.init_state(scfg.taylor_order, feat_shape,
-                                   cfg.jnp_dtype, lanes=W)
-        cond = {k: jnp.zeros((W,) + v.shape[1:], v.dtype)
-                for k, v in cond_template.items()}
-        return {
-            "x": jnp.zeros(latent_shape(cfg, self.dcfg, W), jnp.float32),
-            "since": jnp.zeros((W,), jnp.int32),
-            "step": jnp.zeros((W,), jnp.int32),
-            "active": jnp.zeros((W,), bool),
-            "cond": cond,
-            **tstate,
-        }
+    # --- batch=1 serving: the lanes=1 case of the scheduler --------------
+    def run_request(self, req: Request) -> Result:
+        """Serve one request (the exact per-sample reference schedule)."""
+        return self.serve_batched([req], lanes=1)[0]
 
+    # --- host-side lane bookkeeping --------------------------------------
     @staticmethod
     def _fill_lane(state: Dict[str, Any], lane: int, req: Request,
                    noise: jnp.ndarray) -> Dict[str, Any]:
@@ -326,7 +149,12 @@ class SpeCaEngine:
         Packs up to ``lanes`` concurrent requests per jitted step;
         finished lanes are refilled from the queue immediately
         (continuous batching). Per-request accept trajectories are
-        identical to ``run_request`` — only the packing differs.
+        identical at every lane width — only the packing differs.
+
+        The dispatch loop never blocks on the device: an active lane
+        finishes after exactly ``num_inference_steps`` ticks (tracked
+        host-side), so per-tick flags are only materialised when one of
+        the ticks' requests completes.
         """
         if not requests:
             return []
@@ -336,13 +164,24 @@ class SpeCaEngine:
         # queue/results key on queue position, not request_id, so
         # duplicate ids still get their own Result (matching lanes=1)
         queue = list(enumerate(requests))
-        state = self._empty_lane_state(W, requests[0].cond)
+        state = LS.init_lane_state(self.cfg, self.dcfg, self.scfg, W,
+                                   requests[0].cond)
         lane_req: List[Optional[Request]] = [None] * W
         lane_idx = [-1] * W
-        lane_acc: List[List[bool]] = [[] for _ in range(W)]
-        lane_flops = [0.0] * W
+        lane_done = [0] * W          # host-tracked denoising step counter
+        lane_start = [0] * W         # tick at which the lane was filled
         lane_t0 = [0.0] * W
         results: Dict[int, Result] = {}
+        flag_log: List[Dict[str, Any]] = []   # device-side per-tick flags
+        flag_np: Dict[int, Dict[str, np.ndarray]] = {}
+        tick = 0
+
+        def fetch(t: int) -> Dict[str, np.ndarray]:
+            if t not in flag_np:
+                flag_np[t] = {k: np.asarray(v)
+                              for k, v in flag_log[t].items()
+                              if k in ("attempted", "accepted", "full")}
+            return flag_np[t]
 
         while queue or any(r is not None for r in lane_req):
             for lane in range(W):
@@ -354,34 +193,46 @@ class SpeCaEngine:
                     state = self._fill_lane(state, lane, req, noise)
                     lane_req[lane] = req
                     lane_idx[lane] = idx
-                    lane_acc[lane] = []
-                    lane_flops[lane] = 0.0
+                    lane_done[lane] = 0
+                    lane_start[lane] = tick
                     lane_t0[lane] = time.time()
-            state, flags = step_fn(state)
-            attempted = np.asarray(flags["attempted"])
-            accepted = np.asarray(flags["accepted"])
-            full = np.asarray(flags["full"])
-            steps = np.asarray(state["step"])
+            state, flags = step_fn(state)     # async — no host sync here
+            flag_log.append(flags)
+            tick += 1
             for lane in range(W):
-                req = lane_req[lane]
-                if req is None:
+                if lane_req[lane] is None:
                     continue
-                if attempted[lane]:
-                    lane_flops[lane] += self._verify_flops
-                if full[lane]:
-                    lane_flops[lane] += self._full_flops
-                lane_acc[lane].append(bool(accepted[lane]))
-                if steps[lane] >= S:
-                    num_spec = sum(lane_acc[lane])
-                    results[lane_idx[lane]] = Result(
-                        request_id=req.request_id,
-                        sample=jax.device_get(state["x"][lane:lane + 1]),
-                        num_full=S - num_spec, num_spec=num_spec,
-                        flops=lane_flops[lane],
-                        wall_s=time.time() - lane_t0[lane],
-                        accepts=list(lane_acc[lane]))
-                    lane_req[lane] = None
-                    state["active"] = state["active"].at[lane].set(False)
+                lane_done[lane] += 1          # active lanes advance 1/tick
+                if lane_done[lane] < S:
+                    continue
+                # request complete: NOW touch the device (sample readback
+                # + this lane's accumulated flags)
+                req = lane_req[lane]
+                accepts, n_att, n_full = [], 0, 0
+                for t in range(lane_start[lane], tick):
+                    f = fetch(t)
+                    accepts.append(bool(f["accepted"][lane]))
+                    n_att += int(f["attempted"][lane])
+                    n_full += int(f["full"][lane])
+                num_spec = S - n_full
+                results[lane_idx[lane]] = Result(
+                    request_id=req.request_id,
+                    sample=jax.device_get(state["x"][lane:lane + 1]),
+                    num_full=n_full, num_spec=num_spec,
+                    flops=n_full * self._full_flops
+                    + n_att * self._verify_flops,
+                    wall_s=time.time() - lane_t0[lane],
+                    accepts=accepts)
+                lane_req[lane] = None
+                state["active"] = state["active"].at[lane].set(False)
+            # bound the flag log: ticks older than every active lane's
+            # start have been consumed
+            live = [lane_start[i] for i in range(W)
+                    if lane_req[i] is not None]
+            horizon = min(live) if live else tick
+            for t in [t for t in flag_np if t < horizon]:
+                flag_np.pop(t)
+                flag_log[t] = None            # keep indices stable
         return [results[i] for i in range(len(requests))]
 
     def serve(self, requests: List[Request], *, lanes: int = 1
@@ -394,9 +245,9 @@ class SpeCaEngine:
         return self.serve_batched(requests, lanes=lanes)
 
     def warmup(self, cond: Dict[str, Any], *, lanes: int = 1) -> None:
-        """Compile the serving step(s) for ``lanes`` outside any timed
-        window by serving that many dummy requests end-to-end (this also
-        warms the host loop and both lax.cond branches). ``cond`` is a
+        """Compile the serving step for ``lanes`` outside any timed window
+        by serving that many dummy requests end-to-end (this also warms
+        the host loop and both lax.cond branches). ``cond`` is a
         conditioning template with leading axis 1; the lane step compiles
         per lane width, so warm at the width — ``min(lanes, n_requests)``
         — the real serve will use."""
@@ -411,13 +262,18 @@ def allocation_report(results: List[Result],
 
     Splits requests at the median acceptance rate into easy/hard buckets
     and reports the realised FLOPs speedup of each bucket vs always-full.
+    Requests with non-finite accounting (corrupt ``flops``/``alpha`` —
+    e.g. an aborted run) are excluded and counted in ``n_dropped``.
     """
-    if not results:
-        return {}
-    alphas = sorted(r.alpha for r in results)
+    finite = [r for r in results
+              if math.isfinite(r.flops) and math.isfinite(r.alpha)]
+    dropped = len(results) - len(finite)
+    if not finite:
+        return {"n_requests": 0, "n_dropped": dropped} if dropped else {}
+    alphas = sorted(r.alpha for r in finite)
     median = alphas[len(alphas) // 2]
-    easy = [r for r in results if r.alpha >= median]
-    hard = [r for r in results if r.alpha < median]
+    easy = [r for r in finite if r.alpha >= median]
+    hard = [r for r in finite if r.alpha < median]
 
     def bucket_speedup(rs: List[Result]) -> float:
         if not rs:
@@ -427,13 +283,14 @@ def allocation_report(results: List[Result],
         return ref / max(sum(r.flops for r in rs), 1e-9)
 
     return {
-        "n_requests": len(results),
-        "frac_easy": len(easy) / len(results),
-        "frac_hard": len(hard) / len(results),
+        "n_requests": len(finite),
+        "n_dropped": dropped,
+        "frac_easy": len(easy) / len(finite),
+        "frac_hard": len(hard) / len(finite),
         "speedup_easy": bucket_speedup(easy),
         "speedup_hard": bucket_speedup(hard),
-        "speedup_all": bucket_speedup(results),
+        "speedup_all": bucket_speedup(finite),
         "alpha_easy": sum(r.alpha for r in easy) / max(len(easy), 1),
         "alpha_hard": sum(r.alpha for r in hard) / max(len(hard), 1),
-        "alpha_mean": sum(r.alpha for r in results) / len(results),
+        "alpha_mean": sum(r.alpha for r in finite) / len(finite),
     }

@@ -1,0 +1,241 @@
+"""FROZEN pre-refactor ``speca_sample`` step logic — equivalence oracle.
+
+This is the PR-1 sampler with its two hand-copied scan bodies (whole-batch
+and per-sample acceptance), kept verbatim in structure: separate
+``lax.cond``-selected accept/full paths, its own carry layout, its own
+refresh calls. The unified lane-step core (``repro.core.lane_step``) must
+reproduce it bit-for-bit — that is the load-bearing property of the PR-2
+refactor (tests/test_lane_step.py).
+
+The only adaptation from the historical code: the table primitives are the
+*shared lane* primitives (``init_state(lanes=B)`` / ``predict_lanes`` /
+``update_lanes``) for BOTH modes, because the historical batch body's
+scalar-metadata ``taylor.predict`` evaluated its weighted sum through a
+tensordot whose f32 reduction order differs from the fused kernels' — with
+shared anchors the lane form is the mathematically identical degenerate
+case (the table math is elementwise per lane), and routing both
+implementations through the same primitives is what isolates the step
+LOGIC under test from backend numerics (which have their own parity
+tests). Do not "modernise" this file; it is deliberately duplicated code.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import DiffusionConfig, ModelConfig, SpeCaConfig
+from repro.core import taylor
+from repro.core.speca import _num_tokens, _verify_layer
+from repro.core.verify import relative_error, threshold_schedule
+from repro.diffusion.pipeline import latent_shape, make_stepper, model_inputs
+from repro.layers import model as M
+
+
+def speca_sample_prerefactor(cfg: ModelConfig, params: Dict[str, Any],
+                             dcfg: DiffusionConfig, scfg: SpeCaConfig, key,
+                             cond: Dict[str, Any], batch: int, *,
+                             draft_mode: str = "taylor",
+                             accept_mode: str = "batch",
+                             ) -> Tuple[jnp.ndarray, Dict[str, Any]]:
+    per_sample = accept_mode == "per_sample"
+    stepper = make_stepper(dcfg)
+    S = stepper.num_steps
+    vl = _verify_layer(cfg, scfg)
+    L = cfg.num_layers
+    n_tok = _num_tokens(cfg, dcfg)
+
+    x0_shape = latent_shape(cfg, dcfg, batch)
+    x = jax.random.normal(key, x0_shape, jnp.float32)
+    feat_shape = taylor.feature_shape_for(L, batch, n_tok, cfg.d_model)
+    tstate = taylor.init_state(scfg.taylor_order, feat_shape, cfg.jnp_dtype,
+                               lanes=batch)
+    cmask_spec = jnp.arange(L) == vl
+
+    def full_fwd(x, s):
+        inputs = model_inputs(cfg, x, stepper.t_model[s], cond)
+        out, extras = M.dit_forward(cfg, params, inputs,
+                                    collect_branches=True)
+        return out, extras["branches"]
+
+    def spec_fwd(x, s, preds):
+        inputs = model_inputs(cfg, x, stepper.t_model[s], cond)
+        out, extras = M.dit_forward(cfg, params, inputs,
+                                    branch_preds=preds,
+                                    compute_mask=cmask_spec,
+                                    collect_branches=True)
+        return out, extras["branches"]
+
+    def spec_attempt(x, tstate, s):
+        preds = taylor.predict_lanes(tstate, s, mode=draft_mode)
+        out, branches = spec_fwd(x, s, preds)
+        real_vl = branches[vl][0] + branches[vl][1]
+        pred_vl = preds[vl][0] + preds[vl][1]
+        err = relative_error(pred_vl, real_vl, metric=scfg.error_metric,
+                             eps=scfg.eps, batch_axis=0)
+        return out, err
+
+    def spec_skip(x):
+        return (jnp.zeros(x0_shape, cfg.jnp_dtype),
+                jnp.full((batch,), jnp.inf, jnp.float32))
+
+    def body(carry, s):
+        x, tstate, since_anchor = carry
+        warm = tstate["n_anchors"] > scfg.taylor_order            # [B]
+        want_spec = jnp.logical_and(warm, since_anchor < scfg.max_draft)
+
+        out_spec, err = jax.lax.cond(
+            jnp.any(want_spec),
+            lambda x: spec_attempt(x, tstate, s), spec_skip, x)
+        tau = threshold_schedule(stepper.t_frac[s], scfg.tau0, scfg.beta)
+        ok_b = err <= tau
+        accept = jnp.logical_and(jnp.any(want_spec), jnp.all(ok_b))
+
+        def keep_spec(opers):
+            x, tstate = opers
+            return out_spec.astype(jnp.float32), tstate
+
+        def do_full(opers):
+            x, tstate = opers
+            out, branches = full_fwd(x, s)
+            tstate = taylor.update_lanes(tstate, branches, s,
+                                         jnp.ones((batch,), bool))
+            return out.astype(jnp.float32), tstate
+
+        out, tstate = jax.lax.cond(accept, keep_spec, do_full, (x, tstate))
+        x_next = stepper.advance(x, out, s)
+        since_anchor = jnp.where(accept, since_anchor + 1, 0)
+
+        ys = {
+            "spec_step": accept,
+            "spec_attempted": jnp.any(want_spec),
+            "err": err,
+            "accept_b": jnp.logical_and(want_spec, ok_b),
+        }
+        return (x_next, tstate, since_anchor), ys
+
+    def body_per_sample(carry, s):
+        x, tstate, since_anchor = carry
+        warm_b = tstate["n_anchors"] > scfg.taylor_order          # [B]
+        want_b = jnp.logical_and(warm_b, since_anchor < scfg.max_draft)
+
+        out_spec, err = jax.lax.cond(
+            jnp.any(want_b),
+            lambda x: spec_attempt(x, tstate, s), spec_skip, x)
+        tau = threshold_schedule(stepper.t_frac[s], scfg.tau0, scfg.beta)
+        accept_b = jnp.logical_and(want_b, err <= tau)             # [B]
+
+        def keep_spec(opers):
+            x, tstate = opers
+            return jnp.zeros(x0_shape, jnp.float32), tstate
+
+        def do_full(opers):
+            x, tstate = opers
+            out, branches = full_fwd(x, s)
+            tstate = taylor.update_lanes(tstate, branches, s,
+                                         jnp.logical_not(accept_b))
+            return out.astype(jnp.float32), tstate
+
+        out_full, tstate = jax.lax.cond(jnp.all(accept_b), keep_spec,
+                                        do_full, (x, tstate))
+        sel = accept_b.reshape((batch,) + (1,) * (x.ndim - 1))
+        out = jnp.where(sel, out_spec.astype(jnp.float32), out_full)
+        x_next = stepper.advance(x, out, s)
+        since_anchor = jnp.where(accept_b, since_anchor + 1, 0)
+
+        ys = {
+            "spec_step": jnp.all(accept_b),
+            "spec_attempted": jnp.any(want_b),
+            "err": err,
+            "accept_b": accept_b,
+        }
+        return (x_next, tstate, since_anchor), ys
+
+    since0 = jnp.zeros((batch,), jnp.int32)
+    init = (x, tstate, since0)
+    (x, tstate, _), ys = jax.lax.scan(
+        body_per_sample if per_sample else body, init, jnp.arange(S))
+    return x, ys
+
+
+def speca_sample_seed_batch(cfg: ModelConfig, params: Dict[str, Any],
+                            dcfg: DiffusionConfig, scfg: SpeCaConfig, key,
+                            cond: Dict[str, Any], batch: int, *,
+                            draft_mode: str = "taylor",
+                            ) -> Tuple[jnp.ndarray, Dict[str, Any]]:
+    """The SEED batch-mode sampler, faithful to the letter: scalar anchor
+    metadata and the scalar-state ``taylor.predict``/``taylor.update``
+    (tensordot evaluation, whole-table refresh). This is the strongest
+    available oracle for the numerics change the kernels introduce: the
+    unified sampler must reproduce its ACCEPT TRAJECTORIES exactly and its
+    latents to f32 summation-order tolerance (the kernels accumulate
+    Σ wᵢ·Δⁱ in sequential-FMA order; the tensordot reduction order
+    differs at the ulp level)."""
+    stepper = make_stepper(dcfg)
+    S = stepper.num_steps
+    vl = _verify_layer(cfg, scfg)
+    L = cfg.num_layers
+    n_tok = _num_tokens(cfg, dcfg)
+
+    x0_shape = latent_shape(cfg, dcfg, batch)
+    x = jax.random.normal(key, x0_shape, jnp.float32)
+    feat_shape = taylor.feature_shape_for(L, batch, n_tok, cfg.d_model)
+    tstate = taylor.init_state(scfg.taylor_order, feat_shape, cfg.jnp_dtype)
+    cmask_spec = jnp.arange(L) == vl
+
+    def spec_attempt(x, tstate, s):
+        preds = taylor.predict(tstate, s, mode=draft_mode)
+        inputs = model_inputs(cfg, x, stepper.t_model[s], cond)
+        out, extras = M.dit_forward(cfg, params, inputs,
+                                    branch_preds=preds,
+                                    compute_mask=cmask_spec,
+                                    collect_branches=True)
+        real_vl = extras["branches"][vl][0] + extras["branches"][vl][1]
+        pred_vl = preds[vl][0] + preds[vl][1]
+        err = relative_error(pred_vl, real_vl, metric=scfg.error_metric,
+                             eps=scfg.eps, batch_axis=0)
+        return out, err
+
+    def spec_skip(x):
+        return (jnp.zeros(x0_shape, cfg.jnp_dtype),
+                jnp.full((batch,), jnp.inf, jnp.float32))
+
+    def body(carry, s):
+        x, tstate, since_anchor = carry
+        warm = tstate["n_anchors"] > scfg.taylor_order
+        want_spec = jnp.logical_and(warm, since_anchor < scfg.max_draft)
+
+        out_spec, err = jax.lax.cond(
+            want_spec, lambda x: spec_attempt(x, tstate, s), spec_skip, x)
+        tau = threshold_schedule(stepper.t_frac[s], scfg.tau0, scfg.beta)
+        ok_b = err <= tau
+        accept = jnp.logical_and(want_spec, jnp.all(ok_b))
+
+        def keep_spec(opers):
+            x, tstate = opers
+            return out_spec.astype(jnp.float32), tstate
+
+        def do_full(opers):
+            x, tstate = opers
+            inputs = model_inputs(cfg, x, stepper.t_model[s], cond)
+            out, extras = M.dit_forward(cfg, params, inputs,
+                                        collect_branches=True)
+            tstate = taylor.update(tstate, extras["branches"], s)
+            return out.astype(jnp.float32), tstate
+
+        out, tstate = jax.lax.cond(accept, keep_spec, do_full, (x, tstate))
+        x_next = stepper.advance(x, out, s)
+        since_anchor = jnp.where(accept, since_anchor + 1, 0)
+
+        ys = {
+            "spec_step": accept,
+            "spec_attempted": want_spec,
+            "err": err,
+            "accept_b": jnp.logical_and(want_spec, ok_b),
+        }
+        return (x_next, tstate, since_anchor), ys
+
+    init = (x, tstate, jnp.zeros((), jnp.int32))
+    (x, tstate, _), ys = jax.lax.scan(body, init, jnp.arange(S))
+    return x, ys

@@ -41,6 +41,71 @@ def test_taylor_update_kernel(shape, dtype):
 
 
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("feat,lane_axis", [
+    ((2, 2, 3, 13, 24), 2),    # serving layout (L, 2, B, T, D), odd T/D
+    ((3, 5, 7), 1),            # odd everything, interior lane axis
+    ((4, 2, 1, 33, 40), 2),    # single lane
+    ((6, 129), 0),             # lane-leading, one past the 128 tile
+])
+def test_taylor_predict_lanes_kernel(feat, lane_axis, dtype):
+    """Per-lane fused prediction vs the einsum oracle at padding-
+    exercising shapes."""
+    m1 = 4
+    B = feat[lane_axis]
+    key = jax.random.PRNGKey(sum(feat))
+    diffs = jax.random.normal(key, (m1,) + feat, jnp.float32).astype(dtype)
+    w = jax.random.normal(jax.random.fold_in(key, 1), (m1, B))
+    got = ops.taylor_predict_lanes(diffs, w, lane_axis=lane_axis)
+    want = R.taylor_predict_lanes_ref(diffs, w, lane_axis=lane_axis)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), **_tol(dtype))
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("feat,lane_axis", [
+    ((2, 2, 3, 13, 24), 2),
+    ((3, 5, 7), 1),
+    ((4, 2, 1, 33, 40), 2),
+    ((6, 129), 0),
+])
+def test_taylor_update_lanes_kernel_bitwise(feat, lane_axis, dtype):
+    """The masked one-pass refresh is BIT-IDENTICAL to the staged
+    (stack + where) oracle — refreshed lanes get the recursive chain,
+    masked-out lanes pass through untouched."""
+    m1 = 4
+    B = feat[lane_axis]
+    key = jax.random.PRNGKey(sum(feat) + 1)
+    old = jax.random.normal(key, (m1,) + feat, jnp.float32).astype(dtype)
+    feats = jax.random.normal(jax.random.fold_in(key, 1), feat,
+                              jnp.float32).astype(dtype)
+    mask = jnp.asarray([i % 2 == 0 for i in range(B)])
+    got = ops.taylor_update_lanes(old, feats, mask, lane_axis=lane_axis)
+    want = R.taylor_update_lanes_ref(old, feats, mask, lane_axis=lane_axis)
+    assert np.array_equal(np.asarray(got, np.float32),
+                          np.asarray(want, np.float32))
+    # untouched lanes really are untouched
+    keep = np.logical_not(np.asarray(mask))
+    got_m = np.moveaxis(np.asarray(got, np.float32), lane_axis + 1, 1)
+    old_m = np.moveaxis(np.asarray(old, np.float32), lane_axis + 1, 1)
+    assert np.array_equal(got_m[:, keep], old_m[:, keep])
+
+
+def test_predict_lanes_degenerate_equals_scalar_kernel():
+    """Identical weight columns make the lane kernel the scalar kernel:
+    per-element FMA order is the same, so the results are bit-equal —
+    the invariant that lets the sampler treat whole-batch anchors as the
+    lanes=B degenerate case."""
+    key = jax.random.PRNGKey(0)
+    feat = (2, 2, 3, 12, 24)
+    diffs = jax.random.normal(key, (3,) + feat, jnp.float32)
+    w = jax.random.normal(jax.random.fold_in(key, 1), (3,))
+    wl = jnp.broadcast_to(w[:, None], (3, feat[2]))
+    got = ops.taylor_predict_lanes(diffs, wl, lane_axis=2)
+    want = ops.taylor_predict(diffs, w)
+    assert np.array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
 @pytest.mark.parametrize("n", [64, 127, 1000, 4096])
 def test_verify_error_kernel(n, dtype):
     key = jax.random.PRNGKey(n)

@@ -73,6 +73,56 @@ def test_serving_engine_counts(tiny_trained_dit):
     assert 0.0 <= rep["alpha_mean"] <= 1.0
 
 
+def test_ssm_flops_pinned_against_hand_computed():
+    """Regression pin for the `2 * ns * nh // nh` precedence bug: the B/C
+    in-projection streams are per-head (2·ns·nh, matching
+    ``active_param_count``), not 2·ns."""
+    cfg = get_config("mamba2-130m")
+    tokens = 32
+    # mamba2-130m: d=768, di=2*768=1536, ns=128, nh=1536//64=24, chunk=64
+    assert (cfg.d_model, cfg.ssm_d_inner, cfg.ssm_state,
+            cfg.resolved_ssm_heads, cfg.ssm_chunk) == (768, 1536, 128, 24,
+                                                       64)
+    proj = 2.0 * 32 * 768 * (2 * 1536 + 2 * 128 * 24 + 24) \
+        + 2.0 * 32 * 1536 * 768
+    intra = 2.0 * 32 * 64 * (128 + 1536) * 2
+    states = 2.0 * 32 * 128 * 1536 * 2
+    assert CX._ssm_flops(cfg, tokens) == pytest.approx(
+        proj + intra + states, rel=1e-12)
+    # what the buggy `2 * ns * nh // nh` collapse used to produce —
+    # computed independently so reintroducing the bug fails this pin
+    buggy_proj = 2.0 * 32 * 768 * (2 * 1536 + 2 * 128 + 24) \
+        + 2.0 * 32 * 1536 * 768
+    assert CX._ssm_flops(cfg, tokens) == pytest.approx(
+        buggy_proj + intra + states
+        + 2.0 * tokens * cfg.d_model * 2 * 128 * (24 - 1), rel=1e-12)
+    assert CX._ssm_flops(cfg, tokens) > buggy_proj + intra + states
+
+
+def test_allocation_report_guards_nonfinite_results():
+    """Corrupt accounting (inf/nan flops) is excluded, counted, and never
+    poisons the bucket statistics."""
+    import math
+
+    from repro.serving import Result, allocation_report
+    good = [Result(request_id=i, sample=None, num_full=10 - i, num_spec=i,
+                   flops=1e9 * (10 - i) + 1e7 * i, wall_s=1.0)
+            for i in range(4)]
+    bad = [Result(request_id=90, sample=None, num_full=5, num_spec=5,
+                  flops=float("inf"), wall_s=1.0),
+           Result(request_id=91, sample=None, num_full=5, num_spec=5,
+                  flops=float("nan"), wall_s=1.0)]
+    rep = allocation_report(good + bad, 1e9)
+    assert rep["n_requests"] == 4
+    assert rep["n_dropped"] == 2
+    assert all(math.isfinite(v) for v in rep.values())
+    assert rep["speedup_all"] >= 1.0
+    # all-corrupt input degrades to an explicit empty-but-counted report
+    rep_bad = allocation_report(bad, 1e9)
+    assert rep_bad == {"n_requests": 0, "n_dropped": 2}
+    assert allocation_report([], 1e9) == {}
+
+
 def test_speca_config_verify_layer_wraps():
     from repro.core.speca import _verify_layer
     cfg = get_config("dit-xl2")

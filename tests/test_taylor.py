@@ -1,4 +1,5 @@
 """TaylorSeer difference-table unit tests (paper eq. 2–3)."""
+import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
@@ -82,3 +83,60 @@ def test_gap_tracking():
 def test_ab2_weights():
     w = taylor.prediction_weights(2, d=2.0, gap=1.0, n_anchors=3, mode="ab2")
     np.testing.assert_allclose(np.asarray(w), [1.0, 2.0, 1.0])
+
+
+def _lane_polys():
+    # one polynomial of degree ≤ m = 2 per lane
+    return [lambda s: 0.5 * s * s - 2.0 * s + 3.0,
+            lambda s: -1.5 * s + 7.0,
+            lambda s: 0.25 * s * s + s]
+
+
+@pytest.mark.parametrize("backend", ["kernel", "jnp"])
+def test_newton_lanes_exact_on_polynomials(backend):
+    """Per-lane ``newton`` forecasting through the lane-masked table path
+    is exact on degree-≤m trajectories even with STAGGERED anchors: each
+    lane refreshes on its own schedule (masked updates), so gaps differ
+    per lane, and the binomial weights must still hit the polynomial."""
+    polys = _lane_polys()
+    B = len(polys)
+    feat = (B, 4)                        # lane-leading layout
+    state = taylor.init_state(2, feat, jnp.float32, lanes=B)
+    anchor_steps = [{0, 2, 4}, {0, 3, 6}, {0, 2, 4}]
+    for s in range(7):
+        feats = jnp.stack([jnp.full((4,), float(p(s))) for p in polys])
+        mask = jnp.asarray([s in a for a in anchor_steps])
+        if bool(mask.any()):
+            state = taylor.update_lanes(state, feats, s, mask,
+                                        lane_axis=0, backend=backend)
+    assert [int(n) for n in state["n_anchors"]] == [3, 3, 3]
+    for target in [7, 8, 10]:
+        pred = taylor.predict_lanes(state, target, mode="newton",
+                                    lane_axis=0, backend=backend)
+        want = np.stack([np.full((4,), p(target)) for p in polys])
+        np.testing.assert_allclose(np.asarray(pred), want,
+                                   rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("mode", ["taylor", "newton"])
+def test_predict_lanes_matches_scalar_predict_per_lane(mode):
+    """A lane-table forecast equals B independent scalar-state forecasts
+    when anchor histories coincide (allclose: the kernel accumulates in
+    sequential-FMA order, the scalar path via tensordot)."""
+    B, order = 3, 2
+    feat = (B, 8)
+    lane_state = taylor.init_state(order, feat, jnp.float32, lanes=B)
+    scalar_states = [taylor.init_state(order, (8,), jnp.float32)
+                     for _ in range(B)]
+    key = jax.random.PRNGKey(0)
+    for i, s in enumerate([0, 2, 4, 6]):
+        feats = jax.random.normal(jax.random.fold_in(key, i), feat)
+        lane_state = taylor.update_lanes(lane_state, feats, s,
+                                         jnp.ones((B,), bool), lane_axis=0)
+        for b in range(B):
+            scalar_states[b] = taylor.update(scalar_states[b], feats[b], s)
+    pred = taylor.predict_lanes(lane_state, 8, mode=mode, lane_axis=0)
+    for b in range(B):
+        want = taylor.predict(scalar_states[b], 8, mode=mode)
+        np.testing.assert_allclose(np.asarray(pred[b]), np.asarray(want),
+                                   rtol=1e-5, atol=1e-6)
