@@ -7,9 +7,18 @@ easy/hard and each bucket's realised FLOPs speedup is shown. Because the
 lane scheduler reproduces the exact batch=1 accept trajectories, the two
 modes serve identical work — the requests/s delta is pure scheduling.
 
+``--devices 1,2,4`` adds one lane-scheduler row per device count D: the
+engine lane-shards over a D-device ``('data',)`` mesh (requests/s per
+device count is the CI artifact column tracking how serving capacity
+scales with the mesh). The process must see max(D) devices — on CPU set
+``XLA_FLAGS=--xla_force_host_platform_device_count=4`` first.
+
 Run (repo root must be on the path for ``benchmarks.common``):
   PYTHONPATH=src:. python benchmarks/serve_throughput.py \
       --requests 12 --lanes 4 --steps 30
+  XLA_FLAGS=--xla_force_host_platform_device_count=4 \
+  PYTHONPATH=src:. python benchmarks/serve_throughput.py \
+      --requests 8 --lanes 4 --steps 12 --devices 1,2,4
 """
 from __future__ import annotations
 
@@ -21,6 +30,7 @@ import jax.numpy as jnp
 from benchmarks.common import get_model, print_table, write_result
 from repro.configs import SpeCaConfig
 from repro.core.complexity import forward_flops
+from repro.launch.mesh import make_lane_mesh
 from repro.serving import Request, SpeCaEngine, allocation_report
 
 
@@ -47,35 +57,64 @@ def main() -> None:
     ap.add_argument("--tau0", type=float, default=0.4)
     ap.add_argument("--accept-mode", default="per_sample",
                     choices=["per_sample", "batch"])
+    ap.add_argument("--devices", default="1",
+                    help="comma list of lane-shard device counts, e.g. "
+                         "1,2,4 (needs that many visible devices)")
     args = ap.parse_args()
+    device_counts = sorted({int(d) for d in args.devices.split(",")})
 
     cfg, dcfg, params = get_model(args.model)
     import dataclasses
     dcfg = dataclasses.replace(dcfg, num_inference_steps=args.steps)
     scfg = SpeCaConfig(taylor_order=2, max_draft=8, tau0=args.tau0,
                        beta=0.9)
-    engine = SpeCaEngine(cfg, params, dcfg, scfg,
-                         accept_mode=args.accept_mode)
 
-    # warm both paths so compile time stays out of the measurement
+    def make_engine(D: int) -> SpeCaEngine:
+        return SpeCaEngine(cfg, params, dcfg, scfg,
+                           accept_mode=args.accept_mode,
+                           mesh=make_lane_mesh(D) if D > 1 else None)
+
     cond0 = {"labels": jnp.asarray([0])}
+    reqs = make_requests(cfg, args.requests)
+    engine = make_engine(1)
+    # warm both paths so compile time stays out of the measurement
     engine.warmup(cond0, lanes=1)
     engine.warmup(cond0, lanes=min(args.lanes, args.requests))
-
-    reqs = make_requests(cfg, args.requests)
     seq_results, seq_wall = bench(engine, reqs, lanes=1)
-    lane_results, lane_wall = bench(engine, reqs, lanes=args.lanes)
+
+    # one lane-scheduler run per device count (D=1: plain engine; D>1:
+    # the lane axis sharded over a D-device ('data',) mesh). The row is
+    # labeled with the EFFECTIVE lane width — a mesh engine rounds the
+    # width up to a multiple of D, so requesting --lanes 2 on D=4 serves
+    # 4 lanes; hiding that would let a pure width gain masquerade as
+    # device scaling in the per-device-count column.
+    lane_runs = []
+    for D in device_counts:
+        eng = engine if D == 1 else make_engine(D)
+        if D > 1:
+            eng.warmup(cond0, lanes=min(args.lanes, args.requests))
+        W_eff = eng.lane_width(args.lanes, len(reqs))
+        results, wall = bench(eng, reqs, lanes=args.lanes)
+        lane_runs.append((D, W_eff, results, wall))
 
     n_tok = (dcfg.latent_size // cfg.patch_size) ** 2 \
         * max(dcfg.num_frames, 1)
     fwd = forward_flops(cfg, n_tok)
+    runs = [("batch=1", 1, 1, seq_results, seq_wall)] + \
+        [(f"lanes={W_eff},D={D}", D, W_eff, results, wall)
+         for D, W_eff, results, wall in lane_runs]
     rows = []
-    for mode, results, wall in [("batch=1", seq_results, seq_wall),
-                                (f"lanes={args.lanes}", lane_results,
-                                 lane_wall)]:
+    for mode, D, W_eff, results, wall in runs:
         rep = allocation_report(results, fwd)
+        # the lane scheduler must serve identical per-request work at
+        # every width and device count (guaranteed in per_sample mode;
+        # batch mode couples lanes by design)
+        mismatches = sum(a.accepts != b.accepts
+                         for a, b in zip(seq_results, results))
         rows.append({
             "mode": mode,
+            "devices": D,
+            "lanes": W_eff,
             "requests": len(results),
             "wall_s": round(wall, 2),
             "req_per_s": round(len(results) / wall, 3),
@@ -85,20 +124,16 @@ def main() -> None:
             "speedup_easy": round(rep["speedup_easy"], 3),
             "speedup_hard": round(rep["speedup_hard"], 3),
             "speedup_all": round(rep["speedup_all"], 3),
+            "serving_speedup": round(seq_wall / wall, 3),
+            "trajectory_mismatches": mismatches,
         })
-    # the lane scheduler must serve identical per-request work
-    # (guaranteed in per_sample mode; batch mode couples lanes by design)
-    mismatches = sum(a.accepts != b.accepts
-                     for a, b in zip(seq_results, lane_results))
-    for row in rows:
-        row["serving_speedup"] = round(seq_wall / lane_wall, 3) \
-            if row is rows[1] else 1.0
-        row["trajectory_mismatches"] = mismatches if row is rows[1] else 0
 
     print_table(f"serve_throughput ({args.model}, "
                 f"accept_mode={args.accept_mode})", rows)
-    print(f"\nlane-batched serving: {rows[1]['serving_speedup']}x requests/s"
-          f" vs batch=1, {mismatches} trajectory mismatches")
+    for row in rows[1:]:
+        print(f"{row['mode']}: {row['serving_speedup']}x requests/s vs "
+              f"batch=1, {row['trajectory_mismatches']} trajectory "
+              "mismatches")
     path = write_result(f"serve_throughput_{args.model}", rows)
     print(f"wrote {path}")
 

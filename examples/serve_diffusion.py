@@ -7,21 +7,37 @@ lane keeps its own accept/reject trajectory, so the per-request statistics
 are identical to serving each request alone at batch=1 (only faster).
 
 Run:  PYTHONPATH=src python examples/serve_diffusion.py
+      PYTHONPATH=src python examples/serve_diffusion.py --lanes 8 --mesh 2
+
+``--mesh D`` lane-shards the engine over a D-device ``('data',)`` mesh —
+the difference table and every per-lane vector split over the devices, so
+one engine serves lanes×D requests concurrently. On CPU the script forces
+D host devices (the flag must land before the first jax import, which is
+why jax and repro are imported inside ``main``).
 """
+import argparse
 import dataclasses
 import time
 
-import jax
-import jax.numpy as jnp
-
-from repro.configs import (DiffusionConfig, SpeCaConfig, TrainConfig,
-                           get_config, reduced)
-from repro.core.complexity import forward_flops
-from repro.serving import Request, SpeCaEngine, allocation_report
-from repro.training.diffusion_trainer import train_diffusion
-
 
 def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--lanes", type=int, default=4)
+    ap.add_argument("--mesh", type=int, default=1)
+    args = ap.parse_args()
+    from repro.launch.mesh import force_host_device_count
+    force_host_device_count(args.mesh)   # before the first jax import
+
+    import jax.numpy as jnp
+
+    from repro.configs import (DiffusionConfig, SpeCaConfig, TrainConfig,
+                               get_config, reduced)
+    from repro.core.complexity import forward_flops
+    from repro.launch.mesh import make_lane_mesh
+    from repro.serving import Request, SpeCaEngine, allocation_report
+    from repro.training.diffusion_trainer import train_diffusion
+
     cfg = dataclasses.replace(reduced(get_config("dit-xl2")),
                               num_layers=2, d_model=128, d_ff=256,
                               num_heads=4, num_kv_heads=4, num_classes=8)
@@ -33,17 +49,19 @@ def main() -> None:
     params = out["state"]["params"]
 
     scfg = SpeCaConfig(taylor_order=2, max_draft=8, tau0=0.4, beta=0.9)
-    engine = SpeCaEngine(cfg, params, dcfg, scfg)
+    mesh = make_lane_mesh(args.mesh) if args.mesh > 1 else None
+    engine = SpeCaEngine(cfg, params, dcfg, scfg, mesh=mesh)
 
     requests = [
         Request(request_id=i,
                 cond={"labels": jnp.asarray([i % cfg.num_classes])},
                 seed=i)
-        for i in range(8)
+        for i in range(args.requests)
     ]
-    lanes = 4
+    lanes = args.lanes
     engine.warmup({"labels": jnp.asarray([0])}, lanes=lanes)
-    print(f"serving {len(requests)} requests on {lanes} lanes...")
+    where = f"{lanes} lanes" + (f" on {args.mesh} devices" if mesh else "")
+    print(f"serving {len(requests)} requests on {where}...")
     t0 = time.time()
     results = engine.serve(requests, lanes=lanes)
     wall = time.time() - t0

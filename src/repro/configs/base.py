@@ -200,6 +200,10 @@ class SpeCaConfig:
     error_metric: str = "rel_l2"   # rel_l2 | rel_l1 | rel_linf | cosine
     eps: float = 1e-8              # ε in eq. (4)
     per_sample: bool = True        # sample-adaptive allocation (§1, bullet 2)
+    table_dtype: str = ""          # difference-table dtype override
+    #                                ("" = model dtype; "bfloat16" halves
+    #                                table storage — accept-rate regression
+    #                                pinned in tests/test_taylor.py)
 
 
 @dataclasses.dataclass(frozen=True)

@@ -69,24 +69,47 @@ def num_tokens(cfg: ModelConfig, dcfg: DiffusionConfig) -> int:
     return per_frame * max(dcfg.num_frames, 1)
 
 
+def table_dtype(cfg: ModelConfig, scfg: SpeCaConfig):
+    """Difference-table dtype: ``scfg.table_dtype`` override or the model
+    dtype (bf16 tables halve storage; regression pinned in tests)."""
+    if not scfg.table_dtype:
+        return cfg.jnp_dtype
+    try:
+        return jnp.dtype(scfg.table_dtype)
+    except TypeError as e:
+        raise ValueError(
+            f"SpeCaConfig.table_dtype={scfg.table_dtype!r} is not a "
+            "dtype (use e.g. 'bfloat16' or '' for the model dtype)"
+        ) from e
+
+
 def init_lane_state(cfg: ModelConfig, dcfg: DiffusionConfig,
                     scfg: SpeCaConfig, lanes: int,
                     cond_template: Dict[str, Any], *,
                     x: Optional[jnp.ndarray] = None,
-                    active: bool = False) -> Dict[str, Any]:
+                    active: bool = False,
+                    mesh: Optional[Any] = None) -> Dict[str, Any]:
     """Fresh lane-batch state. ``cond_template`` supplies per-key shapes
     (leading axis is replaced by ``lanes``); pass ``x`` to start from a
-    concrete latent (the sampler) instead of zeros (the scheduler)."""
+    concrete latent (the sampler) instead of zeros (the scheduler).
+
+    With ``mesh`` every lane-indexed array is placed with its
+    ``NamedSharding`` from the lane-axis rules in
+    ``repro.sharding.specs`` — the difference table and all per-lane
+    vectors shard their lane axis over the mesh's ``'data'`` axis, so a
+    D-device mesh holds 1/D of the table per device. ``lanes`` must then
+    be divisible by the lane-shard count.
+    """
     W = lanes
     feat_shape = taylor.feature_shape_for(cfg.num_layers, W,
                                           num_tokens(cfg, dcfg), cfg.d_model)
-    tstate = taylor.init_state(scfg.taylor_order, feat_shape, cfg.jnp_dtype,
-                               lanes=W)
+    tstate = taylor.init_state(scfg.taylor_order, feat_shape,
+                               table_dtype(cfg, scfg), lanes=W)
     cond = {k: jnp.broadcast_to(jnp.asarray(v), (W,) + jnp.shape(v)[1:])
             for k, v in cond_template.items()}
     if x is None:
         x = jnp.zeros(latent_shape(cfg, dcfg, W), jnp.float32)
-    return {
+    state = {
         "x": x,
         "since": jnp.zeros((W,), jnp.int32),
         "step": jnp.zeros((W,), jnp.int32),
@@ -94,6 +117,14 @@ def init_lane_state(cfg: ModelConfig, dcfg: DiffusionConfig,
         "cond": cond,
         **tstate,
     }
+    if mesh is not None:
+        from repro.sharding import specs as SH
+        if W % SH.lane_shard_count(mesh) != 0:
+            raise ValueError(
+                f"lanes={W} not divisible by the mesh lane-shard count "
+                f"{SH.lane_shard_count(mesh)}")
+        state = jax.device_put(state, SH.lane_state_shardings(mesh, state))
+    return state
 
 
 def build_lane_step(cfg: ModelConfig, params: Dict[str, Any],
@@ -101,13 +132,26 @@ def build_lane_step(cfg: ModelConfig, params: Dict[str, Any],
                     lanes: int, draft_mode: str = "taylor",
                     accept_mode: str = "per_sample",
                     verify_backend: str = "jnp",
-                    use_flash: bool = False
+                    use_flash: bool = False,
+                    mesh: Optional[Any] = None
                     ) -> Callable[[Dict[str, Any]],
                                   Tuple[Dict[str, Any], Dict[str, Any]]]:
     """Build the traced lane step: ``state -> (state, flags)``.
 
     Not jitted here — the sampler scans it inside one XLA program, the
     engine jits it per lane width.
+
+    ``mesh`` shards the lane axis over the mesh's ``'data'`` axis: the
+    backbone, threshold schedule and lane selects partition natively
+    under GSPMD (per-lane math is lane-independent), while the Pallas
+    table/verify kernels — opaque custom calls the partitioner would
+    otherwise gather — are routed through their ``shard_map`` wrappers so
+    each shard runs the existing lane-masked kernel on its local lane
+    block (those kernels are bit-identical per shard). Accept/reject
+    sequences and all counters are exactly those of the unsharded step;
+    latents agree to f32 reduction-order tolerance — XLA CPU picks gemm
+    micro-kernels by the local batch shape, the same ulp-level boundary
+    as the PR-2 kernel/tensordot note (tests/test_serving_sharded.py).
     """
     if accept_mode not in ACCEPT_MODES:
         raise ValueError(f"unknown accept_mode {accept_mode!r}")
@@ -127,6 +171,11 @@ def build_lane_step(cfg: ModelConfig, params: Dict[str, Any],
         tau = jnp.broadcast_to(jnp.asarray(tau, jnp.float32), (W,))
         if verify_backend == "fused":
             from repro.kernels import ops
+            if mesh is not None:
+                return ops.verify_accept_sharded(pred_vl.reshape(W, -1),
+                                                 real_vl.reshape(W, -1),
+                                                 tau, mesh=mesh,
+                                                 eps=scfg.eps)
             return ops.verify_accept(pred_vl.reshape(W, -1),
                                      real_vl.reshape(W, -1), tau,
                                      eps=scfg.eps)
@@ -149,7 +198,8 @@ def build_lane_step(cfg: ModelConfig, params: Dict[str, Any],
                                  scfg.beta)                       # [W]
 
         def attempt(x):
-            preds = taylor.predict_lanes(tstate, s_eff, mode=draft_mode)
+            preds = taylor.predict_lanes(tstate, s_eff, mode=draft_mode,
+                                         mesh=mesh)
             inputs = model_inputs(cfg, x, t_model, cond)
             out, extras = M.dit_forward(cfg, params, inputs,
                                         branch_preds=preds,
@@ -185,7 +235,8 @@ def build_lane_step(cfg: ModelConfig, params: Dict[str, Any],
                                         collect_branches=True,
                                         use_flash=use_flash)
             tstate = taylor.update_lanes(tstate, extras["branches"],
-                                         s_eff, active & ~accept)
+                                         s_eff, active & ~accept,
+                                         mesh=mesh)
             return out.astype(jnp.float32), tstate
 
         def keep(opers):

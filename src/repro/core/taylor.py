@@ -93,7 +93,8 @@ def update(state: Dict[str, Any], feats: jnp.ndarray, step) -> Dict[str, Any]:
 
 def update_lanes(state: Dict[str, Any], feats: jnp.ndarray, step, mask,
                  *, lane_axis: int = 2,
-                 backend: Optional[str] = None) -> Dict[str, Any]:
+                 backend: Optional[str] = None,
+                 mesh: Optional[Any] = None) -> Dict[str, Any]:
     """Masked per-lane anchor refresh (the batched-serving path).
 
     ``mask`` [B] selects the lanes whose draft was rejected: their table
@@ -104,14 +105,21 @@ def update_lanes(state: Dict[str, Any], feats: jnp.ndarray, step, mask,
 
     The table refresh runs through the one-pass masked Pallas kernel by
     default; ``backend="jnp"`` selects the staged (stack + where) oracle,
-    which is bit-identical.
+    which is bit-identical. With ``mesh`` the kernel is routed through
+    ``shard_map`` on the lane-sharded table (the jnp oracle partitions
+    natively and ignores ``mesh``).
     """
     old = state["diffs"]
     mask = jnp.asarray(mask, bool)
     if _table_backend(backend) == "kernel":
         from repro.kernels import ops
-        diffs = ops.taylor_update_lanes(old, feats, mask,
-                                        lane_axis=lane_axis)
+        if mesh is not None:
+            diffs = ops.taylor_update_lanes_sharded(old, feats, mask,
+                                                    mesh=mesh,
+                                                    lane_axis=lane_axis)
+        else:
+            diffs = ops.taylor_update_lanes(old, feats, mask,
+                                            lane_axis=lane_axis)
     else:
         m1 = old.shape[0]
         rows = [feats.astype(old.dtype)]
@@ -190,7 +198,8 @@ def predict(state: Dict[str, Any], step, mode: str = "taylor"
 
 def predict_lanes(state: Dict[str, Any], step, mode: str = "taylor",
                   *, lane_axis: int = 2,
-                  backend: Optional[str] = None) -> jnp.ndarray:
+                  backend: Optional[str] = None,
+                  mesh: Optional[Any] = None) -> jnp.ndarray:
     """Per-lane forecast: each lane extrapolates from its own anchor.
 
     ``step`` may be a scalar or per-lane [B]; the state must hold per-lane
@@ -199,7 +208,9 @@ def predict_lanes(state: Dict[str, Any], step, mode: str = "taylor",
 
     The table evaluation runs through the fused per-lane Pallas kernel by
     default (one table read, no f32 table copy); ``backend="jnp"`` selects
-    the staged einsum oracle.
+    the staged einsum oracle. With ``mesh`` the kernel is routed through
+    ``shard_map`` over the lane-sharded table (the einsum oracle
+    partitions natively and ignores ``mesh``).
     """
     d = (jnp.asarray(step, jnp.int32) - state["anchor_step"]
          ).astype(jnp.float32)
@@ -207,6 +218,11 @@ def predict_lanes(state: Dict[str, Any], step, mode: str = "taylor",
     w = prediction_weights(order, d, state["gap"], state["n_anchors"], mode)
     if _table_backend(backend) == "kernel":
         from repro.kernels import ops
+        if mesh is not None:
+            return ops.taylor_predict_lanes_sharded(state["diffs"],
+                                                    w.astype(jnp.float32),
+                                                    mesh=mesh,
+                                                    lane_axis=lane_axis)
         return ops.taylor_predict_lanes(state["diffs"],
                                         w.astype(jnp.float32),
                                         lane_axis=lane_axis)

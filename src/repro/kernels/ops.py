@@ -172,6 +172,80 @@ def verify_accept(pred: jnp.ndarray, ref_: jnp.ndarray, tau: jnp.ndarray, *,
     return out[:, 2], out[:, 3] > 0.0
 
 
+# ---------------------------------------------------------------------------
+# Mesh-sharded lane wrappers
+# ---------------------------------------------------------------------------
+# ``pallas_call`` is an opaque custom call to the SPMD partitioner, so a
+# lane-sharded operand would be gathered onto one device before the kernel
+# ran. These wrappers route the per-lane kernels through ``shard_map``
+# instead: each shard runs the EXISTING lane-masked kernel on its local
+# lane block (the kernels are per-lane-independent, so local == global per
+# lane, bit-for-bit), and the lane axis never leaves its device. The jnp
+# table path needs no wrapper — einsum/where partition natively and serve
+# as the sharded oracle. ``check_rep=False`` because the custom call
+# defeats shard_map's replication checker.
+
+def _shard_map(fn, mesh, in_specs, out_specs):
+    from jax.experimental.shard_map import shard_map
+    return shard_map(fn, mesh=mesh, in_specs=in_specs,
+                     out_specs=out_specs, check_rep=False)
+
+
+def _lane_p(ndim: int, lane_dim: int, axis: str):
+    from repro.sharding.specs import lane_spec
+    return lane_spec(ndim, lane_dim, axis)
+
+
+def taylor_predict_lanes_sharded(diffs: jnp.ndarray, weights: jnp.ndarray,
+                                 *, mesh, lane_axis: int = 2,
+                                 axis_name: str = "data",
+                                 block_c: int = 8192) -> jnp.ndarray:
+    """``taylor_predict_lanes`` with the lane axis sharded over ``mesh``.
+
+    diffs [m+1, ...feat] (lane axis of the feature part over
+    ``axis_name``), weights [m+1, B] (lanes over ``axis_name``) ->
+    prediction [...feat], lane-sharded like the input.
+    """
+    fspec = _lane_p(diffs.ndim - 1, lane_axis, axis_name)
+    dspec = _lane_p(diffs.ndim, lane_axis + 1, axis_name)
+    wspec = _lane_p(2, 1, axis_name)
+    fn = functools.partial(taylor_predict_lanes, lane_axis=lane_axis,
+                           block_c=block_c)
+    return _shard_map(fn, mesh, (dspec, wspec), fspec)(diffs, weights)
+
+
+def taylor_update_lanes_sharded(old_diffs: jnp.ndarray, feats: jnp.ndarray,
+                                mask: jnp.ndarray, *, mesh,
+                                lane_axis: int = 2,
+                                axis_name: str = "data",
+                                block_c: int = 8192) -> jnp.ndarray:
+    """Masked per-lane table refresh with the lane axis sharded: each
+    shard refreshes its own lanes' slices in place — the difference table
+    is never gathered."""
+    fspec = _lane_p(feats.ndim, lane_axis, axis_name)
+    dspec = _lane_p(old_diffs.ndim, lane_axis + 1, axis_name)
+    mspec = _lane_p(1, 0, axis_name)
+    fn = functools.partial(taylor_update_lanes, lane_axis=lane_axis,
+                           block_c=block_c)
+    return _shard_map(fn, mesh, (dspec, fspec, mspec),
+                      dspec)(old_diffs, feats, mask)
+
+
+def verify_accept_sharded(pred: jnp.ndarray, ref_: jnp.ndarray,
+                          tau: jnp.ndarray, *, mesh,
+                          axis_name: str = "data", eps: float = 1e-8,
+                          block_c: int = 1024):
+    """Fused per-lane verification over a lane-sharded feature plane:
+    pred/ref [B, ...] (B over ``axis_name``), tau [B] -> (err [B],
+    accept [B]), both lane-sharded. Each lane's Σ(p−r)²/Σr² reduction is
+    shard-local — no cross-device traffic."""
+    lspec = _lane_p(1, 0, axis_name)
+    pspec = _lane_p(pred.ndim, 0, axis_name)
+    fn = functools.partial(verify_accept, eps=eps, block_c=block_c)
+    return _shard_map(fn, mesh, (pspec, pspec, lspec),
+                      (lspec, lspec))(pred, ref_, tau)
+
+
 @functools.partial(jax.jit,
                    static_argnames=("causal", "window", "block_q", "block_k"))
 def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,

@@ -41,3 +41,48 @@ def make_local_mesh(shape: Tuple[int, ...] = (1, 1),
     need = int(np.prod(shape))
     devices = jax.devices()[:need]
     return Mesh(np.asarray(devices).reshape(shape), axes)
+
+
+def force_host_device_count(n: int) -> None:
+    """Ensure ``XLA_FLAGS`` requests ≥ ``n`` forced host devices — must
+    run BEFORE the first jax import (jax-free on purpose). No-op when the
+    flag already asks for enough devices; raises immediately when it asks
+    for fewer, instead of letting ``make_lane_mesh`` fail later with
+    advice to set a flag the user believes is already set. On a real
+    TPU/GPU backend the flag is ignored and the visible devices are used.
+    """
+    import os
+    import re
+
+    if n <= 1:
+        return
+    flags = os.environ.get("XLA_FLAGS", "")
+    m = re.search(r"xla_force_host_platform_device_count=(\d+)", flags)
+    if m is not None:
+        if int(m.group(1)) < n:
+            raise RuntimeError(
+                f"XLA_FLAGS already forces {m.group(1)} host devices but "
+                f"{n} are needed; raise the existing "
+                f"--xla_force_host_platform_device_count to {n}")
+        return
+    os.environ["XLA_FLAGS"] = \
+        (flags + f" --xla_force_host_platform_device_count={n}").strip()
+
+
+def make_lane_mesh(num_devices: Optional[int] = None):
+    """1-D ``('data',)`` serving mesh: the lane axis of the engine shards
+    over it (see ``repro.sharding.specs`` lane rules). ``num_devices=None``
+    takes every visible device; on CPU containers set
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=D`` *before* any
+    jax import to get D host devices."""
+    import jax
+    from jax.sharding import Mesh
+
+    devices = jax.devices()
+    n = len(devices) if num_devices is None else int(num_devices)
+    if n > len(devices):
+        raise RuntimeError(
+            f"lane mesh over {n} devices but only {len(devices)} visible; "
+            "set XLA_FLAGS=--xla_force_host_platform_device_count="
+            f"{n} before the first jax import (or lower --mesh)")
+    return Mesh(np.asarray(devices[:n]), ("data",))

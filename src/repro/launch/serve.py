@@ -2,10 +2,14 @@
 
 Usage:
   python -m repro.launch.serve --mode diffusion --requests 6 --lanes 4
-  python -m repro.launch.serve --mode lm --arch mamba2-130m --gen 32
+  python -m repro.launch.serve --mode diffusion --requests 8 --lanes 8 \
+      --mesh 2
 
 ``--lanes N`` (N>1) serves through the per-lane adaptive batched scheduler
 (docs/serving.md); ``--lanes 1`` keeps the sequential batch=1 loop.
+``--mesh D`` shards the lane axis over a D-device ``('data',)`` mesh (one
+engine, W×D lanes); on a CPU host with fewer than D devices the launcher
+forces D host devices via XLA_FLAGS before the first jax import.
 """
 from __future__ import annotations
 
@@ -14,14 +18,14 @@ import dataclasses
 import time
 from functools import partial
 
-import jax
-import jax.numpy as jnp
-
 
 def serve_diffusion(args) -> None:
+    import jax
+    import jax.numpy as jnp
     from repro.configs import (DiffusionConfig, SpeCaConfig, TrainConfig,
                                get_config, reduced)
     from repro.core.complexity import forward_flops
+    from repro.launch.mesh import make_lane_mesh
     from repro.serving import Request, SpeCaEngine, allocation_report
     from repro.training.diffusion_trainer import train_diffusion
 
@@ -34,8 +38,9 @@ def serve_diffusion(args) -> None:
                           TrainConfig(global_batch=16, steps=120, lr=2e-3),
                           verbose=False)
     scfg = SpeCaConfig(taylor_order=2, max_draft=8, tau0=args.tau0, beta=0.9)
+    mesh = make_lane_mesh(args.mesh) if args.mesh > 1 else None
     engine = SpeCaEngine(cfg, out["state"]["params"], dcfg, scfg,
-                         accept_mode=args.accept_mode)
+                         accept_mode=args.accept_mode, mesh=mesh)
     reqs = [Request(request_id=i,
                     cond={"labels": jnp.asarray([i % cfg.num_classes])},
                     seed=i)
@@ -50,6 +55,8 @@ def serve_diffusion(args) -> None:
         print(f"req {r.request_id}: full={r.num_full} spec={r.num_spec} "
               f"alpha={r.alpha:.2f}")
     mode = f"{args.lanes} lanes" if args.lanes > 1 else "batch=1"
+    if mesh is not None:
+        mode += f" x {args.mesh} devices"
     print(f"served {len(reqs)} requests in {wall:.1f}s "
           f"({len(reqs)/wall:.2f} req/s, {mode})")
     n_tok = (dcfg.latent_size // cfg.patch_size) ** 2
@@ -57,6 +64,9 @@ def serve_diffusion(args) -> None:
 
 
 def serve_lm(args) -> None:
+    import jax
+    import jax.numpy as jnp
+
     from repro.configs import get_config, reduced
     from repro.layers import model as M
     from repro.optim.adamw import AdamWConfig
@@ -105,6 +115,10 @@ def main() -> None:
     ap.add_argument("--requests", type=int, default=4)
     ap.add_argument("--lanes", type=int, default=4,
                     help="serving lane width; 1 = sequential batch=1 loop")
+    ap.add_argument("--mesh", type=int, default=1,
+                    help="lane-shard the engine over this many devices "
+                         "(('data',) mesh); on CPU the launcher forces "
+                         "that many host devices via XLA_FLAGS")
     ap.add_argument("--accept-mode", default="per_sample",
                     choices=["per_sample", "batch"])
     ap.add_argument("--steps", type=int, default=30)
@@ -112,6 +126,10 @@ def main() -> None:
     ap.add_argument("--batch", type=int, default=2)
     ap.add_argument("--gen", type=int, default=16)
     args = ap.parse_args()
+    # must land before the first jax import (jax is imported inside the
+    # serve functions for exactly this reason)
+    from repro.launch.mesh import force_host_device_count
+    force_host_device_count(args.mesh)
     if args.mode == "diffusion":
         serve_diffusion(args)
     else:

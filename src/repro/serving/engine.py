@@ -68,6 +68,10 @@ class Result:
     flops: float
     wall_s: float
     accepts: Optional[List[bool]] = None   # per-step accept trajectory
+    # False when the engine drained the lane before the request reached
+    # its final denoising step (tick-budget shutdown) or never started it;
+    # such requests are excluded from allocation_report (``n_dropped``)
+    completed: bool = True
 
     @property
     def alpha(self) -> float:
@@ -87,16 +91,31 @@ class SpeCaEngine:
       * ``"fused"`` (default) — the Pallas one-pass sums+threshold kernel.
       * ``"jnp"`` — unfused ``relative_error``; forced automatically for
         non-rel-L2 error metrics (the kernel implements eq. 4 only).
+    mesh:
+      * a 1-D ``('data',)`` mesh (``repro.launch.mesh.make_lane_mesh``)
+        shards the lane axis of every per-lane array — latents, the
+        (m+1, L, 2, W, T, D) difference table, since/active/step/σ/τ
+        vectors — over its D devices, so one engine serves W×D lanes.
+        Params replicate; the Pallas kernels run per-shard through their
+        ``shard_map`` wrappers. Accept/reject sequences, counters and
+        FLOPs accounting are bit-identical to the unsharded engine;
+        samples agree to f32 reduction-order tolerance
+        (tests/test_serving_sharded.py).
     """
 
     def __init__(self, cfg: ModelConfig, params, dcfg: DiffusionConfig,
                  scfg: SpeCaConfig, *, draft_mode: str = "taylor",
                  accept_mode: str = "per_sample",
-                 verify_backend: str = "fused"):
+                 verify_backend: str = "fused",
+                 mesh: Optional[Any] = None):
         if accept_mode not in LS.ACCEPT_MODES:
             raise ValueError(f"unknown accept_mode {accept_mode!r}")
         if verify_backend not in LS.VERIFY_BACKENDS:
             raise ValueError(f"unknown verify_backend {verify_backend!r}")
+        if mesh is not None and "data" not in mesh.axis_names:
+            raise ValueError("serving mesh needs a 'data' axis "
+                             f"(got {mesh.axis_names})")
+        LS.table_dtype(cfg, scfg)      # fail fast on a bad dtype string
         self.cfg, self.params = cfg, params
         self.dcfg, self.scfg = dcfg, scfg
         self.stepper = make_stepper(dcfg)
@@ -107,6 +126,9 @@ class SpeCaEngine:
         if scfg.error_metric != "rel_l2":
             verify_backend = "jnp"
         self.verify_backend = verify_backend
+        self.mesh = mesh
+        from repro.sharding.specs import lane_shard_count
+        self._lane_shards = lane_shard_count(mesh)
         self._full_flops = forward_flops(cfg, self.n_tok)
         self._verify_flops = verify_flops(cfg, self.n_tok)
         self._lane_fns: Dict[int, Any] = {}
@@ -116,8 +138,18 @@ class SpeCaEngine:
             self._lane_fns[W] = jax.jit(LS.build_lane_step(
                 self.cfg, self.params, self.dcfg, self.scfg, lanes=W,
                 draft_mode=self.draft_mode, accept_mode=self.accept_mode,
-                verify_backend=self.verify_backend))
+                verify_backend=self.verify_backend, mesh=self.mesh))
         return self._lane_fns[W]
+
+    def lane_width(self, lanes: int, n_requests: int) -> int:
+        """Effective lane width the scheduler will actually serve at:
+        clamp to the request count, then round UP to a multiple of the
+        mesh's lane-shard count so every shard owns an equal lane block
+        (surplus lanes just stay inactive). Public — benchmarks label
+        their per-device-count rows with this."""
+        W = max(min(lanes, n_requests), 1)
+        D = self._lane_shards
+        return -(-W // D) * D
 
     # --- batch=1 serving: the lanes=1 case of the scheduler --------------
     def run_request(self, req: Request) -> Result:
@@ -142,30 +174,40 @@ class SpeCaEngine:
                          for k, v in state["cond"].items()}
         return state
 
-    def serve_batched(self, requests: List[Request], *, lanes: int = 4
-                      ) -> List[Result]:
+    def serve_batched(self, requests: List[Request], *, lanes: int = 4,
+                      max_ticks: Optional[int] = None) -> List[Result]:
         """Serve a request list through the lane scheduler.
 
         Packs up to ``lanes`` concurrent requests per jitted step;
         finished lanes are refilled from the queue immediately
         (continuous batching). Per-request accept trajectories are
-        identical at every lane width — only the packing differs.
+        identical at every lane width — only the packing differs. On a
+        mesh the width rounds up to a multiple of the lane-shard count
+        and each shard refills its own lane block in the same
+        deterministic queue order.
 
         The dispatch loop never blocks on the device: an active lane
         finishes after exactly ``num_inference_steps`` ticks (tracked
         host-side), so per-tick flags are only materialised when one of
         the ticks' requests completes.
+
+        ``max_ticks`` bounds the number of scheduler ticks (engine
+        shutdown / drain): requests still in flight when the budget runs
+        out come back with ``completed=False`` and their partial
+        counters; queued requests that never started come back
+        ``completed=False`` with ``sample=None``. ``allocation_report``
+        counts both as ``n_dropped``.
         """
         if not requests:
             return []
-        W = max(min(lanes, len(requests)), 1)
+        W = self.lane_width(lanes, len(requests))
         step_fn = self._lane_step(W)
         S = self.stepper.num_steps
         # queue/results key on queue position, not request_id, so
         # duplicate ids still get their own Result (matching lanes=1)
         queue = list(enumerate(requests))
         state = LS.init_lane_state(self.cfg, self.dcfg, self.scfg, W,
-                                   requests[0].cond)
+                                   requests[0].cond, mesh=self.mesh)
         lane_req: List[Optional[Request]] = [None] * W
         lane_idx = [-1] * W
         lane_done = [0] * W          # host-tracked denoising step counter
@@ -183,7 +225,30 @@ class SpeCaEngine:
                               if k in ("attempted", "accepted", "full")}
             return flag_np[t]
 
+        def harvest(lane: int, end_tick: int, completed: bool) -> Result:
+            """Materialise one lane's Result from its accumulated flags
+            (sample readback + flag fetch are the only device touches) —
+            shared by the completion and the tick-budget drain paths so
+            partial and full accounting can never diverge."""
+            req = lane_req[lane]
+            accepts, n_att, n_full = [], 0, 0
+            for t in range(lane_start[lane], end_tick):
+                f = fetch(t)
+                accepts.append(bool(f["accepted"][lane]))
+                n_att += int(f["attempted"][lane])
+                n_full += int(f["full"][lane])
+            return Result(
+                request_id=req.request_id,
+                sample=jax.device_get(state["x"][lane:lane + 1]),
+                num_full=n_full, num_spec=lane_done[lane] - n_full,
+                flops=n_full * self._full_flops
+                + n_att * self._verify_flops,
+                wall_s=time.time() - lane_t0[lane],
+                accepts=accepts, completed=completed)
+
         while queue or any(r is not None for r in lane_req):
+            if max_ticks is not None and tick >= max_ticks:
+                break
             for lane in range(W):
                 if lane_req[lane] is None and queue:
                     idx, req = queue.pop(0)
@@ -207,22 +272,8 @@ class SpeCaEngine:
                     continue
                 # request complete: NOW touch the device (sample readback
                 # + this lane's accumulated flags)
-                req = lane_req[lane]
-                accepts, n_att, n_full = [], 0, 0
-                for t in range(lane_start[lane], tick):
-                    f = fetch(t)
-                    accepts.append(bool(f["accepted"][lane]))
-                    n_att += int(f["attempted"][lane])
-                    n_full += int(f["full"][lane])
-                num_spec = S - n_full
-                results[lane_idx[lane]] = Result(
-                    request_id=req.request_id,
-                    sample=jax.device_get(state["x"][lane:lane + 1]),
-                    num_full=n_full, num_spec=num_spec,
-                    flops=n_full * self._full_flops
-                    + n_att * self._verify_flops,
-                    wall_s=time.time() - lane_t0[lane],
-                    accepts=accepts)
+                results[lane_idx[lane]] = harvest(lane, tick,
+                                                  completed=True)
                 lane_req[lane] = None
                 state["active"] = state["active"].at[lane].set(False)
             # bound the flag log: ticks older than every active lane's
@@ -233,16 +284,32 @@ class SpeCaEngine:
             for t in [t for t in flag_np if t < horizon]:
                 flag_np.pop(t)
                 flag_log[t] = None            # keep indices stable
+        # tick-budget shutdown: drain in-flight lanes as UNFINISHED —
+        # partial counters, completed=False — and mark never-started
+        # queue entries the same way, so allocation_report reports them
+        # in n_dropped instead of counting them as served
+        for lane in range(W):
+            if lane_req[lane] is None:
+                continue
+            results[lane_idx[lane]] = harvest(lane, tick, completed=False)
+            lane_req[lane] = None
+        for idx, req in queue:
+            results[idx] = Result(request_id=req.request_id, sample=None,
+                                  num_full=0, num_spec=0, flops=0.0,
+                                  wall_s=0.0, accepts=[], completed=False)
         return [results[i] for i in range(len(requests))]
 
-    def serve(self, requests: List[Request], *, lanes: int = 1
-              ) -> List[Result]:
+    def serve(self, requests: List[Request], *, lanes: int = 1,
+              max_ticks: Optional[int] = None) -> List[Result]:
         """Effective width <= 1: sequential batch=1 loop; else the lane
         scheduler (width is clamped to the request count, so a single
-        request always takes the reference path)."""
-        if min(lanes, len(requests)) <= 1:
+        request always takes the reference path). A tick budget
+        (``max_ticks``) always routes through the scheduler — the
+        sequential loop has no drain semantics."""
+        if max_ticks is None and min(lanes, len(requests)) <= 1:
             return [self.run_request(r) for r in requests]
-        return self.serve_batched(requests, lanes=lanes)
+        return self.serve_batched(requests, lanes=max(lanes, 1),
+                                  max_ticks=max_ticks)
 
     def warmup(self, cond: Dict[str, Any], *, lanes: int = 1) -> None:
         """Compile the serving step for ``lanes`` outside any timed window
@@ -262,11 +329,15 @@ def allocation_report(results: List[Result],
 
     Splits requests at the median acceptance rate into easy/hard buckets
     and reports the realised FLOPs speedup of each bucket vs always-full.
-    Requests with non-finite accounting (corrupt ``flops``/``alpha`` —
-    e.g. an aborted run) are excluded and counted in ``n_dropped``.
+    Requests the engine did not finish — lanes drained mid-flight at a
+    tick-budget shutdown, or queue entries that never started
+    (``completed=False``) — and requests with non-finite accounting
+    (corrupt ``flops``/``alpha``) are excluded and counted in
+    ``n_dropped``: a partial schedule would skew every bucket statistic.
     """
     finite = [r for r in results
-              if math.isfinite(r.flops) and math.isfinite(r.alpha)]
+              if r.completed and math.isfinite(r.flops)
+              and math.isfinite(r.alpha)]
     dropped = len(results) - len(finite)
     if not finite:
         return {"n_requests": 0, "n_dropped": dropped} if dropped else {}

@@ -194,3 +194,76 @@ def cache_shardings(cfg: ModelConfig, mesh: Mesh, batch: int,
 
 def replicated(mesh: Mesh) -> NamedSharding:
     return NamedSharding(mesh, P())
+
+
+# ---------------------------------------------------------------------------
+# Lane-axis rules (sharded serving)
+# ---------------------------------------------------------------------------
+# The serving engine packs W concurrent requests into a lane batch; every
+# per-lane computation (draft, verify, refresh, advance) is lane-
+# independent, so the lane axis shards over the data axes of the mesh and
+# one engine serves W×D lanes across D devices. What shards vs replicates:
+#
+#   array                  | layout              | spec
+#   -----------------------|---------------------|---------------------------
+#   latents ``x``          | [W, C, H, Wd]       | P(data, None, ...)
+#   difference table       | [m+1, L, 2, W, T, D]| P(None, None, None, data,
+#                          |                     |   None, None)
+#   ``since``/``step``/    | [W]                 | P(data)
+#   ``active``/``n_anchors``/``anchor_step``/``gap``
+#   conditioning values    | [W, ...]            | P(data, None, ...)
+#   model params           | (tree)              | P() — replicated
+#
+# The table is the big operand: lane-sharding it means a D-device engine
+# holds 1/D of the table per device and the refill path (host-side
+# ``.at[lane].set``) is a lane-local dynamic-update-slice that the SPMD
+# partitioner serves from the owning shard — the table is never gathered.
+
+LANE_AXIS = "data"
+
+# lane-state key -> lane-axis position (post-leading-dim for ``diffs``,
+# where axis 0 is the m+1 difference-order axis and the lane lives at
+# position 3 of the (L, 2, W, T, D) feature layout).
+LANE_STATE_AXES = {
+    "x": 0, "since": 0, "step": 0, "active": 0,
+    "diffs": 3, "n_anchors": 0, "anchor_step": 0, "gap": 0,
+}
+
+
+def lane_spec(ndim: int, lane_dim: int, axis=LANE_AXIS) -> P:
+    """PartitionSpec placing ``axis`` at ``lane_dim`` of an ndim array."""
+    return P(*(axis if i == lane_dim else None for i in range(ndim)))
+
+
+def lane_state_shardings(mesh: Mesh, state: Dict[str, Any],
+                         axis=LANE_AXIS) -> Dict[str, Any]:
+    """NamedSharding tree for a lane-state dict (``init_lane_state``).
+
+    ``cond`` values shard their leading (lane) axis; ``diffs`` shards lane
+    position 3 (the W of (m+1, L, 2, W, T, D)); every [W] metadata vector
+    shards axis 0. Unknown keys replicate.
+    """
+    out: Dict[str, Any] = {}
+    for key, leaf in state.items():
+        if key == "cond":
+            out[key] = {k: NamedSharding(mesh, lane_spec(jnp_ndim(v), 0,
+                                                         axis))
+                        for k, v in leaf.items()}
+        elif key in LANE_STATE_AXES:
+            out[key] = NamedSharding(
+                mesh, lane_spec(jnp_ndim(leaf), LANE_STATE_AXES[key],
+                                axis))
+        else:
+            out[key] = NamedSharding(mesh, P())
+    return out
+
+
+def jnp_ndim(x: Any) -> int:
+    return len(getattr(x, "shape", np.shape(x)))
+
+
+def lane_shard_count(mesh: Optional[Mesh], axis=LANE_AXIS) -> int:
+    """How many ways the lane axis splits on ``mesh`` (1 for no mesh)."""
+    if mesh is None:
+        return 1
+    return _axis_size(mesh, axis)

@@ -1,14 +1,21 @@
 import dataclasses
 import os
+import re
 
 import jax
 import pytest
 
-# Tests must see exactly ONE device (the dry-run sets 512 in its own
-# process); fail fast if someone leaks XLA_FLAGS into the test env.
-assert "xla_force_host_platform_device_count" not in \
-    os.environ.get("XLA_FLAGS", ""), \
-    "tests must not run with forced device counts"
+# The suite runs under a CI device matrix: 1 host device (default) and a
+# small forced count (--xla_force_host_platform_device_count=4) so the
+# lane-sharded serving paths are exercised on every PR. Guard against the
+# 512-device dry-run flag leaking in (those runs belong in their own
+# subprocess — see test_sharding.py / test_serving_sharded.py): a huge
+# forced count makes every jitted test pathologically slow.
+_m = re.search(r"xla_force_host_platform_device_count=(\d+)",
+               os.environ.get("XLA_FLAGS", ""))
+assert _m is None or int(_m.group(1)) <= 8, \
+    "tests must not run with large forced device counts " \
+    f"(got {_m.group(0) if _m else ''!r}); dry-runs fork their own process"
 
 
 @pytest.fixture(scope="session")

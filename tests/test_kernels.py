@@ -90,6 +90,38 @@ def test_taylor_update_lanes_kernel_bitwise(feat, lane_axis, dtype):
     assert np.array_equal(got_m[:, keep], old_m[:, keep])
 
 
+def test_taylor_lanes_bf16_table_quantisation_bounded():
+    """bf16 DIFFERENCE TABLES (half the storage of the serving engine's
+    largest array): the fused lane kernels accumulate in f32, so a bf16
+    table's prediction must sit within bf16 rounding of the f32-table
+    prediction — the kernel adds no error beyond the storage format."""
+    m1, feat, lane_axis = 4, (2, 2, 3, 13, 24), 2
+    B = feat[lane_axis]
+    key = jax.random.PRNGKey(0)
+    diffs = jax.random.normal(key, (m1,) + feat, jnp.float32)
+    w = jax.random.normal(jax.random.fold_in(key, 1), (m1, B))
+    got = ops.taylor_predict_lanes(diffs.astype(jnp.bfloat16), w,
+                                   lane_axis=lane_axis)
+    want = ops.taylor_predict_lanes(diffs, w, lane_axis=lane_axis)
+    assert got.dtype == jnp.bfloat16
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=3e-2, atol=3e-2)
+    # masked refresh keeps the bf16 chain bit-identical to quantising
+    # the staged oracle's bf16 chain (same dtype arithmetic)
+    feats = jax.random.normal(jax.random.fold_in(key, 2), feat)
+    mask = jnp.asarray([True, False, True])
+    got = ops.taylor_update_lanes(diffs.astype(jnp.bfloat16),
+                                  feats.astype(jnp.bfloat16), mask,
+                                  lane_axis=lane_axis)
+    want = R.taylor_update_lanes_ref(diffs.astype(jnp.bfloat16),
+                                     feats.astype(jnp.bfloat16), mask,
+                                     lane_axis=lane_axis)
+    assert got.dtype == jnp.bfloat16
+    assert np.array_equal(np.asarray(got, np.float32),
+                          np.asarray(want, np.float32))
+
+
 def test_predict_lanes_degenerate_equals_scalar_kernel():
     """Identical weight columns make the lane kernel the scalar kernel:
     per-element FMA order is the same, so the results are bit-equal —

@@ -1,0 +1,273 @@
+"""Randomized invariant tests for the unified lane step and the masked
+table refresh — lanes, orders, warmth, activity and accept patterns are
+drawn at random and structural invariants asserted:
+
+  * a rejected lane's refreshed table slice IS a fresh anchor: the
+    recursive chain Δⁱ_new = Δⁱ⁻¹_new − Δⁱ⁻¹_old holds row by row, and
+    its metadata (n_anchors, anchor_step) advances; an accepted or
+    inactive lane's slice is untouched;
+  * ``since`` monotonicity: accepted lanes +1, rejected active lanes
+    reset to 0, finished (inactive) lanes frozen;
+  * finished lanes never change latents (the scheduler's drain
+    invariant);
+  * flag algebra: ``accepted = attempted ∧ ok`` (per-sample mode),
+    ``full = active ∧ ¬accepted``, ``err`` is NaN exactly where the lane
+    did not draft.
+
+Every invariant is checked by ``_check_step_invariants``; the seeded
+parametrized tests below always run, and the Hypothesis versions (when
+``hypothesis`` is installed — the CI image has it) explore the same space
+adaptively. The step under test is the REAL ``build_lane_step`` over the
+reduced DiT backbone — only the state is synthetic.
+"""
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import DiffusionConfig, SpeCaConfig, get_config, reduced
+from repro.core import lane_step as LS
+from repro.core import taylor
+
+try:
+    import hypothesis
+    import hypothesis.strategies as st
+    from hypothesis import given, settings
+except ImportError:          # optional test extra; seeded tests still run
+    hypothesis = None
+
+W = 4
+ORDER = 2
+
+
+@functools.lru_cache(maxsize=1)
+def _fixture():
+    """Tiny DiT + jitted per-sample lane step (random params: the
+    invariants are structural, independent of training)."""
+    from repro.layers import model as M
+
+    cfg = dataclasses.replace(reduced(get_config("dit-xl2")), num_layers=2,
+                              d_model=64, d_ff=128, num_heads=4,
+                              num_kv_heads=4, num_classes=8)
+    dcfg = DiffusionConfig(num_inference_steps=12, latent_size=8,
+                           schedule="cosine")
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    steps = {}
+    scfgs = {}
+
+    def get(tau0: float):
+        if tau0 not in steps:
+            scfgs[tau0] = SpeCaConfig(taylor_order=ORDER, max_draft=4,
+                                      tau0=tau0, beta=0.9)
+            steps[tau0] = jax.jit(LS.build_lane_step(
+                cfg, params, dcfg, scfgs[tau0], lanes=W,
+                accept_mode="per_sample", verify_backend="fused"))
+        return scfgs[tau0], steps[tau0]
+
+    return cfg, dcfg, get
+
+
+def _build_state(seed: int, active, n_anchors, since, step_idx, scfg,
+                 cfg, dcfg):
+    """Synthetic-but-consistent lane state from drawn parameters."""
+    key = jax.random.PRNGKey(seed)
+    state = LS.init_lane_state(cfg, dcfg, scfg, W,
+                               {"labels": jnp.asarray([0])})
+    S = dcfg.num_inference_steps
+    state["x"] = jax.random.normal(key, state["x"].shape, jnp.float32)
+    state["cond"] = {"labels": jnp.asarray(
+        [s % cfg.num_classes for s in range(seed, seed + W)])}
+    state["diffs"] = 0.1 * jax.random.normal(
+        jax.random.fold_in(key, 1), state["diffs"].shape).astype(
+            state["diffs"].dtype)
+    state["active"] = jnp.asarray(active, bool)
+    state["n_anchors"] = jnp.asarray(n_anchors, jnp.int32)
+    state["since"] = jnp.asarray(since, jnp.int32)
+    state["step"] = jnp.asarray(step_idx, jnp.int32) % S
+    # anchor_step strictly behind the current step so d > 0
+    state["anchor_step"] = jnp.maximum(state["step"] - 1 - state["since"],
+                                       -1)
+    state["gap"] = jnp.ones((W,), jnp.float32)
+    return state
+
+
+def _check_step_invariants(seed, tau0, active, n_anchors, since, step_idx):
+    cfg, dcfg, get = _fixture()
+    scfg, step_fn = get(tau0)
+    state = _build_state(seed, active, n_anchors, since, step_idx, scfg,
+                         cfg, dcfg)
+    new, flags = jax.tree.map(np.asarray, step_fn(state))
+    old = jax.tree.map(np.asarray, state)
+
+    att, ok = flags["attempted"], flags["ok"]
+    acc, full, err = flags["accepted"], flags["full"], flags["err"]
+    act = old["active"]
+    warm = old["n_anchors"] > scfg.taylor_order
+    want = act & warm & (old["since"] < scfg.max_draft)
+
+    # --- flag algebra -----------------------------------------------------
+    assert np.array_equal(att, want)
+    assert np.array_equal(acc, att & ok)
+    assert np.array_equal(full, act & ~acc)
+    if att.any():
+        assert np.isfinite(err[att]).all()
+    assert np.isnan(err[~att]).all()
+
+    # --- finished lanes are frozen ---------------------------------------
+    idle = ~act
+    assert np.array_equal(new["x"][idle], old["x"][idle])
+    assert np.array_equal(new["since"][idle], old["since"][idle])
+    assert np.array_equal(new["step"][idle], old["step"][idle])
+    assert np.array_equal(new["diffs"][:, :, :, idle],
+                          old["diffs"][:, :, :, idle])
+    assert np.array_equal(new["n_anchors"][idle], old["n_anchors"][idle])
+
+    # --- step / since bookkeeping ----------------------------------------
+    assert np.array_equal(new["step"][act], old["step"][act] + 1)
+    assert np.array_equal(new["since"][acc], old["since"][acc] + 1)
+    rej = act & ~acc
+    assert (new["since"][rej] == 0).all()
+
+    # --- table refresh: rejected slices are fresh anchors -----------------
+    # accepted lanes keep their slices bit-for-bit
+    assert np.array_equal(new["diffs"][:, :, :, acc],
+                          old["diffs"][:, :, :, acc])
+    assert np.array_equal(new["n_anchors"][acc], old["n_anchors"][acc])
+    # rejected active lanes: recursive chain Δⁱ_new = Δⁱ⁻¹_new − Δⁱ⁻¹_old
+    # (exactly eq. 3 — checkable without knowing the features), and the
+    # anchor metadata advances to the lane's current step
+    for i in range(1, ORDER + 1):
+        np.testing.assert_array_equal(
+            new["diffs"][i][:, :, rej],
+            new["diffs"][i - 1][:, :, rej] - old["diffs"][i - 1][:, :, rej])
+    assert np.array_equal(new["n_anchors"][rej], old["n_anchors"][rej] + 1)
+    s_eff = np.minimum(old["step"], dcfg.num_inference_steps - 1)
+    assert np.array_equal(new["anchor_step"][rej], s_eff[rej])
+    return acc, rej, att
+
+
+SEEDED_CASES = [
+    # (seed, tau0, active, n_anchors, since, step_idx)
+    (0, 1e12, [1, 1, 1, 1], [3, 3, 3, 3], [0, 1, 2, 3], [3, 4, 5, 6]),
+    (1, 1e-6, [1, 1, 1, 1], [3, 4, 3, 4], [1, 0, 1, 0], [4, 4, 5, 5]),
+    (2, 0.5, [1, 0, 1, 0], [3, 0, 4, 3], [0, 0, 3, 0], [2, 0, 7, 1]),
+    (3, 1e12, [0, 0, 0, 0], [3, 3, 0, 0], [0, 0, 0, 0], [5, 0, 2, 9]),
+    (4, 1e12, [1, 1, 1, 1], [0, 1, 2, 3], [0, 0, 0, 0], [1, 2, 3, 4]),
+    (5, 0.5, [1, 1, 0, 1], [4, 0, 3, 3], [4, 0, 0, 2], [6, 1, 3, 8]),
+    (6, 1e-6, [1, 1, 1, 0], [3, 3, 4, 4], [0, 1, 4, 2], [9, 10, 11, 3]),
+]
+
+
+@pytest.mark.parametrize("case", SEEDED_CASES)
+def test_lane_step_invariants_seeded(case):
+    _check_step_invariants(*case)
+
+
+def test_seeded_cases_cover_all_outcomes():
+    """The fixed cases are jointly non-vacuous: some lane accepts, some
+    rejects, some drafts, some is cold, some is inactive."""
+    saw_acc = saw_rej = saw_att = saw_cold = saw_idle = False
+    for case in SEEDED_CASES:
+        acc, rej, att = _check_step_invariants(*case)
+        saw_acc |= acc.any()
+        saw_rej |= rej.any()
+        saw_att |= att.any()
+        saw_cold |= (~att & np.asarray(case[2], bool)).any()
+        saw_idle |= not all(case[2])
+    assert saw_acc and saw_rej and saw_att and saw_cold and saw_idle
+
+
+def test_since_monotone_over_multiple_ticks():
+    """Across consecutive ticks: ``since`` either increments by 1 or
+    resets to 0 for active lanes, never exceeds max_draft, and frozen
+    lanes hold their value."""
+    cfg, dcfg, get = _fixture()
+    scfg, step_fn = get(0.8)
+    state = _build_state(7, [1, 1, 1, 0], [3, 3, 3, 3], [0, 0, 0, 2],
+                         [0, 1, 2, 3], scfg, cfg, dcfg)
+    prev = np.asarray(state["since"])
+    for _ in range(6):
+        state, _ = step_fn(state)
+        cur = np.asarray(state["since"])
+        act = np.asarray(state["active"])
+        assert ((cur[act] == prev[act] + 1) | (cur[act] == 0)).all()
+        assert (cur[act] <= scfg.max_draft).all()
+        assert np.array_equal(cur[~act], prev[~act])
+        prev = cur
+
+
+@pytest.mark.parametrize("seed", range(5))
+def test_update_lanes_masked_refresh_is_fresh_anchor(seed):
+    """taylor.update_lanes with a random mask: refreshed slices equal B
+    independent scalar ``taylor.update`` calls exactly; untouched lanes
+    keep table AND metadata bit-for-bit."""
+    rng = np.random.default_rng(seed)
+    B, order = 5, int(rng.integers(1, 4))
+    feat = (B, int(rng.integers(3, 17)))
+    state = taylor.init_state(order, feat, jnp.float32, lanes=B)
+    scalars = [taylor.init_state(order, feat[1:], jnp.float32)
+               for _ in range(B)]
+    masks = rng.integers(0, 2, size=(4, B)).astype(bool)
+    masks[0] = True                       # first anchor everywhere
+    for t, mask in enumerate(masks):
+        feats = jnp.asarray(rng.normal(size=feat), jnp.float32)
+        state = taylor.update_lanes(state, feats, 2 * t, jnp.asarray(mask),
+                                    lane_axis=0)
+        for b in range(B):
+            if mask[b]:
+                scalars[b] = taylor.update(scalars[b], feats[b], 2 * t)
+    for b in range(B):
+        np.testing.assert_array_equal(np.asarray(state["diffs"][:, b]),
+                                      np.asarray(scalars[b]["diffs"]))
+        assert int(state["n_anchors"][b]) == int(scalars[b]["n_anchors"])
+        assert int(state["anchor_step"][b]) == int(scalars[b]["anchor_step"])
+        assert float(state["gap"][b]) == float(scalars[b]["gap"])
+
+
+if hypothesis is not None:
+    # per-test @settings, NOT a global profile: test_properties.py loads
+    # its own "ci" profile and profile state is process-global — whichever
+    # module imported last would silently win for the whole session
+    _settings = settings(deadline=None, max_examples=15,
+                         suppress_health_check=list(hypothesis.HealthCheck))
+
+    lane_bits = st.lists(st.booleans(), min_size=W, max_size=W)
+
+    @_settings
+    @given(seed=st.integers(0, 2**16),
+           tau0=st.sampled_from([1e-6, 0.3, 0.8, 1e12]),
+           active=lane_bits,
+           n_anchors=st.lists(st.integers(0, ORDER + 3), min_size=W,
+                              max_size=W),
+           since=st.lists(st.integers(0, 5), min_size=W, max_size=W),
+           step_idx=st.lists(st.integers(0, 11), min_size=W, max_size=W))
+    def test_lane_step_invariants_hypothesis(seed, tau0, active, n_anchors,
+                                             since, step_idx):
+        _check_step_invariants(seed, tau0, active, n_anchors, since,
+                               step_idx)
+
+    @_settings
+    @given(data=st.data())
+    def test_update_lanes_random_masks_hypothesis(data):
+        B = data.draw(st.integers(1, 6))
+        order = data.draw(st.integers(0, 3))
+        n = data.draw(st.integers(1, 12))
+        mask = np.asarray(data.draw(st.lists(st.booleans(), min_size=B,
+                                             max_size=B)), bool)
+        rng = np.random.default_rng(data.draw(st.integers(0, 2**16)))
+        old = jnp.asarray(rng.normal(size=(order + 1, B, n)), jnp.float32)
+        feats = jnp.asarray(rng.normal(size=(B, n)), jnp.float32)
+        state = {"diffs": old, "n_anchors": jnp.ones((B,), jnp.int32),
+                 "anchor_step": jnp.zeros((B,), jnp.int32),
+                 "gap": jnp.ones((B,), jnp.float32)}
+        new = taylor.update_lanes(state, feats, 3, jnp.asarray(mask),
+                                  lane_axis=0)
+        nd, od = np.asarray(new["diffs"]), np.asarray(old)
+        np.testing.assert_array_equal(nd[:, ~mask], od[:, ~mask])
+        np.testing.assert_array_equal(nd[0][mask], np.asarray(feats)[mask])
+        for i in range(1, order + 1):
+            np.testing.assert_array_equal(nd[i][mask],
+                                          nd[i - 1][mask] - od[i - 1][mask])

@@ -12,7 +12,7 @@ import pytest
 
 from repro.configs import SpeCaConfig
 from repro.core.speca import speca_sample
-from repro.serving import Request, SpeCaEngine
+from repro.serving import Request, SpeCaEngine, allocation_report
 
 
 def _requests(cfg, n, offset=0):
@@ -136,6 +136,48 @@ def test_per_sample_mode_lane_isolation(tiny_trained_dit):
             assert run <= scfg.max_draft, (b, s)
     # per-lane alpha statistics exposed for the allocation analysis
     assert np.asarray(st["alpha_b"]).shape == (3,)
+
+
+def test_drained_lanes_report_dropped_not_completed(tiny_trained_dit,
+                                                    engine):
+    """Engine shutdown mid-flight (tick budget): in-flight lanes come
+    back ``completed=False`` with their PARTIAL counters, never-started
+    queue entries come back ``completed=False`` with no sample, and
+    ``allocation_report`` counts every one of them in ``n_dropped``
+    instead of treating the partial schedule as a served request."""
+    cfg, dcfg, _ = tiny_trained_dit
+    S = dcfg.num_inference_steps
+    reqs = _requests(cfg, 3, offset=200)
+
+    # budget too small for anyone to finish: 2 in-flight + 1 unstarted
+    res = engine.serve_batched(reqs, lanes=2, max_ticks=S // 2)
+    assert [r.completed for r in res] == [False, False, False]
+    assert res[0].num_full + res[0].num_spec == S // 2
+    assert len(res[0].accepts) == S // 2
+    assert res[2].sample is None and res[2].accepts == []
+    rep = allocation_report(res, 1.0)
+    assert rep == {"n_requests": 0, "n_dropped": 3}
+
+    # budget of exactly S: the two packed lanes finish, the queued third
+    # request is dropped before it ever starts
+    res = engine.serve_batched(reqs, lanes=2, max_ticks=S)
+    assert [r.completed for r in res] == [True, True, False]
+    rep = allocation_report(res, 1.0)
+    assert rep["n_requests"] == 2 and rep["n_dropped"] == 1
+    # the completed results are EXACTLY what an unbudgeted serve returns
+    full = engine.serve_batched(reqs, lanes=2)
+    for a, b in zip(res[:2], full[:2]):
+        assert a.accepts == b.accepts
+        assert (a.num_full, a.num_spec, a.flops) == \
+            (b.num_full, b.num_spec, b.flops)
+
+
+def test_serve_with_tick_budget_routes_through_scheduler(tiny_trained_dit,
+                                                         engine):
+    cfg, dcfg, _ = tiny_trained_dit
+    reqs = _requests(cfg, 2, offset=210)
+    res = engine.serve(reqs, lanes=1, max_ticks=3)
+    assert all(not r.completed for r in res)
 
 
 def test_engine_batch_accept_mode_couples_lanes(tiny_trained_dit):

@@ -92,6 +92,63 @@ def _lane_polys():
             lambda s: 0.25 * s * s + s]
 
 
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("backend", ["kernel", "jnp"])
+def test_lane_table_dtype_roundtrip(backend, dtype):
+    """The lane table path holds any table dtype: bf16 tables update in
+    bf16 (matching the staged oracle bit-for-bit) and predict through the
+    f32 kernel accumulator within bf16 rounding of the f32-table result."""
+    B, order, n = 3, 2, 16
+    key = jax.random.PRNGKey(0)
+    states = {d: taylor.init_state(order, (B, n), d, lanes=B)
+              for d in (jnp.float32, dtype)}
+    for i, s in enumerate([0, 2, 4, 6]):
+        feats = jax.random.normal(jax.random.fold_in(key, i), (B, n))
+        mask = jnp.asarray([True, True, i % 2 == 0])
+        for d, st in states.items():
+            states[d] = taylor.update_lanes(st, feats.astype(d), s, mask,
+                                            lane_axis=0, backend=backend)
+    assert states[dtype]["diffs"].dtype == dtype
+    pred = taylor.predict_lanes(states[dtype], 8, lane_axis=0,
+                                backend=backend)
+    ref = taylor.predict_lanes(states[jnp.float32], 8, lane_axis=0,
+                               backend=backend)
+    assert pred.dtype == dtype
+    tol = 3e-2 if dtype == jnp.bfloat16 else 1e-6
+    np.testing.assert_allclose(np.asarray(pred, np.float32),
+                               np.asarray(ref, np.float32),
+                               rtol=tol, atol=tol)
+
+
+def test_bf16_table_accept_rate_regression(tiny_trained_dit):
+    """ROADMAP "bf16 tables by default" prerequisite, pinned at reduced
+    scale: halving the difference-table storage
+    (``SpeCaConfig.table_dtype="bfloat16"``) must not change the
+    sample-adaptive accept behaviour — per-sample accept-rate delta vs
+    the f32 table within 0.1, and the bf16 run still speculates."""
+    from repro.configs import SpeCaConfig
+    from repro.core import lane_step as LS
+    from repro.core.speca import speca_sample
+
+    cfg, dcfg, params = tiny_trained_dit
+    key = jax.random.PRNGKey(5)
+    cond = {"labels": jnp.asarray([1, 5, 6])}
+    alphas = {}
+    for td in ("", "bfloat16"):
+        scfg = SpeCaConfig(taylor_order=2, max_draft=6, tau0=0.35,
+                           beta=0.9, table_dtype=td)
+        assert LS.table_dtype(cfg, scfg) == \
+            (jnp.bfloat16 if td else cfg.jnp_dtype)
+        state = LS.init_lane_state(cfg, dcfg, scfg, 3, cond)
+        assert state["diffs"].dtype == LS.table_dtype(cfg, scfg)
+        _, st = jax.jit(lambda k, s=scfg: speca_sample(
+            cfg, params, dcfg, s, k, cond, 3,
+            accept_mode="per_sample"))(key)
+        alphas[td or "f32"] = np.asarray(st["alpha_b"])
+        assert np.asarray(st["spec_step"]).sum() > 0, td
+    assert np.abs(alphas["f32"] - alphas["bfloat16"]).max() <= 0.1
+
+
 @pytest.mark.parametrize("backend", ["kernel", "jnp"])
 def test_newton_lanes_exact_on_polynomials(backend):
     """Per-lane ``newton`` forecasting through the lane-masked table path
