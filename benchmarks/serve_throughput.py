@@ -13,12 +13,26 @@ device count is the CI artifact column tracking how serving capacity
 scales with the mesh). The process must see max(D) devices — on CPU set
 ``XLA_FLAGS=--xla_force_host_platform_device_count=4`` first.
 
+``--guidance-scale S`` (S>0) benchmarks classifier-free-guidance serving:
+every run serves cond/uncond lane PAIRS with one verify decision per pair
+(docs/cfg.md), and one extra ``split`` row serves the same work as
+2×requests *independent* unguided lanes — the cond and uncond streams as
+separate requests, each verifying on its own. ``req_per_s`` counts USER
+requests on both rows (a split "request" is half a user request), so the
+paired-vs-split delta is the structural win of one decision per pair:
+the split streams reject independently, so the union of their rejections
+forces more full forwards for the same guided work. Every JSON row
+carries a ``guidance`` column (0.0 = unguided) so the perf-trajectory
+artifact can chart guided vs unguided requests/s across PRs.
+
 Run (repo root must be on the path for ``benchmarks.common``):
   PYTHONPATH=src:. python benchmarks/serve_throughput.py \
       --requests 12 --lanes 4 --steps 30
   XLA_FLAGS=--xla_force_host_platform_device_count=4 \
   PYTHONPATH=src:. python benchmarks/serve_throughput.py \
       --requests 8 --lanes 4 --steps 12 --devices 1,2,4
+  PYTHONPATH=src:. python benchmarks/serve_throughput.py \
+      --requests 8 --lanes 4 --steps 12 --guidance-scale 4.0
 """
 from __future__ import annotations
 
@@ -30,15 +44,30 @@ import jax.numpy as jnp
 from benchmarks.common import get_model, print_table, write_result
 from repro.configs import SpeCaConfig
 from repro.core.complexity import forward_flops
+from repro.diffusion.pipeline import null_cond_like
 from repro.launch.mesh import make_lane_mesh
 from repro.serving import Request, SpeCaEngine, allocation_report
 
 
-def make_requests(cfg, n: int, *, offset: int = 0):
+def make_requests(cfg, n: int, *, offset: int = 0, guidance_scale=None):
     return [Request(request_id=offset + i,
                     cond={"labels": jnp.asarray([i % cfg.num_classes])},
-                    seed=offset + i)
+                    seed=offset + i, guidance_scale=guidance_scale)
             for i in range(n)]
+
+
+def split_requests(cfg, guided_requests):
+    """The two-independent-streams baseline: each guided request becomes
+    a conditional AND an unconditional unguided request sharing its seed
+    (same noise), so the same model work is served — but every stream
+    verifies and accepts on its own, with no pair coupling."""
+    out = []
+    for r in guided_requests:
+        out.append(Request(request_id=2 * r.request_id, cond=r.cond,
+                           seed=r.seed))
+        out.append(Request(request_id=2 * r.request_id + 1,
+                           cond=null_cond_like(cfg, r.cond), seed=r.seed))
+    return out
 
 
 def bench(engine: SpeCaEngine, requests, *, lanes: int):
@@ -57,11 +86,18 @@ def main() -> None:
     ap.add_argument("--tau0", type=float, default=0.4)
     ap.add_argument("--accept-mode", default="per_sample",
                     choices=["per_sample", "batch"])
+    ap.add_argument("--guidance-scale", type=float, default=0.0,
+                    help=">0: classifier-free-guidance serving (paired "
+                         "cond/uncond lanes) plus a split baseline row "
+                         "serving the streams as independent requests")
     ap.add_argument("--devices", default="1",
                     help="comma list of lane-shard device counts, e.g. "
                          "1,2,4 (needs that many visible devices)")
     args = ap.parse_args()
     device_counts = sorted({int(d) for d in args.devices.split(",")})
+    guided = args.guidance_scale > 0
+    gs = args.guidance_scale if guided else None
+    streams = 2 if guided else 1
 
     cfg, dcfg, params = get_model(args.model)
     import dataclasses
@@ -69,18 +105,20 @@ def main() -> None:
     scfg = SpeCaConfig(taylor_order=2, max_draft=8, tau0=args.tau0,
                        beta=0.9)
 
-    def make_engine(D: int) -> SpeCaEngine:
+    def make_engine(D: int, *, guidance: bool = guided) -> SpeCaEngine:
         return SpeCaEngine(cfg, params, dcfg, scfg,
                            accept_mode=args.accept_mode,
+                           guidance=guidance,
                            mesh=make_lane_mesh(D) if D > 1 else None)
 
     cond0 = {"labels": jnp.asarray([0])}
-    reqs = make_requests(cfg, args.requests)
+    reqs = make_requests(cfg, args.requests, guidance_scale=gs)
+    lane_cap = min(args.lanes, streams * args.requests)
     engine = make_engine(1)
     # warm both paths so compile time stays out of the measurement
-    engine.warmup(cond0, lanes=1)
-    engine.warmup(cond0, lanes=min(args.lanes, args.requests))
-    seq_results, seq_wall = bench(engine, reqs, lanes=1)
+    engine.warmup(cond0, lanes=streams)
+    engine.warmup(cond0, lanes=lane_cap)
+    seq_results, seq_wall = bench(engine, reqs, lanes=streams)
 
     # one lane-scheduler run per device count (D=1: plain engine; D>1:
     # the lane axis sharded over a D-device ('data',) mesh). The row is
@@ -92,32 +130,59 @@ def main() -> None:
     for D in device_counts:
         eng = engine if D == 1 else make_engine(D)
         if D > 1:
-            eng.warmup(cond0, lanes=min(args.lanes, args.requests))
+            eng.warmup(cond0, lanes=lane_cap)
         W_eff = eng.lane_width(args.lanes, len(reqs))
         results, wall = bench(eng, reqs, lanes=args.lanes)
         lane_runs.append((D, W_eff, results, wall))
 
+    # split baseline (guided only): the same guided work as 2×requests
+    # independent unguided lanes — cond and uncond streams decoupled, two
+    # verify decisions where the paired engine takes one
+    split_run = None
+    if guided:
+        split_engine = make_engine(1, guidance=False)
+        split_reqs = split_requests(cfg, reqs)
+        split_engine.warmup(cond0, lanes=min(args.lanes, len(split_reqs)))
+        split_results, split_wall = bench(split_engine, split_reqs,
+                                          lanes=args.lanes)
+        split_run = (split_engine.lane_width(args.lanes, len(split_reqs)),
+                     split_results, split_wall)
+
     n_tok = (dcfg.latent_size // cfg.patch_size) ** 2 \
         * max(dcfg.num_frames, 1)
     fwd = forward_flops(cfg, n_tok)
-    runs = [("batch=1", 1, 1, seq_results, seq_wall)] + \
-        [(f"lanes={W_eff},D={D}", D, W_eff, results, wall)
-         for D, W_eff, results, wall in lane_runs]
+    seq_mode = f"batch=1{',paired' if guided else ''}"
+    runs = [(seq_mode, 1, streams, seq_results, seq_wall, streams * fwd)] \
+        + [(f"lanes={W_eff},D={D}{',paired' if guided else ''}", D, W_eff,
+            results, wall, streams * fwd)
+           for D, W_eff, results, wall in lane_runs]
+    if split_run is not None:
+        W_eff, split_results, split_wall = split_run
+        runs.append((f"lanes={W_eff},D=1,split", 1, W_eff, split_results,
+                     split_wall, fwd))
     rows = []
-    for mode, D, W_eff, results, wall in runs:
-        rep = allocation_report(results, fwd)
+    for mode, D, W_eff, results, wall, fwd_ref in runs:
+        rep = allocation_report(results, fwd_ref)
+        split = mode.endswith(",split")
         # the lane scheduler must serve identical per-request work at
         # every width and device count (guaranteed in per_sample mode;
-        # batch mode couples lanes by design)
-        mismatches = sum(a.accepts != b.accepts
-                         for a, b in zip(seq_results, results))
+        # batch mode couples lanes by design). The split row serves
+        # different work by construction (independent stream decisions),
+        # so its mismatch count is meaningless and reported as None.
+        mismatches = None if split else \
+            sum(a.accepts != b.accepts
+                for a, b in zip(seq_results, results))
+        # req_per_s counts USER requests: a split row's 2N stream
+        # requests serve N user requests' work
+        n_user = len(results) // (2 if split else 1)
         rows.append({
             "mode": mode,
             "devices": D,
             "lanes": W_eff,
-            "requests": len(results),
+            "guidance": args.guidance_scale if guided else 0.0,
+            "requests": n_user,
             "wall_s": round(wall, 2),
-            "req_per_s": round(len(results) / wall, 3),
+            "req_per_s": round(n_user / wall, 3),
             "alpha_mean": round(rep["alpha_mean"], 4),
             "frac_easy": round(rep["frac_easy"], 3),
             "frac_hard": round(rep["frac_hard"], 3),
@@ -129,12 +194,32 @@ def main() -> None:
         })
 
     print_table(f"serve_throughput ({args.model}, "
-                f"accept_mode={args.accept_mode})", rows)
+                f"accept_mode={args.accept_mode}"
+                + (f", guidance={args.guidance_scale}" if guided else "")
+                + ")", rows)
     for row in rows[1:]:
-        print(f"{row['mode']}: {row['serving_speedup']}x requests/s vs "
-              f"batch=1, {row['trajectory_mismatches']} trajectory "
-              "mismatches")
-    path = write_result(f"serve_throughput_{args.model}", rows)
+        line = (f"{row['mode']}: {row['serving_speedup']}x requests/s "
+                f"vs {seq_mode}")
+        if row["trajectory_mismatches"] is not None:
+            line += (f", {row['trajectory_mismatches']} trajectory "
+                     "mismatches")
+        print(line)
+    if guided and split_run is not None:
+        # the split baseline always runs at D=1, so compare it against
+        # the D=1 paired row specifically — with --devices 2,4 the first
+        # lane row is a multi-device run and would conflate mesh scaling
+        # with the one-decision-per-pair win
+        paired = next((r for r in rows[1:]
+                       if r["devices"] == 1 and r["mode"].endswith(
+                           ",paired")), None)
+        split_row = rows[-1]
+        if paired is not None:
+            ratio = paired["req_per_s"] / max(split_row["req_per_s"],
+                                              1e-9)
+            print(f"paired vs split (cond+uncond as independent lanes): "
+                  f"{ratio:.2f}x requests/s")
+    suffix = "_cfg" if guided else ""
+    path = write_result(f"serve_throughput_{args.model}{suffix}", rows)
     print(f"wrote {path}")
 
 

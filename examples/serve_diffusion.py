@@ -8,12 +8,20 @@ are identical to serving each request alone at batch=1 (only faster).
 
 Run:  PYTHONPATH=src python examples/serve_diffusion.py
       PYTHONPATH=src python examples/serve_diffusion.py --lanes 8 --mesh 2
+      PYTHONPATH=src python examples/serve_diffusion.py --lanes 4 \
+          --guidance-scale 4.0
 
 ``--mesh D`` lane-shards the engine over a D-device ``('data',)`` mesh —
 the difference table and every per-lane vector split over the devices, so
 one engine serves lanes×D requests concurrently. On CPU the script forces
 D host devices (the flag must land before the first jax import, which is
 why jax and repro are imported inside ``main``).
+
+``--guidance-scale S`` (S>0) serves with classifier-free guidance: each
+request packs its conditional and unconditional streams into a lane PAIR
+— both forecast and verify in the same dispatch, one accept decision per
+pair on the guided residual (docs/cfg.md). Guided serving doubles the
+effective batch without doubling dispatches or verify decisions.
 """
 import argparse
 import dataclasses
@@ -25,6 +33,9 @@ def main() -> None:
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--lanes", type=int, default=4)
     ap.add_argument("--mesh", type=int, default=1)
+    ap.add_argument("--guidance-scale", type=float, default=0.0,
+                    help=">0: serve cond/uncond lane pairs under "
+                         "classifier-free guidance at this scale")
     args = ap.parse_args()
     from repro.launch.mesh import force_host_device_count
     force_host_device_count(args.mesh)   # before the first jax import
@@ -50,17 +61,22 @@ def main() -> None:
 
     scfg = SpeCaConfig(taylor_order=2, max_draft=8, tau0=0.4, beta=0.9)
     mesh = make_lane_mesh(args.mesh) if args.mesh > 1 else None
-    engine = SpeCaEngine(cfg, params, dcfg, scfg, mesh=mesh)
+    guided = args.guidance_scale > 0
+    engine = SpeCaEngine(cfg, params, dcfg, scfg, guidance=guided,
+                         mesh=mesh)
 
     requests = [
         Request(request_id=i,
                 cond={"labels": jnp.asarray([i % cfg.num_classes])},
-                seed=i)
+                seed=i,
+                guidance_scale=args.guidance_scale if guided else None)
         for i in range(args.requests)
     ]
     lanes = args.lanes
     engine.warmup({"labels": jnp.asarray([0])}, lanes=lanes)
     where = f"{lanes} lanes" + (f" on {args.mesh} devices" if mesh else "")
+    if guided:
+        where += f", CFG pairs at s={args.guidance_scale}"
     print(f"serving {len(requests)} requests on {where}...")
     t0 = time.time()
     results = engine.serve(requests, lanes=lanes)
@@ -72,7 +88,9 @@ def main() -> None:
           f"(vs sequential batch=1: engine.serve(..., lanes=1))")
 
     n_tok = (dcfg.latent_size // cfg.patch_size) ** 2
-    report = allocation_report(results, forward_flops(cfg, n_tok))
+    streams = 2 if guided else 1
+    report = allocation_report(results,
+                               streams * forward_flops(cfg, n_tok))
     print("\nsample-adaptive allocation report:")
     for k, v in report.items():
         print(f"  {k}: {v:.4f}" if isinstance(v, float) else f"  {k}: {v}")

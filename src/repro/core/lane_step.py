@@ -33,15 +33,37 @@ One step, entirely inside the traced function:
 State layout (all device-side; the host never has to read any of it to
 decide the next dispatch):
 
-  ``x`` [W,…] latents · ``since``/``step``/``active`` [W] ·
-  ``cond`` {k: [W,…]} · ``diffs`` [m+1, L, 2, W, T, D] ·
-  ``n_anchors``/``anchor_step``/``gap`` [W]  (``taylor.init_state(lanes=W)``)
+  ``x``        [W, …]   current latents, one row per lane
+  ``since``    [W] i32  consecutive accepted drafts since the last anchor
+  ``step``     [W] i32  the lane's denoising step index
+  ``active``   [W] bool lane occupancy (inactive lanes are frozen)
+  ``cond``     {k: [W, …]} conditioning values, one row per lane
+  ``diffs``    [m+1, L, 2, W, T, D] TaylorSeer difference table
+  ``n_anchors``/``anchor_step``/``gap`` [W] per-lane anchor metadata
+                (``taylor.init_state(lanes=W)``)
+  ``gscale``   [W] f32  per-lane guidance scale — present ONLY in
+                guidance mode (``init_lane_state(..., guidance=True)``)
+
+Classifier-free guidance (``guidance=True``) packs one *request* into a
+lane **pair**: the conditional stream at lane ``2k``, the unconditional
+stream at lane ``2k+1``. Both lanes share the SAME latent trajectory and
+draft/verify together, but each keeps its own difference table (the two
+feature streams are forecast independently). The verify residual is
+computed on the guided combination ``u + s·(c − u)`` at the verify layer
+and a single accept/reject decision drives both lanes, so the pair's
+anchors can never de-synchronize — see ``docs/cfg.md`` for why one
+decision per pair is required for anchor coherence. Pair invariants
+(established by ``init_lane_state`` and preserved by every step):
+``x``/``since``/``step``/``active``/``gscale`` are equal across the two
+lanes of a pair.
 
 Flags returned per tick (all [W]): ``attempted`` (the lane drafted),
 ``ok`` (its error passed its τ), ``accepted`` (post-combiner decision that
 advanced the lane), ``full`` (the lane was served by the full forward),
 ``err`` (verification error, NaN where the lane did not draft — see the
-sentinel semantics in ``speca_sample``), ``tau``.
+sentinel semantics in ``speca_sample``), ``tau``. In guidance mode every
+flag is pair-equal: both lanes of a pair report the pair's single
+decision and the pair's guided-residual error.
 """
 from __future__ import annotations
 
@@ -53,7 +75,8 @@ import jax.numpy as jnp
 from repro.configs.base import DiffusionConfig, ModelConfig, SpeCaConfig
 from repro.core import taylor
 from repro.core.verify import relative_error, threshold_schedule
-from repro.diffusion.pipeline import latent_shape, make_stepper, model_inputs
+from repro.diffusion.pipeline import (guided_output, latent_shape,
+                                      make_stepper, model_inputs)
 from repro.layers import model as M
 
 ACCEPT_MODES = ("batch", "per_sample")
@@ -61,10 +84,12 @@ VERIFY_BACKENDS = ("fused", "jnp")
 
 
 def verify_layer(cfg: ModelConfig, scfg: SpeCaConfig) -> int:
+    """Resolved verify-layer index (negative config values wrap)."""
     return scfg.verify_layer % cfg.num_layers
 
 
 def num_tokens(cfg: ModelConfig, dcfg: DiffusionConfig) -> int:
+    """Backbone sequence length: patches per frame × frames."""
     per_frame = (dcfg.latent_size // cfg.patch_size) ** 2
     return per_frame * max(dcfg.num_frames, 1)
 
@@ -88,19 +113,30 @@ def init_lane_state(cfg: ModelConfig, dcfg: DiffusionConfig,
                     cond_template: Dict[str, Any], *,
                     x: Optional[jnp.ndarray] = None,
                     active: bool = False,
+                    guidance: bool = False,
                     mesh: Optional[Any] = None) -> Dict[str, Any]:
     """Fresh lane-batch state. ``cond_template`` supplies per-key shapes
     (leading axis is replaced by ``lanes``); pass ``x`` to start from a
     concrete latent (the sampler) instead of zeros (the scheduler).
+
+    ``guidance=True`` adds the per-lane ``gscale`` vector (all ones until
+    a request is filled) and requires an even ``lanes`` — lanes ``2k`` /
+    ``2k+1`` form the cond/uncond pair of one request.
 
     With ``mesh`` every lane-indexed array is placed with its
     ``NamedSharding`` from the lane-axis rules in
     ``repro.sharding.specs`` — the difference table and all per-lane
     vectors shard their lane axis over the mesh's ``'data'`` axis, so a
     D-device mesh holds 1/D of the table per device. ``lanes`` must then
-    be divisible by the lane-shard count.
+    be divisible by the lane-shard count — and in guidance mode by
+    ``2 × lane_shard_count`` so a cond/uncond pair never straddles a
+    shard boundary (the guided combination is a cross-lane op inside the
+    pair; keeping pairs shard-local keeps it communication-free).
     """
     W = lanes
+    if guidance and W % 2 != 0:
+        raise ValueError(f"guidance mode packs lane PAIRS: lanes={W} "
+                         "must be even")
     feat_shape = taylor.feature_shape_for(cfg.num_layers, W,
                                           num_tokens(cfg, dcfg), cfg.d_model)
     tstate = taylor.init_state(scfg.taylor_order, feat_shape,
@@ -117,12 +153,17 @@ def init_lane_state(cfg: ModelConfig, dcfg: DiffusionConfig,
         "cond": cond,
         **tstate,
     }
+    if guidance:
+        state["gscale"] = jnp.ones((W,), jnp.float32)
     if mesh is not None:
         from repro.sharding import specs as SH
-        if W % SH.lane_shard_count(mesh) != 0:
+        mult = SH.lane_width_multiple(mesh, streams=2 if guidance else 1)
+        if W % mult != 0:
             raise ValueError(
-                f"lanes={W} not divisible by the mesh lane-shard count "
-                f"{SH.lane_shard_count(mesh)}")
+                f"lanes={W} not divisible by {mult} (lane-shard count "
+                f"{SH.lane_shard_count(mesh)}"
+                + (" × 2 streams — a cond/uncond pair must never "
+                   "straddle a shard boundary)" if guidance else ")"))
         state = jax.device_put(state, SH.lane_state_shardings(mesh, state))
     return state
 
@@ -133,6 +174,7 @@ def build_lane_step(cfg: ModelConfig, params: Dict[str, Any],
                     accept_mode: str = "per_sample",
                     verify_backend: str = "jnp",
                     use_flash: bool = False,
+                    guidance: bool = False,
                     mesh: Optional[Any] = None
                     ) -> Callable[[Dict[str, Any]],
                                   Tuple[Dict[str, Any], Dict[str, Any]]]:
@@ -140,6 +182,17 @@ def build_lane_step(cfg: ModelConfig, params: Dict[str, Any],
 
     Not jitted here — the sampler scans it inside one XLA program, the
     engine jits it per lane width.
+
+    ``guidance=True`` switches the step into classifier-free-guidance
+    pair mode (state from ``init_lane_state(..., guidance=True)``): lanes
+    ``2k``/``2k+1`` carry one request's cond/uncond streams. Both streams
+    draft through their own tables in the same dispatch, verification
+    compares the *guided* residual ``u + s·(c − u)`` at the verify layer
+    against the pair's τ (one decision per pair — ``kernels.ops.
+    verify_accept_pairs``), and the latent advances on the guided model
+    output, identically for both lanes. A rejected pair's full forward
+    refreshes BOTH lanes' table slices, so cond and uncond anchors stay
+    in lock-step by construction.
 
     ``mesh`` shards the lane axis over the mesh's ``'data'`` axis: the
     backbone, threshold schedule and lane selects partition natively
@@ -152,6 +205,9 @@ def build_lane_step(cfg: ModelConfig, params: Dict[str, Any],
     latents agree to f32 reduction-order tolerance — XLA CPU picks gemm
     micro-kernels by the local batch shape, the same ulp-level boundary
     as the PR-2 kernel/tensordot note (tests/test_serving_sharded.py).
+    In guidance mode the lane width must be a multiple of ``2·D`` so a
+    pair never straddles a shard boundary — every pair-fold below is then
+    a shard-local reshape.
     """
     if accept_mode not in ACCEPT_MODES:
         raise ValueError(f"unknown accept_mode {accept_mode!r}")
@@ -159,12 +215,33 @@ def build_lane_step(cfg: ModelConfig, params: Dict[str, Any],
         raise ValueError(f"unknown verify_backend {verify_backend!r}")
     if scfg.error_metric != "rel_l2":
         verify_backend = "jnp"     # the fused kernel implements eq. 4 only
+    if guidance and lanes % 2 != 0:
+        raise ValueError(f"guidance mode packs lane PAIRS: lanes={lanes} "
+                         "must be even")
     stepper = make_stepper(dcfg)
     W = lanes
+    NP = W // 2                    # number of lane pairs (guidance mode)
     S = stepper.num_steps
     vl = verify_layer(cfg, scfg)
     cmask = jnp.arange(cfg.num_layers) == vl
     x_shape = latent_shape(cfg, dcfg, W)
+
+    def pair_split(v):
+        """[W, …] -> (cond [W/2, …], uncond [W/2, …]). A pure reshape —
+        pairs are interleaved (2k, 2k+1) and never straddle a shard."""
+        v2 = v.reshape((NP, 2) + v.shape[1:])
+        return v2[:, 0], v2[:, 1]
+
+    def pair_bcast(v):
+        """[W/2, …] -> [W, …]: both lanes of each pair get the value."""
+        return jnp.broadcast_to(
+            v[:, None], (NP, 2) + v.shape[1:]).reshape((W,) + v.shape[1:])
+
+    def guided_combine(v, gs_pair):
+        """[W, …] -> [W/2, …]: the CFG combination per pair, delegated
+        to the one shared definition in ``pipeline.guided_output``."""
+        c, u = pair_split(v)
+        return guided_output(c, u, gs_pair)
 
     def verify(pred_vl, real_vl, tau):
         """(err [W], ok [W]) — identical math on every execution path."""
@@ -183,6 +260,33 @@ def build_lane_step(cfg: ModelConfig, params: Dict[str, Any],
                              eps=scfg.eps, batch_axis=0)
         return err, err <= tau
 
+    def verify_pairs(pred_vl, real_vl, tau, gs):
+        """Guided verify: ONE τ comparison per pair on the guided
+        residual. Returns pair-broadcast (err [W], ok [W]) so the flag
+        layout stays uniform across modes."""
+        tau_p = pair_split(jnp.broadcast_to(
+            jnp.asarray(tau, jnp.float32), (W,)))[0]
+        gs_p = pair_split(gs)[0]
+        if verify_backend == "fused":
+            from repro.kernels import ops
+            if mesh is not None:
+                err_p, ok_p = ops.verify_accept_pairs_sharded(
+                    pred_vl.reshape(W, -1), real_vl.reshape(W, -1),
+                    tau_p, gs_p, mesh=mesh, eps=scfg.eps)
+            else:
+                err_p, ok_p = ops.verify_accept_pairs(
+                    pred_vl.reshape(W, -1), real_vl.reshape(W, -1),
+                    tau_p, gs_p, eps=scfg.eps)
+        else:
+            # combine in f32 (matching the fused path) so backend parity
+            # holds bit-for-bit on f32 features and to ulp on bf16
+            err_p = relative_error(
+                guided_combine(pred_vl.astype(jnp.float32), gs_p),
+                guided_combine(real_vl.astype(jnp.float32), gs_p),
+                metric=scfg.error_metric, eps=scfg.eps, batch_axis=0)
+            ok_p = err_p <= tau_p
+        return pair_bcast(err_p), pair_bcast(ok_p)
+
     def step(state: Dict[str, Any]
              ) -> Tuple[Dict[str, Any], Dict[str, Any]]:
         x, since, s, active = (state["x"], state["since"], state["step"],
@@ -194,6 +298,12 @@ def build_lane_step(cfg: ModelConfig, params: Dict[str, Any],
         t_model = stepper.t_model[s_eff]                          # [W]
         warm = tstate["n_anchors"] > scfg.taylor_order
         want = active & warm & (since < scfg.max_draft)
+        if guidance:
+            # a pair drafts iff BOTH its streams can (with the pair
+            # invariants held the two bits are already equal; the AND
+            # makes the pair decision explicit and robust)
+            wc, wu = pair_split(want)
+            want = pair_bcast(wc & wu)
         tau = threshold_schedule(stepper.t_frac[s_eff], scfg.tau0,
                                  scfg.beta)                       # [W]
 
@@ -208,7 +318,11 @@ def build_lane_step(cfg: ModelConfig, params: Dict[str, Any],
                                         use_flash=use_flash)
             real_vl = extras["branches"][vl][0] + extras["branches"][vl][1]
             pred_vl = preds[vl][0] + preds[vl][1]
-            err, ok = verify(pred_vl, real_vl, tau)
+            if guidance:
+                err, ok = verify_pairs(pred_vl, real_vl, tau,
+                                       state["gscale"])
+            else:
+                err, ok = verify(pred_vl, real_vl, tau)
             # NaN marks "did not draft": it cannot poison downstream
             # means/percentiles the way the old inf sentinel did, and it
             # still fails every `err <= tau` comparison.
@@ -247,6 +361,11 @@ def build_lane_step(cfg: ModelConfig, params: Dict[str, Any],
                                         (x, tstate))
         sel = accept.reshape((W,) + (1,) * (x.ndim - 1))
         out = jnp.where(sel, out_spec, out_full)
+        if guidance:
+            # the pair's latent advances on the guided model output; both
+            # lanes receive the identical value (x stays pair-equal)
+            gs_p = pair_split(state["gscale"])[0]
+            out = pair_bcast(guided_combine(out, gs_p))
         x_next = stepper.advance(x, out, s_eff)
         amask = active.reshape(sel.shape)
         x = jnp.where(amask, x_next, x)

@@ -26,6 +26,12 @@ The TaylorSeer table evaluation and masked refresh run through the fused
 per-lane Pallas kernels (see ``repro.core.taylor`` backends); verification
 uses the metric-general jnp path so every ``error_metric`` keeps working.
 
+Classifier-free guidance (``guidance_scale=``, PR 4): every sample's
+cond/uncond streams occupy a lane pair, verification happens once per
+pair on the guided residual ``u + s·(c − u)``, and the latent advances on
+the guided model output — the lane-step ``guidance`` mode, shared with
+the serving engine's paired mode (``docs/cfg.md``).
+
 Sentinel semantics: ``stats["err"]`` is NaN at (step, sample) entries where
 that sample did not draft (cold table, draft budget exhausted, or the whole
 step skipped speculation). NaN — unlike the previous ``inf`` sentinel —
@@ -34,18 +40,36 @@ and still fails every ``err ≤ τ`` comparison.
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Tuple
+from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.configs.base import DiffusionConfig, ModelConfig, SpeCaConfig
 from repro.core import lane_step as LS
-from repro.diffusion.pipeline import latent_shape, make_stepper
+from repro.diffusion.pipeline import (latent_shape, make_stepper,
+                                      null_cond_like)
 
 # Backwards-compatible aliases (the canonical home is lane_step).
 _verify_layer = LS.verify_layer
 _num_tokens = LS.num_tokens
+
+
+def _interleave_cond(cfg: ModelConfig, cond: Dict[str, Any],
+                     null_cond: Optional[Dict[str, Any]],
+                     batch: int) -> Dict[str, Any]:
+    """Pack cond/uncond rows into the (2k, 2k+1) lane-pair layout."""
+    ncond = null_cond if null_cond is not None \
+        else null_cond_like(cfg, cond)
+    out: Dict[str, Any] = {}
+    for k, v in cond.items():
+        c = jnp.broadcast_to(jnp.asarray(v),
+                             (batch,) + jnp.shape(v)[1:])
+        u = jnp.broadcast_to(jnp.asarray(ncond[k]),
+                             (batch,) + jnp.shape(ncond[k])[1:])
+        out[k] = jnp.stack([c, u], axis=1).reshape((2 * batch,)
+                                                   + c.shape[1:])
+    return out
 
 
 def speca_sample(cfg: ModelConfig, params: Dict[str, Any],
@@ -53,21 +77,49 @@ def speca_sample(cfg: ModelConfig, params: Dict[str, Any],
                  cond: Dict[str, Any], batch: int, *,
                  draft_mode: str = "taylor",
                  accept_mode: str = "batch",
+                 guidance_scale: Optional[float] = None,
+                 null_cond: Optional[Dict[str, Any]] = None,
                  collect_trajectory: bool = False,
                  use_flash: bool = False
                  ) -> Tuple[jnp.ndarray, Dict[str, Any]]:
-    """Run SpeCa-accelerated sampling. Returns (x0, stats)."""
+    """Run SpeCa-accelerated sampling. Returns (x0, stats).
+
+    ``guidance_scale`` switches on classifier-free guidance: every
+    sample occupies a lane *pair* (cond stream at lane 2k, uncond at
+    2k+1 — conditioning derived via
+    ``repro.diffusion.pipeline.null_cond_like`` unless ``null_cond``
+    overrides it), both streams forecast and verify in the same
+    dispatch, the verify residual is the guided combination
+    ``u + s·(c − u)`` at the verify layer, and one accept decision per
+    pair keeps the two streams' anchors in lock-step (see
+    ``docs/cfg.md``). Returned latents and per-sample stats are indexed
+    by SAMPLE (the lane pairs are folded away); with guidance the noise
+    drawn for sample k seeds both of its lanes, so a guided run is
+    seed-comparable to the unguided and two-pass-reference runs.
+    """
     if accept_mode not in LS.ACCEPT_MODES:
         raise ValueError(f"unknown accept_mode {accept_mode!r}")
+    guided = guidance_scale is not None
     stepper = make_stepper(dcfg)
     S = stepper.num_steps
-    step = LS.build_lane_step(cfg, params, dcfg, scfg, lanes=batch,
+    lanes = 2 * batch if guided else batch
+    step = LS.build_lane_step(cfg, params, dcfg, scfg, lanes=lanes,
                               draft_mode=draft_mode,
                               accept_mode=accept_mode,
-                              verify_backend="jnp", use_flash=use_flash)
+                              verify_backend="jnp", use_flash=use_flash,
+                              guidance=guided)
     x = jax.random.normal(key, latent_shape(cfg, dcfg, batch), jnp.float32)
-    state = LS.init_lane_state(cfg, dcfg, scfg, batch, cond, x=x,
-                               active=True)
+    if guided:
+        lane_cond = _interleave_cond(cfg, cond, null_cond, batch)
+        # both lanes of a pair share the sample's latent trajectory
+        lane_x = jnp.repeat(x, 2, axis=0)
+    else:
+        lane_cond, lane_x = cond, x
+    state = LS.init_lane_state(cfg, dcfg, scfg, lanes, lane_cond,
+                               x=lane_x, active=True, guidance=guided)
+    if guided:
+        state["gscale"] = jnp.full((lanes,), float(guidance_scale),
+                                   jnp.float32)
 
     def body(state, _):
         state, flags = step(state)
@@ -86,6 +138,16 @@ def speca_sample(cfg: ModelConfig, params: Dict[str, Any],
         return state, ys
 
     state, ys = jax.lax.scan(body, state, None, length=S)
+    x_out = state["x"]
+    if guided:
+        # fold the lane pairs back to samples: flags are pair-equal by
+        # construction (one decision per pair), so the cond lanes carry
+        # every per-sample statistic; x is pair-equal too.
+        for k in ("accept_b", "accepted", "err"):
+            ys[k] = ys[k][:, 0::2]
+        if collect_trajectory:
+            ys["x"] = ys["x"][:, 0::2]
+        x_out = x_out[0::2]
     # "spec step" = no full forward ran: all lanes accepted. In batch mode
     # the combiner makes accepts all-or-none, so this is the seed's scalar
     # accept; in per_sample mode it is the all-accept tick indicator.
@@ -109,4 +171,4 @@ def speca_sample(cfg: ModelConfig, params: Dict[str, Any],
     }
     if collect_trajectory:
         stats["trajectory"] = ys["x"]
-    return state["x"], stats
+    return x_out, stats

@@ -70,17 +70,74 @@ def model_inputs(cfg: ModelConfig, x: jnp.ndarray, t_model: jnp.ndarray,
     return inputs
 
 
+def null_cond_like(cfg: ModelConfig, cond: Dict[str, Any]
+                   ) -> Dict[str, Any]:
+    """The unconditional counterpart of a conditioning dict (CFG ∅).
+
+    Class labels map to the null class — the label-embedding table is
+    allocated with ``num_classes + 1`` rows and its LAST row is the CFG
+    null embedding (``repro.layers.embeddings.label_embed``) — and
+    continuous conditioning (``cond``/text-embed stubs) zeros out.
+    Shapes and dtypes are preserved key by key.
+    """
+    out: Dict[str, Any] = {}
+    for k, v in cond.items():
+        v = jnp.asarray(v)
+        if k == "labels":
+            out[k] = jnp.full(v.shape, cfg.num_classes, v.dtype)
+        else:
+            out[k] = jnp.zeros_like(v)
+    return out
+
+
+def guided_output(out_c: jnp.ndarray, out_u: jnp.ndarray,
+                  guidance_scale) -> jnp.ndarray:
+    """Classifier-free guidance combination ``u + s·(c − u)``.
+
+    ``s = 1`` recovers the conditional model; ``s > 1`` extrapolates
+    away from the unconditional stream. The definition shared by the
+    two-pass reference below and the paired-lane serving path
+    (``repro.core.lane_step`` guidance mode delegates here). The fused
+    pair-verify kernel wrapper (``kernels.ops.verify_accept_pairs``)
+    necessarily re-states the same two lines next to its reduction —
+    change the combination in BOTH places or the verifier will bound a
+    different quantity than the sampler consumes.
+    """
+    s = jnp.asarray(guidance_scale, jnp.float32)
+    s = s.reshape(s.shape + (1,) * (out_c.ndim - s.ndim))
+    return out_u + s * (out_c - out_u)
+
+
 def sample_full(cfg: ModelConfig, params: Dict[str, Any],
                 dcfg: DiffusionConfig, key, cond: Dict[str, Any],
                 batch: int, *, collect_trajectory: bool = False,
-                use_flash: bool = False):
-    """Reference sampler: full forward at every step (1.00× baseline)."""
+                use_flash: bool = False,
+                guidance_scale: Optional[float] = None,
+                null_cond: Optional[Dict[str, Any]] = None):
+    """Reference sampler: full forward at every step (1.00× baseline).
+
+    ``guidance_scale`` switches on classic two-pass classifier-free
+    guidance: every step runs the denoiser twice — once on ``cond``,
+    once on ``null_cond`` (derived via :func:`null_cond_like` when not
+    given) — and advances on ``u + s·(c − u)``. This is the unaccelerated
+    oracle the paired-lane CFG serving mode is verified against
+    (``tests/test_serving_cfg.py``, ``docs/cfg.md``).
+    """
     stepper = make_stepper(dcfg)
     x = jax.random.normal(key, latent_shape(cfg, dcfg, batch), jnp.float32)
+    ncond = None
+    if guidance_scale is not None:
+        ncond = null_cond if null_cond is not None \
+            else null_cond_like(cfg, cond)
 
     def body(x, s):
         inputs = model_inputs(cfg, x, stepper.t_model[s], cond)
         out, _ = M.dit_forward(cfg, params, inputs, use_flash=use_flash)
+        if guidance_scale is not None:
+            out_u, _ = M.dit_forward(
+                cfg, params, model_inputs(cfg, x, stepper.t_model[s],
+                                          ncond), use_flash=use_flash)
+            out = guided_output(out, out_u, guidance_scale)
         x_next = stepper.advance(x, out, s)
         ys = x_next if collect_trajectory else jnp.zeros((), jnp.float32)
         return x_next, ys

@@ -4,6 +4,23 @@ On CPU (this container) the kernels execute in ``interpret=True`` mode —
 the kernel body runs as traced Python for correctness validation; on a TPU
 backend the same calls compile to Mosaic. ``REPRO_FORCE_INTERPRET=0`` can
 force compiled mode for real-TPU runs.
+
+Exported surface (each documented on its function):
+
+  * ``taylor_predict`` / ``taylor_update`` — scalar-anchor table ops
+    (whole-batch anchors, the reproduction sampler's degenerate case).
+  * ``taylor_predict_lanes`` / ``taylor_update_lanes`` — the serving hot
+    path: per-lane weight columns and the lane-masked recursive refresh,
+    one pass over the (m+1, L, 2, W, T, D) difference table.
+  * ``verify_error`` / ``verify_accept`` — per-lane rel-L2 (eq. 4) and
+    the fused sums+threshold verification.
+  * ``verify_accept_pairs`` — CFG serving: guided residual
+    ``u + s·(c − u)`` per cond/uncond lane pair and ONE τ comparison per
+    pair (see ``repro.core.lane_step`` guidance mode / ``docs/cfg.md``).
+  * ``*_sharded`` — ``shard_map`` routings of the above for lane-sharded
+    serving meshes (``pallas_call`` is opaque to the SPMD partitioner).
+  * ``flash_attention`` — fused attention used by the backbone when
+    ``use_flash=True``.
 """
 from __future__ import annotations
 
@@ -172,6 +189,41 @@ def verify_accept(pred: jnp.ndarray, ref_: jnp.ndarray, tau: jnp.ndarray, *,
     return out[:, 2], out[:, 3] > 0.0
 
 
+@functools.partial(jax.jit, static_argnames=("eps", "block_c"))
+def verify_accept_pairs(pred: jnp.ndarray, ref_: jnp.ndarray,
+                        tau: jnp.ndarray, gscale: jnp.ndarray, *,
+                        eps: float = 1e-8, block_c: int = 1024):
+    """Pair-reduced fused verification (CFG serving path).
+
+    ``pred``/``ref_`` [W, ...] hold interleaved cond/uncond lane pairs
+    (cond at row 2k, uncond at 2k+1; W even). The guided residual
+    ``u + s·(c − u)`` is formed per pair for both operands and verified
+    through the same one-pass sums kernel as :func:`verify_accept` — ONE
+    τ comparison per pair. ``tau``/``gscale`` are per-PAIR [W/2].
+    Returns (err [W/2] f32, accept [W/2] bool).
+    """
+    W = pred.shape[0]
+    if W % 2 != 0:
+        raise ValueError(f"pair verification needs interleaved cond/"
+                         f"uncond lane pairs: got odd lane count {W}")
+    P = W // 2
+    p2 = pred.reshape(P, 2, -1).astype(jnp.float32)
+    r2 = ref_.reshape(P, 2, -1).astype(jnp.float32)
+    s = jnp.asarray(gscale, jnp.float32).reshape(P, 1)
+    # the CFG combination, restated from pipeline.guided_output (kernels
+    # must not import the diffusion layer) — keep the two in sync
+    pg = p2[:, 1] + s * (p2[:, 0] - p2[:, 1])
+    rg = r2[:, 1] + s * (r2[:, 0] - r2[:, 1])
+    pg = _pad_to(pg, 1, 128)
+    rg = _pad_to(rg, 1, 128)
+    bc = min(block_c, pg.shape[1])
+    while pg.shape[1] % bc:
+        bc //= 2
+    out = _ve.verify_sums(pg, rg, tau=jnp.asarray(tau, jnp.float32),
+                          eps=eps, block_c=bc, interpret=_interpret())
+    return out[:, 2], out[:, 3] > 0.0
+
+
 # ---------------------------------------------------------------------------
 # Mesh-sharded lane wrappers
 # ---------------------------------------------------------------------------
@@ -244,6 +296,31 @@ def verify_accept_sharded(pred: jnp.ndarray, ref_: jnp.ndarray,
     fn = functools.partial(verify_accept, eps=eps, block_c=block_c)
     return _shard_map(fn, mesh, (pspec, pspec, lspec),
                       (lspec, lspec))(pred, ref_, tau)
+
+
+def verify_accept_pairs_sharded(pred: jnp.ndarray, ref_: jnp.ndarray,
+                                tau: jnp.ndarray, gscale: jnp.ndarray, *,
+                                mesh, axis_name: str = "data",
+                                eps: float = 1e-8, block_c: int = 1024):
+    """:func:`verify_accept_pairs` with the lane axis sharded.
+
+    pred/ref [W, ...] (lanes over ``axis_name``), tau/gscale [W/2]
+    (pairs over ``axis_name``) -> (err [W/2], accept [W/2]),
+    pair-sharded. Requires W to be a multiple of ``2·D`` — the engine's
+    guided width rounding guarantees it — so each shard holds whole
+    cond/uncond pairs and the guided combination plus each pair's
+    reduction is shard-local, with zero cross-device traffic."""
+    from repro.sharding.specs import lane_shard_count
+    D = lane_shard_count(mesh, axis_name)
+    if pred.shape[0] % (2 * D) != 0:
+        raise ValueError(
+            f"lane count {pred.shape[0]} must be a multiple of 2·D={2*D} "
+            "so cond/uncond pairs never straddle a shard boundary")
+    pair_spec = _lane_p(1, 0, axis_name)
+    pspec = _lane_p(pred.ndim, 0, axis_name)
+    fn = functools.partial(verify_accept_pairs, eps=eps, block_c=block_c)
+    return _shard_map(fn, mesh, (pspec, pspec, pair_spec, pair_spec),
+                      (pair_spec, pair_spec))(pred, ref_, tau, gscale)
 
 
 @functools.partial(jax.jit,

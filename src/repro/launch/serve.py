@@ -4,12 +4,17 @@ Usage:
   python -m repro.launch.serve --mode diffusion --requests 6 --lanes 4
   python -m repro.launch.serve --mode diffusion --requests 8 --lanes 8 \
       --mesh 2
+  python -m repro.launch.serve --mode diffusion --requests 6 --lanes 4 \
+      --guidance-scale 4.0
 
 ``--lanes N`` (N>1) serves through the per-lane adaptive batched scheduler
 (docs/serving.md); ``--lanes 1`` keeps the sequential batch=1 loop.
 ``--mesh D`` shards the lane axis over a D-device ``('data',)`` mesh (one
 engine, W×D lanes); on a CPU host with fewer than D devices the launcher
 forces D host devices via XLA_FLAGS before the first jax import.
+``--guidance-scale S`` (S>0) serves under classifier-free guidance: each
+request occupies a cond/uncond lane pair with one verify decision per
+pair (docs/cfg.md); the lane width rounds to a multiple of 2×D.
 """
 from __future__ import annotations
 
@@ -39,15 +44,19 @@ def serve_diffusion(args) -> None:
                           verbose=False)
     scfg = SpeCaConfig(taylor_order=2, max_draft=8, tau0=args.tau0, beta=0.9)
     mesh = make_lane_mesh(args.mesh) if args.mesh > 1 else None
+    guided = args.guidance_scale > 0
     engine = SpeCaEngine(cfg, out["state"]["params"], dcfg, scfg,
-                         accept_mode=args.accept_mode, mesh=mesh)
+                         accept_mode=args.accept_mode, guidance=guided,
+                         mesh=mesh)
+    gs = args.guidance_scale if guided else None
     reqs = [Request(request_id=i,
                     cond={"labels": jnp.asarray([i % cfg.num_classes])},
-                    seed=i)
+                    seed=i, guidance_scale=gs)
             for i in range(args.requests)]
     # warm at the served lane width so compile time stays out of req/s
+    streams = 2 if guided else 1
     engine.warmup({"labels": jnp.asarray([0])},
-                  lanes=min(args.lanes, args.requests))
+                  lanes=min(args.lanes, streams * args.requests))
     t0 = time.time()
     results = engine.serve(reqs, lanes=args.lanes)
     wall = time.time() - t0
@@ -55,12 +64,15 @@ def serve_diffusion(args) -> None:
         print(f"req {r.request_id}: full={r.num_full} spec={r.num_spec} "
               f"alpha={r.alpha:.2f}")
     mode = f"{args.lanes} lanes" if args.lanes > 1 else "batch=1"
+    if guided:
+        mode += f", cfg pairs s={args.guidance_scale}"
     if mesh is not None:
         mode += f" x {args.mesh} devices"
     print(f"served {len(reqs)} requests in {wall:.1f}s "
           f"({len(reqs)/wall:.2f} req/s, {mode})")
     n_tok = (dcfg.latent_size // cfg.patch_size) ** 2
-    print(allocation_report(results, forward_flops(cfg, n_tok)))
+    print(allocation_report(results,
+                            streams * forward_flops(cfg, n_tok)))
 
 
 def serve_lm(args) -> None:
@@ -121,6 +133,10 @@ def main() -> None:
                          "that many host devices via XLA_FLAGS")
     ap.add_argument("--accept-mode", default="per_sample",
                     choices=["per_sample", "batch"])
+    ap.add_argument("--guidance-scale", type=float, default=0.0,
+                    help="classifier-free guidance scale; >0 serves each "
+                         "request as a cond/uncond lane pair with one "
+                         "verify decision per pair (docs/cfg.md)")
     ap.add_argument("--steps", type=int, default=30)
     ap.add_argument("--tau0", type=float, default=0.4)
     ap.add_argument("--batch", type=int, default=2)

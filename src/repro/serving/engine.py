@@ -20,6 +20,24 @@ scheduler tick:
     scheduler immediately refills it from the request queue (continuous
     batching).
 
+Classifier-free guidance (``SpeCaEngine(..., guidance=True)``): a request
+occupies a lane *pair* — its conditional stream at lane ``2k``, its
+unconditional stream (``null_cond_like`` of its conditioning) at lane
+``2k+1``. Both streams draft, verify and refresh in the SAME dispatches;
+the verify residual is the guided combination ``u + s·(c − u)`` at the
+verify layer and ONE accept decision drives both lanes, so the pair's
+anchors never de-synchronize. Guided serving therefore doubles the
+effective batch (two streams per request) without doubling dispatches —
+and without doubling verify *decisions*, which is what keeps the pair's
+all-accept ticks as frequent as a single stream's (see ``docs/cfg.md``).
+
+Scheduler state dict (one entry per lane; see ``repro.core.lane_step``
+for the authoritative layout): ``x`` [W,…] latents · ``since``/``step``/
+``active`` [W] draft counter, denoising step, occupancy · ``cond``
+{k: [W,…]} conditioning rows · ``diffs`` [m+1, L, 2, W, T, D] TaylorSeer
+difference table · ``n_anchors``/``anchor_step``/``gap`` [W] anchor
+metadata · ``gscale`` [W] per-lane guidance scale (guided engines only).
+
 Host/device discipline: the step function needs NOTHING from the host to
 decide warm/draft/accept — all decision state lives on-device, and lane
 completion is host-predictable (an active lane advances exactly one
@@ -45,18 +63,36 @@ import numpy as np
 from repro.configs.base import DiffusionConfig, ModelConfig, SpeCaConfig
 from repro.core import lane_step as LS
 from repro.core.complexity import forward_flops, verify_flops
-from repro.diffusion.pipeline import latent_shape, make_stepper
+from repro.diffusion.pipeline import (latent_shape, make_stepper,
+                                      null_cond_like)
 
 
 @dataclasses.dataclass
 class Request:
+    """One serving request: conditioning + noise seed.
+
+    ``guidance_scale`` opts the request into classifier-free guidance —
+    it is only legal on an engine constructed with ``guidance=True``
+    (where ``None`` falls back to ``DiffusionConfig.guidance_scale``); a
+    plain engine rejects guided requests instead of silently serving the
+    conditional stream alone.
+    """
     request_id: int
     cond: Dict[str, Any]
     seed: int = 0
+    guidance_scale: Optional[float] = None
 
 
 @dataclasses.dataclass
 class Result:
+    """Per-request serving outcome and accounting.
+
+    On a guided engine every counter is per *decision*, not per lane:
+    the request's cond/uncond pair drafts, verifies and accepts as one
+    unit, so ``num_full + num_spec`` still sums to the schedule length
+    and ``alpha`` stays comparable with unguided serving. ``flops`` does
+    count both streams (a guided full forward is two denoiser rows).
+    """
     request_id: int
     sample: Any
     num_full: int
@@ -75,6 +111,7 @@ class Result:
 
     @property
     def alpha(self) -> float:
+        """Acceptance rate: fraction of steps served speculatively."""
         return self.num_spec / max(self.num_full + self.num_spec, 1)
 
 
@@ -101,12 +138,21 @@ class SpeCaEngine:
         FLOPs accounting are bit-identical to the unsharded engine;
         samples agree to f32 reduction-order tolerance
         (tests/test_serving_sharded.py).
+    guidance:
+      * ``True`` serves every request as a cond/uncond lane PAIR under
+        classifier-free guidance (``Request.guidance_scale``; the
+        unconditional stream's conditioning comes from ``null_cond`` or
+        per-request ``null_cond_like``). One verify decision per pair;
+        the lane width always rounds to a multiple of ``2·D`` so pairs
+        never straddle a shard boundary (``docs/cfg.md``).
     """
 
     def __init__(self, cfg: ModelConfig, params, dcfg: DiffusionConfig,
                  scfg: SpeCaConfig, *, draft_mode: str = "taylor",
                  accept_mode: str = "per_sample",
                  verify_backend: str = "fused",
+                 guidance: bool = False,
+                 null_cond: Optional[Dict[str, Any]] = None,
                  mesh: Optional[Any] = None):
         if accept_mode not in LS.ACCEPT_MODES:
             raise ValueError(f"unknown accept_mode {accept_mode!r}")
@@ -127,6 +173,11 @@ class SpeCaEngine:
             verify_backend = "jnp"
         self.verify_backend = verify_backend
         self.mesh = mesh
+        self.guidance = bool(guidance)
+        self.null_cond = null_cond
+        # lanes one request occupies: 1, or 2 for a guided cond/uncond
+        # pair — the per-dispatch stream multiplier in the accounting
+        self._streams = 2 if self.guidance else 1
         from repro.sharding.specs import lane_shard_count
         self._lane_shards = lane_shard_count(mesh)
         self._full_flops = forward_flops(cfg, self.n_tok)
@@ -134,33 +185,44 @@ class SpeCaEngine:
         self._lane_fns: Dict[int, Any] = {}
 
     def _lane_step(self, W: int):
+        """The jitted W-lane step (compiled once per lane width)."""
         if W not in self._lane_fns:
             self._lane_fns[W] = jax.jit(LS.build_lane_step(
                 self.cfg, self.params, self.dcfg, self.scfg, lanes=W,
                 draft_mode=self.draft_mode, accept_mode=self.accept_mode,
-                verify_backend=self.verify_backend, mesh=self.mesh))
+                verify_backend=self.verify_backend,
+                guidance=self.guidance, mesh=self.mesh))
         return self._lane_fns[W]
 
     def lane_width(self, lanes: int, n_requests: int) -> int:
         """Effective lane width the scheduler will actually serve at:
-        clamp to the request count, then round UP to a multiple of the
-        mesh's lane-shard count so every shard owns an equal lane block
-        (surplus lanes just stay inactive). Public — benchmarks label
-        their per-device-count rows with this."""
-        W = max(min(lanes, n_requests), 1)
-        D = self._lane_shards
-        return -(-W // D) * D
+        clamp to the request count (× streams-per-request), then round
+        UP to a multiple of ``streams × lane-shard count`` so every
+        shard owns an equal lane block and a guided cond/uncond pair
+        never straddles a shard boundary (surplus lanes just stay
+        inactive). Public — benchmarks label their per-device-count rows
+        with this."""
+        k = self._streams
+        W = max(min(lanes, k * n_requests), k)
+        mult = k * self._lane_shards
+        return -(-W // mult) * mult
 
     # --- batch=1 serving: the lanes=1 case of the scheduler --------------
     def run_request(self, req: Request) -> Result:
-        """Serve one request (the exact per-sample reference schedule)."""
-        return self.serve_batched([req], lanes=1)[0]
+        """Serve one request (the exact per-sample reference schedule) —
+        one lane, or one lane pair on a guided engine."""
+        return self.serve_batched([req], lanes=self._streams)[0]
 
     # --- host-side lane bookkeeping --------------------------------------
-    @staticmethod
-    def _fill_lane(state: Dict[str, Any], lane: int, req: Request,
-                   noise: jnp.ndarray) -> Dict[str, Any]:
-        """Reset one lane's slice for a fresh request (host-side)."""
+    def _fill_lane(self, state: Dict[str, Any], lane: int, req: Request,
+                   noise: jnp.ndarray, *,
+                   cond: Optional[Dict[str, Any]] = None
+                   ) -> Dict[str, Any]:
+        """Reset one lane's slice for a fresh request (host-side).
+        ``cond`` overrides the conditioning written to the lane — used
+        for the unconditional member of a guided pair; default is the
+        request's own conditioning."""
+        src = req.cond if cond is None else cond
         state = dict(state)
         state["x"] = state["x"].at[lane].set(noise[0])
         state["diffs"] = state["diffs"].at[:, :, :, lane].set(0.0)
@@ -170,8 +232,30 @@ class SpeCaEngine:
         state["since"] = state["since"].at[lane].set(0)
         state["step"] = state["step"].at[lane].set(0)
         state["active"] = state["active"].at[lane].set(True)
-        state["cond"] = {k: v.at[lane].set(req.cond[k][0])
+        state["cond"] = {k: v.at[lane].set(src[k][0])
                          for k, v in state["cond"].items()}
+        return state
+
+    def _request_gscale(self, req: Request) -> float:
+        """A guided request's scale (fallback: the diffusion config)."""
+        gs = req.guidance_scale
+        return float(self.dcfg.guidance_scale if gs is None else gs)
+
+    def _fill_slot(self, state: Dict[str, Any], slot: int, req: Request,
+                   noise: jnp.ndarray) -> Dict[str, Any]:
+        """Fill one scheduler slot: a single lane, or — on a guided
+        engine — the (cond, uncond) lane pair, both seeded with the SAME
+        noise (they share the request's latent trajectory) and the
+        request's guidance scale."""
+        lane0 = slot * self._streams
+        state = self._fill_lane(state, lane0, req, noise)
+        if self.guidance:
+            nc = self.null_cond if self.null_cond is not None \
+                else null_cond_like(self.cfg, req.cond)
+            state = self._fill_lane(state, lane0 + 1, req, noise, cond=nc)
+            gs = self._request_gscale(req)
+            state["gscale"] = state["gscale"] \
+                .at[lane0:lane0 + 2].set(gs)
         return state
 
     def serve_batched(self, requests: List[Request], *, lanes: int = 4,
@@ -197,22 +281,39 @@ class SpeCaEngine:
         counters; queued requests that never started come back
         ``completed=False`` with ``sample=None``. ``allocation_report``
         counts both as ``n_dropped``.
+
+        On a guided engine the scheduler works in *slots* of two lanes —
+        the request's cond/uncond pair — which fill, advance, complete
+        and drain together; all per-request accounting is per pair
+        decision (flags are pair-equal by the lane-step guarantee).
         """
         if not requests:
             return []
+        if not self.guidance:
+            bad = [r.request_id for r in requests
+                   if r.guidance_scale is not None]
+            if bad:
+                raise ValueError(
+                    f"requests {bad} carry guidance_scale but this "
+                    "engine was not constructed with guidance=True; a "
+                    "plain engine would silently serve only the "
+                    "conditional stream")
+        k = self._streams
         W = self.lane_width(lanes, len(requests))
+        n_slots = W // k
         step_fn = self._lane_step(W)
         S = self.stepper.num_steps
         # queue/results key on queue position, not request_id, so
         # duplicate ids still get their own Result (matching lanes=1)
         queue = list(enumerate(requests))
         state = LS.init_lane_state(self.cfg, self.dcfg, self.scfg, W,
-                                   requests[0].cond, mesh=self.mesh)
-        lane_req: List[Optional[Request]] = [None] * W
-        lane_idx = [-1] * W
-        lane_done = [0] * W          # host-tracked denoising step counter
-        lane_start = [0] * W         # tick at which the lane was filled
-        lane_t0 = [0.0] * W
+                                   requests[0].cond,
+                                   guidance=self.guidance, mesh=self.mesh)
+        slot_req: List[Optional[Request]] = [None] * n_slots
+        slot_idx = [-1] * n_slots
+        slot_done = [0] * n_slots    # host-tracked denoising step counter
+        slot_start = [0] * n_slots   # tick at which the slot was filled
+        slot_t0 = [0.0] * n_slots
         results: Dict[int, Result] = {}
         flag_log: List[Dict[str, Any]] = []   # device-side per-tick flags
         flag_np: Dict[int, Dict[str, np.ndarray]] = {}
@@ -220,79 +321,84 @@ class SpeCaEngine:
 
         def fetch(t: int) -> Dict[str, np.ndarray]:
             if t not in flag_np:
-                flag_np[t] = {k: np.asarray(v)
-                              for k, v in flag_log[t].items()
-                              if k in ("attempted", "accepted", "full")}
+                flag_np[t] = {k_: np.asarray(v)
+                              for k_, v in flag_log[t].items()
+                              if k_ in ("attempted", "accepted", "full")}
             return flag_np[t]
 
-        def harvest(lane: int, end_tick: int, completed: bool) -> Result:
-            """Materialise one lane's Result from its accumulated flags
+        def harvest(slot: int, end_tick: int, completed: bool) -> Result:
+            """Materialise one slot's Result from its accumulated flags
             (sample readback + flag fetch are the only device touches) —
             shared by the completion and the tick-budget drain paths so
-            partial and full accounting can never diverge."""
-            req = lane_req[lane]
+            partial and full accounting can never diverge. Flags are
+            read at the slot's first lane: on a guided engine the pair's
+            flags are equal, so this is the pair's single decision."""
+            req = slot_req[slot]
+            lane0 = slot * k
             accepts, n_att, n_full = [], 0, 0
-            for t in range(lane_start[lane], end_tick):
+            for t in range(slot_start[slot], end_tick):
                 f = fetch(t)
-                accepts.append(bool(f["accepted"][lane]))
-                n_att += int(f["attempted"][lane])
-                n_full += int(f["full"][lane])
+                accepts.append(bool(f["accepted"][lane0]))
+                n_att += int(f["attempted"][lane0])
+                n_full += int(f["full"][lane0])
             return Result(
                 request_id=req.request_id,
-                sample=jax.device_get(state["x"][lane:lane + 1]),
-                num_full=n_full, num_spec=lane_done[lane] - n_full,
-                flops=n_full * self._full_flops
-                + n_att * self._verify_flops,
-                wall_s=time.time() - lane_t0[lane],
+                sample=jax.device_get(state["x"][lane0:lane0 + 1]),
+                num_full=n_full, num_spec=slot_done[slot] - n_full,
+                flops=n_full * k * self._full_flops
+                + n_att * k * self._verify_flops,
+                wall_s=time.time() - slot_t0[slot],
                 accepts=accepts, completed=completed)
 
-        while queue or any(r is not None for r in lane_req):
+        while queue or any(r is not None for r in slot_req):
             if max_ticks is not None and tick >= max_ticks:
                 break
-            for lane in range(W):
-                if lane_req[lane] is None and queue:
+            for slot in range(n_slots):
+                if slot_req[slot] is None and queue:
                     idx, req = queue.pop(0)
                     noise = jax.random.normal(
                         jax.random.PRNGKey(req.seed),
                         latent_shape(self.cfg, self.dcfg, 1), jnp.float32)
-                    state = self._fill_lane(state, lane, req, noise)
-                    lane_req[lane] = req
-                    lane_idx[lane] = idx
-                    lane_done[lane] = 0
-                    lane_start[lane] = tick
-                    lane_t0[lane] = time.time()
+                    state = self._fill_slot(state, slot, req, noise)
+                    slot_req[slot] = req
+                    slot_idx[slot] = idx
+                    slot_done[slot] = 0
+                    slot_start[slot] = tick
+                    slot_t0[slot] = time.time()
             state, flags = step_fn(state)     # async — no host sync here
             flag_log.append(flags)
             tick += 1
-            for lane in range(W):
-                if lane_req[lane] is None:
+            for slot in range(n_slots):
+                if slot_req[slot] is None:
                     continue
-                lane_done[lane] += 1          # active lanes advance 1/tick
-                if lane_done[lane] < S:
+                slot_done[slot] += 1          # active slots advance 1/tick
+                if slot_done[slot] < S:
                     continue
                 # request complete: NOW touch the device (sample readback
-                # + this lane's accumulated flags)
-                results[lane_idx[lane]] = harvest(lane, tick,
+                # + this slot's accumulated flags)
+                results[slot_idx[slot]] = harvest(slot, tick,
                                                   completed=True)
-                lane_req[lane] = None
-                state["active"] = state["active"].at[lane].set(False)
-            # bound the flag log: ticks older than every active lane's
+                slot_req[slot] = None
+                lane0 = slot * k
+                state["active"] = state["active"] \
+                    .at[lane0:lane0 + k].set(False)
+            # bound the flag log: ticks older than every active slot's
             # start have been consumed
-            live = [lane_start[i] for i in range(W)
-                    if lane_req[i] is not None]
+            live = [slot_start[i] for i in range(n_slots)
+                    if slot_req[i] is not None]
             horizon = min(live) if live else tick
             for t in [t for t in flag_np if t < horizon]:
                 flag_np.pop(t)
                 flag_log[t] = None            # keep indices stable
-        # tick-budget shutdown: drain in-flight lanes as UNFINISHED —
+        # tick-budget shutdown: drain in-flight slots as UNFINISHED —
         # partial counters, completed=False — and mark never-started
         # queue entries the same way, so allocation_report reports them
         # in n_dropped instead of counting them as served
-        for lane in range(W):
-            if lane_req[lane] is None:
+        for slot in range(n_slots):
+            if slot_req[slot] is None:
                 continue
-            results[lane_idx[lane]] = harvest(lane, tick, completed=False)
-            lane_req[lane] = None
+            results[slot_idx[slot]] = harvest(slot, tick, completed=False)
+            slot_req[slot] = None
         for idx, req in queue:
             results[idx] = Result(request_id=req.request_id, sample=None,
                                   num_full=0, num_spec=0, flops=0.0,
@@ -301,25 +407,28 @@ class SpeCaEngine:
 
     def serve(self, requests: List[Request], *, lanes: int = 1,
               max_ticks: Optional[int] = None) -> List[Result]:
-        """Effective width <= 1: sequential batch=1 loop; else the lane
-        scheduler (width is clamped to the request count, so a single
-        request always takes the reference path). A tick budget
-        (``max_ticks``) always routes through the scheduler — the
-        sequential loop has no drain semantics."""
-        if max_ticks is None and min(lanes, len(requests)) <= 1:
+        """Effective width <= one request's lanes: sequential batch=1
+        loop; else the lane scheduler (width is clamped to the request
+        count, so a single request always takes the reference path). A
+        tick budget (``max_ticks``) always routes through the scheduler
+        — the sequential loop has no drain semantics."""
+        k = self._streams
+        if max_ticks is None and min(lanes, k * len(requests)) <= k:
             return [self.run_request(r) for r in requests]
         return self.serve_batched(requests, lanes=max(lanes, 1),
                                   max_ticks=max_ticks)
 
     def warmup(self, cond: Dict[str, Any], *, lanes: int = 1) -> None:
         """Compile the serving step for ``lanes`` outside any timed window
-        by serving that many dummy requests end-to-end (this also warms
-        the host loop and both lax.cond branches). ``cond`` is a
-        conditioning template with leading axis 1; the lane step compiles
-        per lane width, so warm at the width — ``min(lanes, n_requests)``
-        — the real serve will use."""
+        by serving enough dummy requests end-to-end to fill that width
+        (this also warms the host loop and both lax.cond branches).
+        ``cond`` is a conditioning template with leading axis 1; the lane
+        step compiles per lane width, so warm at the width the real serve
+        will use. On a guided engine each dummy request fills a lane
+        pair."""
+        n = max(-(-max(lanes, 1) // self._streams), 1)
         reqs = [Request(request_id=-1 - i, cond=cond, seed=90_000 + i)
-                for i in range(max(lanes, 1))]
+                for i in range(n)]
         self.serve(reqs, lanes=lanes)
 
 
@@ -329,6 +438,10 @@ def allocation_report(results: List[Result],
 
     Splits requests at the median acceptance rate into easy/hard buckets
     and reports the realised FLOPs speedup of each bucket vs always-full.
+    ``full_flops_per_step`` is the always-full cost of ONE schedule step
+    — for results from a guided engine pass ``2 × forward_flops`` (a CFG
+    step is two denoiser rows), matching ``Result.flops`` which counts
+    both streams.
     Requests the engine did not finish — lanes drained mid-flight at a
     tick-budget shutdown, or queue entries that never started
     (``completed=False``) — and requests with non-finite accounting

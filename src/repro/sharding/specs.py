@@ -218,15 +218,25 @@ def replicated(mesh: Mesh) -> NamedSharding:
 # holds 1/D of the table per device and the refill path (host-side
 # ``.at[lane].set``) is a lane-local dynamic-update-slice that the SPMD
 # partitioner serves from the owning shard — the table is never gathered.
+#
+# CFG pair rule: in guidance mode one request occupies the lane PAIR
+# (2k, 2k+1) — cond and uncond streams. The guided combination
+# ``u + s·(c − u)`` and the pair-reduced verify are cross-lane ops
+# *within* a pair, so a pair must never straddle a shard boundary: the
+# lane width always rounds up to a multiple of ``2·D``
+# (``lane_width_multiple(mesh, streams=2)``), making every pair-fold a
+# shard-local reshape with zero cross-device traffic.
 
 LANE_AXIS = "data"
 
 # lane-state key -> lane-axis position (post-leading-dim for ``diffs``,
 # where axis 0 is the m+1 difference-order axis and the lane lives at
-# position 3 of the (L, 2, W, T, D) feature layout).
+# position 3 of the (L, 2, W, T, D) feature layout). ``gscale`` is the
+# per-lane guidance scale (guidance mode only; pair-equal by invariant).
 LANE_STATE_AXES = {
     "x": 0, "since": 0, "step": 0, "active": 0,
     "diffs": 3, "n_anchors": 0, "anchor_step": 0, "gap": 0,
+    "gscale": 0,
 }
 
 
@@ -267,3 +277,15 @@ def lane_shard_count(mesh: Optional[Mesh], axis=LANE_AXIS) -> int:
     if mesh is None:
         return 1
     return _axis_size(mesh, axis)
+
+
+def lane_width_multiple(mesh: Optional[Mesh], *, streams: int = 1,
+                        axis=LANE_AXIS) -> int:
+    """The serving lane width must be a multiple of this.
+
+    ``streams`` is the number of lanes one request occupies: 1 for plain
+    serving, 2 for CFG pairs (cond + uncond). The width rounds to
+    ``streams × D`` so every shard owns an equal lane block AND no
+    request's lane group straddles a shard boundary (the CFG pair rule
+    above)."""
+    return streams * lane_shard_count(mesh, axis)

@@ -123,6 +123,60 @@ def test_allocation_report_guards_nonfinite_results():
     assert allocation_report([], 1e9) == {}
 
 
+def test_allocation_report_mixed_completed_dropped_never_started():
+    """The mixed shutdown case, unit-tested directly on Result objects
+    (previously only exercised implicitly via serve_batched(max_ticks=)):
+    completed requests feed the buckets; drained-in-flight requests
+    (partial counters, completed=False) and never-started queue entries
+    (no sample, zero counters) are BOTH excluded and counted in
+    n_dropped — and the bucket statistics equal those of the completed
+    subset alone."""
+    from repro.serving import Result, allocation_report
+
+    completed = [Result(request_id=i, sample=object(), num_full=8 - i,
+                        num_spec=2 + i, flops=(8 - i) * 1e9 + 6 * 1e7,
+                        wall_s=1.0)
+                 for i in range(4)]
+    drained = [Result(request_id=10, sample=object(), num_full=3,
+                      num_spec=2, flops=3e9, wall_s=0.5,
+                      accepts=[False, True, False, True, True],
+                      completed=False)]
+    never_started = [Result(request_id=11, sample=None, num_full=0,
+                            num_spec=0, flops=0.0, wall_s=0.0,
+                            accepts=[], completed=False)]
+    mixed = completed + drained + never_started
+    rep = allocation_report(mixed, 1e9)
+    assert rep["n_requests"] == 4
+    assert rep["n_dropped"] == 2
+    # dropped requests must not shift any bucket statistic
+    rep_only = allocation_report(completed, 1e9)
+    for k, v in rep_only.items():
+        if k != "n_dropped":
+            assert rep[k] == v, k
+    assert rep_only["n_dropped"] == 0
+    # ordering-independence: dropped entries interleaved anywhere
+    shuffled = [mixed[4], mixed[0], mixed[5], mixed[1], mixed[2], mixed[3]]
+    assert allocation_report(shuffled, 1e9) == rep
+
+    # all-dropped degrades to the explicit empty-but-counted report
+    assert allocation_report(drained + never_started, 1e9) == \
+        {"n_requests": 0, "n_dropped": 2}
+
+
+def test_allocation_report_alpha_of_partial_results():
+    """A drained request's alpha uses its PARTIAL schedule — the report
+    excludes it, but the Result itself stays well-defined (no division
+    by the full schedule length it never reached)."""
+    from repro.serving import Result
+
+    r = Result(request_id=0, sample=None, num_full=3, num_spec=1,
+               flops=3e9, wall_s=0.1, completed=False)
+    assert r.alpha == 0.25
+    empty = Result(request_id=1, sample=None, num_full=0, num_spec=0,
+                   flops=0.0, wall_s=0.0, completed=False)
+    assert empty.alpha == 0.0
+
+
 def test_speca_config_verify_layer_wraps():
     from repro.core.speca import _verify_layer
     cfg = get_config("dit-xl2")

@@ -1,0 +1,522 @@
+"""CFG serving: packed cond/uncond lane pairs with a single verify
+decision (ISSUE 4 acceptance).
+
+The load-bearing property: a paired-lane CFG run — sampler or engine —
+reproduces a REFERENCE TWO-PASS CFG SpeCa sampler (the denoiser run twice
+per step, once conditional and once unconditional, each stream with its
+own TaylorSeer table, verification on the guided residual ``u + s·(c−u)``
+with one decision per sample). Accept/reject sequences must be identical;
+latents match to the documented ulp boundary — the paired path evaluates
+both streams in ONE 2B-batch forward where the two-pass oracle runs two
+B-batch forwards, and XLA CPU picks gemm micro-kernels by batch shape
+(the same f32 reduction-order boundary as the PR-2 kernel/tensordot and
+PR-3 shard-local-batch notes; ≤2e-5 on these configs).
+
+Pair coherence is the structural invariant that makes one decision per
+pair *required*: if cond and uncond verified independently, one stream
+could re-anchor while the other drafted on, desynchronizing the anchors
+the guided combination assumes aligned. The property test drives the
+guided lane step from randomized pair-coherent states and asserts the
+pair never splits (flags, since, x, anchor metadata all pair-equal).
+
+The multi-device runs (D∈{1,2}) live in a subprocess so XLA_FLAGS never
+leaks into this test process.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import DiffusionConfig, SpeCaConfig, get_config, reduced
+from repro.core import lane_step as LS
+from repro.core import taylor
+from repro.core.speca import speca_sample
+from repro.core.verify import relative_error, threshold_schedule
+from repro.diffusion.pipeline import (latent_shape, make_stepper,
+                                      model_inputs, null_cond_like,
+                                      sample_full)
+from repro.kernels import ops
+from repro.layers import model as M
+from repro.serving import Request, SpeCaEngine
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+ULP_BOUNDARY = 2e-5      # f32 reduction-order tolerance (module docstring)
+
+
+# ---------------------------------------------------------------------------
+# Reference two-pass CFG SpeCa sampler (the oracle)
+# ---------------------------------------------------------------------------
+
+def speca_sample_cfg_twopass(cfg, params, dcfg, scfg, key, cond, batch,
+                             guidance_scale):
+    """Two-pass CFG with SpeCa on each stream and ONE decision per sample.
+
+    Written independently of ``lane_step``: each denoising step runs the
+    backbone TWICE (a conditional pass and an unconditional pass, batch
+    B each), each stream keeps its own difference table, and the guided
+    residual at the verify layer drives a single per-sample accept that
+    gates BOTH streams (per-sample accept semantics). Returns
+    (x0, accept trajectory [S, B] bool, num_full [B]).
+    """
+    stepper = make_stepper(dcfg)
+    S = stepper.num_steps
+    vl = LS.verify_layer(cfg, scfg)
+    n_tok = LS.num_tokens(cfg, dcfg)
+    cmask = jnp.arange(cfg.num_layers) == vl
+    ncond = null_cond_like(cfg, cond)
+    s_gs = float(guidance_scale)
+
+    x = jax.random.normal(key, latent_shape(cfg, dcfg, batch), jnp.float32)
+    feat = taylor.feature_shape_for(cfg.num_layers, batch, n_tok,
+                                    cfg.d_model)
+    ts_c = taylor.init_state(scfg.taylor_order, feat,
+                             LS.table_dtype(cfg, scfg), lanes=batch)
+    ts_u = taylor.init_state(scfg.taylor_order, feat,
+                             LS.table_dtype(cfg, scfg), lanes=batch)
+    since = np.zeros((batch,), np.int32)
+
+    def fwd(x, s, c, preds=None):
+        inputs = model_inputs(cfg, x, stepper.t_model[s], c)
+        out, extras = M.dit_forward(
+            cfg, params, inputs, branch_preds=preds,
+            compute_mask=None if preds is None else cmask,
+            collect_branches=True)
+        return out.astype(jnp.float32), extras["branches"]
+
+    def guided(c, u):
+        c = c.astype(jnp.float32)
+        u = u.astype(jnp.float32)
+        return u + s_gs * (c - u)
+
+    accepts, fulls = [], np.zeros((batch,), np.int64)
+    for s in range(S):
+        warm = np.asarray(ts_c["n_anchors"]) > scfg.taylor_order
+        want = warm & (since < scfg.max_draft)
+        tau = float(threshold_schedule(stepper.t_frac[s], scfg.tau0,
+                                       scfg.beta))
+        if want.any():
+            preds_c = taylor.predict_lanes(ts_c, s)
+            preds_u = taylor.predict_lanes(ts_u, s)
+            spec_c, br_c = fwd(x, s, cond, preds_c)
+            spec_u, br_u = fwd(x, s, ncond, preds_u)
+            real_g = guided(br_c[vl][0] + br_c[vl][1],
+                            br_u[vl][0] + br_u[vl][1])
+            pred_g = guided(preds_c[vl][0] + preds_c[vl][1],
+                            preds_u[vl][0] + preds_u[vl][1])
+            err = np.asarray(relative_error(pred_g, real_g,
+                                            metric=scfg.error_metric,
+                                            eps=scfg.eps, batch_axis=0))
+            accept = want & (err <= tau)
+        else:
+            spec_c = spec_u = None
+            accept = np.zeros((batch,), bool)
+        if not accept.all():
+            full_c, br_c_full = fwd(x, s, cond)
+            full_u, br_u_full = fwd(x, s, ncond)
+            mask = jnp.asarray(~accept)
+            ts_c = taylor.update_lanes(ts_c, br_c_full, s, mask)
+            ts_u = taylor.update_lanes(ts_u, br_u_full, s, mask)
+            out_c = full_c if spec_c is None else \
+                jnp.where(jnp.asarray(accept).reshape(
+                    (batch,) + (1,) * (x.ndim - 1)), spec_c, full_c)
+            out_u = full_u if spec_u is None else \
+                jnp.where(jnp.asarray(accept).reshape(
+                    (batch,) + (1,) * (x.ndim - 1)), spec_u, full_u)
+        else:
+            out_c, out_u = spec_c, spec_u
+        x = stepper.advance(x, guided(out_c, out_u), s)
+        since = np.where(accept, since + 1, 0).astype(np.int32)
+        fulls += (~accept).astype(np.int64)
+        accepts.append(accept)
+    return x, np.stack(accepts), fulls
+
+
+@pytest.fixture(scope="module")
+def guided_engine(tiny_trained_dit):
+    cfg, dcfg, params = tiny_trained_dit
+    scfg = SpeCaConfig(taylor_order=2, max_draft=8, tau0=0.4, beta=0.9)
+    return SpeCaEngine(cfg, params, dcfg, scfg, guidance=True), scfg
+
+
+def _guided_requests(cfg, n, gs, offset=0):
+    return [Request(request_id=offset + i,
+                    cond={"labels": jnp.asarray([i % cfg.num_classes])},
+                    seed=offset + i, guidance_scale=gs)
+            for i in range(n)]
+
+
+# ---------------------------------------------------------------------------
+# Trajectory equivalence vs the two-pass oracle
+# ---------------------------------------------------------------------------
+
+def test_guided_sampler_matches_twopass_oracle(tiny_trained_dit):
+    """Paired-lane guided ``speca_sample``: accept sequences identical to
+    the two-pass reference, latents within the ulp boundary."""
+    cfg, dcfg, params = tiny_trained_dit
+    scfg = SpeCaConfig(taylor_order=2, max_draft=8, tau0=0.4, beta=0.9)
+    key = jax.random.PRNGKey(17)
+    cond = {"labels": jnp.asarray([1, 5])}
+    gs = 4.0
+    x_ref, acc_ref, fulls_ref = speca_sample_cfg_twopass(
+        cfg, params, dcfg, scfg, key, cond, 2, gs)
+    x, st = speca_sample(cfg, params, dcfg, scfg, key, cond, 2,
+                         guidance_scale=gs, accept_mode="per_sample")
+    assert np.asarray(st["accept_b"]).shape == acc_ref.shape
+    np.testing.assert_array_equal(np.asarray(st["accept_b"]), acc_ref)
+    assert np.abs(np.asarray(x, np.float64)
+                  - np.asarray(x_ref, np.float64)).max() <= ULP_BOUNDARY
+    # non-vacuous: the run actually speculated and rejected
+    assert acc_ref.any() and (fulls_ref > 0).all()
+
+
+def test_guided_engine_matches_twopass_oracle(tiny_trained_dit,
+                                              guided_engine):
+    """Engine pairs (fused pair-verify kernel) reproduce the oracle:
+    accept/reject sequences identical, num_full matching, samples within
+    the ulp boundary."""
+    cfg, dcfg, params = tiny_trained_dit
+    engine, scfg = guided_engine
+    gs = 4.0
+    reqs = _guided_requests(cfg, 2, gs, offset=300)
+    for req in reqs:
+        res = engine.run_request(req)
+        x_ref, acc_ref, fulls_ref = speca_sample_cfg_twopass(
+            cfg, params, dcfg, scfg, jax.random.PRNGKey(req.seed),
+            req.cond, 1, gs)
+        assert res.accepts == [bool(a) for a in acc_ref[:, 0]]
+        assert res.num_full == int(fulls_ref[0])
+        assert np.abs(np.asarray(res.sample, np.float64)
+                      - np.asarray(x_ref, np.float64)).max() \
+            <= ULP_BOUNDARY
+
+
+def test_guided_lane_packing_matches_independent_requests(tiny_trained_dit,
+                                                          guided_engine):
+    """K guided requests on 2 pair slots (with refill) == K independent
+    guided ``run_request`` calls: the scheduler changes packing, never
+    the pair semantics."""
+    cfg, dcfg, _ = tiny_trained_dit
+    engine, _ = guided_engine
+    reqs = _guided_requests(cfg, 3, 3.0, offset=320)
+    seq = [engine.run_request(r) for r in reqs]
+    lane = engine.serve_batched(reqs, lanes=4)
+    S = dcfg.num_inference_steps
+    for a, b in zip(seq, lane):
+        assert a.accepts == b.accepts
+        assert (a.num_full, a.num_spec) == (b.num_full, b.num_spec)
+        assert a.num_full + a.num_spec == S
+        assert a.flops == b.flops
+        np.testing.assert_allclose(np.asarray(b.sample),
+                                   np.asarray(a.sample),
+                                   rtol=1e-4, atol=1e-4)
+
+
+def test_guidance_scale_one_matches_unguided(tiny_trained_dit):
+    """``u + 1·(c − u) = c``: at s=1 the guided sampler follows the
+    conditional-only trajectory (equal accepts, latents to fp addition
+    round-off)."""
+    cfg, dcfg, params = tiny_trained_dit
+    scfg = SpeCaConfig(taylor_order=2, max_draft=8, tau0=0.4, beta=0.9)
+    key = jax.random.PRNGKey(23)
+    cond = {"labels": jnp.asarray([2, 6])}
+    x1, st1 = speca_sample(cfg, params, dcfg, scfg, key, cond, 2,
+                           guidance_scale=1.0, accept_mode="per_sample")
+    x0, st0 = speca_sample(cfg, params, dcfg, scfg, key, cond, 2,
+                           accept_mode="per_sample")
+    np.testing.assert_array_equal(np.asarray(st1["accept_b"]),
+                                  np.asarray(st0["accept_b"]))
+    np.testing.assert_allclose(np.asarray(x1), np.asarray(x0),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_cfg_sample_full_two_pass_reference(tiny_trained_dit):
+    """The unaccelerated CFG baseline: guided full sampling differs from
+    unguided (guidance actually steers) and s=1 recovers cond-only."""
+    cfg, dcfg, params = tiny_trained_dit
+    key = jax.random.PRNGKey(3)
+    cond = {"labels": jnp.asarray([4])}
+    x_g, _ = sample_full(cfg, params, dcfg, key, cond, 1,
+                         guidance_scale=4.0)
+    x_1, _ = sample_full(cfg, params, dcfg, key, cond, 1,
+                         guidance_scale=1.0)
+    x_c, _ = sample_full(cfg, params, dcfg, key, cond, 1)
+    assert np.isfinite(np.asarray(x_g)).all()
+    np.testing.assert_allclose(np.asarray(x_1), np.asarray(x_c),
+                               rtol=1e-5, atol=1e-5)
+    assert np.abs(np.asarray(x_g) - np.asarray(x_c)).max() > 1e-3
+
+
+# ---------------------------------------------------------------------------
+# Pair coherence (property test) + layout rules
+# ---------------------------------------------------------------------------
+
+def _pairwise(a):
+    return a.reshape((a.shape[0] // 2, 2) + a.shape[1:])
+
+
+_STEP_CACHE = {}
+
+
+def _guided_step(cfg, dcfg, params, tau0):
+    """Jitted guided 4-lane step, cached per tau0 (cfg/params come from
+    the session fixture, so tau0 is the only varying key)."""
+    if tau0 not in _STEP_CACHE:
+        scfg = SpeCaConfig(taylor_order=2, max_draft=4, tau0=tau0,
+                           beta=0.9)
+        _STEP_CACHE[tau0] = (scfg, jax.jit(LS.build_lane_step(
+            cfg, params, dcfg, scfg, lanes=4, accept_mode="per_sample",
+            verify_backend="fused", guidance=True)))
+    return _STEP_CACHE[tau0]
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2, 3, 4, 5])
+def test_pair_coherence_property(tiny_trained_dit, seed):
+    """Cond/uncond lanes of a pair always share since/accept state: from
+    any pair-coherent state — random activity, warmth, draft counters,
+    guidance scales per pair — every flag and every pair-shared state
+    vector comes out pair-equal, and the two streams' anchor metadata
+    stays in lock-step."""
+    cfg, dcfg, params = tiny_trained_dit
+    rng = np.random.RandomState(seed)
+    W = 4
+    scfg, step_fn = _guided_step(cfg, dcfg, params,
+                                 float(rng.choice([0.05, 0.4, 5.0])))
+    S = dcfg.num_inference_steps
+    state = LS.init_lane_state(cfg, dcfg, scfg, W,
+                               {"labels": jnp.asarray([0])},
+                               guidance=True)
+    key = jax.random.PRNGKey(seed)
+    # pair-coherent random state: per-PAIR draws broadcast to both lanes
+    pair = lambda v: np.repeat(v, 2)                      # noqa: E731
+    x_pair = jax.random.normal(key, (W // 2,) + state["x"].shape[1:],
+                               jnp.float32)
+    state["x"] = jnp.repeat(x_pair, 2, axis=0)
+    state["cond"] = {"labels": jnp.asarray(
+        rng.randint(0, cfg.num_classes + 1, size=W))}   # incl. null class
+    state["diffs"] = 0.1 * jax.random.normal(
+        jax.random.fold_in(key, 1), state["diffs"].shape).astype(
+            state["diffs"].dtype)
+    state["active"] = jnp.asarray(pair(rng.rand(W // 2) < 0.8), bool)
+    state["n_anchors"] = jnp.asarray(pair(rng.randint(0, 6, W // 2)),
+                                     jnp.int32)
+    state["since"] = jnp.asarray(pair(rng.randint(0, 5, W // 2)),
+                                 jnp.int32)
+    state["step"] = jnp.asarray(pair(rng.randint(0, S, W // 2)),
+                                jnp.int32)
+    state["anchor_step"] = jnp.maximum(
+        state["step"] - 1 - state["since"], -1)
+    state["gscale"] = jnp.asarray(
+        pair(rng.uniform(0.0, 8.0, W // 2)), jnp.float32)
+
+    new, flags = jax.tree.map(np.asarray, step_fn(state))
+    for k in ("attempted", "ok", "accepted", "full", "tau"):
+        p = _pairwise(flags[k])
+        np.testing.assert_array_equal(p[:, 0], p[:, 1], err_msg=k)
+    # err is pair-equal too (NaN where the pair did not draft)
+    perr = _pairwise(flags["err"])
+    np.testing.assert_array_equal(np.isnan(perr[:, 0]),
+                                  np.isnan(perr[:, 1]))
+    att = _pairwise(flags["attempted"])[:, 0]
+    np.testing.assert_array_equal(perr[att, 0], perr[att, 1])
+    # pair-shared state stays pair-equal after the step
+    for k in ("since", "step", "active", "gscale"):
+        p = _pairwise(new[k])
+        np.testing.assert_array_equal(p[:, 0], p[:, 1], err_msg=k)
+    px = _pairwise(new["x"])
+    np.testing.assert_array_equal(px[:, 0], px[:, 1])
+    # the streams' anchor metadata advances in lock-step: one decision
+    # per pair refreshes both tables or neither
+    for k in ("n_anchors", "anchor_step", "gap"):
+        p = _pairwise(new[k])
+        np.testing.assert_array_equal(p[:, 0], p[:, 1], err_msg=k)
+
+
+def test_guided_lane_width_rounds_to_pair_multiple(tiny_trained_dit,
+                                                   guided_engine):
+    """Guided width rounding: multiples of 2 (pairs) and of 2·D on a
+    mesh, so a pair never straddles a shard boundary."""
+    engine, _ = guided_engine
+    assert engine.lane_width(1, 1) == 2          # one pair minimum
+    assert engine.lane_width(4, 100) == 4
+    assert engine.lane_width(3, 100) == 4        # round odd width up
+    assert engine.lane_width(8, 2) == 4          # clamp to 2 req × 2 lanes
+    engine._lane_shards = 2                      # as on a 2-device mesh
+    try:
+        assert engine.lane_width(4, 100) == 4
+        assert engine.lane_width(5, 100) == 8    # multiple of 2·D=4
+        assert engine.lane_width(2, 1) == 4
+    finally:
+        engine._lane_shards = 1
+
+
+def test_guided_validation_errors(tiny_trained_dit):
+    cfg, dcfg, params = tiny_trained_dit
+    scfg = SpeCaConfig(taylor_order=2)
+    with pytest.raises(ValueError, match="even"):
+        LS.build_lane_step(cfg, params, dcfg, scfg, lanes=3,
+                           guidance=True)
+    with pytest.raises(ValueError, match="even"):
+        LS.init_lane_state(cfg, dcfg, scfg, 3,
+                           {"labels": jnp.asarray([0])}, guidance=True)
+
+
+def test_guided_state_has_sharded_gscale(tiny_trained_dit):
+    """The gscale vector follows the lane-axis partition rules."""
+    from repro.launch.mesh import make_lane_mesh
+    from repro.sharding import specs as SH
+
+    cfg, dcfg, _ = tiny_trained_dit
+    scfg = SpeCaConfig(taylor_order=2)
+    mesh = make_lane_mesh(1)
+    state = LS.init_lane_state(cfg, dcfg, scfg, 4,
+                               {"labels": jnp.asarray([0])},
+                               guidance=True, mesh=mesh)
+    P = jax.sharding.PartitionSpec
+    assert state["gscale"].sharding.spec == P("data")
+    assert SH.lane_width_multiple(mesh, streams=2) == 2
+    assert SH.lane_width_multiple(None, streams=2) == 2
+    assert SH.lane_width_multiple(None) == 1
+
+
+# ---------------------------------------------------------------------------
+# Pair-reduced verify kernel
+# ---------------------------------------------------------------------------
+
+def test_verify_accept_pairs_matches_oracle():
+    """The fused pair kernel == guided combine in f32 + per-pair rel-L2,
+    with one τ comparison per pair."""
+    key = jax.random.PRNGKey(0)
+    W, F = 6, 300
+    pred = jax.random.normal(key, (W, F), jnp.float32)
+    ref = pred + 0.05 * jax.random.normal(jax.random.fold_in(key, 1),
+                                          (W, F))
+    gs = jnp.asarray([1.0, 4.0, 7.5])
+    tau = jnp.asarray([0.01, 0.1, 10.0])
+    err, acc = ops.verify_accept_pairs(pred, ref, tau, gs)
+    p2, r2 = pred.reshape(3, 2, F), ref.reshape(3, 2, F)
+    s = gs.reshape(3, 1)
+    pg = p2[:, 1] + s * (p2[:, 0] - p2[:, 1])
+    rg = r2[:, 1] + s * (r2[:, 0] - r2[:, 1])
+    want = np.asarray(relative_error(pg, rg, batch_axis=0))
+    np.testing.assert_allclose(np.asarray(err), want, rtol=1e-6)
+    np.testing.assert_array_equal(np.asarray(acc),
+                                  want <= np.asarray(tau))
+
+
+def test_verify_accept_pairs_sharded_one_device_bitwise():
+    from repro.launch.mesh import make_lane_mesh
+
+    mesh = make_lane_mesh(1)
+    key = jax.random.PRNGKey(2)
+    pred = jax.random.normal(key, (4, 256), jnp.float32)
+    ref = pred + 0.02 * jax.random.normal(jax.random.fold_in(key, 1),
+                                          (4, 256))
+    gs = jnp.asarray([2.0, 5.0])
+    tau = jnp.asarray([0.05, 0.5])
+    ge, ga = ops.verify_accept_pairs_sharded(pred, ref, tau, gs, mesh=mesh)
+    we, wa = ops.verify_accept_pairs(pred, ref, tau, gs)
+    np.testing.assert_array_equal(np.asarray(ge), np.asarray(we))
+    np.testing.assert_array_equal(np.asarray(ga), np.asarray(wa))
+    with pytest.raises(ValueError, match="2·D"):
+        ops.verify_accept_pairs_sharded(pred[:1], ref[:1], tau[:1],
+                                        gs[:1], mesh=mesh)
+
+
+# ---------------------------------------------------------------------------
+# Subprocess: guided engine over D ∈ {1, 2} forced host devices
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_guided_engine_sharded_equivalence_subprocess():
+    """D∈{1,2} lane-sharded GUIDED engines reproduce the unsharded guided
+    engine exactly on accept/reject sequences, counters and FLOPs, with
+    samples bitwise at D=1 and within the ulp boundary at D=2; pairs
+    never straddle a shard (width rounds to 2·D); the pair-verify kernel
+    is bitwise under shard_map at D=2."""
+    code = textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
+        import dataclasses, json
+        import jax, numpy as np
+        import jax.numpy as jnp
+        from repro.configs import (DiffusionConfig, SpeCaConfig,
+                                   TrainConfig, get_config, reduced)
+        from repro.kernels import ops
+        from repro.launch.mesh import make_lane_mesh
+        from repro.serving import Request, SpeCaEngine
+        from repro.training.diffusion_trainer import train_diffusion
+
+        cfg = dataclasses.replace(reduced(get_config("dit-xl2")),
+                                  num_layers=2, d_model=64, d_ff=128,
+                                  num_heads=4, num_kv_heads=4,
+                                  num_classes=8)
+        dcfg = DiffusionConfig(num_inference_steps=10, latent_size=8,
+                               schedule="cosine")
+        out = train_diffusion(cfg, dcfg,
+                              TrainConfig(global_batch=8, steps=60,
+                                          lr=2e-3), verbose=False)
+        params = out["state"]["params"]
+        scfg = SpeCaConfig(taylor_order=2, max_draft=6, tau0=0.5,
+                           beta=0.9)
+        reqs = [Request(request_id=i,
+                        cond={"labels": jnp.asarray([i % 8])}, seed=i,
+                        guidance_scale=4.0)
+                for i in range(4)]
+
+        def signature(results):
+            return [[r.accepts, r.num_full, r.num_spec, r.flops]
+                    for r in results]
+
+        res = {}
+        ref_engine = SpeCaEngine(cfg, params, dcfg, scfg, guidance=True)
+        ref = ref_engine.serve_batched(reqs, lanes=4)
+        res["ref_accepts_total"] = int(sum(sum(r.accepts) for r in ref))
+        res["ref_fulls_total"] = int(sum(r.num_full for r in ref))
+        for D in (1, 2):
+            mesh = make_lane_mesh(D)
+            eng = SpeCaEngine(cfg, params, dcfg, scfg, guidance=True,
+                              mesh=mesh)
+            res[f"d{D}_width"] = eng.lane_width(4, len(reqs))
+            got = eng.serve_batched(reqs, lanes=4)
+            res[f"d{D}_sig_equal"] = signature(got) == signature(ref)
+            res[f"d{D}_sample_max_diff"] = float(max(
+                np.abs(np.asarray(a.sample, np.float64)
+                       - np.asarray(b.sample, np.float64)).max()
+                for a, b in zip(ref, got)))
+
+        # pair-verify kernel bitwise under shard_map at D=2
+        mesh2 = make_lane_mesh(2)
+        key = jax.random.PRNGKey(0)
+        pred = jax.random.normal(key, (4, 256), jnp.float32)
+        refp = pred + 0.02 * jax.random.normal(
+            jax.random.fold_in(key, 1), (4, 256))
+        gs = jnp.asarray([2.0, 5.0])
+        tau = jnp.asarray([0.05, 0.5])
+        ge, ga = ops.verify_accept_pairs_sharded(pred, refp, tau, gs,
+                                                 mesh=mesh2)
+        we, wa = ops.verify_accept_pairs(pred, refp, tau, gs)
+        res["kern_pairs_bitwise"] = bool(
+            np.array_equal(np.asarray(ge), np.asarray(we))
+            and np.array_equal(np.asarray(ga), np.asarray(wa)))
+        print(json.dumps(res))
+    """)
+    env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run([sys.executable, "-c", code], env=env,
+                         capture_output=True, text=True, timeout=560)
+    assert out.returncode == 0, out.stderr[-2000:]
+    import json
+    res = json.loads(out.stdout.strip().splitlines()[-1])
+    assert res["ref_accepts_total"] > 0          # non-vacuous
+    assert res["ref_fulls_total"] > 0
+    assert res["d1_width"] == 4 and res["d2_width"] == 4
+    for D in (1, 2):
+        assert res[f"d{D}_sig_equal"], (D, res)
+    assert res["d1_sample_max_diff"] == 0.0
+    assert res["d2_sample_max_diff"] <= ULP_BOUNDARY
+    assert res["kern_pairs_bitwise"]

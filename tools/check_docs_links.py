@@ -1,0 +1,134 @@
+#!/usr/bin/env python
+"""Docs CI gate: intra-repo markdown link integrity + README reachability.
+
+Checks, over every tracked ``*.md`` file in the repo:
+
+  1. every relative (intra-repo) markdown link ``[text](target)`` resolves
+     to an existing file or directory (external ``http(s)://``/``mailto:``
+     links and pure ``#fragment`` anchors are skipped);
+  2. every ``docs/*.md`` file is reachable from the top-level README.md by
+     following intra-repo markdown links (docs nobody can navigate to are
+     dead docs).
+
+Exit code 0 when clean; 1 with a per-failure report otherwise. Run from
+anywhere:  ``python tools/check_docs_links.py``  (CI runs it in the docs
+job next to ``pytest --collect-only``; ``tests/test_docs.py`` runs it in
+tier-1 too).
+"""
+from __future__ import annotations
+
+import os
+import re
+import sys
+from typing import Dict, List, Set
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+SKIP_DIRS = {".git", "__pycache__", "node_modules", ".pytest_cache",
+             "artifacts"}
+# quoted exemplar content from EXTERNAL repos — its relative links point
+# into those repos, not this one, and the file is reference material the
+# repo deliberately does not edit
+SKIP_FILES = {"SNIPPETS.md"}
+# [text](target) — target without surrounding whitespace; tolerates
+# titles ([x](y "title")) by cutting at the first space
+_LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
+
+
+def md_files(root: str = REPO) -> List[str]:
+    out = []
+    for dirpath, dirnames, filenames in os.walk(root):
+        dirnames[:] = [d for d in dirnames if d not in SKIP_DIRS]
+        for f in filenames:
+            if f.endswith(".md") and f not in SKIP_FILES:
+                out.append(os.path.join(dirpath, f))
+    return sorted(out)
+
+
+def extract_links(path: str) -> List[str]:
+    with open(path, encoding="utf-8") as f:
+        text = f.read()
+    # fenced code blocks may show example links; still check them — the
+    # repo's docs only put REAL paths in code fences (commands), and a
+    # dead example path is exactly the rot this gate exists to catch.
+    return _LINK_RE.findall(text)
+
+
+def is_external(target: str) -> bool:
+    return target.startswith(("http://", "https://", "mailto:")) \
+        or target.startswith("#")
+
+
+def resolve(path: str, target: str) -> str:
+    target = target.split("#", 1)[0]
+    if not target:
+        return path                       # pure-anchor link: self
+    base = REPO if target.startswith("/") else os.path.dirname(path)
+    return os.path.normpath(os.path.join(base, target.lstrip("/")))
+
+
+def check_links() -> List[str]:
+    """Broken intra-repo links, as ``file -> target`` report lines."""
+    failures = []
+    for path in md_files():
+        for target in extract_links(path):
+            if is_external(target):
+                continue
+            dest = resolve(path, target)
+            if not os.path.exists(dest):
+                failures.append(
+                    f"{os.path.relpath(path, REPO)}: broken link "
+                    f"-> {target}")
+    return failures
+
+
+def reachable_from_readme() -> Set[str]:
+    """All md files reachable from README.md via intra-repo md links."""
+    start = os.path.join(REPO, "README.md")
+    seen: Set[str] = set()
+    frontier = [start]
+    while frontier:
+        path = frontier.pop()
+        if path in seen or not os.path.exists(path):
+            continue
+        seen.add(path)
+        if not path.endswith(".md"):
+            continue
+        for target in extract_links(path):
+            if is_external(target):
+                continue
+            frontier.append(resolve(path, target))
+    return seen
+
+
+def check_docs_reachability() -> List[str]:
+    """Every docs/*.md must be reachable from the README."""
+    if not os.path.exists(os.path.join(REPO, "README.md")):
+        return ["README.md is missing (docs are unreachable by "
+                "definition)"]
+    seen = reachable_from_readme()
+    failures = []
+    docs_dir = os.path.join(REPO, "docs")
+    if os.path.isdir(docs_dir):
+        for f in sorted(os.listdir(docs_dir)):
+            full = os.path.join(docs_dir, f)
+            if f.endswith(".md") and full not in seen:
+                failures.append(f"docs/{f} is not reachable from "
+                                "README.md")
+    return failures
+
+
+def main() -> int:
+    failures = check_links() + check_docs_reachability()
+    if failures:
+        print(f"docs check FAILED ({len(failures)} problem(s)):")
+        for f in failures:
+            print(f"  {f}")
+        return 1
+    n = len(md_files())
+    print(f"docs check OK: {n} markdown files, all intra-repo links "
+          "resolve, all docs/*.md reachable from README.md")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
