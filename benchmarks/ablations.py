@@ -163,6 +163,52 @@ def speedup_model_check(batch=16):
     return rows
 
 
+def table10_bf16_tables(batch=16):
+    """Benchmark-scale bf16 difference-table study (ROADMAP item).
+
+    PR 3 pinned the reduced-scale accept-rate regression
+    (tests/test_taylor.py, delta ≤ 0.1, measured 0.0); this is the
+    benchmark-scale run the ROADMAP asks for before flipping the
+    default: the zoo DiT (4 layers, 50 steps) across the τ0 operating
+    range, f32 vs bf16 tables. Per τ0 the row records both alphas, the
+    |Δalpha| and both rel_devs — the artifact is the recorded decision
+    input (flip only if |Δalpha| ≤ 0.1 everywhere at scale; see
+    ROADMAP for the outcome)."""
+    cfg, dcfg, params, cond, key, x_full, tpl, ref = _setup(batch)
+    rows = []
+    for tau0 in [0.1, 0.3, 0.5, 0.8]:
+        per = {}
+        for dtype in ["", "bfloat16"]:
+            scfg = SpeCaConfig(taylor_order=2, max_draft=8, tau0=tau0,
+                               beta=0.9, table_dtype=dtype)
+            x, st = jax.jit(lambda k, s=scfg: speca_sample(
+                cfg, params, dcfg, s, k, cond, batch))(key)
+            x = np.asarray(jax.block_until_ready(x))
+            per[dtype or "f32"] = {
+                "alpha": float(st["alpha"]),
+                "rel_dev": C.rel_dev(jnp.asarray(x), jnp.asarray(x_full)),
+                "cond": C.cond_score(x, np.asarray(cond["labels"]), tpl),
+            }
+        rows.append({
+            "tau0": tau0,
+            "alpha_f32": round(per["f32"]["alpha"], 4),
+            "alpha_bf16": round(per["bfloat16"]["alpha"], 4),
+            "alpha_delta": round(abs(per["bfloat16"]["alpha"]
+                                     - per["f32"]["alpha"]), 4),
+            "rel_dev_f32": round(per["f32"]["rel_dev"], 5),
+            "rel_dev_bf16": round(per["bfloat16"]["rel_dev"], 5),
+            "cond_f32": round(per["f32"]["cond"], 5),
+            "cond_bf16": round(per["bfloat16"]["cond"], 5),
+        })
+    max_delta = max(r["alpha_delta"] for r in rows)
+    rows.append({"tau0": "max_delta", "alpha_delta": max_delta,
+                 "flip_ok_at_scale": bool(max_delta <= 0.1)})
+    C.print_table("table10_bf16_tables (accept-rate delta at scale)",
+                  rows)
+    C.write_result("table10_bf16_tables", rows)
+    return rows
+
+
 if __name__ == "__main__":
     table4_decay()
     table5_threshold()
@@ -170,6 +216,7 @@ if __name__ == "__main__":
     table7_draft()
     table8_metrics()
     speedup_model_check()
+    table10_bf16_tables()
 
 
 def table9_beyond_paper(batch=16):

@@ -25,6 +25,16 @@ forces more full forwards for the same guided work. Every JSON row
 carries a ``guidance`` column (0.0 = unguided) so the perf-trajectory
 artifact can chart guided vs unguided requests/s across PRs.
 
+``--scheduler fifo,sjf,edf`` adds one row per admission scheduler
+(serving API v2) serving a MIXED-LENGTH workload: long full-schedule
+requests alternating with short ``max_steps=steps/4`` requests that
+carry tight deadlines. Scheduling reorders admission only — per-request
+trajectories are untouched — so the rows isolate the pure policy win:
+``mean_completion_ticks`` (SJF < FIFO on any such workload: shortest-
+job-first is completion-time optimal) and ``deadline_hit_rate``
+(EDF > FIFO: earliest-deadline-first serves the tight-deadline shorts
+before the deadline-less longs that FIFO lets block them).
+
 Run (repo root must be on the path for ``benchmarks.common``):
   PYTHONPATH=src:. python benchmarks/serve_throughput.py \
       --requests 12 --lanes 4 --steps 30
@@ -33,6 +43,8 @@ Run (repo root must be on the path for ``benchmarks.common``):
       --requests 8 --lanes 4 --steps 12 --devices 1,2,4
   PYTHONPATH=src:. python benchmarks/serve_throughput.py \
       --requests 8 --lanes 4 --steps 12 --guidance-scale 4.0
+  PYTHONPATH=src:. python benchmarks/serve_throughput.py \
+      --requests 8 --lanes 2 --steps 12 --scheduler fifo,sjf,edf
 """
 from __future__ import annotations
 
@@ -46,7 +58,8 @@ from repro.configs import SpeCaConfig
 from repro.core.complexity import forward_flops
 from repro.diffusion.pipeline import null_cond_like
 from repro.launch.mesh import make_lane_mesh
-from repro.serving import Request, SpeCaEngine, allocation_report
+from repro.serving import (Request, RequestPolicy, SpeCaEngine,
+                           allocation_report)
 
 
 def make_requests(cfg, n: int, *, offset: int = 0, guidance_scale=None):
@@ -54,6 +67,39 @@ def make_requests(cfg, n: int, *, offset: int = 0, guidance_scale=None):
                     cond={"labels": jnp.asarray([i % cfg.num_classes])},
                     seed=offset + i, guidance_scale=guidance_scale)
             for i in range(n)]
+
+
+def deadline_workload(cfg, n: int, steps: int, lanes: int):
+    """Mixed-length workload for the scheduler comparison: even indices
+    are long full-schedule requests (no deadline), odd indices are short
+    ``steps//4`` requests whose deadline is feasible when served ahead
+    of the longs (k-th short: ceil(k/lanes)·short + steps/2 ticks) but
+    blown as soon as FIFO parks them behind a long request. Completion
+    ticks depend only on admission order and schedule lengths — never on
+    accept decisions — so the scheduler deltas below are deterministic.
+    """
+    short = max(steps // 4, 1)
+    reqs, k = [], 0
+    for i in range(n):
+        pol = None
+        if i % 2 == 1:
+            k += 1
+            dl = float(-(-k // max(lanes, 1)) * short + steps // 2)
+            pol = RequestPolicy(max_steps=short, deadline=dl)
+        reqs.append(Request(
+            request_id=i,
+            cond={"labels": jnp.asarray([i % cfg.num_classes])},
+            seed=i, policy=pol))
+    return reqs
+
+
+def sched_stats(results):
+    """(mean completion ticks, deadline hit rate | None)."""
+    ticks = [r.finish_tick for r in results if r.finish_tick is not None]
+    met = [r.deadline_met for r in results if r.deadline is not None]
+    mean_ticks = sum(ticks) / max(len(ticks), 1)
+    hit = sum(bool(m) for m in met) / len(met) if met else None
+    return mean_ticks, hit
 
 
 def split_requests(cfg, guided_requests):
@@ -93,6 +139,10 @@ def main() -> None:
     ap.add_argument("--devices", default="1",
                     help="comma list of lane-shard device counts, e.g. "
                          "1,2,4 (needs that many visible devices)")
+    ap.add_argument("--scheduler", default="",
+                    help="comma list of admission schedulers to compare "
+                         "on a mixed-length deadline workload, e.g. "
+                         "fifo,sjf,edf (adds one row per scheduler)")
     args = ap.parse_args()
     device_counts = sorted({int(d) for d in args.devices.split(",")})
     guided = args.guidance_scale > 0
@@ -175,11 +225,13 @@ def main() -> None:
         # req_per_s counts USER requests: a split row's 2N stream
         # requests serve N user requests' work
         n_user = len(results) // (2 if split else 1)
+        mean_ticks, hit = sched_stats(results)
         rows.append({
             "mode": mode,
             "devices": D,
             "lanes": W_eff,
             "guidance": args.guidance_scale if guided else 0.0,
+            "scheduler": "fifo",
             "requests": n_user,
             "wall_s": round(wall, 2),
             "req_per_s": round(n_user / wall, 3),
@@ -191,19 +243,89 @@ def main() -> None:
             "speedup_all": round(rep["speedup_all"], 3),
             "serving_speedup": round(seq_wall / wall, 3),
             "trajectory_mismatches": mismatches,
+            "mean_completion_ticks": round(mean_ticks, 2),
+            "deadline_hit_rate": hit,
         })
+
+    # scheduler comparison (serving API v2): one row per admission
+    # policy, same engine, same mixed-length deadline workload — the
+    # deltas are pure admission-order policy (docs/serving.md)
+    sched_names = [s for s in args.scheduler.split(",") if s]
+    sched_rows = []
+    if sched_names:
+        # the comparison workload is unguided — guidance changes lane
+        # occupancy, not admission order, and the guided rows above
+        # already track the pairing win
+        wl = deadline_workload(cfg, args.requests, args.steps, args.lanes)
+        sched_engine = make_engine(1, guidance=False)
+        sched_engine.warmup(cond0, lanes=args.lanes)
+        for name in sched_names:
+            t0 = time.time()
+            results = sched_engine.serve_batched(wl, lanes=args.lanes,
+                                                 scheduler=name)
+            wall = time.time() - t0
+            # the comparison workload is unguided regardless of
+            # --guidance-scale: unguided step cost and guidance=0.0
+            rep = allocation_report(results, fwd)
+            mean_ticks, hit = sched_stats(results)
+            row = {
+                "mode": f"sched={name}",
+                "devices": 1,
+                "lanes": sched_engine._width_for(
+                    args.lanes, [sched_engine.resolve_policy(r)
+                                 for r in wl]),
+                "guidance": 0.0,
+                "scheduler": name,
+                "requests": len(wl),
+                "wall_s": round(wall, 2),
+                "req_per_s": round(len(wl) / wall, 3),
+                "alpha_mean": round(rep["alpha_mean"], 4),
+                "frac_easy": round(rep["frac_easy"], 3),
+                "frac_hard": round(rep["frac_hard"], 3),
+                "speedup_easy": round(rep["speedup_easy"], 3),
+                "speedup_hard": round(rep["speedup_hard"], 3),
+                "speedup_all": round(rep["speedup_all"], 3),
+                # the sequential baseline timed a different (all
+                # full-length) workload — not comparable here
+                "serving_speedup": None,
+                "trajectory_mismatches": None,
+                "mean_completion_ticks": round(mean_ticks, 2),
+                "deadline_hit_rate": hit,
+            }
+            sched_rows.append(row)
+            rows.append(row)
 
     print_table(f"serve_throughput ({args.model}, "
                 f"accept_mode={args.accept_mode}"
                 + (f", guidance={args.guidance_scale}" if guided else "")
                 + ")", rows)
     for row in rows[1:]:
+        if row["mode"].startswith("sched="):
+            continue
         line = (f"{row['mode']}: {row['serving_speedup']}x requests/s "
                 f"vs {seq_mode}")
         if row["trajectory_mismatches"] is not None:
             line += (f", {row['trajectory_mismatches']} trajectory "
                      "mismatches")
         print(line)
+    if sched_rows:
+        by_name = {r["scheduler"]: r for r in sched_rows}
+        for r in sched_rows:
+            hit = "n/a" if r["deadline_hit_rate"] is None \
+                else f"{r['deadline_hit_rate']:.2f}"
+            print(f"sched={r['scheduler']}: mean completion "
+                  f"{r['mean_completion_ticks']} ticks, deadline hit "
+                  f"rate {hit}")
+        if "fifo" in by_name:
+            f = by_name["fifo"]
+            if "sjf" in by_name:
+                print(f"sjf vs fifo mean completion ticks: "
+                      f"{by_name['sjf']['mean_completion_ticks']} vs "
+                      f"{f['mean_completion_ticks']}")
+            if "edf" in by_name and f["deadline_hit_rate"] is not None:
+                print(f"edf vs fifo deadline hit rate: "
+                      f"{by_name['edf']['deadline_hit_rate']:.2f} vs "
+                      f"{f['deadline_hit_rate']:.2f}")
     if guided and split_run is not None:
         # the split baseline always runs at D=1, so compare it against
         # the D=1 paired row specifically — with --devices 2,4 the first

@@ -1,15 +1,28 @@
-"""Serving example: batched requests through the per-lane SpeCa engine.
+"""Serving example: heterogeneous requests through the v2 lifecycle API.
 
 Demonstrates sample-adaptive computation allocation — each request gets
-exactly as much computation as its complexity demands (paper §1). The
-lane scheduler packs concurrent requests into one jitted step while every
-lane keeps its own accept/reject trajectory, so the per-request statistics
-are identical to serving each request alone at batch=1 (only faster).
+exactly as much computation as its complexity demands (paper §1) — and
+the serving API v2 surface:
+
+  * every request carries its own ``RequestPolicy`` (guidance scale,
+    negative prompt, τ, max steps, priority, deadline), so guided and
+    unguided traffic share ONE engine batch (slot-width scheduling:
+    one lane per unguided request, a cond/uncond lane pair per guided
+    request — ``docs/serving.md`` / ``docs/cfg.md``);
+  * requests enter through ``submit() -> Ticket`` and come back through
+    the ``stream()`` generator in completion order, with new
+    submissions admitted into freed slots mid-run (continuous
+    batching across the API boundary);
+  * the admission order is a pluggable scheduler (``--scheduler
+    fifo|sjf|edf``).
+
+Per-request statistics are identical to serving each request alone at
+batch=1 (only faster) — the scheduler changes packing, never semantics.
 
 Run:  PYTHONPATH=src python examples/serve_diffusion.py
       PYTHONPATH=src python examples/serve_diffusion.py --lanes 8 --mesh 2
       PYTHONPATH=src python examples/serve_diffusion.py --lanes 4 \
-          --guidance-scale 4.0
+          --guidance-scale 4.0 --scheduler sjf
 
 ``--mesh D`` lane-shards the engine over a D-device ``('data',)`` mesh —
 the difference table and every per-lane vector split over the devices, so
@@ -17,11 +30,9 @@ one engine serves lanes×D requests concurrently. On CPU the script forces
 D host devices (the flag must land before the first jax import, which is
 why jax and repro are imported inside ``main``).
 
-``--guidance-scale S`` (S>0) serves with classifier-free guidance: each
-request packs its conditional and unconditional streams into a lane PAIR
-— both forecast and verify in the same dispatch, one accept decision per
-pair on the guided residual (docs/cfg.md). Guided serving doubles the
-effective batch without doubling dispatches or verify decisions.
+``--guidance-scale S`` sets the scale the guided half of the workload
+uses (default 4.0). Guided serving doubles the effective batch without
+doubling dispatches or verify decisions (one decision per pair).
 """
 import argparse
 import dataclasses
@@ -33,9 +44,11 @@ def main() -> None:
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--lanes", type=int, default=4)
     ap.add_argument("--mesh", type=int, default=1)
-    ap.add_argument("--guidance-scale", type=float, default=0.0,
-                    help=">0: serve cond/uncond lane pairs under "
-                         "classifier-free guidance at this scale")
+    ap.add_argument("--guidance-scale", type=float, default=4.0,
+                    help="scale for the guided half of the workload "
+                         "(cond/uncond lane pairs, one decision per pair)")
+    ap.add_argument("--scheduler", default="fifo",
+                    choices=["fifo", "sjf", "edf"])
     args = ap.parse_args()
     from repro.launch.mesh import force_host_device_count
     force_host_device_count(args.mesh)   # before the first jax import
@@ -46,7 +59,8 @@ def main() -> None:
                                get_config, reduced)
     from repro.core.complexity import forward_flops
     from repro.launch.mesh import make_lane_mesh
-    from repro.serving import Request, SpeCaEngine, allocation_report
+    from repro.serving import (Request, RequestPolicy, SpeCaEngine,
+                               allocation_report)
     from repro.training.diffusion_trainer import train_diffusion
 
     cfg = dataclasses.replace(reduced(get_config("dit-xl2")),
@@ -61,38 +75,60 @@ def main() -> None:
 
     scfg = SpeCaConfig(taylor_order=2, max_draft=8, tau0=0.4, beta=0.9)
     mesh = make_lane_mesh(args.mesh) if args.mesh > 1 else None
-    guided = args.guidance_scale > 0
-    engine = SpeCaEngine(cfg, params, dcfg, scfg, guidance=guided,
-                         mesh=mesh)
+    engine = SpeCaEngine(cfg, params, dcfg, scfg, mesh=mesh,
+                         lanes=args.lanes, scheduler=args.scheduler)
 
-    requests = [
-        Request(request_id=i,
-                cond={"labels": jnp.asarray([i % cfg.num_classes])},
-                seed=i,
-                guidance_scale=args.guidance_scale if guided else None)
-        for i in range(args.requests)
+    def label(i):
+        return {"labels": jnp.asarray([i % cfg.num_classes])}
+
+    # a heterogeneous workload on ONE engine: guided requests (one with
+    # a negative prompt), unguided requests, a strict-τ request and a
+    # short deadline job — each gets its own policy
+    policies = [
+        RequestPolicy(guidance_scale=args.guidance_scale),
+        RequestPolicy(),                               # plain unguided
+        RequestPolicy(guidance_scale=args.guidance_scale / 2,
+                      negative_cond=label(5)),         # negative prompt
+        RequestPolicy(tau0=0.1),                       # strict verify
+        RequestPolicy(max_steps=dcfg.num_inference_steps // 2,
+                      deadline=float(dcfg.num_inference_steps)),
     ]
-    lanes = args.lanes
-    engine.warmup({"labels": jnp.asarray([0])}, lanes=lanes)
-    where = f"{lanes} lanes" + (f" on {args.mesh} devices" if mesh else "")
-    if guided:
-        where += f", CFG pairs at s={args.guidance_scale}"
-    print(f"serving {len(requests)} requests on {where}...")
+    requests = [Request(request_id=i, cond=label(i), seed=i,
+                        policy=policies[i % len(policies)])
+                for i in range(args.requests)]
+
+    # mixed=True warms the slot-width program lifecycle sessions compile
+    engine.warmup({"labels": jnp.asarray([0])}, lanes=args.lanes,
+                  mixed=True)
+    where = f"{args.lanes} lanes, {args.scheduler}" \
+        + (f" on {args.mesh} devices" if mesh else "")
+    print(f"serving {len(requests)} mixed requests on {where}...")
     t0 = time.time()
-    results = engine.serve(requests, lanes=lanes)
+    tickets = [engine.submit(r) for r in requests]
+    results = []
+    for res in engine.stream(tickets):          # completion order
+        results.append(res)
+        kind = "pair" if requests[res.request_id].policy.guided \
+            else "lane"
+        print(f"  req {res.request_id} ({kind}) done@tick "
+              f"{res.finish_tick}: full={res.num_full} "
+              f"spec={res.num_spec} alpha={res.alpha:.2f} "
+              f"{res.flops/1e9:.1f} GFLOPs")
     wall = time.time() - t0
-    for r in results:
-        print(f"  req {r.request_id}: full={r.num_full} spec={r.num_spec} "
-              f"alpha={r.alpha:.2f} {r.flops/1e9:.1f} GFLOPs")
     print(f"{len(requests)/wall:.2f} req/s "
-          f"(vs sequential batch=1: engine.serve(..., lanes=1))")
+          f"(per-request trajectories identical to batch=1 — "
+          f"engine.run_request)")
 
     n_tok = (dcfg.latent_size // cfg.patch_size) ** 2
-    streams = 2 if guided else 1
-    report = allocation_report(results,
-                               streams * forward_flops(cfg, n_tok))
-    print("\nsample-adaptive allocation report:")
-    for k, v in report.items():
+    fwd = forward_flops(cfg, n_tok)
+    by_id = {r.request_id: r for r in results}
+    guided = [by_id[r.request_id] for r in requests if r.policy.guided]
+    plain = [by_id[r.request_id] for r in requests if not r.policy.guided]
+    print("\nsample-adaptive allocation report (guided, 2 rows/step):")
+    for k, v in allocation_report(guided, 2 * fwd).items():
+        print(f"  {k}: {v:.4f}" if isinstance(v, float) else f"  {k}: {v}")
+    print("sample-adaptive allocation report (unguided):")
+    for k, v in allocation_report(plain, fwd).items():
         print(f"  {k}: {v:.4f}" if isinstance(v, float) else f"  {k}: {v}")
 
 

@@ -201,9 +201,22 @@ class SpeCaConfig:
     eps: float = 1e-8              # ε in eq. (4)
     per_sample: bool = True        # sample-adaptive allocation (§1, bullet 2)
     table_dtype: str = ""          # difference-table dtype override
-    #                                ("" = model dtype; "bfloat16" halves
-    #                                table storage — accept-rate regression
-    #                                pinned in tests/test_taylor.py)
+    #                                ("" = model dtype — production bf16
+    #                                models therefore already run bf16
+    #                                tables; "bfloat16" halves table
+    #                                storage for f32 models too). The
+    #                                benchmark-scale flip study (PR 5,
+    #                                benchmarks/ablations.py table10)
+    #                                measured max Δα = 0.0 over
+    #                                τ0 ∈ [0.1, 0.8], but bf16 tables
+    #                                widen the cross-batch-shape latent
+    #                                equivalence boundary ~70×
+    #                                (2.5e-6 → 1.7e-4 on the serving
+    #                                packing tests), so the default
+    #                                stays at the model dtype — see the
+    #                                ROADMAP bf16 item for the recorded
+    #                                decision. Accept-rate regression
+    #                                pinned in tests/test_taylor.py.
 
 
 @dataclasses.dataclass(frozen=True)

@@ -4,12 +4,13 @@ Every SpeCa execution path — the reproduction sampler
 (``repro.core.speca.speca_sample``, where the sample batch is the lane
 batch), the batch=1 serving reference (``SpeCaEngine.run_request``, the
 lanes=1 degenerate case) and the lane scheduler
-(``SpeCaEngine.serve_batched``) — advances its state through the step
-function built here. There is deliberately no second implementation of the
-accept/refresh logic anywhere in the tree: the four hand-copied variants
-that previously lived in ``speca.py`` (both scan bodies) and ``engine.py``
-(``_build`` + ``_build_lane_step``) are collapsed into this module, so a
-semantics change (or bugfix) is a single-site edit.
+(``SpeCaEngine.serve_batched`` / the v2 submit-poll lifecycle) — advances
+its state through the step function built here. There is deliberately no
+second implementation of the accept/refresh logic anywhere in the tree:
+the four hand-copied variants that previously lived in ``speca.py`` (both
+scan bodies) and ``engine.py`` (``_build`` + ``_build_lane_step``) are
+collapsed into this module, so a semantics change (or bugfix) is a
+single-site edit.
 
 One step, entirely inside the traced function:
 
@@ -20,7 +21,9 @@ One step, entirely inside the traced function:
      layer.
   2. *Verify*: each lane's relative error against its own τ_t — either the
      fused one-pass Pallas kernel (``verify_backend="fused"``, rel-L2
-     only) or the metric-general jnp path.
+     only) or the metric-general jnp path. Every lane's τ_t comes from
+     the per-lane ``tau0`` state vector (serving API v2: each request
+     carries its own verification strictness), τ_t = τ0·β^((T−t)/T).
   3. *Accept combiner*: ``per_sample`` accepts each lane on its own bit;
      ``batch`` (reproduction parity) accepts iff every currently-drafting
      lane passes.
@@ -37,37 +40,60 @@ decide the next dispatch):
   ``since``    [W] i32  consecutive accepted drafts since the last anchor
   ``step``     [W] i32  the lane's denoising step index
   ``active``   [W] bool lane occupancy (inactive lanes are frozen)
+  ``tau0``     [W] f32  per-lane base verification threshold (filled from
+                ``SpeCaConfig.tau0`` or the request's ``RequestPolicy``)
   ``cond``     {k: [W, …]} conditioning values, one row per lane
   ``diffs``    [m+1, L, 2, W, T, D] TaylorSeer difference table
   ``n_anchors``/``anchor_step``/``gap`` [W] per-lane anchor metadata
                 (``taylor.init_state(lanes=W)``)
-  ``gscale``   [W] f32  per-lane guidance scale — present ONLY in
-                guidance mode (``init_lane_state(..., guidance=True)``)
+  ``gscale``   [W] f32  per-lane guidance scale — pair modes only
+  ``paired``   [W] bool per-lane pair-slot mask — pair modes only
 
-Classifier-free guidance (``guidance=True``) packs one *request* into a
-lane **pair**: the conditional stream at lane ``2k``, the unconditional
+Classifier-free guidance packs one *request* into a lane **pair**: the
+conditional stream at lane ``2k``, the unconditional (or negative-prompt)
 stream at lane ``2k+1``. Both lanes share the SAME latent trajectory and
 draft/verify together, but each keeps its own difference table (the two
 feature streams are forecast independently). The verify residual is
 computed on the guided combination ``u + s·(c − u)`` at the verify layer
 and a single accept/reject decision drives both lanes, so the pair's
 anchors can never de-synchronize — see ``docs/cfg.md`` for why one
-decision per pair is required for anchor coherence. Pair invariants
-(established by ``init_lane_state`` and preserved by every step):
-``x``/``since``/``step``/``active``/``gscale`` are equal across the two
-lanes of a pair.
+decision per pair is required for anchor coherence.
+
+``guidance`` selects among three step programs:
+
+  * ``False`` — no pair machinery at all: every lane is an independent
+    unguided stream (the plain serving engine and unguided sampler).
+  * ``True``  — every pair slot is a guided pair (``paired`` initialises
+    all-True): the guided sampler's mode, and the engine's back-compat
+    ``guidance=True`` construction.
+  * ``"mixed"`` — slot-width serving (API v2): lanes (2k, 2k+1) form
+    *pair slots* and the per-lane ``paired`` mask (pair-equal, written
+    at fill time by the engine) decides slot by slot — a ``paired``
+    slot is one guided request with ONE guided-residual decision; an
+    unpaired slot is up to two independent unguided lanes, each with
+    its own decision. Guided and unguided requests thereby mix freely
+    in one batch. ``paired`` initialises all-False; with every slot
+    paired the step is value-identical to ``guidance=True``, and with
+    none paired it is value-identical to ``guidance=False`` — both
+    equivalences are what keep the serving back-compat wrappers
+    trajectory-identical. A trailing odd lane (odd ``lanes``, meshless
+    only) is always unpaired.
+
+Pair invariants (established by the engine's fill and preserved by every
+step): ``x``/``since``/``step``/``active``/``gscale``/``tau0``/``paired``
+are equal across the two lanes of a *paired* slot.
 
 Flags returned per tick (all [W]): ``attempted`` (the lane drafted),
 ``ok`` (its error passed its τ), ``accepted`` (post-combiner decision that
 advanced the lane), ``full`` (the lane was served by the full forward),
 ``err`` (verification error, NaN where the lane did not draft — see the
-sentinel semantics in ``speca_sample``), ``tau``. In guidance mode every
-flag is pair-equal: both lanes of a pair report the pair's single
-decision and the pair's guided-residual error.
+sentinel semantics in ``speca_sample``), ``tau``. In a paired slot every
+flag is pair-equal: both lanes report the pair's single decision and the
+pair's guided-residual error.
 """
 from __future__ import annotations
 
-from typing import Any, Callable, Dict, Optional, Tuple
+from typing import Any, Callable, Dict, Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -81,6 +107,7 @@ from repro.layers import model as M
 
 ACCEPT_MODES = ("batch", "per_sample")
 VERIFY_BACKENDS = ("fused", "jnp")
+GUIDANCE_MODES = (False, True, "mixed")
 
 
 def verify_layer(cfg: ModelConfig, scfg: SpeCaConfig) -> int:
@@ -108,35 +135,51 @@ def table_dtype(cfg: ModelConfig, scfg: SpeCaConfig):
         ) from e
 
 
+def _check_guidance(guidance: Union[bool, str], lanes: int) -> None:
+    if guidance not in GUIDANCE_MODES:
+        raise ValueError(f"unknown guidance mode {guidance!r} "
+                         f"(have {GUIDANCE_MODES})")
+    if guidance is True and lanes % 2 != 0:
+        raise ValueError(f"guidance mode packs lane PAIRS: lanes={lanes} "
+                         "must be even")
+
+
 def init_lane_state(cfg: ModelConfig, dcfg: DiffusionConfig,
                     scfg: SpeCaConfig, lanes: int,
                     cond_template: Dict[str, Any], *,
                     x: Optional[jnp.ndarray] = None,
                     active: bool = False,
-                    guidance: bool = False,
+                    guidance: Union[bool, str] = False,
                     mesh: Optional[Any] = None) -> Dict[str, Any]:
     """Fresh lane-batch state. ``cond_template`` supplies per-key shapes
     (leading axis is replaced by ``lanes``); pass ``x`` to start from a
     concrete latent (the sampler) instead of zeros (the scheduler).
 
+    ``tau0`` initialises to ``SpeCaConfig.tau0`` for every lane; the
+    serving engine overwrites a lane's entry at fill time when its
+    request carries a per-request τ policy.
+
     ``guidance=True`` adds the per-lane ``gscale`` vector (all ones until
-    a request is filled) and requires an even ``lanes`` — lanes ``2k`` /
-    ``2k+1`` form the cond/uncond pair of one request.
+    a request is filled) and the ``paired`` mask initialised all-True
+    (every slot is a guided pair), and requires an even ``lanes`` — lanes
+    ``2k``/``2k+1`` form the cond/uncond pair of one request.
+    ``guidance="mixed"`` initialises ``paired`` all-False instead: pair
+    slots switch between guided-pair and independent-lane semantics as
+    the engine fills them.
 
     With ``mesh`` every lane-indexed array is placed with its
     ``NamedSharding`` from the lane-axis rules in
     ``repro.sharding.specs`` — the difference table and all per-lane
     vectors shard their lane axis over the mesh's ``'data'`` axis, so a
     D-device mesh holds 1/D of the table per device. ``lanes`` must then
-    be divisible by the lane-shard count — and in guidance mode by
-    ``2 × lane_shard_count`` so a cond/uncond pair never straddles a
-    shard boundary (the guided combination is a cross-lane op inside the
+    be divisible by the lane-shard count — and in any pair-capable mode
+    by ``2 × lane_shard_count`` so a pair slot never straddles a shard
+    boundary (the guided combination is a cross-lane op inside the
     pair; keeping pairs shard-local keeps it communication-free).
     """
     W = lanes
-    if guidance and W % 2 != 0:
-        raise ValueError(f"guidance mode packs lane PAIRS: lanes={W} "
-                         "must be even")
+    _check_guidance(guidance, W)
+    pairing = bool(guidance)
     feat_shape = taylor.feature_shape_for(cfg.num_layers, W,
                                           num_tokens(cfg, dcfg), cfg.d_model)
     tstate = taylor.init_state(scfg.taylor_order, feat_shape,
@@ -150,20 +193,22 @@ def init_lane_state(cfg: ModelConfig, dcfg: DiffusionConfig,
         "since": jnp.zeros((W,), jnp.int32),
         "step": jnp.zeros((W,), jnp.int32),
         "active": jnp.full((W,), bool(active)),
+        "tau0": jnp.full((W,), float(scfg.tau0), jnp.float32),
         "cond": cond,
         **tstate,
     }
-    if guidance:
+    if pairing:
         state["gscale"] = jnp.ones((W,), jnp.float32)
+        state["paired"] = jnp.full((W,), guidance is True)
     if mesh is not None:
         from repro.sharding import specs as SH
-        mult = SH.lane_width_multiple(mesh, streams=2 if guidance else 1)
+        mult = SH.lane_width_multiple(mesh, streams=2 if pairing else 1)
         if W % mult != 0:
             raise ValueError(
                 f"lanes={W} not divisible by {mult} (lane-shard count "
                 f"{SH.lane_shard_count(mesh)}"
-                + (" × 2 streams — a cond/uncond pair must never "
-                   "straddle a shard boundary)" if guidance else ")"))
+                + (" × 2 streams — a pair slot must never straddle a "
+                   "shard boundary)" if pairing else ")"))
         state = jax.device_put(state, SH.lane_state_shardings(mesh, state))
     return state
 
@@ -174,7 +219,7 @@ def build_lane_step(cfg: ModelConfig, params: Dict[str, Any],
                     accept_mode: str = "per_sample",
                     verify_backend: str = "jnp",
                     use_flash: bool = False,
-                    guidance: bool = False,
+                    guidance: Union[bool, str] = False,
                     mesh: Optional[Any] = None
                     ) -> Callable[[Dict[str, Any]],
                                   Tuple[Dict[str, Any], Dict[str, Any]]]:
@@ -183,16 +228,21 @@ def build_lane_step(cfg: ModelConfig, params: Dict[str, Any],
     Not jitted here — the sampler scans it inside one XLA program, the
     engine jits it per lane width.
 
-    ``guidance=True`` switches the step into classifier-free-guidance
-    pair mode (state from ``init_lane_state(..., guidance=True)``): lanes
-    ``2k``/``2k+1`` carry one request's cond/uncond streams. Both streams
-    draft through their own tables in the same dispatch, verification
-    compares the *guided* residual ``u + s·(c − u)`` at the verify layer
-    against the pair's τ (one decision per pair — ``kernels.ops.
-    verify_accept_pairs``), and the latent advances on the guided model
-    output, identically for both lanes. A rejected pair's full forward
+    ``guidance`` selects the step program (see the module docstring):
+    ``False`` is plain per-lane serving, ``True`` forces every pair slot
+    guided (state from ``init_lane_state(..., guidance=True)``), and
+    ``"mixed"`` reads the per-lane ``paired`` mask so guided pairs and
+    independent unguided lanes share one batch. In the pair modes lanes
+    ``2k``/``2k+1`` form slot k: where paired, both streams draft
+    through their own tables in the same dispatch, verification compares
+    the *guided* residual ``u + s·(c − u)`` at the verify layer against
+    the pair's τ (one decision per pair — ``kernels.ops.
+    verify_accept_mixed``), and the latent advances on the guided model
+    output, identically for both lanes; a rejected pair's full forward
     refreshes BOTH lanes' table slices, so cond and uncond anchors stay
-    in lock-step by construction.
+    in lock-step by construction. Where unpaired, each lane drafts,
+    verifies and advances on its own stream exactly as in the plain
+    program.
 
     ``mesh`` shards the lane axis over the mesh's ``'data'`` axis: the
     backbone, threshold schedule and lane selects partition natively
@@ -205,7 +255,7 @@ def build_lane_step(cfg: ModelConfig, params: Dict[str, Any],
     latents agree to f32 reduction-order tolerance — XLA CPU picks gemm
     micro-kernels by the local batch shape, the same ulp-level boundary
     as the PR-2 kernel/tensordot note (tests/test_serving_sharded.py).
-    In guidance mode the lane width must be a multiple of ``2·D`` so a
+    In the pair modes the lane width must be a multiple of ``2·D`` so a
     pair never straddles a shard boundary — every pair-fold below is then
     a shard-local reshape.
     """
@@ -215,33 +265,35 @@ def build_lane_step(cfg: ModelConfig, params: Dict[str, Any],
         raise ValueError(f"unknown verify_backend {verify_backend!r}")
     if scfg.error_metric != "rel_l2":
         verify_backend = "jnp"     # the fused kernel implements eq. 4 only
-    if guidance and lanes % 2 != 0:
-        raise ValueError(f"guidance mode packs lane PAIRS: lanes={lanes} "
-                         "must be even")
+    _check_guidance(guidance, lanes)
     stepper = make_stepper(dcfg)
     W = lanes
-    NP = W // 2                    # number of lane pairs (guidance mode)
+    NP = W // 2                    # number of pair slots (pair modes)
+    pairing = bool(guidance) and NP > 0
     S = stepper.num_steps
     vl = verify_layer(cfg, scfg)
     cmask = jnp.arange(cfg.num_layers) == vl
     x_shape = latent_shape(cfg, dcfg, W)
 
-    def pair_split(v):
-        """[W, …] -> (cond [W/2, …], uncond [W/2, …]). A pure reshape —
-        pairs are interleaved (2k, 2k+1) and never straddle a shard."""
-        v2 = v.reshape((NP, 2) + v.shape[1:])
-        return v2[:, 0], v2[:, 1]
+    def pair_head(v):
+        """[W, …] -> [NP, 2, …]: the pair-slot fold of the first 2·NP
+        lanes (pairs are interleaved (2k, 2k+1) and never straddle a
+        shard). A trailing odd lane is excluded — it is always
+        unpaired."""
+        return v[:2 * NP].reshape((NP, 2) + v.shape[1:])
 
-    def pair_bcast(v):
-        """[W/2, …] -> [W, …]: both lanes of each pair get the value."""
-        return jnp.broadcast_to(
-            v[:, None], (NP, 2) + v.shape[1:]).reshape((W,) + v.shape[1:])
+    def with_tail(head2, v):
+        """[NP, 2, …] -> [W, …], re-attaching ``v``'s unpaired trailing
+        lane when W is odd."""
+        out = head2.reshape((2 * NP,) + head2.shape[2:])
+        if W % 2:
+            out = jnp.concatenate([out, v[2 * NP:]], axis=0)
+        return out
 
-    def guided_combine(v, gs_pair):
-        """[W, …] -> [W/2, …]: the CFG combination per pair, delegated
-        to the one shared definition in ``pipeline.guided_output``."""
-        c, u = pair_split(v)
-        return guided_output(c, u, gs_pair)
+    def pair_select(paired, pair_val, lane_val):
+        """Per-lane select between pair-slot and per-lane semantics."""
+        pm = paired.reshape((W,) + (1,) * (lane_val.ndim - 1))
+        return jnp.where(pm, pair_val, lane_val)
 
     def verify(pred_vl, real_vl, tau):
         """(err [W], ok [W]) — identical math on every execution path."""
@@ -260,32 +312,40 @@ def build_lane_step(cfg: ModelConfig, params: Dict[str, Any],
                              eps=scfg.eps, batch_axis=0)
         return err, err <= tau
 
-    def verify_pairs(pred_vl, real_vl, tau, gs):
-        """Guided verify: ONE τ comparison per pair on the guided
-        residual. Returns pair-broadcast (err [W], ok [W]) so the flag
-        layout stays uniform across modes."""
-        tau_p = pair_split(jnp.broadcast_to(
-            jnp.asarray(tau, jnp.float32), (W,)))[0]
-        gs_p = pair_split(gs)[0]
+    def verify_mixed(pred_vl, real_vl, tau, gs, paired):
+        """Slot-width verify: per-lane decisions for unpaired lanes, ONE
+        guided-residual decision per paired slot (both its lanes report
+        it). Returns (err [W], ok [W])."""
+        tau = jnp.broadcast_to(jnp.asarray(tau, jnp.float32), (W,))
         if verify_backend == "fused":
             from repro.kernels import ops
             if mesh is not None:
-                err_p, ok_p = ops.verify_accept_pairs_sharded(
+                return ops.verify_accept_mixed_sharded(
                     pred_vl.reshape(W, -1), real_vl.reshape(W, -1),
-                    tau_p, gs_p, mesh=mesh, eps=scfg.eps)
-            else:
-                err_p, ok_p = ops.verify_accept_pairs(
-                    pred_vl.reshape(W, -1), real_vl.reshape(W, -1),
-                    tau_p, gs_p, eps=scfg.eps)
-        else:
-            # combine in f32 (matching the fused path) so backend parity
-            # holds bit-for-bit on f32 features and to ulp on bf16
-            err_p = relative_error(
-                guided_combine(pred_vl.astype(jnp.float32), gs_p),
-                guided_combine(real_vl.astype(jnp.float32), gs_p),
-                metric=scfg.error_metric, eps=scfg.eps, batch_axis=0)
-            ok_p = err_p <= tau_p
-        return pair_bcast(err_p), pair_bcast(ok_p)
+                    tau, gs, paired, mesh=mesh, eps=scfg.eps)
+            return ops.verify_accept_mixed(
+                pred_vl.reshape(W, -1), real_vl.reshape(W, -1),
+                tau, gs, paired, eps=scfg.eps)
+        # jnp path (metric-general): unpaired lanes use EXACTLY the
+        # plain program's math — per-lane error in the original feature
+        # dtype — so a mixed session with no pairs is value-identical
+        # to guidance=False even on bf16 features; paired slots combine
+        # in f32 (matching both the fused kernel and the all-paired
+        # PR-4 jnp path) and broadcast the pair error to both rows.
+        err_lane = relative_error(pred_vl, real_vl,
+                                  metric=scfg.error_metric,
+                                  eps=scfg.eps, batch_axis=0)
+        ph = pair_head(pred_vl).astype(jnp.float32)
+        rh = pair_head(real_vl).astype(jnp.float32)
+        gs_p = pair_head(gs)[:, 0]
+        err_p = relative_error(
+            guided_output(ph[:, 0], ph[:, 1], gs_p),
+            guided_output(rh[:, 0], rh[:, 1], gs_p),
+            metric=scfg.error_metric, eps=scfg.eps, batch_axis=0)
+        err_pair = with_tail(jnp.broadcast_to(err_p[:, None], (NP, 2)),
+                             err_lane)
+        err = jnp.where(paired, err_pair, err_lane)
+        return err, err <= tau
 
     def step(state: Dict[str, Any]
              ) -> Tuple[Dict[str, Any], Dict[str, Any]]:
@@ -298,13 +358,17 @@ def build_lane_step(cfg: ModelConfig, params: Dict[str, Any],
         t_model = stepper.t_model[s_eff]                          # [W]
         warm = tstate["n_anchors"] > scfg.taylor_order
         want = active & warm & (since < scfg.max_draft)
-        if guidance:
-            # a pair drafts iff BOTH its streams can (with the pair
-            # invariants held the two bits are already equal; the AND
-            # makes the pair decision explicit and robust)
-            wc, wu = pair_split(want)
-            want = pair_bcast(wc & wu)
-        tau = threshold_schedule(stepper.t_frac[s_eff], scfg.tau0,
+        if pairing:
+            # a paired slot drafts iff BOTH its streams can (with the
+            # pair invariants held the two bits are already equal; the
+            # AND makes the pair decision explicit and robust)
+            h = pair_head(want)
+            both = h[:, 0] & h[:, 1]
+            pw = with_tail(jnp.broadcast_to(both[:, None], (NP, 2)), want)
+            want = jnp.where(state["paired"], pw, want)
+        # per-lane τ_t = τ0·β^((T−t)/T): every request carries its own
+        # base threshold (state["tau0"]) at its own denoising step
+        tau = threshold_schedule(stepper.t_frac[s_eff], state["tau0"],
                                  scfg.beta)                       # [W]
 
         def attempt(x):
@@ -318,9 +382,9 @@ def build_lane_step(cfg: ModelConfig, params: Dict[str, Any],
                                         use_flash=use_flash)
             real_vl = extras["branches"][vl][0] + extras["branches"][vl][1]
             pred_vl = preds[vl][0] + preds[vl][1]
-            if guidance:
-                err, ok = verify_pairs(pred_vl, real_vl, tau,
-                                       state["gscale"])
+            if pairing:
+                err, ok = verify_mixed(pred_vl, real_vl, tau,
+                                       state["gscale"], state["paired"])
             else:
                 err, ok = verify(pred_vl, real_vl, tau)
             # NaN marks "did not draft": it cannot poison downstream
@@ -361,11 +425,16 @@ def build_lane_step(cfg: ModelConfig, params: Dict[str, Any],
                                         (x, tstate))
         sel = accept.reshape((W,) + (1,) * (x.ndim - 1))
         out = jnp.where(sel, out_spec, out_full)
-        if guidance:
-            # the pair's latent advances on the guided model output; both
-            # lanes receive the identical value (x stays pair-equal)
-            gs_p = pair_split(state["gscale"])[0]
-            out = pair_bcast(guided_combine(out, gs_p))
+        if pairing:
+            # a paired slot's latent advances on the guided model output;
+            # both its lanes receive the identical value (x stays
+            # pair-equal). Unpaired lanes advance on their own output.
+            h = pair_head(out)
+            gs_p = pair_head(state["gscale"])[:, 0]
+            g = guided_output(h[:, 0], h[:, 1], gs_p)
+            gb = with_tail(jnp.broadcast_to(g[:, None],
+                                            (NP, 2) + g.shape[1:]), out)
+            out = pair_select(state["paired"], gb, out)
         x_next = stepper.advance(x, out, s_eff)
         amask = active.reshape(sel.shape)
         x = jnp.where(amask, x_next, x)

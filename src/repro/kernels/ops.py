@@ -14,9 +14,14 @@ Exported surface (each documented on its function):
     one pass over the (m+1, L, 2, W, T, D) difference table.
   * ``verify_error`` / ``verify_accept`` — per-lane rel-L2 (eq. 4) and
     the fused sums+threshold verification.
-  * ``verify_accept_pairs`` — CFG serving: guided residual
-    ``u + s·(c − u)`` per cond/uncond lane pair and ONE τ comparison per
-    pair (see ``repro.core.lane_step`` guidance mode / ``docs/cfg.md``).
+  * ``verify_accept_mixed`` — slot-width serving (API v2): a per-pair
+    ``paired`` mask selects, pair by pair, between per-lane decisions
+    (unpaired lanes verify their own stream) and ONE guided-residual
+    decision per cond/uncond pair — guided and unguided requests mix in
+    one batch (``repro.core.lane_step`` / ``docs/cfg.md``).
+  * ``verify_accept_pairs`` — the all-paired reduction of the above
+    (CFG serving's original surface): guided residual ``u + s·(c − u)``
+    per cond/uncond lane pair and ONE τ comparison per pair.
   * ``*_sharded`` — ``shard_map`` routings of the above for lane-sharded
     serving meshes (``pallas_call`` is opaque to the SPMD partitioner).
   * ``flash_attention`` — fused attention used by the backbone when
@@ -189,6 +194,82 @@ def verify_accept(pred: jnp.ndarray, ref_: jnp.ndarray, tau: jnp.ndarray, *,
     return out[:, 2], out[:, 3] > 0.0
 
 
+def _mixed_planes(pred: jnp.ndarray, ref_: jnp.ndarray,
+                  gscale: jnp.ndarray, paired: jnp.ndarray):
+    """The effective per-lane verification planes of a mixed batch.
+
+    Lanes (2k, 2k+1) form pair slot k. Where ``paired[2k]`` both rows
+    are replaced by the pair's guided residual ``u + s·(c − u)`` (so
+    the two rows carry the SAME plane and the per-lane sums kernel
+    naturally yields one pair-equal decision); unpaired rows pass
+    through untouched. An odd trailing lane is always unpaired. The
+    combination is restated from ``pipeline.guided_output`` (kernels
+    must not import the diffusion layer) — keep the two in sync.
+    """
+    W = pred.shape[0]
+    p = pred.reshape(W, -1).astype(jnp.float32)
+    r = ref_.reshape(W, -1).astype(jnp.float32)
+    NP = W // 2
+    if NP == 0:
+        return p, r
+    F = p.shape[1]
+    p2 = p[:2 * NP].reshape(NP, 2, F)
+    r2 = r[:2 * NP].reshape(NP, 2, F)
+    s = jnp.asarray(gscale, jnp.float32)[0:2 * NP:2].reshape(NP, 1, 1)
+    pg = p2[:, 1:2] + s * (p2[:, 0:1] - p2[:, 1:2])     # [NP, 1, F]
+    rg = r2[:, 1:2] + s * (r2[:, 0:1] - r2[:, 1:2])
+    pm = jnp.asarray(paired)[:2 * NP].reshape(NP, 2, 1)
+    pe = jnp.where(pm, pg, p2).reshape(2 * NP, F)
+    re = jnp.where(pm, rg, r2).reshape(2 * NP, F)
+    if W % 2:
+        pe = jnp.concatenate([pe, p[2 * NP:]], axis=0)
+        re = jnp.concatenate([re, r[2 * NP:]], axis=0)
+    return pe, re
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "block_c"))
+def verify_accept_mixed(pred: jnp.ndarray, ref_: jnp.ndarray,
+                        tau: jnp.ndarray, gscale: jnp.ndarray,
+                        paired: jnp.ndarray, *,
+                        eps: float = 1e-8, block_c: int = 1024):
+    """Slot-width fused verification (mixed guided+unguided serving).
+
+    ``pred``/``ref_`` [W, ...]; lanes (2k, 2k+1) form pair slot k.
+    ``paired`` [W] bool (pair-equal by the engine's fill invariant)
+    marks guided pairs: their rows verify on the pair's guided residual
+    — both rows carry the identical plane, so the one-pass sums kernel
+    issues the pair's single decision to both lanes — while unpaired
+    rows verify on their own stream, exactly :func:`verify_accept`.
+    ``tau``/``gscale`` are per-LANE [W] (pair-equal where paired).
+    Returns (err [W] f32, accept [W] bool).
+
+    With ``paired`` all-False this is bit-identical to
+    :func:`verify_accept` (same planes after the kernel's in-tile f32
+    cast, same block split); with ``paired`` all-True each pair's rows
+    reproduce :func:`verify_accept_pairs`' per-pair values exactly —
+    both properties are pinned in tests/test_kernels.py and underpin
+    the serving back-compat wrappers.
+
+    Cost note: an all-paired batch reduces W duplicated guided rows
+    where the pair-only kernel reduces W/2 — the price of one uniform
+    kernel with per-lane outputs for arbitrary masks. Verification is
+    γ ≈ 1-4% of a step's FLOPs (docs/architecture.md), so the
+    duplicated reduction is noise next to the backbone forward; revisit
+    with a scatter-from-pair-rows variant only if a profile ever says
+    otherwise.
+    """
+    W = pred.shape[0]
+    p, r = _mixed_planes(pred, ref_, gscale, paired)
+    p = _pad_to(p, 1, 128)
+    r = _pad_to(r, 1, 128)
+    bc = min(block_c, p.shape[1])
+    while p.shape[1] % bc:
+        bc //= 2
+    out = _ve.verify_sums(p, r, tau=jnp.asarray(tau, jnp.float32),
+                          eps=eps, block_c=bc, interpret=_interpret())
+    return out[:, 2], out[:, 3] > 0.0
+
+
 @functools.partial(jax.jit, static_argnames=("eps", "block_c"))
 def verify_accept_pairs(pred: jnp.ndarray, ref_: jnp.ndarray,
                         tau: jnp.ndarray, gscale: jnp.ndarray, *,
@@ -201,27 +282,22 @@ def verify_accept_pairs(pred: jnp.ndarray, ref_: jnp.ndarray,
     through the same one-pass sums kernel as :func:`verify_accept` — ONE
     τ comparison per pair. ``tau``/``gscale`` are per-PAIR [W/2].
     Returns (err [W/2] f32, accept [W/2] bool).
+
+    The all-paired reduction of :func:`verify_accept_mixed` (one code
+    path): the mixed kernel's pair rows carry identical planes, so the
+    cond rows hold the per-pair values.
     """
     W = pred.shape[0]
     if W % 2 != 0:
         raise ValueError(f"pair verification needs interleaved cond/"
                          f"uncond lane pairs: got odd lane count {W}")
     P = W // 2
-    p2 = pred.reshape(P, 2, -1).astype(jnp.float32)
-    r2 = ref_.reshape(P, 2, -1).astype(jnp.float32)
-    s = jnp.asarray(gscale, jnp.float32).reshape(P, 1)
-    # the CFG combination, restated from pipeline.guided_output (kernels
-    # must not import the diffusion layer) — keep the two in sync
-    pg = p2[:, 1] + s * (p2[:, 0] - p2[:, 1])
-    rg = r2[:, 1] + s * (r2[:, 0] - r2[:, 1])
-    pg = _pad_to(pg, 1, 128)
-    rg = _pad_to(rg, 1, 128)
-    bc = min(block_c, pg.shape[1])
-    while pg.shape[1] % bc:
-        bc //= 2
-    out = _ve.verify_sums(pg, rg, tau=jnp.asarray(tau, jnp.float32),
-                          eps=eps, block_c=bc, interpret=_interpret())
-    return out[:, 2], out[:, 3] > 0.0
+    tau_l = jnp.repeat(jnp.asarray(tau, jnp.float32), 2)
+    gs_l = jnp.repeat(jnp.asarray(gscale, jnp.float32), 2)
+    err, acc = verify_accept_mixed(pred, ref_, tau_l, gs_l,
+                                   jnp.ones((W,), bool), eps=eps,
+                                   block_c=block_c)
+    return err[0::2].reshape(P), acc[0::2].reshape(P)
 
 
 # ---------------------------------------------------------------------------
@@ -296,6 +372,32 @@ def verify_accept_sharded(pred: jnp.ndarray, ref_: jnp.ndarray,
     fn = functools.partial(verify_accept, eps=eps, block_c=block_c)
     return _shard_map(fn, mesh, (pspec, pspec, lspec),
                       (lspec, lspec))(pred, ref_, tau)
+
+
+def verify_accept_mixed_sharded(pred: jnp.ndarray, ref_: jnp.ndarray,
+                                tau: jnp.ndarray, gscale: jnp.ndarray,
+                                paired: jnp.ndarray, *, mesh,
+                                axis_name: str = "data",
+                                eps: float = 1e-8, block_c: int = 1024):
+    """:func:`verify_accept_mixed` with the lane axis sharded.
+
+    pred/ref [W, ...] (lanes over ``axis_name``), tau/gscale/paired [W]
+    lane-sharded -> (err [W], accept [W]), lane-sharded. Requires W to
+    be a multiple of ``2·D`` — the engine's mixed-session width rounding
+    guarantees it — so each shard holds whole pair slots: the guided
+    residual select and each lane's reduction are shard-local, with zero
+    cross-device traffic."""
+    from repro.sharding.specs import lane_shard_count
+    D = lane_shard_count(mesh, axis_name)
+    if pred.shape[0] % (2 * D) != 0:
+        raise ValueError(
+            f"lane count {pred.shape[0]} must be a multiple of 2·D={2*D} "
+            "so pair slots never straddle a shard boundary")
+    lspec = _lane_p(1, 0, axis_name)
+    pspec = _lane_p(pred.ndim, 0, axis_name)
+    fn = functools.partial(verify_accept_mixed, eps=eps, block_c=block_c)
+    return _shard_map(fn, mesh, (pspec, pspec, lspec, lspec, lspec),
+                      (lspec, lspec))(pred, ref_, tau, gscale, paired)
 
 
 def verify_accept_pairs_sharded(pred: jnp.ndarray, ref_: jnp.ndarray,

@@ -6,6 +6,8 @@ Usage:
       --mesh 2
   python -m repro.launch.serve --mode diffusion --requests 6 --lanes 4 \
       --guidance-scale 4.0
+  python -m repro.launch.serve --mode diffusion --requests 8 --lanes 4 \
+      --mixed --scheduler sjf
 
 ``--lanes N`` (N>1) serves through the per-lane adaptive batched scheduler
 (docs/serving.md); ``--lanes 1`` keeps the sequential batch=1 loop.
@@ -15,6 +17,11 @@ forces D host devices via XLA_FLAGS before the first jax import.
 ``--guidance-scale S`` (S>0) serves under classifier-free guidance: each
 request occupies a cond/uncond lane pair with one verify decision per
 pair (docs/cfg.md); the lane width rounds to a multiple of 2×D.
+``--mixed`` serves a heterogeneous API-v2 workload on ONE engine —
+alternating guided (the ``--guidance-scale`` value, default 4.0) and
+unguided requests with distinct per-request τ via ``RequestPolicy``
+(slot-width scheduling, docs/serving.md). ``--scheduler`` picks the
+admission policy (fifo/sjf/edf).
 """
 from __future__ import annotations
 
@@ -31,7 +38,8 @@ def serve_diffusion(args) -> None:
                                get_config, reduced)
     from repro.core.complexity import forward_flops
     from repro.launch.mesh import make_lane_mesh
-    from repro.serving import Request, SpeCaEngine, allocation_report
+    from repro.serving import (Request, RequestPolicy, SpeCaEngine,
+                               allocation_report)
     from repro.training.diffusion_trainer import train_diffusion
 
     cfg = dataclasses.replace(reduced(get_config("dit-xl2")), num_layers=2,
@@ -46,33 +54,61 @@ def serve_diffusion(args) -> None:
     mesh = make_lane_mesh(args.mesh) if args.mesh > 1 else None
     guided = args.guidance_scale > 0
     engine = SpeCaEngine(cfg, out["state"]["params"], dcfg, scfg,
-                         accept_mode=args.accept_mode, guidance=guided,
-                         mesh=mesh)
+                         accept_mode=args.accept_mode,
+                         guidance=guided and not args.mixed,
+                         mesh=mesh, scheduler=args.scheduler)
     gs = args.guidance_scale if guided else None
-    reqs = [Request(request_id=i,
-                    cond={"labels": jnp.asarray([i % cfg.num_classes])},
-                    seed=i, guidance_scale=gs)
-            for i in range(args.requests)]
-    # warm at the served lane width so compile time stays out of req/s
-    streams = 2 if guided else 1
+    labels = lambda i: {"labels": jnp.asarray([i % cfg.num_classes])}  # noqa: E731
+    if args.mixed:
+        # heterogeneous API-v2 traffic on ONE engine: alternating guided
+        # pairs (distinct scales) and unguided lanes (distinct τ)
+        mgs = gs if guided else 4.0
+        reqs = [Request(request_id=i, cond=labels(i), seed=i,
+                        policy=RequestPolicy(guidance_scale=mgs + i % 3)
+                        if i % 2 == 0 else
+                        RequestPolicy(tau0=args.tau0 * (0.5 + i % 3)))
+                for i in range(args.requests)]
+        streams = 2
+    else:
+        reqs = [Request(request_id=i, cond=labels(i), seed=i,
+                        guidance_scale=gs)
+                for i in range(args.requests)]
+        streams = 2 if guided else 1
+    # warm at the served lane width AND program (mixed workloads compile
+    # the slot-width step) so compile time stays out of req/s
     engine.warmup({"labels": jnp.asarray([0])},
-                  lanes=min(args.lanes, streams * args.requests))
+                  lanes=min(args.lanes, streams * args.requests),
+                  mixed=args.mixed)
     t0 = time.time()
     results = engine.serve(reqs, lanes=args.lanes)
     wall = time.time() - t0
     for r in results:
         print(f"req {r.request_id}: full={r.num_full} spec={r.num_spec} "
-              f"alpha={r.alpha:.2f}")
+              f"alpha={r.alpha:.2f} done@tick {r.finish_tick}")
     mode = f"{args.lanes} lanes" if args.lanes > 1 else "batch=1"
-    if guided:
+    if args.mixed:
+        mode += ", mixed guided+unguided slots"
+    elif guided:
         mode += f", cfg pairs s={args.guidance_scale}"
+    if args.scheduler != "fifo":
+        mode += f", {args.scheduler}"
     if mesh is not None:
         mode += f" x {args.mesh} devices"
     print(f"served {len(reqs)} requests in {wall:.1f}s "
           f"({len(reqs)/wall:.2f} req/s, {mode})")
     n_tok = (dcfg.latent_size // cfg.patch_size) ** 2
-    print(allocation_report(results,
-                            streams * forward_flops(cfg, n_tok)))
+    fwd = forward_flops(cfg, n_tok)
+    if args.mixed:
+        # the reference step cost differs per slot shape (a guided step
+        # is two denoiser rows), so report the two populations apart
+        gsub = [r for r, q in zip(results, reqs)
+                if engine.resolve_policy(q).guided]
+        usub = [r for r, q in zip(results, reqs)
+                if not engine.resolve_policy(q).guided]
+        print("guided:", allocation_report(gsub, 2 * fwd))
+        print("unguided:", allocation_report(usub, fwd))
+    else:
+        print(allocation_report(results, streams * fwd))
 
 
 def serve_lm(args) -> None:
@@ -137,6 +173,13 @@ def main() -> None:
                     help="classifier-free guidance scale; >0 serves each "
                          "request as a cond/uncond lane pair with one "
                          "verify decision per pair (docs/cfg.md)")
+    ap.add_argument("--mixed", action="store_true",
+                    help="serve a heterogeneous per-request-policy "
+                         "workload (alternating guided pairs and "
+                         "unguided lanes with distinct τ) on one engine")
+    ap.add_argument("--scheduler", default="fifo",
+                    choices=["fifo", "sjf", "edf"],
+                    help="admission-queue policy (docs/serving.md)")
     ap.add_argument("--steps", type=int, default=30)
     ap.add_argument("--tau0", type=float, default=0.4)
     ap.add_argument("--batch", type=int, default=2)

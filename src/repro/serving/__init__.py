@@ -1,1 +1,7 @@
-from repro.serving.engine import Request, Result, SpeCaEngine, allocation_report  # noqa: F401
+from repro.serving.engine import (Request, Result, SpeCaEngine,  # noqa: F401
+                                  allocation_report)
+from repro.serving.policy import (QueueFull, RequestPolicy,  # noqa: F401
+                                  Ticket)
+from repro.serving.scheduler import (EDFScheduler, FIFOScheduler,  # noqa: F401
+                                     QueueItem, SJFScheduler, Scheduler,
+                                     make_scheduler)

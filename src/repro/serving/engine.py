@@ -1,60 +1,64 @@
-"""SpeCa diffusion serving engine — per-lane adaptive batched serving.
+"""SpeCa diffusion serving engine — per-request policy, slot-width lanes.
 
 The paper's sample-adaptive allocation (§1) says each sample should get
 exactly as much computation as its complexity demands. The engine realises
-that at production batch sizes with a *lane scheduler*: N concurrent
-requests are packed into a fixed-width lane batch and ONE jitted step — the
-unified forecast-verify step from ``repro.core.lane_step``, the same
+that at production batch sizes with a *lane scheduler*: concurrent
+requests are packed into a fixed-width lane batch and ONE jitted step —
+the unified forecast-verify step from ``repro.core.lane_step``, the same
 implementation the reproduction sampler scans — advances all lanes per
 scheduler tick:
 
   * every lane carries its own TaylorSeer difference-table metadata,
-    ``since_anchor`` counter, denoising step index and accept decision;
+    ``since_anchor`` counter, denoising step index, accept decision AND
+    verification threshold (per-request τ policy);
   * drafting runs through the fused per-lane Pallas Taylor kernels and the
-    one-pass verification kernel (``kernels.ops.verify_accept``);
+    one-pass verification kernel (``kernels.ops.verify_accept_mixed``);
   * accepted lanes advance on the speculative output; rejected lanes are
     served by a masked full forward that refreshes ONLY their slice of the
     difference table — when every lane accepts, the full forward is
     skipped entirely;
   * lanes live at *different* denoising steps: when a lane finishes, the
-    scheduler immediately refills it from the request queue (continuous
-    batching).
+    scheduler immediately refills it from the admission queue (continuous
+    batching), in the order the pluggable ``Scheduler`` decides (FIFO /
+    SJF / EDF — ``repro.serving.scheduler``).
 
-Classifier-free guidance (``SpeCaEngine(..., guidance=True)``): a request
-occupies a lane *pair* — its conditional stream at lane ``2k``, its
-unconditional stream (``null_cond_like`` of its conditioning) at lane
-``2k+1``. Both streams draft, verify and refresh in the SAME dispatches;
-the verify residual is the guided combination ``u + s·(c − u)`` at the
-verify layer and ONE accept decision drives both lanes, so the pair's
-anchors never de-synchronize. Guided serving therefore doubles the
-effective batch (two streams per request) without doubling dispatches —
-and without doubling verify *decisions*, which is what keeps the pair's
-all-accept ticks as frequent as a single stream's (see ``docs/cfg.md``).
+Serving API v2 (this module's public surface):
 
-Scheduler state dict (one entry per lane; see ``repro.core.lane_step``
-for the authoritative layout): ``x`` [W,…] latents · ``since``/``step``/
-``active`` [W] draft counter, denoising step, occupancy · ``cond``
-{k: [W,…]} conditioning rows · ``diffs`` [m+1, L, 2, W, T, D] TaylorSeer
-difference table · ``n_anchors``/``anchor_step``/``gap`` [W] anchor
-metadata · ``gscale`` [W] per-lane guidance scale (guided engines only).
+  * **Per-request policy** — everything that used to be an engine mode
+    rides on the request (``repro.serving.policy.RequestPolicy``):
+    guidance scale, negative/null conditioning, τ, max steps, priority,
+    deadline. One engine serves guided and unguided traffic, with
+    distinct scales and thresholds, in ONE batch.
+  * **Slot-width scheduling** — the lane batch is organised in *pair
+    slots* of two adjacent lanes (2k, 2k+1). An unguided request takes
+    one lane; a guided request takes a whole pair (cond stream at 2k,
+    uncond/negative stream at 2k+1) and flips the slot's ``paired``
+    mask, which switches verification to ONE guided-residual decision
+    per pair (``docs/cfg.md``). On a mesh the width rounds to ``2·D``
+    so pair slots never straddle a shard.
+  * **Request lifecycle** — ``submit() -> Ticket``, ``poll``/``result``/
+    ``results``, a ``stream()`` generator, explicit ``tick()``, and
+    ``shutdown()``. Requests are admitted continuously into free slots
+    mid-run; a bounded admission queue (``max_queue``) raises
+    ``QueueFull`` for backpressure.
+  * **Back-compat wrappers** — ``run_request``/``serve_batched``/
+    ``serve`` are thin wrappers over the lifecycle that reproduce the
+    pre-v2 trajectories (pinned in ``tests/test_serving_v2.py``);
+    ``SpeCaEngine(guidance=True)`` becomes a default policy.
 
 Host/device discipline: the step function needs NOTHING from the host to
 decide warm/draft/accept — all decision state lives on-device, and lane
 completion is host-predictable (an active lane advances exactly one
 denoising step per tick). The scheduler therefore dispatches ticks without
 ever blocking on a device value; per-tick flags are fetched only when a
-request completes (its sample must be read anyway). The previous engine
-blocked on ``int(tstate["n_anchors"][0])`` every step of ``run_request`` —
-a full host↔device round-trip per denoising step for a value the host
-could derive — and kept a second, hand-copied batch=1 step implementation.
-Both are gone: ``run_request`` IS the lanes=1 case of the scheduler.
+request completes (its sample must be read anyway).
 """
 from __future__ import annotations
 
 import dataclasses
 import math
 import time
-from typing import Any, Dict, List, Optional
+from typing import Any, Dict, Iterator, List, Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -65,33 +69,39 @@ from repro.core import lane_step as LS
 from repro.core.complexity import forward_flops, verify_flops
 from repro.diffusion.pipeline import (latent_shape, make_stepper,
                                       null_cond_like)
+from repro.serving.policy import QueueFull, RequestPolicy, Ticket
+from repro.serving.scheduler import (QueueItem, Scheduler, fresh_scheduler,
+                                     make_scheduler)
 
 
 @dataclasses.dataclass
 class Request:
-    """One serving request: conditioning + noise seed.
+    """One serving request: conditioning + noise seed + policy.
 
-    ``guidance_scale`` opts the request into classifier-free guidance —
-    it is only legal on an engine constructed with ``guidance=True``
-    (where ``None`` falls back to ``DiffusionConfig.guidance_scale``); a
-    plain engine rejects guided requests instead of silently serving the
-    conditional stream alone.
+    ``policy`` carries every per-request decision (guidance, negative
+    conditioning, τ, max steps, priority, deadline — see
+    ``repro.serving.policy.RequestPolicy``). The legacy
+    ``guidance_scale`` field is folded into the policy and WINS when
+    both are set (it is the more explicit, per-request spelling pre-v2
+    callers already rely on) — set only one of the two.
     """
     request_id: int
     cond: Dict[str, Any]
     seed: int = 0
     guidance_scale: Optional[float] = None
+    policy: Optional[RequestPolicy] = None
 
 
 @dataclasses.dataclass
 class Result:
     """Per-request serving outcome and accounting.
 
-    On a guided engine every counter is per *decision*, not per lane:
+    For a guided request every counter is per *decision*, not per lane:
     the request's cond/uncond pair drafts, verifies and accepts as one
-    unit, so ``num_full + num_spec`` still sums to the schedule length
-    and ``alpha`` stays comparable with unguided serving. ``flops`` does
-    count both streams (a guided full forward is two denoiser rows).
+    unit, so ``num_full + num_spec`` still sums to the request's
+    schedule length and ``alpha`` stays comparable with unguided
+    serving. ``flops`` does count both streams (a guided full forward
+    is two denoiser rows).
     """
     request_id: int
     sample: Any
@@ -108,11 +118,268 @@ class Result:
     # its final denoising step (tick-budget shutdown) or never started it;
     # such requests are excluded from allocation_report (``n_dropped``)
     completed: bool = True
+    # lifecycle accounting (None for dropped-before-start requests):
+    # the scheduler tick at which the request completed, and the
+    # policy's deadline tick — ``deadline_met`` is their comparison
+    finish_tick: Optional[int] = None
+    deadline: Optional[float] = None
+    ticket_id: Optional[int] = None
 
     @property
     def alpha(self) -> float:
         """Acceptance rate: fraction of steps served speculatively."""
         return self.num_spec / max(self.num_full + self.num_spec, 1)
+
+    @property
+    def deadline_met(self) -> Optional[bool]:
+        """True/False against the policy deadline; None when the request
+        had no deadline or never finished."""
+        if self.deadline is None or self.finish_tick is None \
+                or not self.completed:
+            return None
+        return self.finish_tick <= self.deadline
+
+
+@dataclasses.dataclass(eq=False)       # identity semantics: one _Entry
+class _Entry:                          # may span two lanes
+    """One in-flight request: its queue item and the lanes it occupies
+    (one lane, or a whole pair slot for a guided request)."""
+    item: QueueItem
+    lanes: Tuple[int, ...]
+    start_tick: int
+    t0: float
+    done: int = 0       # host-tracked denoising step counter
+
+    @property
+    def streams(self) -> int:
+        return len(self.lanes)
+
+
+class _Session:
+    """One serving session: a fixed-width lane batch, its jitted step,
+    and the host-side slot bookkeeping. The engine's lifecycle API holds
+    one long-lived session; the ``serve_batched`` wrapper spins up a
+    private one per call so one-shot serving never perturbs lifecycle
+    state.
+
+    ``paired`` sessions compile the slot-width ("mixed") step program
+    and can admit guided requests into pair slots; plain sessions
+    compile the pre-v2 per-lane program (bit-identical trajectories for
+    pure-unguided traffic).
+    """
+
+    def __init__(self, engine: "SpeCaEngine", width: int, *,
+                 paired: bool) -> None:
+        self.e = engine
+        self.W = width
+        self.paired = bool(paired) and width >= 2
+        self.step_fn = engine._lane_step(
+            width, "mixed" if self.paired else False)
+        self.state: Optional[Dict[str, Any]] = None
+        self.lane_entry: List[Optional[_Entry]] = [None] * width
+        self.tick = 0
+        self._flag_log: List[Optional[Dict[str, Any]]] = []
+        self._flag_np: Dict[int, Dict[str, np.ndarray]] = {}
+
+    # --- occupancy -------------------------------------------------------
+    def busy(self) -> bool:
+        return any(e is not None for e in self.lane_entry)
+
+    def entries(self) -> List[_Entry]:
+        out: List[_Entry] = []
+        for e in self.lane_entry:
+            if e is not None and e not in out:   # identity (eq=False)
+                out.append(e)
+        return out
+
+    def _free_lanes(self) -> List[int]:
+        return [l for l in range(self.W) if self.lane_entry[l] is None]
+
+    def _free_pairs(self) -> List[int]:
+        return [k for k in range(self.W // 2)
+                if self.lane_entry[2 * k] is None
+                and self.lane_entry[2 * k + 1] is None]
+
+    def fits(self, item: QueueItem) -> bool:
+        if item.streams == 2:
+            return self.paired and bool(self._free_pairs())
+        return bool(self._free_lanes())
+
+    # --- admission -------------------------------------------------------
+    def admit(self, sched: Scheduler) -> List[_Entry] :
+        """Pop fitting requests from the scheduler into free slots until
+        nothing fits (continuous batching; the scheduler decides the
+        order, the session decides the placement)."""
+        placed: List[_Entry] = []
+        while len(sched):
+            item = sched.pop(self.fits)
+            if item is None:
+                break
+            placed.append(self._place(item))
+        return placed
+
+    def _place(self, item: QueueItem) -> _Entry:
+        if item.streams == 2:
+            lane0 = 2 * self._free_pairs()[0]
+            lanes: Tuple[int, ...] = (lane0, lane0 + 1)
+        else:
+            free = self._free_lanes()
+            if self.paired:
+                # prefer a lane whose pair partner is occupied, keeping
+                # whole pairs free for guided admission
+                half = [l for l in free
+                        if l ^ 1 < self.W
+                        and self.lane_entry[l ^ 1] is not None]
+                free = half or free
+            lanes = (free[0],)
+        entry = _Entry(item=item, lanes=lanes, start_tick=self.tick,
+                       t0=time.time())
+        for l in lanes:
+            self.lane_entry[l] = entry
+        self._fill(entry)
+        return entry
+
+    def _fill(self, entry: _Entry) -> None:
+        """Reset the entry's lane slice(s) for its request (host-side;
+        every update is lane-local — on a mesh the SPMD partitioner
+        serves it from the owning shard, the table is never gathered)."""
+        e = self.e
+        req, pol = entry.item.request, entry.item.policy
+        if self.state is None:
+            self.state = LS.init_lane_state(
+                e.cfg, e.dcfg, e.scfg, self.W, req.cond,
+                guidance="mixed" if self.paired else False, mesh=e.mesh)
+        noise = jax.random.normal(jax.random.PRNGKey(req.seed),
+                                  latent_shape(e.cfg, e.dcfg, 1),
+                                  jnp.float32)
+        tau0 = float(e.scfg.tau0 if pol.tau0 is None else pol.tau0)
+        lane0 = entry.lanes[0]
+        self._fill_lane(lane0, req.cond, noise, tau0)
+        if entry.streams == 2:
+            nc = pol.negative_cond
+            if nc is None:
+                nc = e.null_cond if e.null_cond is not None \
+                    else null_cond_like(e.cfg, req.cond)
+            self._fill_lane(lane0 + 1, nc, noise, tau0)
+            gs = float(pol.guidance_scale)
+            st = dict(self.state)
+            st["gscale"] = st["gscale"].at[lane0:lane0 + 2].set(gs)
+            st["paired"] = st["paired"].at[lane0:lane0 + 2].set(True)
+            self.state = st
+        elif self.paired:
+            st = dict(self.state)
+            st["paired"] = st["paired"].at[lane0].set(False)
+            self.state = st
+
+    def _fill_lane(self, lane: int, cond: Dict[str, Any],
+                   noise: jnp.ndarray, tau0: float) -> None:
+        state = dict(self.state)
+        state["x"] = state["x"].at[lane].set(noise[0])
+        state["diffs"] = state["diffs"].at[:, :, :, lane].set(0.0)
+        state["n_anchors"] = state["n_anchors"].at[lane].set(0)
+        state["anchor_step"] = state["anchor_step"].at[lane].set(-1)
+        state["gap"] = state["gap"].at[lane].set(1.0)
+        state["since"] = state["since"].at[lane].set(0)
+        state["step"] = state["step"].at[lane].set(0)
+        state["active"] = state["active"].at[lane].set(True)
+        state["tau0"] = state["tau0"].at[lane].set(tau0)
+        state["cond"] = {k: v.at[lane].set(cond[k][0])
+                         for k, v in state["cond"].items()}
+        self.state = state
+
+    # --- advance ---------------------------------------------------------
+    def advance(self) -> List[Tuple[_Entry, Result]]:
+        """One scheduler tick: dispatch the jitted step (async — no host
+        sync), then complete every entry whose schedule finished. Returns
+        the completions."""
+        state, flags = self.step_fn(self.state)   # async dispatch
+        self.state = state
+        self._flag_log.append(flags)
+        self.tick += 1
+        completed: List[Tuple[_Entry, Result]] = []
+        for entry in self.entries():
+            entry.done += 1              # active entries advance 1/tick
+            if entry.done < entry.item.steps:
+                continue
+            # request complete: NOW touch the device (sample readback +
+            # this entry's accumulated flags)
+            completed.append((entry, self.harvest(entry, self.tick,
+                                                  completed=True)))
+            self._release(entry)
+        self._gc_flags()
+        return completed
+
+    def _release(self, entry: _Entry) -> None:
+        st = dict(self.state)
+        for l in entry.lanes:
+            self.lane_entry[l] = None
+        lane0, k = entry.lanes[0], entry.streams
+        st["active"] = st["active"].at[lane0:lane0 + k].set(False)
+        if self.paired and entry.streams == 2:
+            st["paired"] = st["paired"].at[lane0:lane0 + 2].set(False)
+        self.state = st
+
+    def _fetch(self, t: int) -> Dict[str, np.ndarray]:
+        if t not in self._flag_np:
+            self._flag_np[t] = {k: np.asarray(v)
+                                for k, v in self._flag_log[t].items()
+                                if k in ("attempted", "accepted", "full")}
+        return self._flag_np[t]
+
+    def _gc_flags(self) -> None:
+        # bound the flag log: ticks older than every in-flight entry's
+        # start have been consumed
+        live = [e.start_tick for e in self.entries()]
+        horizon = min(live) if live else self.tick
+        for t in [t for t in self._flag_np if t < horizon]:
+            self._flag_np.pop(t)
+            self._flag_log[t] = None      # keep indices stable
+
+    def harvest(self, entry: _Entry, end_tick: int,
+                completed: bool) -> Result:
+        """Materialise one entry's Result from its accumulated flags
+        (sample readback + flag fetch are the only device touches) —
+        shared by the completion and the tick-budget drain paths so
+        partial and full accounting can never diverge. Flags are read at
+        the entry's first lane: for a guided pair the flags are
+        pair-equal, so this is the pair's single decision."""
+        e = self.e
+        item = entry.item
+        lane0, k = entry.lanes[0], entry.streams
+        accepts, n_att, n_full = [], 0, 0
+        for t in range(entry.start_tick, end_tick):
+            f = self._fetch(t)
+            accepts.append(bool(f["accepted"][lane0]))
+            n_att += int(f["attempted"][lane0])
+            n_full += int(f["full"][lane0])
+        return Result(
+            request_id=item.request.request_id,
+            sample=jax.device_get(self.state["x"][lane0:lane0 + 1]),
+            num_full=n_full, num_spec=entry.done - n_full,
+            flops=n_full * k * e._full_flops
+            + n_att * k * e._verify_flops,
+            wall_s=time.time() - entry.t0,
+            accepts=accepts, completed=completed,
+            finish_tick=end_tick, deadline=item.policy.deadline,
+            ticket_id=item.ticket_id)
+
+    def drain(self) -> List[Tuple[_Entry, Result]]:
+        """Tick-budget shutdown: harvest every in-flight entry as
+        UNFINISHED — partial counters, ``completed=False``."""
+        out = []
+        for entry in self.entries():
+            out.append((entry, self.harvest(entry, self.tick,
+                                            completed=False)))
+            self._release(entry)
+        return out
+
+
+def _dropped_result(item: QueueItem) -> Result:
+    """A queued request that never started (engine shutdown)."""
+    return Result(request_id=item.request.request_id, sample=None,
+                  num_full=0, num_spec=0, flops=0.0, wall_s=0.0,
+                  accepts=[], completed=False,
+                  deadline=item.policy.deadline, ticket_id=item.ticket_id)
 
 
 class SpeCaEngine:
@@ -131,20 +398,32 @@ class SpeCaEngine:
     mesh:
       * a 1-D ``('data',)`` mesh (``repro.launch.mesh.make_lane_mesh``)
         shards the lane axis of every per-lane array — latents, the
-        (m+1, L, 2, W, T, D) difference table, since/active/step/σ/τ
+        (m+1, L, 2, W, T, D) difference table, since/active/step/τ
         vectors — over its D devices, so one engine serves W×D lanes.
         Params replicate; the Pallas kernels run per-shard through their
         ``shard_map`` wrappers. Accept/reject sequences, counters and
         FLOPs accounting are bit-identical to the unsharded engine;
         samples agree to f32 reduction-order tolerance
         (tests/test_serving_sharded.py).
-    guidance:
-      * ``True`` serves every request as a cond/uncond lane PAIR under
-        classifier-free guidance (``Request.guidance_scale``; the
-        unconditional stream's conditioning comes from ``null_cond`` or
-        per-request ``null_cond_like``). One verify decision per pair;
-        the lane width always rounds to a multiple of ``2·D`` so pairs
-        never straddle a shard boundary (``docs/cfg.md``).
+    guidance (legacy):
+      * ``True`` makes every request guided by default — requests whose
+        policy leaves ``guidance_scale`` unset fall back to
+        ``DiffusionConfig.guidance_scale``, exactly the pre-v2 guided
+        engine. v2 engines do not need it: any request can opt into
+        guidance through its ``RequestPolicy`` and mix with unguided
+        traffic in the same batch.
+    scheduler:
+      * admission-queue policy — ``"fifo"`` (default, pre-v2 order),
+        ``"sjf"``, ``"edf"``, or any ``repro.serving.scheduler.
+        Scheduler`` instance/factory.
+    max_queue:
+      * bound on the admission queue; ``submit`` raises ``QueueFull``
+        beyond it (backpressure). ``None`` = unbounded.
+    default_policy:
+      * ``RequestPolicy`` applied to requests that do not carry one.
+    lanes:
+      * default lane width of the lifecycle session started by the
+        first ``submit`` (``serve_batched`` takes its own ``lanes=``).
     """
 
     def __init__(self, cfg: ModelConfig, params, dcfg: DiffusionConfig,
@@ -153,7 +432,11 @@ class SpeCaEngine:
                  verify_backend: str = "fused",
                  guidance: bool = False,
                  null_cond: Optional[Dict[str, Any]] = None,
-                 mesh: Optional[Any] = None):
+                 mesh: Optional[Any] = None,
+                 scheduler: Any = "fifo",
+                 max_queue: Optional[int] = None,
+                 default_policy: Optional[RequestPolicy] = None,
+                 lanes: int = 4):
         if accept_mode not in LS.ACCEPT_MODES:
             raise ValueError(f"unknown accept_mode {accept_mode!r}")
         if verify_backend not in LS.VERIFY_BACKENDS:
@@ -162,6 +445,7 @@ class SpeCaEngine:
             raise ValueError("serving mesh needs a 'data' axis "
                              f"(got {mesh.axis_names})")
         LS.table_dtype(cfg, scfg)      # fail fast on a bad dtype string
+        make_scheduler(scheduler)      # fail fast on a bad scheduler spec
         self.cfg, self.params = cfg, params
         self.dcfg, self.scfg = dcfg, scfg
         self.stepper = make_stepper(dcfg)
@@ -175,24 +459,60 @@ class SpeCaEngine:
         self.mesh = mesh
         self.guidance = bool(guidance)
         self.null_cond = null_cond
-        # lanes one request occupies: 1, or 2 for a guided cond/uncond
-        # pair — the per-dispatch stream multiplier in the accounting
+        self.scheduler_spec = scheduler
+        self.max_queue = max_queue
+        self.default_policy = default_policy
+        self.default_lanes = lanes
+        # lanes one request occupies under the legacy engine-wide mode:
+        # 1, or 2 for a guidance=True engine — kept for lane_width()
         self._streams = 2 if self.guidance else 1
         from repro.sharding.specs import lane_shard_count
         self._lane_shards = lane_shard_count(mesh)
         self._full_flops = forward_flops(cfg, self.n_tok)
         self._verify_flops = verify_flops(cfg, self.n_tok)
-        self._lane_fns: Dict[int, Any] = {}
+        self._lane_fns: Dict[Tuple[int, Any], Any] = {}
+        # lifecycle state (shared long-lived session; serve_batched uses
+        # private per-call sessions instead)
+        self._session: Optional[_Session] = None
+        self._sched: Scheduler = make_scheduler(scheduler)
+        self._seq = 0
+        self._results: Dict[int, Result] = {}
+        self._completion_order: List[int] = []
+        self._ticket_status: Dict[int, str] = {}
 
-    def _lane_step(self, W: int):
-        """The jitted W-lane step (compiled once per lane width)."""
-        if W not in self._lane_fns:
-            self._lane_fns[W] = jax.jit(LS.build_lane_step(
+    # --- policy resolution ----------------------------------------------
+    def resolve_policy(self, req: Request,
+                       base: Optional[RequestPolicy] = None
+                       ) -> RequestPolicy:
+        """The request's effective policy: ``base`` (an explicit
+        override, e.g. ``submit(policy=...)``) or the request's own (or
+        the engine default), with the legacy ``Request.guidance_scale``
+        field and the legacy ``guidance=True`` engine mode folded in —
+        the folding applies on EVERY path, so a request serves
+        identically through submit and serve_batched."""
+        pol = base if base is not None \
+            else req.policy if req.policy is not None \
+            else (self.default_policy or RequestPolicy())
+        if req.guidance_scale is not None:
+            pol = dataclasses.replace(
+                pol, guidance_scale=float(req.guidance_scale))
+        if self.guidance and pol.guidance_scale is None:
+            pol = dataclasses.replace(
+                pol, guidance_scale=float(self.dcfg.guidance_scale))
+        return pol
+
+    def _lane_step(self, W: int, mode: Any = False):
+        """The jitted W-lane step (compiled once per width × program):
+        ``mode=False`` is the plain per-lane program, ``"mixed"`` the
+        slot-width pair-mask program."""
+        key = (W, mode)
+        if key not in self._lane_fns:
+            self._lane_fns[key] = jax.jit(LS.build_lane_step(
                 self.cfg, self.params, self.dcfg, self.scfg, lanes=W,
                 draft_mode=self.draft_mode, accept_mode=self.accept_mode,
                 verify_backend=self.verify_backend,
-                guidance=self.guidance, mesh=self.mesh))
-        return self._lane_fns[W]
+                guidance=mode, mesh=self.mesh))
+        return self._lane_fns[key]
 
     def lane_width(self, lanes: int, n_requests: int) -> int:
         """Effective lane width the scheduler will actually serve at:
@@ -201,79 +521,240 @@ class SpeCaEngine:
         shard owns an equal lane block and a guided cond/uncond pair
         never straddles a shard boundary (surplus lanes just stay
         inactive). Public — benchmarks label their per-device-count rows
-        with this."""
+        with this. Uses the engine-wide stream count (legacy
+        ``guidance=True``); heterogeneous request lists are sized by
+        ``serve_batched`` itself."""
         k = self._streams
         W = max(min(lanes, k * n_requests), k)
         mult = k * self._lane_shards
         return -(-W // mult) * mult
 
-    # --- batch=1 serving: the lanes=1 case of the scheduler --------------
+    def _width_for(self, lanes: int, policies: List[RequestPolicy]) -> int:
+        """Slot-width sizing for a concrete request list: clamp to the
+        total stream demand, keep room for the widest request, and round
+        to the mesh multiple (``2·D`` as soon as any request is guided,
+        so pair slots stay shard-local)."""
+        total = sum(p.streams for p in policies)
+        widest = max(p.streams for p in policies)
+        W = max(min(lanes, total), widest)
+        mult = widest * self._lane_shards
+        return -(-W // mult) * mult
+
+    # --- lifecycle API ---------------------------------------------------
+    @property
+    def current_tick(self) -> int:
+        return self._session.tick if self._session is not None else 0
+
+    def pending(self) -> int:
+        """Queued (not yet admitted) request count."""
+        return len(self._sched)
+
+    def in_flight(self) -> int:
+        """Admitted, not yet completed request count."""
+        if self._session is None:
+            return 0
+        return len(self._session.entries())
+
+    def start(self, *, lanes: Optional[int] = None) -> None:
+        """Start the lifecycle session explicitly (otherwise the first
+        ``submit`` starts it at the engine's default width). The width
+        rounds up to a multiple of ``2·D`` — lifecycle sessions are
+        always pair-capable, so guided and unguided submissions mix."""
+        if self._session is not None:
+            raise RuntimeError("serving session already started; "
+                               "shutdown() first to resize")
+        W = max(lanes if lanes is not None else self.default_lanes, 2)
+        mult = 2 * self._lane_shards
+        W = -(-W // mult) * mult
+        self._session = _Session(self, W, paired=True)
+
+    def submit(self, req: Request,
+               policy: Optional[RequestPolicy] = None) -> Ticket:
+        """Queue one request; returns a ``Ticket`` to poll/stream on.
+
+        ``policy`` overrides ``req.policy`` wholesale when given (the
+        legacy ``Request.guidance_scale`` field and ``guidance=True``
+        engine default still fold in on top, exactly as in
+        ``serve_batched``). Raises ``QueueFull`` when the admission
+        queue is at ``max_queue`` (bounded-queue backpressure — the
+        caller sheds or retries; admitted work is never dropped)."""
+        if self.max_queue is not None and len(self._sched) >= self.max_queue:
+            raise QueueFull(
+                f"admission queue at max_queue={self.max_queue}")
+        if self._session is None:
+            self.start()
+        pol = self.resolve_policy(req, base=policy)
+        item = QueueItem(seq=self._seq, request=req, policy=pol,
+                         steps=pol.steps(self.stepper.num_steps),
+                         submit_tick=self._session.tick,
+                         ticket_id=self._seq)
+        self._seq += 1
+        self._sched.push(item)
+        self._ticket_status[item.ticket_id] = "queued"
+        return Ticket(ticket_id=item.ticket_id,
+                      request_id=req.request_id,
+                      submit_tick=item.submit_tick)
+
+    def tick(self, n: int = 1) -> List[Result]:
+        """Advance the lifecycle session up to ``n`` scheduler ticks
+        (admission + one async step dispatch each); returns the Results
+        completed along the way. Stops early when the engine is idle."""
+        done: List[Result] = []
+        for _ in range(n):
+            if self._session is None:
+                break
+            for entry in self._session.admit(self._sched):
+                self._ticket_status[entry.item.ticket_id] = "running"
+            if not self._session.busy():
+                break
+            for entry, res in self._session.advance():
+                self._record(res)
+                done.append(res)
+        return done
+
+    def _record(self, res: Result) -> None:
+        self._results[res.ticket_id] = res
+        self._completion_order.append(res.ticket_id)
+        self._ticket_status[res.ticket_id] = "done"
+
+    @staticmethod
+    def _tid(ticket: Union[Ticket, int]) -> int:
+        return ticket.ticket_id if isinstance(ticket, Ticket) else ticket
+
+    def poll(self, ticket: Union[Ticket, int]) -> Optional[Result]:
+        """Non-blocking: the ticket's Result if it has completed, else
+        None. Never advances the engine, never evicts the Result —
+        long-lived engines should ``release()`` consumed tickets."""
+        return self._results.get(self._tid(ticket))
+
+    def release(self, *tickets: Union[Ticket, int]) -> None:
+        """Drop completed tickets' bookkeeping (Result incl. its sample
+        array, status, completion-order entry). Completed Results are
+        otherwise retained indefinitely so ``poll``/``result`` stay
+        repeatable — a long-lived lifecycle engine should release each
+        ticket once its Result is consumed, or host memory grows by one
+        sample per request served."""
+        tids = {self._tid(t) for t in tickets}
+        undone = [t for t in tids if t not in self._results]
+        if undone:
+            raise KeyError(f"tickets {sorted(undone)} have no completed "
+                           "Result to release")
+        for tid in tids:
+            self._results.pop(tid)
+            self._ticket_status.pop(tid, None)
+        # _completion_order keeps its (integer) entries so any in-flight
+        # stream() cursor stays valid — streams skip released tickets
+
+    def status(self, ticket: Union[Ticket, int]) -> str:
+        """``"queued"`` | ``"running"`` | ``"done"`` | ``"unknown"``."""
+        return self._ticket_status.get(self._tid(ticket), "unknown")
+
+    def result(self, ticket: Union[Ticket, int],
+               max_ticks: Optional[int] = None) -> Result:
+        """Run scheduler ticks until the ticket completes and return its
+        Result (raises if the engine goes idle first — e.g. the ticket
+        is unknown, or ``max_ticks`` ran out)."""
+        tid = self._tid(ticket)
+        budget = max_ticks
+        while tid not in self._results:
+            if budget is not None and budget <= 0:
+                raise TimeoutError(f"ticket {tid} incomplete after the "
+                                   "tick budget")
+            if self._idle():
+                raise KeyError(f"ticket {tid} is not pending on this "
+                               "engine")
+            self.tick()
+            if budget is not None:
+                budget -= 1
+        return self._results[tid]
+
+    def _idle(self) -> bool:
+        return not (len(self._sched)
+                    or (self._session is not None
+                        and self._session.busy()))
+
+    def results(self, tickets: List[Union[Ticket, int]]) -> List[Result]:
+        """``result`` over a ticket list, preserving order."""
+        return [self.result(t) for t in tickets]
+
+    def stream(self, tickets: Optional[List[Union[Ticket, int]]] = None
+               ) -> Iterator[Result]:
+        """Yield Results in COMPLETION order as the engine runs —
+        ``tickets=None`` streams completions from this call on, until
+        the engine is idle (previously streamed/collected Results are
+        never replayed); a ticket list streams exactly those tickets —
+        including any already completed — until all of them have been
+        yielded, and raises ``KeyError`` up front for a ticket this
+        engine has never seen. New submissions made while streaming are
+        admitted continuously."""
+        want = None if tickets is None else {self._tid(t) for t in tickets}
+        if want is not None:
+            unknown = [t for t in want if t not in self._ticket_status]
+            if unknown:
+                raise KeyError(f"tickets {sorted(unknown)} are not known "
+                               "to this engine")
+        emitted = len(self._completion_order) if want is None else 0
+        while True:
+            while emitted < len(self._completion_order):
+                tid = self._completion_order[emitted]
+                emitted += 1
+                if (want is None or tid in want) \
+                        and tid in self._results:   # skip released
+                    yield self._results[tid]
+            if want is not None and all(
+                    t in self._results            # completed
+                    or t not in self._ticket_status  # or released
+                    for t in want):
+                return
+            if self._idle():
+                return
+            self.tick()
+
+    def shutdown(self) -> List[Result]:
+        """Stop the lifecycle session NOW: in-flight requests come back
+        ``completed=False`` with partial counters, queued requests come
+        back never-started; the session is discarded (a new one starts
+        on the next ``submit``). Returns the drained Results."""
+        out: List[Result] = []
+        if self._session is not None:
+            for entry, res in self._session.drain():
+                self._record(res)
+                out.append(res)
+        for item in self._sched.drain():
+            res = _dropped_result(item)
+            self._record(res)
+            out.append(res)
+        self._session = None
+        return out
+
+    # --- batch=1 serving: the lanes=streams case of the scheduler --------
     def run_request(self, req: Request) -> Result:
         """Serve one request (the exact per-sample reference schedule) —
-        one lane, or one lane pair on a guided engine."""
-        return self.serve_batched([req], lanes=self._streams)[0]
-
-    # --- host-side lane bookkeeping --------------------------------------
-    def _fill_lane(self, state: Dict[str, Any], lane: int, req: Request,
-                   noise: jnp.ndarray, *,
-                   cond: Optional[Dict[str, Any]] = None
-                   ) -> Dict[str, Any]:
-        """Reset one lane's slice for a fresh request (host-side).
-        ``cond`` overrides the conditioning written to the lane — used
-        for the unconditional member of a guided pair; default is the
-        request's own conditioning."""
-        src = req.cond if cond is None else cond
-        state = dict(state)
-        state["x"] = state["x"].at[lane].set(noise[0])
-        state["diffs"] = state["diffs"].at[:, :, :, lane].set(0.0)
-        state["n_anchors"] = state["n_anchors"].at[lane].set(0)
-        state["anchor_step"] = state["anchor_step"].at[lane].set(-1)
-        state["gap"] = state["gap"].at[lane].set(1.0)
-        state["since"] = state["since"].at[lane].set(0)
-        state["step"] = state["step"].at[lane].set(0)
-        state["active"] = state["active"].at[lane].set(True)
-        state["cond"] = {k: v.at[lane].set(src[k][0])
-                         for k, v in state["cond"].items()}
-        return state
-
-    def _request_gscale(self, req: Request) -> float:
-        """A guided request's scale (fallback: the diffusion config)."""
-        gs = req.guidance_scale
-        return float(self.dcfg.guidance_scale if gs is None else gs)
-
-    def _fill_slot(self, state: Dict[str, Any], slot: int, req: Request,
-                   noise: jnp.ndarray) -> Dict[str, Any]:
-        """Fill one scheduler slot: a single lane, or — on a guided
-        engine — the (cond, uncond) lane pair, both seeded with the SAME
-        noise (they share the request's latent trajectory) and the
-        request's guidance scale."""
-        lane0 = slot * self._streams
-        state = self._fill_lane(state, lane0, req, noise)
-        if self.guidance:
-            nc = self.null_cond if self.null_cond is not None \
-                else null_cond_like(self.cfg, req.cond)
-            state = self._fill_lane(state, lane0 + 1, req, noise, cond=nc)
-            gs = self._request_gscale(req)
-            state["gscale"] = state["gscale"] \
-                .at[lane0:lane0 + 2].set(gs)
-        return state
+        one lane, or one lane pair for a guided request."""
+        return self.serve_batched(
+            [req], lanes=self.resolve_policy(req).streams)[0]
 
     def serve_batched(self, requests: List[Request], *, lanes: int = 4,
-                      max_ticks: Optional[int] = None) -> List[Result]:
-        """Serve a request list through the lane scheduler.
+                      max_ticks: Optional[int] = None,
+                      scheduler: Any = None) -> List[Result]:
+        """Serve a request list to completion (back-compat wrapper over
+        the lifecycle machinery — one private session per call).
 
-        Packs up to ``lanes`` concurrent requests per jitted step;
+        Packs up to ``lanes`` concurrent streams per jitted step;
         finished lanes are refilled from the queue immediately
-        (continuous batching). Per-request accept trajectories are
+        (continuous batching) in the order the scheduler decides
+        (default: the engine's, default-default: FIFO — the pre-v2
+        admission order, which keeps this wrapper trajectory-identical
+        to the pre-v2 engine). Per-request accept trajectories are
         identical at every lane width — only the packing differs. On a
         mesh the width rounds up to a multiple of the lane-shard count
-        and each shard refills its own lane block in the same
-        deterministic queue order.
+        (``2·D`` as soon as any request is guided) and each shard
+        refills its own lane block in the same deterministic order.
 
         The dispatch loop never blocks on the device: an active lane
-        finishes after exactly ``num_inference_steps`` ticks (tracked
-        host-side), so per-tick flags are only materialised when one of
-        the ticks' requests completes.
+        finishes after exactly its schedule's ticks (tracked host-side),
+        so per-tick flags are only materialised when one of the ticks'
+        requests completes.
 
         ``max_ticks`` bounds the number of scheduler ticks (engine
         shutdown / drain): requests still in flight when the budget runs
@@ -282,154 +763,82 @@ class SpeCaEngine:
         ``completed=False`` with ``sample=None``. ``allocation_report``
         counts both as ``n_dropped``.
 
-        On a guided engine the scheduler works in *slots* of two lanes —
-        the request's cond/uncond pair — which fill, advance, complete
-        and drain together; all per-request accounting is per pair
-        decision (flags are pair-equal by the lane-step guarantee).
+        Guided requests occupy a pair slot of two lanes — cond/uncond —
+        which fill, advance, complete and drain together; per-request
+        accounting is per pair decision (flags are pair-equal by the
+        lane-step guarantee). Unguided requests occupy single lanes, in
+        the same batch.
         """
         if not requests:
             return []
-        if not self.guidance:
-            bad = [r.request_id for r in requests
-                   if r.guidance_scale is not None]
-            if bad:
-                raise ValueError(
-                    f"requests {bad} carry guidance_scale but this "
-                    "engine was not constructed with guidance=True; a "
-                    "plain engine would silently serve only the "
-                    "conditional stream")
-        k = self._streams
-        W = self.lane_width(lanes, len(requests))
-        n_slots = W // k
-        step_fn = self._lane_step(W)
+        policies = [self.resolve_policy(r) for r in requests]
+        any_guided = any(p.guided for p in policies)
+        W = self._width_for(max(lanes, 1), policies)
+        sess = _Session(self, W, paired=any_guided)
+        # a FRESH private queue: reusing a caller-supplied scheduler
+        # instance here would drain lifecycle submissions into this
+        # one-shot session
+        sched = fresh_scheduler(self.scheduler_spec if scheduler is None
+                                else scheduler)
         S = self.stepper.num_steps
         # queue/results key on queue position, not request_id, so
         # duplicate ids still get their own Result (matching lanes=1)
-        queue = list(enumerate(requests))
-        state = LS.init_lane_state(self.cfg, self.dcfg, self.scfg, W,
-                                   requests[0].cond,
-                                   guidance=self.guidance, mesh=self.mesh)
-        slot_req: List[Optional[Request]] = [None] * n_slots
-        slot_idx = [-1] * n_slots
-        slot_done = [0] * n_slots    # host-tracked denoising step counter
-        slot_start = [0] * n_slots   # tick at which the slot was filled
-        slot_t0 = [0.0] * n_slots
+        for i, (req, pol) in enumerate(zip(requests, policies)):
+            sched.push(QueueItem(seq=i, request=req, policy=pol,
+                                 steps=pol.steps(S), ticket_id=i))
         results: Dict[int, Result] = {}
-        flag_log: List[Dict[str, Any]] = []   # device-side per-tick flags
-        flag_np: Dict[int, Dict[str, np.ndarray]] = {}
-        tick = 0
-
-        def fetch(t: int) -> Dict[str, np.ndarray]:
-            if t not in flag_np:
-                flag_np[t] = {k_: np.asarray(v)
-                              for k_, v in flag_log[t].items()
-                              if k_ in ("attempted", "accepted", "full")}
-            return flag_np[t]
-
-        def harvest(slot: int, end_tick: int, completed: bool) -> Result:
-            """Materialise one slot's Result from its accumulated flags
-            (sample readback + flag fetch are the only device touches) —
-            shared by the completion and the tick-budget drain paths so
-            partial and full accounting can never diverge. Flags are
-            read at the slot's first lane: on a guided engine the pair's
-            flags are equal, so this is the pair's single decision."""
-            req = slot_req[slot]
-            lane0 = slot * k
-            accepts, n_att, n_full = [], 0, 0
-            for t in range(slot_start[slot], end_tick):
-                f = fetch(t)
-                accepts.append(bool(f["accepted"][lane0]))
-                n_att += int(f["attempted"][lane0])
-                n_full += int(f["full"][lane0])
-            return Result(
-                request_id=req.request_id,
-                sample=jax.device_get(state["x"][lane0:lane0 + 1]),
-                num_full=n_full, num_spec=slot_done[slot] - n_full,
-                flops=n_full * k * self._full_flops
-                + n_att * k * self._verify_flops,
-                wall_s=time.time() - slot_t0[slot],
-                accepts=accepts, completed=completed)
-
-        while queue or any(r is not None for r in slot_req):
-            if max_ticks is not None and tick >= max_ticks:
+        while len(sched) or sess.busy():
+            if max_ticks is not None and sess.tick >= max_ticks:
                 break
-            for slot in range(n_slots):
-                if slot_req[slot] is None and queue:
-                    idx, req = queue.pop(0)
-                    noise = jax.random.normal(
-                        jax.random.PRNGKey(req.seed),
-                        latent_shape(self.cfg, self.dcfg, 1), jnp.float32)
-                    state = self._fill_slot(state, slot, req, noise)
-                    slot_req[slot] = req
-                    slot_idx[slot] = idx
-                    slot_done[slot] = 0
-                    slot_start[slot] = tick
-                    slot_t0[slot] = time.time()
-            state, flags = step_fn(state)     # async — no host sync here
-            flag_log.append(flags)
-            tick += 1
-            for slot in range(n_slots):
-                if slot_req[slot] is None:
-                    continue
-                slot_done[slot] += 1          # active slots advance 1/tick
-                if slot_done[slot] < S:
-                    continue
-                # request complete: NOW touch the device (sample readback
-                # + this slot's accumulated flags)
-                results[slot_idx[slot]] = harvest(slot, tick,
-                                                  completed=True)
-                slot_req[slot] = None
-                lane0 = slot * k
-                state["active"] = state["active"] \
-                    .at[lane0:lane0 + k].set(False)
-            # bound the flag log: ticks older than every active slot's
-            # start have been consumed
-            live = [slot_start[i] for i in range(n_slots)
-                    if slot_req[i] is not None]
-            horizon = min(live) if live else tick
-            for t in [t for t in flag_np if t < horizon]:
-                flag_np.pop(t)
-                flag_log[t] = None            # keep indices stable
-        # tick-budget shutdown: drain in-flight slots as UNFINISHED —
-        # partial counters, completed=False — and mark never-started
-        # queue entries the same way, so allocation_report reports them
-        # in n_dropped instead of counting them as served
-        for slot in range(n_slots):
-            if slot_req[slot] is None:
-                continue
-            results[slot_idx[slot]] = harvest(slot, tick, completed=False)
-            slot_req[slot] = None
-        for idx, req in queue:
-            results[idx] = Result(request_id=req.request_id, sample=None,
-                                  num_full=0, num_spec=0, flops=0.0,
-                                  wall_s=0.0, accepts=[], completed=False)
+            sess.admit(sched)
+            for entry, res in sess.advance():
+                results[entry.item.seq] = res
+        # tick-budget shutdown: drain in-flight entries as UNFINISHED and
+        # mark never-started queue entries the same way, so
+        # allocation_report reports them in n_dropped instead of counting
+        # them as served
+        for entry, res in sess.drain():
+            results[entry.item.seq] = res
+        for item in sched.drain():
+            results[item.seq] = _dropped_result(item)
         return [results[i] for i in range(len(requests))]
 
     def serve(self, requests: List[Request], *, lanes: int = 1,
               max_ticks: Optional[int] = None) -> List[Result]:
-        """Effective width <= one request's lanes: sequential batch=1
-        loop; else the lane scheduler (width is clamped to the request
-        count, so a single request always takes the reference path). A
-        tick budget (``max_ticks``) always routes through the scheduler
-        — the sequential loop has no drain semantics."""
-        k = self._streams
-        if max_ticks is None and min(lanes, k * len(requests)) <= k:
-            return [self.run_request(r) for r in requests]
+        """``serve_batched`` under its pre-v2 name and default width —
+        one code path (the former sequential batch=1 loop IS the
+        lanes=1 scheduler: a single slot served in queue order)."""
         return self.serve_batched(requests, lanes=max(lanes, 1),
                                   max_ticks=max_ticks)
 
-    def warmup(self, cond: Dict[str, Any], *, lanes: int = 1) -> None:
+    def warmup(self, cond: Dict[str, Any], *, lanes: int = 1,
+               mixed: bool = False) -> None:
         """Compile the serving step for ``lanes`` outside any timed window
         by serving enough dummy requests end-to-end to fill that width
         (this also warms the host loop and both lax.cond branches).
         ``cond`` is a conditioning template with leading axis 1; the lane
-        step compiles per lane width, so warm at the width the real serve
-        will use. On a guided engine each dummy request fills a lane
-        pair."""
-        n = max(-(-max(lanes, 1) // self._streams), 1)
-        reqs = [Request(request_id=-1 - i, cond=cond, seed=90_000 + i)
-                for i in range(n)]
-        self.serve(reqs, lanes=lanes)
+        step compiles per lane width AND per program, so warm the shape
+        the real serve will use: the default warms the engine-mode
+        program (plain, or all-guided pairs on a legacy ``guidance=True``
+        engine), while ``mixed=True`` warms the v2 slot-width program —
+        a guided+unguided dummy mix at this width — which is what
+        lifecycle sessions (``submit``/``stream``) and heterogeneous
+        ``serve_batched`` workloads compile — and is the ONLY program
+        warmed then (those call sites never run the plain one)."""
+        lanes = max(lanes, 1)
+        if not mixed or self.guidance:
+            n = max(-(-lanes // self._streams), 1)
+            reqs = [Request(request_id=-1 - i, cond=cond, seed=90_000 + i)
+                    for i in range(n)]
+            self.serve(reqs, lanes=lanes)
+        if mixed and not self.guidance:
+            gs = float(self.dcfg.guidance_scale) or 1.0
+            greqs = [Request(request_id=-100, cond=cond, seed=90_100,
+                             policy=RequestPolicy(guidance_scale=gs))] \
+                + [Request(request_id=-101 - i, cond=cond,
+                           seed=90_101 + i)
+                   for i in range(max(lanes - 2, 0))]
+            self.serve_batched(greqs, lanes=lanes)
 
 
 def allocation_report(results: List[Result],
@@ -439,9 +848,8 @@ def allocation_report(results: List[Result],
     Splits requests at the median acceptance rate into easy/hard buckets
     and reports the realised FLOPs speedup of each bucket vs always-full.
     ``full_flops_per_step`` is the always-full cost of ONE schedule step
-    — for results from a guided engine pass ``2 × forward_flops`` (a CFG
-    step is two denoiser rows), matching ``Result.flops`` which counts
-    both streams.
+    — for guided results pass ``2 × forward_flops`` (a CFG step is two
+    denoiser rows), matching ``Result.flops`` which counts both streams.
     Requests the engine did not finish — lanes drained mid-flight at a
     tick-budget shutdown, or queue entries that never started
     (``completed=False``) — and requests with non-finite accounting

@@ -1,0 +1,103 @@
+"""Per-request serving policy (serving API v2).
+
+Before v2, guidance, null conditioning and verification strictness were
+``SpeCaEngine`` constructor flags: a guided engine could not serve
+unguided requests, and every request inherited the same τ. SpecDiff and
+FREE both argue that speculation-based samplers should expose
+per-sample acceptance/uncertainty policy rather than a global mode
+(PAPERS.md) — and SpeCa's own sample-adaptive allocation story (paper
+§1/§4) only pays off at serving scale when *heterogeneous* traffic can
+share one device batch. ``RequestPolicy`` is that per-request knob set:
+every field that used to be an engine mode now rides on the request.
+
+The engine turns a policy into *slot-width scheduling*: an unguided
+request occupies one lane, a guided request occupies a cond/uncond lane
+pair, and both kinds mix freely in one batch (the ``paired`` lane-pair
+mask in ``repro.core.lane_step``). ``tau0`` feeds the per-lane threshold
+vector, ``negative_cond`` replaces the pair's null stream,
+``max_steps`` bounds the request's schedule (shortest-job scheduling /
+compute budgets), and ``priority``/``deadline`` are consumed by the
+pluggable schedulers in ``repro.serving.scheduler``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional
+
+
+@dataclasses.dataclass(frozen=True)
+class RequestPolicy:
+    """Everything one request may decide for itself.
+
+    guidance_scale:
+        ``None`` serves the request unguided on a single lane; a float
+        serves it under classifier-free guidance on a cond/uncond lane
+        pair with ONE verify decision per pair (``docs/cfg.md``).
+    negative_cond:
+        Conditioning for the guided pair's second stream. ``None`` uses
+        the engine's ``null_cond`` (or ``null_cond_like`` of the
+        request's conditioning) — classic CFG against the null class.
+        A non-null dict is *negative-prompt* conditioning: the guided
+        combination ``u + s·(c − u)`` then steers away from this
+        conditioning instead of away from ∅. Pure conditioning policy —
+        the step math is unchanged, and ``negative_cond == null_cond``
+        is bit-identical to the default (pinned in
+        ``tests/test_serving_v2.py``).
+    tau0:
+        Per-request base verification threshold; ``None`` falls back to
+        ``SpeCaConfig.tau0``. Feeds the lane's τ_t = τ0·β^((T−t)/T)
+        schedule — a strict request and a permissive request can share
+        one batch, each verified against its own τ.
+    max_steps:
+        Cap on the request's denoising steps (``None`` = the engine's
+        full ``num_inference_steps`` schedule). A smaller value serves
+        the PREFIX of the schedule — an early-stopped, cheaper sample —
+        and is what makes shortest-job-first scheduling meaningful on
+        mixed workloads.
+    priority:
+        Higher pops first within a scheduler's ordering class (FIFO
+        orders by (priority, arrival); SJF/EDF use it as a tie-break).
+    deadline:
+        Absolute scheduler tick by which the request should complete;
+        consumed by the EDF scheduler and reported as
+        ``Result.deadline`` for hit-rate accounting. ``None`` = no
+        deadline (sorts last under EDF).
+    """
+
+    guidance_scale: Optional[float] = None
+    negative_cond: Optional[Dict[str, Any]] = None
+    tau0: Optional[float] = None
+    max_steps: Optional[int] = None
+    priority: int = 0
+    deadline: Optional[float] = None
+
+    @property
+    def guided(self) -> bool:
+        return self.guidance_scale is not None
+
+    @property
+    def streams(self) -> int:
+        """Lanes this request occupies: 1, or 2 for a guided pair."""
+        return 2 if self.guided else 1
+
+    def steps(self, schedule_steps: int) -> int:
+        """Resolved step count on an engine whose schedule has
+        ``schedule_steps`` steps."""
+        if self.max_steps is None:
+            return schedule_steps
+        return max(1, min(int(self.max_steps), schedule_steps))
+
+
+@dataclasses.dataclass(frozen=True)
+class Ticket:
+    """Handle returned by ``SpeCaEngine.submit`` — poll it, stream on
+    it, or exchange it for the request's ``Result``."""
+
+    ticket_id: int
+    request_id: int
+    submit_tick: int
+
+
+class QueueFull(RuntimeError):
+    """Bounded-queue backpressure: the engine's admission queue is at
+    ``max_queue`` — the caller must retry later (or shed load)."""

@@ -1,0 +1,184 @@
+"""Pluggable refill-queue schedulers for the serving engine.
+
+The host dispatch loop never blocks on the device (PR-2), so the order
+in which queued requests are admitted into free lane slots is pure host
+policy — the ROADMAP's "priority / deadline-aware lane scheduling" item.
+A ``Scheduler`` owns the admission queue; the engine asks it for the
+next request that *fits* the currently free slot shape (an unguided
+request needs one free lane, a guided request needs a whole free lane
+pair) every tick.
+
+Implementations:
+
+  * ``FIFOScheduler`` — arrival order within priority class (priority 0
+    everywhere = exactly the pre-v2 engine's order, which is what keeps
+    the ``serve_batched`` back-compat wrapper trajectory-identical).
+  * ``SJFScheduler``  — shortest remaining schedule first: minimises
+    mean completion time on mixed-length workloads (classic SJF
+    optimality; measured by ``benchmarks/serve_throughput.py
+    --scheduler sjf`` as mean completion ticks).
+  * ``EDFScheduler``  — earliest deadline first: maximises deadline hit
+    rate (EDF is optimal for feasible workloads on a single resource);
+    deadline-less requests sort last.
+
+All three skip over queued requests that do not fit the free slots
+(backfill): a guided request waiting for a whole pair never blocks an
+unguided request that could use the lone free lane. Ties break by
+priority (higher first), then arrival — admission is deterministic, so
+lane runs stay reproducible. Randomized ordering/starvation properties
+are pinned in ``tests/test_scheduler.py``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, List, Optional, Protocol, Tuple
+
+from repro.serving.policy import RequestPolicy
+
+
+@dataclasses.dataclass
+class QueueItem:
+    """One queued request with its resolved policy and schedule length.
+
+    ``seq`` is the admission-queue arrival index (the deterministic
+    tie-break and the key results are returned under); ``steps`` is the
+    request's resolved total schedule length (``policy.steps(S)``).
+    """
+
+    seq: int
+    request: Any
+    policy: RequestPolicy
+    steps: int
+    submit_tick: int = 0
+    ticket_id: int = -1
+
+    @property
+    def streams(self) -> int:
+        return self.policy.streams
+
+
+FitFn = Callable[[QueueItem], bool]
+
+
+class Scheduler(Protocol):
+    """Admission-queue policy: the engine pushes submitted requests and
+    pops the next one to admit whenever a slot frees up.
+
+    ``pop(can_fit)`` must return the best queued item for which
+    ``can_fit(item)`` is True (None when nothing fits), removing it from
+    the queue; ``drain()`` empties the queue (engine shutdown — the
+    items come back so never-started requests can be reported dropped).
+    """
+
+    name: str
+
+    def push(self, item: QueueItem) -> None: ...
+
+    def pop(self, can_fit: Optional[FitFn] = None) -> Optional[QueueItem]: ...
+
+    def drain(self) -> List[QueueItem]: ...
+
+    def __len__(self) -> int: ...
+
+
+class _KeyedScheduler:
+    """Shared machinery: a stable list popped by a sort key + fit scan."""
+
+    name = "keyed"
+
+    def __init__(self) -> None:
+        self._items: List[QueueItem] = []
+
+    def key(self, item: QueueItem) -> Tuple:  # pragma: no cover
+        raise NotImplementedError
+
+    def push(self, item: QueueItem) -> None:
+        self._items.append(item)
+
+    def pop(self, can_fit: Optional[FitFn] = None) -> Optional[QueueItem]:
+        best_i, best_k = -1, None
+        for i, item in enumerate(self._items):
+            if can_fit is not None and not can_fit(item):
+                continue
+            k = self.key(item)
+            if best_k is None or k < best_k:
+                best_i, best_k = i, k
+        if best_i < 0:
+            return None
+        return self._items.pop(best_i)
+
+    def drain(self) -> List[QueueItem]:
+        out, self._items = self._items, []
+        return out
+
+    def __len__(self) -> int:
+        return len(self._items)
+
+
+class FIFOScheduler(_KeyedScheduler):
+    """Arrival order within priority class (default; pre-v2 order at
+    priority 0)."""
+
+    name = "fifo"
+
+    def key(self, item: QueueItem) -> Tuple:
+        return (-item.policy.priority, item.seq)
+
+
+class SJFScheduler(_KeyedScheduler):
+    """Shortest remaining schedule (``QueueItem.steps``) first."""
+
+    name = "sjf"
+
+    def key(self, item: QueueItem) -> Tuple:
+        return (item.steps, -item.policy.priority, item.seq)
+
+
+class EDFScheduler(_KeyedScheduler):
+    """Earliest deadline first; deadline-less requests sort last."""
+
+    name = "edf"
+
+    def key(self, item: QueueItem) -> Tuple:
+        d = item.policy.deadline
+        return (d is None, d if d is not None else 0.0,
+                -item.policy.priority, item.seq)
+
+
+SCHEDULERS = {
+    "fifo": FIFOScheduler,
+    "sjf": SJFScheduler,
+    "edf": EDFScheduler,
+}
+
+
+def make_scheduler(spec: Any = "fifo") -> Scheduler:
+    """Resolve a scheduler: a name from ``SCHEDULERS``, a ``Scheduler``
+    class / zero-arg factory, or an instance (returned as-is)."""
+    if isinstance(spec, str):
+        try:
+            return SCHEDULERS[spec]()
+        except KeyError:
+            raise ValueError(
+                f"unknown scheduler {spec!r} (have {sorted(SCHEDULERS)})"
+            ) from None
+    if isinstance(spec, type) or callable(spec):
+        made = spec()
+        if not hasattr(made, "pop"):
+            raise TypeError(f"{spec!r} did not produce a Scheduler")
+        return made
+    if hasattr(spec, "pop") and hasattr(spec, "push"):
+        return spec
+    raise TypeError(f"cannot interpret {spec!r} as a Scheduler")
+
+
+def fresh_scheduler(spec: Any = "fifo") -> Scheduler:
+    """Like :func:`make_scheduler`, but ALWAYS a new, empty queue: an
+    instance spec yields a fresh instance of its class (zero-arg
+    constructed). The engine's one-shot ``serve_batched`` sessions use
+    this so their private queues never share (or drain) the lifecycle
+    queue behind a caller-supplied scheduler instance."""
+    if not isinstance(spec, (str, type)) and not callable(spec) \
+            and hasattr(spec, "pop"):
+        spec = type(spec)
+    return make_scheduler(spec)

@@ -219,24 +219,31 @@ def replicated(mesh: Mesh) -> NamedSharding:
 # ``.at[lane].set``) is a lane-local dynamic-update-slice that the SPMD
 # partitioner serves from the owning shard — the table is never gathered.
 #
-# CFG pair rule: in guidance mode one request occupies the lane PAIR
-# (2k, 2k+1) — cond and uncond streams. The guided combination
-# ``u + s·(c − u)`` and the pair-reduced verify are cross-lane ops
-# *within* a pair, so a pair must never straddle a shard boundary: the
-# lane width always rounds up to a multiple of ``2·D``
+# CFG pair rule: a guided request occupies the lane PAIR (2k, 2k+1) —
+# cond and uncond streams. The guided combination ``u + s·(c − u)`` and
+# the pair verify are cross-lane ops *within* a pair, so a pair must
+# never straddle a shard boundary: whenever guided requests can be
+# admitted (engine ``guidance=True``, or an API-v2 mixed session) the
+# lane width rounds up to a multiple of ``2·D``
 # (``lane_width_multiple(mesh, streams=2)``), making every pair-fold a
-# shard-local reshape with zero cross-device traffic.
+# shard-local reshape with zero cross-device traffic. In a mixed
+# session a pair slot may instead hold one or two independent unguided
+# lanes — the per-lane ``paired`` mask selects the semantics slot by
+# slot, and the same 2·D rule keeps that select shard-local too.
 
 LANE_AXIS = "data"
 
 # lane-state key -> lane-axis position (post-leading-dim for ``diffs``,
 # where axis 0 is the m+1 difference-order axis and the lane lives at
 # position 3 of the (L, 2, W, T, D) feature layout). ``gscale`` is the
-# per-lane guidance scale (guidance mode only; pair-equal by invariant).
+# per-lane guidance scale and ``paired`` the per-lane pair-slot mask
+# (pair modes only; both pair-equal by invariant); ``tau0`` is the
+# per-lane base verification threshold (serving API v2 — every request
+# carries its own τ policy).
 LANE_STATE_AXES = {
     "x": 0, "since": 0, "step": 0, "active": 0,
     "diffs": 3, "n_anchors": 0, "anchor_step": 0, "gap": 0,
-    "gscale": 0,
+    "gscale": 0, "paired": 0, "tau0": 0,
 }
 
 

@@ -204,6 +204,83 @@ def test_verify_accept_per_lane_thresholds(n, dtype):
     assert np.asarray(ok).dtype == bool
 
 
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_verify_accept_mixed_reduces_to_both_parents(dtype):
+    """The slot-width kernel's two degenerate masks ARE the pre-v2
+    kernels, bitwise: ``paired`` all-False == ``verify_accept`` (every
+    lane on its own stream), all-True == ``verify_accept_pairs`` with
+    each pair's value on both of its rows. These equalities are what
+    keep the serving API v2 back-compat wrappers trajectory-identical."""
+    key = jax.random.PRNGKey(5)
+    W, F = 6, 300
+    p = jax.random.normal(key, (W, F), jnp.float32).astype(dtype)
+    r = (p + 0.05 * jax.random.normal(jax.random.fold_in(key, 1), (W, F))
+         ).astype(dtype)
+    tau = jnp.asarray([0.01, 0.2, 0.05, 0.5, 10.0, 0.0])
+    gs = jnp.asarray([4.0, 4.0, 1.0, 1.0, 7.5, 7.5])
+    # all-False == verify_accept
+    em, am = ops.verify_accept_mixed(p, r, tau, gs,
+                                     jnp.zeros((W,), bool))
+    ep, ap = ops.verify_accept(p, r, tau)
+    np.testing.assert_array_equal(np.asarray(em), np.asarray(ep))
+    np.testing.assert_array_equal(np.asarray(am), np.asarray(ap))
+    # all-True == verify_accept_pairs, pair values on both rows (τ must
+    # be pair-equal where paired — the engine's fill invariant)
+    tau = jnp.repeat(tau[0::2], 2)
+    em, am = ops.verify_accept_mixed(p, r, tau, gs,
+                                     jnp.ones((W,), bool))
+    ep, ap = ops.verify_accept_pairs(p, r, tau[0::2], gs[0::2])
+    np.testing.assert_array_equal(np.asarray(em)[0::2], np.asarray(ep))
+    np.testing.assert_array_equal(np.asarray(em)[0::2],
+                                  np.asarray(em)[1::2])
+    np.testing.assert_array_equal(np.asarray(am)[0::2], np.asarray(ap))
+    np.testing.assert_array_equal(np.asarray(am)[0::2],
+                                  np.asarray(am)[1::2])
+
+
+def test_verify_accept_mixed_composes_per_slot():
+    """A mixed mask == the per-slot composition of the two parents, and
+    an odd trailing lane is always unpaired."""
+    key = jax.random.PRNGKey(9)
+    W, F = 5, 257                       # odd lane count: lane 4 is tail
+    p = jax.random.normal(key, (W, F), jnp.float32)
+    r = p + 0.03 * jax.random.normal(jax.random.fold_in(key, 1), (W, F))
+    tau = jnp.asarray([0.05, 0.05, 0.2, 0.02, 0.5])
+    gs = jnp.asarray([3.0, 3.0, 1.0, 1.0, 1.0])
+    paired = jnp.asarray([True, True, False, False, False])
+    err, ok = ops.verify_accept_mixed(p, r, tau, gs, paired)
+    # slot 0 (lanes 0,1): the pair kernel's single decision on both rows
+    ep, ap = ops.verify_accept_pairs(p[:2], r[:2], tau[:1], gs[:1])
+    np.testing.assert_array_equal(np.asarray(err)[:2],
+                                  np.repeat(np.asarray(ep), 2))
+    np.testing.assert_array_equal(np.asarray(ok)[:2],
+                                  np.repeat(np.asarray(ap), 2))
+    # lanes 2..4: per-lane decisions on their own streams
+    el, al = ops.verify_accept(p[2:], r[2:], tau[2:])
+    np.testing.assert_array_equal(np.asarray(err)[2:], np.asarray(el))
+    np.testing.assert_array_equal(np.asarray(ok)[2:], np.asarray(al))
+
+
+def test_verify_accept_mixed_sharded_width_guard():
+    from repro.launch.mesh import make_lane_mesh
+
+    mesh = make_lane_mesh(1)
+    key = jax.random.PRNGKey(3)
+    p = jax.random.normal(key, (4, 256), jnp.float32)
+    r = p + 0.02 * jax.random.normal(jax.random.fold_in(key, 1), (4, 256))
+    tau = jnp.full((4,), 0.1)
+    gs = jnp.ones((4,))
+    paired = jnp.asarray([True, True, False, False])
+    ge, ga = ops.verify_accept_mixed_sharded(p, r, tau, gs, paired,
+                                             mesh=mesh)
+    we, wa = ops.verify_accept_mixed(p, r, tau, gs, paired)
+    np.testing.assert_array_equal(np.asarray(ge), np.asarray(we))
+    np.testing.assert_array_equal(np.asarray(ga), np.asarray(wa))
+    with pytest.raises(ValueError, match="2·D"):
+        ops.verify_accept_mixed_sharded(p[:1], r[:1], tau[:1], gs[:1],
+                                        paired[:1], mesh=mesh)
+
+
 @pytest.mark.parametrize("order", [1, 2, 3])
 def test_taylor_predict_kernel_matches_core_predict(order):
     """ops.taylor_predict (Pallas, interpret) == core taylor.predict for

@@ -235,13 +235,17 @@ def test_sharded_engine_equivalence_subprocess():
             np.array_equal(np.asarray(es), np.asarray(eu))
             and np.array_equal(np.asarray(os_), np.asarray(ou)))
 
-        # shardings survive fill -> step
+        # shardings survive fill -> step (fill through the v2 session's
+        # real lane-fill path)
+        from repro.serving import RequestPolicy
+        from repro.serving.engine import _Session
+        from repro.serving.scheduler import QueueItem
         eng4 = SpeCaEngine(cfg, params, dcfg, scfg, mesh=mesh4)
-        st = LS.init_lane_state(cfg, dcfg, scfg, 4, reqs[0].cond,
-                                mesh=mesh4)
-        noise = jax.random.normal(jax.random.PRNGKey(0),
-                                  latent_shape(cfg, dcfg, 1), jnp.float32)
-        st = eng4._fill_lane(st, 1, reqs[0], noise)
+        sess = _Session(eng4, 4, paired=False)
+        sess._place(QueueItem(seq=0, request=reqs[0],
+                              policy=RequestPolicy(), steps=10,
+                              ticket_id=0))
+        st = sess.state
         spec_ok = str(st["diffs"].sharding.spec)
         st2, flags = eng4._lane_step(4)(st)
         res["fill_table_spec"] = spec_ok

@@ -1,0 +1,570 @@
+"""Serving API v2 (ISSUE 5 acceptance): per-request policy, slot-width
+mixed batches, the submit/poll lifecycle, and scheduler plug-points.
+
+Load-bearing properties:
+
+  * ONE engine serves a heterogeneous batch — guided requests with
+    distinct scales and negative prompts, unguided requests, distinct
+    per-request τ — and every request's accept sequence, counters and
+    latents match its own homogeneous ``run_request`` reference (the
+    slot-width scheduler changes packing, never per-request semantics).
+  * ``negative_cond == null_cond`` is BIT-identical to default CFG (the
+    negative-prompt stream is pure conditioning policy, ROADMAP item).
+  * The back-compat wrappers (``run_request``/``serve_batched``/
+    ``serve``/``Request.guidance_scale``/``SpeCaEngine(guidance=True)``)
+    reproduce the PR-4 trajectories: the pre-v2 oracle here is the
+    independently-written two-pass CFG sampler from
+    ``tests/test_serving_cfg.py`` (accept sequences exact) plus
+    bitwise wrapper-vs-wrapper pins.
+  * The lifecycle (submit → Ticket, poll/status/result/stream, bounded
+    queue, continuous admission, shutdown drain) matches one-shot
+    serving result-for-result.
+  * SJF/EDF scheduling on a mixed-length workload: SJF strictly
+    improves mean completion ticks over FIFO, EDF strictly improves
+    deadline hit rate over FIFO (the ROADMAP scheduling item).
+
+The multi-device mixed-batch run (D∈{1,2}) lives in a subprocess so
+XLA_FLAGS never leaks into this test process.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import SpeCaConfig
+from repro.diffusion.pipeline import null_cond_like
+from repro.serving import (QueueFull, Request, RequestPolicy, SpeCaEngine,
+                           Ticket)
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+@pytest.fixture(scope="module")
+def engine(tiny_trained_dit):
+    """A PLAIN v2 engine — no guidance flag: guided requests opt in per
+    policy."""
+    cfg, dcfg, params = tiny_trained_dit
+    scfg = SpeCaConfig(taylor_order=2, max_draft=8, tau0=0.4, beta=0.9)
+    return SpeCaEngine(cfg, params, dcfg, scfg)
+
+
+def _label(cfg, i):
+    return {"labels": jnp.asarray([i % cfg.num_classes])}
+
+
+def _mixed_requests(cfg):
+    """Guided (two distinct scales, one with a negative prompt), unguided,
+    and per-request τ — the acceptance-criteria batch."""
+    return [
+        Request(request_id=0, cond=_label(cfg, 1), seed=10,
+                policy=RequestPolicy(guidance_scale=4.0)),
+        Request(request_id=1, cond=_label(cfg, 2), seed=11),
+        Request(request_id=2, cond=_label(cfg, 3), seed=12,
+                policy=RequestPolicy(guidance_scale=2.0,
+                                     negative_cond=_label(cfg, 5))),
+        Request(request_id=3, cond=_label(cfg, 4), seed=13,
+                policy=RequestPolicy(tau0=0.05)),
+        Request(request_id=4, cond=_label(cfg, 6), seed=14,
+                policy=RequestPolicy(tau0=1.5)),
+    ]
+
+
+def _same_result(a, b, *, bitwise_sample=False):
+    assert a.request_id == b.request_id
+    assert a.accepts == b.accepts, a.request_id
+    assert (a.num_full, a.num_spec) == (b.num_full, b.num_spec)
+    assert a.flops == b.flops
+    if bitwise_sample:
+        np.testing.assert_array_equal(np.asarray(a.sample),
+                                      np.asarray(b.sample))
+    else:
+        np.testing.assert_allclose(np.asarray(b.sample),
+                                   np.asarray(a.sample),
+                                   rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# Tentpole: mixed guided+unguided slot-width batches
+# ---------------------------------------------------------------------------
+
+def test_mixed_batch_matches_homogeneous_runs(tiny_trained_dit, engine):
+    """One batch of guided (distinct scales + negative prompt) and
+    unguided (distinct τ) requests == each request served alone."""
+    cfg, dcfg, _ = tiny_trained_dit
+    reqs = _mixed_requests(cfg)
+    seq = [engine.run_request(r) for r in reqs]
+    mixed = engine.serve_batched(reqs, lanes=6)
+    for a, b in zip(seq, mixed):
+        _same_result(a, b)
+        assert a.num_full + a.num_spec == dcfg.num_inference_steps
+    # non-vacuous: strict/permissive τ actually changed behaviour
+    assert seq[3].num_spec < seq[4].num_spec
+    # the guided requests actually drafted+rejected (real speculation)
+    assert seq[0].num_spec > 0 and seq[0].num_full > 0
+
+
+def test_mixed_batch_width_invariance(tiny_trained_dit, engine):
+    """Packing invariance holds across widths with heterogeneous slot
+    shapes (refills land guided pairs and single lanes on the same
+    lanes in different orders)."""
+    cfg, _, _ = tiny_trained_dit
+    reqs = _mixed_requests(cfg)
+    r4 = engine.serve_batched(reqs, lanes=4)
+    r8 = engine.serve_batched(reqs, lanes=8)
+    for a, b in zip(r4, r8):
+        assert a.accepts == b.accepts
+        assert (a.num_full, a.num_spec, a.flops) == \
+            (b.num_full, b.num_spec, b.flops)
+
+
+def test_per_request_tau_is_respected_in_one_batch(tiny_trained_dit,
+                                                   engine):
+    """Same cond+seed, opposite τ extremes, one batch: the permissive
+    lane accepts (after warmup) where the strict lane rejects."""
+    cfg, dcfg, _ = tiny_trained_dit
+    reqs = [Request(request_id=0, cond=_label(cfg, 3), seed=7,
+                    policy=RequestPolicy(tau0=1e-4)),
+            Request(request_id=1, cond=_label(cfg, 3), seed=7,
+                    policy=RequestPolicy(tau0=10.0))]
+    strict, loose = engine.serve_batched(reqs, lanes=2)
+    S = dcfg.num_inference_steps
+    assert strict.num_spec == 0                  # τ≈0 rejects every draft
+    assert loose.num_spec > S // 2               # huge τ accepts drafts
+    assert strict.num_full + strict.num_spec == S
+    assert loose.num_full + loose.num_spec == S
+
+
+# ---------------------------------------------------------------------------
+# Negative-prompt conditioning (satellite)
+# ---------------------------------------------------------------------------
+
+def test_negative_cond_equal_null_is_bit_identical(tiny_trained_dit,
+                                                   engine):
+    """``negative_cond == null_cond`` ⇒ bit-identical to default CFG:
+    the negative stream is pure conditioning policy, no step change."""
+    cfg, _, _ = tiny_trained_dit
+    base = Request(request_id=0, cond=_label(cfg, 2), seed=21,
+                   policy=RequestPolicy(guidance_scale=4.0))
+    explicit = Request(
+        request_id=0, cond=_label(cfg, 2), seed=21,
+        policy=RequestPolicy(guidance_scale=4.0,
+                             negative_cond=null_cond_like(
+                                 cfg, _label(cfg, 2))))
+    a = engine.run_request(base)
+    b = engine.run_request(explicit)
+    _same_result(a, b, bitwise_sample=True)
+
+
+def test_negative_prompt_steers_away(tiny_trained_dit, engine):
+    """A real (non-null) negative prompt changes the trajectory — and
+    differs from using that prompt as the positive conditioning."""
+    cfg, _, _ = tiny_trained_dit
+    null_run = engine.run_request(
+        Request(request_id=0, cond=_label(cfg, 2), seed=22,
+                policy=RequestPolicy(guidance_scale=4.0)))
+    neg_run = engine.run_request(
+        Request(request_id=0, cond=_label(cfg, 2), seed=22,
+                policy=RequestPolicy(guidance_scale=4.0,
+                                     negative_cond=_label(cfg, 6))))
+    assert np.isfinite(np.asarray(neg_run.sample)).all()
+    assert np.abs(np.asarray(neg_run.sample)
+                  - np.asarray(null_run.sample)).max() > 1e-4
+
+
+# ---------------------------------------------------------------------------
+# Back-compat wrappers (bitwise pins)
+# ---------------------------------------------------------------------------
+
+def test_wrappers_are_bitwise_consistent(tiny_trained_dit, engine):
+    """The three wrapper spellings of one request — ``run_request``,
+    ``serve(lanes=1)``, ``serve_batched(lanes=streams)`` — are bitwise
+    identical (same session shape ⇒ same XLA program), for unguided and
+    guided requests; legacy ``Request.guidance_scale`` and
+    ``RequestPolicy.guidance_scale`` are the same request."""
+    cfg, _, _ = tiny_trained_dit
+    for req, w in [
+        (Request(request_id=5, cond=_label(cfg, 1), seed=31), 1),
+        (Request(request_id=6, cond=_label(cfg, 2), seed=32,
+                 guidance_scale=4.0), 2),
+        (Request(request_id=6, cond=_label(cfg, 2), seed=32,
+                 policy=RequestPolicy(guidance_scale=4.0)), 2),
+    ]:
+        a = engine.run_request(req)
+        b = engine.serve([req], lanes=1)[0]
+        c = engine.serve_batched([req], lanes=w)[0]
+        _same_result(a, b, bitwise_sample=True)
+        _same_result(a, c, bitwise_sample=True)
+    # the two guidance spellings are bitwise-identical too
+    legacy = engine.run_request(
+        Request(request_id=7, cond=_label(cfg, 3), seed=33,
+                guidance_scale=3.0))
+    v2 = engine.run_request(
+        Request(request_id=7, cond=_label(cfg, 3), seed=33,
+                policy=RequestPolicy(guidance_scale=3.0)))
+    _same_result(legacy, v2, bitwise_sample=True)
+
+
+def test_guidance_true_engine_is_default_policy(tiny_trained_dit, engine):
+    """Legacy ``SpeCaEngine(guidance=True)`` == a default guided policy
+    at ``DiffusionConfig.guidance_scale`` — bitwise."""
+    import dataclasses
+
+    cfg, dcfg, params = tiny_trained_dit
+    scfg = SpeCaConfig(taylor_order=2, max_draft=8, tau0=0.4, beta=0.9)
+    dcfg_g = dataclasses.replace(dcfg, guidance_scale=4.0)
+    legacy = SpeCaEngine(cfg, params, dcfg_g, scfg, guidance=True)
+    req = Request(request_id=0, cond=_label(cfg, 2), seed=41)
+    a = legacy.run_request(req)                  # engine-wide mode
+    b = engine.run_request(dataclasses.replace(
+        req, policy=RequestPolicy(guidance_scale=4.0)))
+    _same_result(a, b, bitwise_sample=True)
+    assert legacy.resolve_policy(req).guidance_scale == 4.0
+    assert legacy.lane_width(1, 1) == 2          # legacy width rules hold
+    # legacy folding applies on EVERY path: an explicit submit(policy=)
+    # override (e.g. to tighten τ) keeps the engine's guidance default
+    # and a request's legacy guidance_scale field
+    assert legacy.resolve_policy(
+        req, base=RequestPolicy(tau0=0.1)).guidance_scale == 4.0
+    assert engine.resolve_policy(
+        dataclasses.replace(req, guidance_scale=2.5),
+        base=RequestPolicy(tau0=0.1)).guidance_scale == 2.5
+
+
+# ---------------------------------------------------------------------------
+# max_steps policy
+# ---------------------------------------------------------------------------
+
+def test_max_steps_serves_schedule_prefix(tiny_trained_dit, engine):
+    """``max_steps=k`` completes the request after k ticks with the
+    FIRST k accept decisions of the full run (prefix property) and
+    ``completed=True`` — a budget, not a drop."""
+    cfg, dcfg, _ = tiny_trained_dit
+    S = dcfg.num_inference_steps
+    k = S // 2
+    full = engine.run_request(
+        Request(request_id=0, cond=_label(cfg, 1), seed=51))
+    short = engine.run_request(
+        Request(request_id=0, cond=_label(cfg, 1), seed=51,
+                policy=RequestPolicy(max_steps=k)))
+    assert short.completed
+    assert short.num_full + short.num_spec == k
+    assert short.accepts == full.accepts[:k]
+    assert short.finish_tick == k
+
+
+# ---------------------------------------------------------------------------
+# Lifecycle: submit / poll / result / stream / shutdown / backpressure
+# ---------------------------------------------------------------------------
+
+def test_lifecycle_matches_one_shot_serving(tiny_trained_dit, engine):
+    cfg, _, _ = tiny_trained_dit
+    reqs = _mixed_requests(cfg)
+    oneshot = engine.serve_batched(reqs, lanes=6)
+
+    life = SpeCaEngine(engine.cfg, engine.params, engine.dcfg, engine.scfg,
+                       lanes=6)
+    tickets = [life.submit(r) for r in reqs]
+    assert all(isinstance(t, Ticket) for t in tickets)
+    assert all(life.status(t) == "queued" for t in tickets)
+    assert life.poll(tickets[0]) is None         # poll never advances
+    got = life.results(tickets)
+    for a, b in zip(oneshot, got):
+        assert a.accepts == b.accepts
+        assert (a.num_full, a.num_spec, a.flops) == \
+            (b.num_full, b.num_spec, b.flops)
+        assert b.ticket_id is not None
+    assert all(life.status(t) == "done" for t in tickets)
+    assert life.poll(tickets[2]).accepts == oneshot[2].accepts
+
+
+def test_stream_yields_in_completion_order_with_live_admission(
+        tiny_trained_dit, engine):
+    """``stream()`` yields as requests finish; submissions made while
+    streaming are admitted into freed slots mid-run (continuous
+    batching across the API boundary)."""
+    cfg, dcfg, _ = tiny_trained_dit
+    life = SpeCaEngine(engine.cfg, engine.params, engine.dcfg, engine.scfg,
+                       lanes=2)
+    first = [life.submit(Request(request_id=i, cond=_label(cfg, i),
+                                 seed=60 + i)) for i in range(2)]
+    got, injected = [], []
+    for res in life.stream():
+        got.append(res)
+        if not injected:                        # inject mid-stream
+            injected = [life.submit(
+                Request(request_id=99, cond=_label(cfg, 5), seed=99))]
+    assert [r.ticket_id for r in got[:2]] == \
+        [t.ticket_id for t in first]
+    assert got[-1].ticket_id == injected[0].ticket_id
+    assert len(got) == 3 and all(r.completed for r in got)
+    # finish ticks are monotone in completion order
+    ticks = [r.finish_tick for r in got]
+    assert ticks == sorted(ticks)
+    # the injected request's trajectory is the reference one
+    ref = engine.run_request(
+        Request(request_id=99, cond=_label(cfg, 5), seed=99))
+    assert got[-1].accepts == ref.accepts
+
+
+def test_bounded_queue_backpressure(tiny_trained_dit, engine):
+    cfg, _, _ = tiny_trained_dit
+    life = SpeCaEngine(engine.cfg, engine.params, engine.dcfg, engine.scfg,
+                       lanes=2, max_queue=2)
+    t0 = life.submit(Request(request_id=0, cond=_label(cfg, 0), seed=70))
+    t1 = life.submit(Request(request_id=1, cond=_label(cfg, 1), seed=71))
+    with pytest.raises(QueueFull):
+        life.submit(Request(request_id=2, cond=_label(cfg, 2), seed=72))
+    # ticking admits queued work into lanes, freeing queue capacity
+    life.tick()
+    t2 = life.submit(Request(request_id=2, cond=_label(cfg, 2), seed=72))
+    res = life.results([t0, t1, t2])
+    assert [r.request_id for r in res] == [0, 1, 2]
+    assert all(r.completed for r in res)
+
+
+def test_shutdown_drains_like_max_ticks(tiny_trained_dit, engine):
+    """Lifecycle shutdown == the wrapper's ``max_ticks`` drain: partial
+    counters + completed=False for in-flight, never-started for queued
+    — and the engine accepts new work afterwards."""
+    cfg, dcfg, _ = tiny_trained_dit
+    S = dcfg.num_inference_steps
+    reqs = [Request(request_id=i, cond=_label(cfg, i), seed=80 + i)
+            for i in range(3)]
+    ref = engine.serve_batched(reqs, lanes=2, max_ticks=S // 2)
+
+    life = SpeCaEngine(engine.cfg, engine.params, engine.dcfg, engine.scfg,
+                       lanes=2)
+    tickets = [life.submit(r) for r in reqs]
+    life.tick(S // 2)
+    drained = life.shutdown()
+    assert len(drained) == 3
+    by_ticket = {r.ticket_id: r for r in drained}
+    for t, want in zip(tickets, ref):
+        got = by_ticket[t.ticket_id]
+        assert not got.completed
+        assert got.accepts == want.accepts
+        assert (got.num_full, got.num_spec) == (want.num_full,
+                                                want.num_spec)
+    assert by_ticket[tickets[2].ticket_id].sample is None  # never started
+    # fresh session after shutdown
+    t = life.submit(reqs[0])
+    assert life.result(t).completed
+
+
+def test_unknown_ticket_raises(tiny_trained_dit, engine):
+    life = SpeCaEngine(engine.cfg, engine.params, engine.dcfg, engine.scfg)
+    with pytest.raises(KeyError):
+        life.result(1234)
+    assert life.status(1234) == "unknown"
+
+
+def test_stream_never_replays_and_release_evicts(tiny_trained_dit,
+                                                 engine):
+    """An open-ended ``stream()`` yields only completions made from the
+    call on (no replay of history); a ticket-list stream includes
+    already-completed tickets; ``release`` evicts a consumed Result
+    (bounding host memory) and releases are skipped, not re-yielded."""
+    cfg, _, _ = tiny_trained_dit
+    life = SpeCaEngine(engine.cfg, engine.params, engine.dcfg, engine.scfg,
+                       lanes=2)
+    t0 = life.submit(Request(request_id=0, cond=_label(cfg, 0), seed=40))
+    first = list(life.stream())
+    assert [r.ticket_id for r in first] == [t0.ticket_id]
+    t1 = life.submit(Request(request_id=1, cond=_label(cfg, 1), seed=41))
+    second = list(life.stream())                 # no replay of t0
+    assert [r.ticket_id for r in second] == [t1.ticket_id]
+    # explicit ticket list DOES include the already-completed result
+    assert [r.ticket_id for r in life.stream([t0])] == [t0.ticket_id]
+    with pytest.raises(KeyError):
+        list(life.stream([9999]))
+    life.release(t0)
+    assert life.poll(t0) is None
+    assert life.poll(t1) is not None             # untouched
+    with pytest.raises(KeyError):
+        life.release(t0)                         # already gone
+    # released tickets are skipped by later ticket-list streams' guard
+    with pytest.raises(KeyError):
+        list(life.stream([t0]))                  # no longer known
+
+
+def test_serve_batched_never_drains_lifecycle_queue(tiny_trained_dit,
+                                                    engine):
+    """A one-shot ``serve_batched`` uses a PRIVATE queue even when the
+    engine was built around a caller-supplied scheduler instance: the
+    lifecycle submission stays queued and is still servable after."""
+    from repro.serving import SJFScheduler
+
+    cfg, _, _ = tiny_trained_dit
+    life = SpeCaEngine(engine.cfg, engine.params, engine.dcfg, engine.scfg,
+                       scheduler=SJFScheduler(), lanes=2)
+    ticket = life.submit(Request(request_id=7, cond=_label(cfg, 1),
+                                 seed=77))
+    got = life.serve_batched([Request(request_id=8, cond=_label(cfg, 2),
+                                      seed=88)], lanes=1)
+    assert [r.request_id for r in got] == [8]
+    assert life.status(ticket) == "queued"        # untouched
+    assert life.result(ticket).request_id == 7
+
+
+# ---------------------------------------------------------------------------
+# Schedulers through the engine (mixed-length workload)
+# ---------------------------------------------------------------------------
+
+def _length_workload(cfg, S):
+    """One long job in front, short jobs behind — the classic SJF/EDF
+    separation on a single slot: FIFO serves the long job first, so the
+    short jobs' completions (and tight deadlines) suffer."""
+    long_req = Request(request_id=0, cond=_label(cfg, 0), seed=90)
+    shorts = [Request(request_id=1 + i, cond=_label(cfg, 1 + i),
+                      seed=91 + i,
+                      policy=RequestPolicy(max_steps=max(S // 4, 1),
+                                           deadline=float((i + 1) * S)))
+              for i in range(2)]
+    return [long_req] + shorts
+
+
+@pytest.mark.parametrize("name", ["fifo", "sjf", "edf"])
+def test_scheduler_choice_preserves_trajectories(tiny_trained_dit, engine,
+                                                 name):
+    """Scheduling reorders admission, never per-request semantics."""
+    cfg, dcfg, _ = tiny_trained_dit
+    reqs = _length_workload(cfg, dcfg.num_inference_steps)
+    ref = {r.request_id: engine.run_request(r) for r in reqs}
+    got = engine.serve_batched(reqs, lanes=1, scheduler=name)
+    for res in got:
+        assert res.accepts == ref[res.request_id].accepts
+        assert res.num_full == ref[res.request_id].num_full
+
+
+def test_sjf_beats_fifo_on_mean_completion(tiny_trained_dit, engine):
+    cfg, dcfg, _ = tiny_trained_dit
+    S = dcfg.num_inference_steps
+    reqs = _length_workload(cfg, S)
+    fifo = engine.serve_batched(reqs, lanes=1, scheduler="fifo")
+    sjf = engine.serve_batched(reqs, lanes=1, scheduler="sjf")
+    mean_fifo = np.mean([r.finish_tick for r in fifo])
+    mean_sjf = np.mean([r.finish_tick for r in sjf])
+    assert mean_sjf < mean_fifo
+    # FIFO served arrival order; SJF served the short jobs first
+    assert fifo[0].finish_tick == S
+    assert sjf[0].finish_tick == sum(r.num_full + r.num_spec for r in sjf)
+
+
+def test_edf_beats_fifo_on_deadline_hit_rate(tiny_trained_dit, engine):
+    cfg, dcfg, _ = tiny_trained_dit
+    S = dcfg.num_inference_steps
+    reqs = _length_workload(cfg, S)
+
+    def hit_rate(results):
+        met = [r.deadline_met for r in results if r.deadline is not None]
+        return np.mean([bool(m) for m in met])
+
+    fifo = engine.serve_batched(reqs, lanes=1, scheduler="fifo")
+    edf = engine.serve_batched(reqs, lanes=1, scheduler="edf")
+    assert hit_rate(edf) > hit_rate(fifo)
+    assert hit_rate(edf) == 1.0
+
+
+# ---------------------------------------------------------------------------
+# Subprocess: mixed slot-width batches over D ∈ {1, 2} forced host devices
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_mixed_batch_sharded_equivalence_subprocess():
+    """D∈{1,2} lane-sharded MIXED batches (guided pairs + unguided lanes
+    + per-request τ in one width-4 batch) reproduce the unsharded run
+    exactly on accept/reject sequences, counters and FLOPs, with
+    samples bitwise at D=1 and within the ulp boundary at D=2; the
+    mixed verify kernel is bitwise under shard_map at D=2."""
+    code = textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
+        import dataclasses, json
+        import jax, numpy as np
+        import jax.numpy as jnp
+        from repro.configs import (DiffusionConfig, SpeCaConfig,
+                                   TrainConfig, get_config, reduced)
+        from repro.kernels import ops
+        from repro.launch.mesh import make_lane_mesh
+        from repro.serving import Request, RequestPolicy, SpeCaEngine
+        from repro.training.diffusion_trainer import train_diffusion
+
+        cfg = dataclasses.replace(reduced(get_config("dit-xl2")),
+                                  num_layers=2, d_model=64, d_ff=128,
+                                  num_heads=4, num_kv_heads=4,
+                                  num_classes=8)
+        dcfg = DiffusionConfig(num_inference_steps=10, latent_size=8,
+                               schedule="cosine")
+        out = train_diffusion(cfg, dcfg,
+                              TrainConfig(global_batch=8, steps=60,
+                                          lr=2e-3), verbose=False)
+        params = out["state"]["params"]
+        scfg = SpeCaConfig(taylor_order=2, max_draft=6, tau0=0.5,
+                           beta=0.9)
+        lab = lambda i: {"labels": jnp.asarray([i % 8])}
+        reqs = [
+            Request(request_id=0, cond=lab(1), seed=0,
+                    policy=RequestPolicy(guidance_scale=4.0)),
+            Request(request_id=1, cond=lab(2), seed=1),
+            Request(request_id=2, cond=lab(3), seed=2,
+                    policy=RequestPolicy(tau0=0.1)),
+            Request(request_id=3, cond=lab(4), seed=3,
+                    policy=RequestPolicy(guidance_scale=2.0,
+                                         negative_cond=lab(6))),
+            Request(request_id=4, cond=lab(5), seed=4),
+        ]
+
+        def signature(results):
+            return [[r.accepts, r.num_full, r.num_spec, r.flops]
+                    for r in results]
+
+        res = {}
+        ref_engine = SpeCaEngine(cfg, params, dcfg, scfg)
+        ref = ref_engine.serve_batched(reqs, lanes=4)
+        res["ref_accepts_total"] = int(sum(sum(r.accepts) for r in ref))
+        res["ref_fulls_total"] = int(sum(r.num_full for r in ref))
+        for D in (1, 2):
+            mesh = make_lane_mesh(D)
+            eng = SpeCaEngine(cfg, params, dcfg, scfg, mesh=mesh)
+            got = eng.serve_batched(reqs, lanes=4)
+            res[f"d{D}_sig_equal"] = signature(got) == signature(ref)
+            res[f"d{D}_sample_max_diff"] = float(max(
+                np.abs(np.asarray(a.sample, np.float64)
+                       - np.asarray(b.sample, np.float64)).max()
+                for a, b in zip(ref, got)))
+
+        # mixed verify kernel bitwise under shard_map at D=2
+        mesh2 = make_lane_mesh(2)
+        key = jax.random.PRNGKey(0)
+        pred = jax.random.normal(key, (4, 256), jnp.float32)
+        refp = pred + 0.02 * jax.random.normal(
+            jax.random.fold_in(key, 1), (4, 256))
+        gs = jnp.asarray([2.0, 2.0, 1.0, 1.0])
+        tau = jnp.asarray([0.05, 0.05, 0.5, 0.01])
+        paired = jnp.asarray([True, True, False, False])
+        ge, ga = ops.verify_accept_mixed_sharded(pred, refp, tau, gs,
+                                                 paired, mesh=mesh2)
+        we, wa = ops.verify_accept_mixed(pred, refp, tau, gs, paired)
+        res["kern_mixed_bitwise"] = bool(
+            np.array_equal(np.asarray(ge), np.asarray(we))
+            and np.array_equal(np.asarray(ga), np.asarray(wa)))
+        print(json.dumps(res))
+    """)
+    env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run([sys.executable, "-c", code], env=env,
+                         capture_output=True, text=True, timeout=560)
+    assert out.returncode == 0, out.stderr[-2000:]
+    import json
+    res = json.loads(out.stdout.strip().splitlines()[-1])
+    assert res["ref_accepts_total"] > 0          # non-vacuous
+    assert res["ref_fulls_total"] > 0
+    for D in (1, 2):
+        assert res[f"d{D}_sig_equal"], (D, res)
+    assert res["d1_sample_max_diff"] == 0.0
+    assert res["d2_sample_max_diff"] <= 2e-5
+    assert res["kern_mixed_bitwise"]

@@ -1,0 +1,200 @@
+#!/usr/bin/env python3
+"""Chart the serving/table perf trajectory across CI smoke-bench runs.
+
+The CI ``smoke-bench`` job uploads ``benchmarks/artifacts/results/*.json``
+per PR (``serve_throughput_*`` requests/s rows, ``table_bench`` kernel
+traffic). This tool turns a sequence of those artifact snapshots — one
+directory (or loose ``.json``) per PR, in the order given — into a
+single dependency-free SVG line chart (plus a machine-readable sidecar
+JSON) tracking, per snapshot:
+
+  * ``req/s`` per serving mode (lane rows keyed by device count and
+    guidance, scheduler rows by policy) from every
+    ``serve_throughput*.json``;
+  * table kernel traffic (``predict+update MB`` moved per draft step,
+    ``kernel`` backend row) from ``table_bench.json``;
+  * EDF/SJF scheduler quality columns (``deadline_hit_rate``,
+    ``mean_completion_ticks``) when present.
+
+This closes the ROADMAP "perf trajectory" item: download a few PRs'
+``smoke-bench-results`` artifacts next to each other and run
+
+    python tools/plot_perf_trajectory.py run1/ run2/ run3/ \
+        -o perf_trajectory.svg
+
+No third-party dependencies (the CI container has no matplotlib): the
+SVG is written by hand.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+from typing import Dict, List, Optional, Tuple
+
+PALETTE = ["#4e79a7", "#f28e2b", "#59a14f", "#e15759", "#76b7b2",
+           "#edc948", "#b07aa1", "#ff9da7", "#9c755f", "#bab0ac"]
+
+
+def _load_json(path: str):
+    try:
+        with open(path) as f:
+            return json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        print(f"warning: skipping {path}: {e}", file=sys.stderr)
+        return None
+
+
+def _snapshot_files(entry: str) -> List[str]:
+    if os.path.isdir(entry):
+        return sorted(
+            os.path.join(entry, f) for f in os.listdir(entry)
+            if f.endswith(".json"))
+    return [entry] if entry.endswith(".json") else []
+
+
+def extract_series(entry: str) -> Dict[str, float]:
+    """One snapshot (PR artifact dir) -> {series name: value}."""
+    out: Dict[str, float] = {}
+    for path in _snapshot_files(entry):
+        rows = _load_json(path)
+        if not isinstance(rows, list):
+            continue
+        name = os.path.basename(path)
+        if name.startswith("serve_throughput"):
+            for row in rows:
+                mode = str(row.get("mode", ""))
+                rps = row.get("req_per_s")
+                if rps is None:
+                    continue
+                if mode.startswith("sched="):
+                    out[f"req/s {mode}"] = float(rps)
+                    if row.get("deadline_hit_rate") is not None:
+                        out[f"hit-rate {mode}"] = \
+                            float(row["deadline_hit_rate"])
+                    if row.get("mean_completion_ticks") is not None:
+                        out[f"mean-ticks {mode}"] = \
+                            float(row["mean_completion_ticks"])
+                    continue
+                guided = float(row.get("guidance", 0.0) or 0.0) > 0
+                if mode.startswith("batch=1"):
+                    key = "req/s batch=1"
+                elif mode.endswith(",split"):
+                    key = "req/s split"
+                else:
+                    key = f"req/s lanes D={row.get('devices', 1)}"
+                if guided:
+                    key += " guided"
+                out[key] = float(rps)
+        elif name.startswith("table_bench"):
+            for row in rows:
+                if row.get("backend") == "kernel":
+                    pb = row.get("predict_bytes_mb")
+                    ub = row.get("update_bytes_mb")
+                    if pb is not None and ub is not None:
+                        out["table MB/draft-step (kernel)"] = \
+                            float(pb) + float(ub)
+    return out
+
+
+def collect(entries: List[str]) -> Tuple[List[str], Dict[str, List]]:
+    """-> (snapshot labels, {series: [value | None per snapshot]})."""
+    labels = [os.path.basename(os.path.normpath(e)) or e for e in entries]
+    snaps = [extract_series(e) for e in entries]
+    series: Dict[str, List[Optional[float]]] = {}
+    for name in sorted({k for s in snaps for k in s}):
+        series[name] = [s.get(name) for s in snaps]
+    return labels, series
+
+
+def _polyline(points: List[Tuple[float, float]]) -> str:
+    return " ".join(f"{x:.1f},{y:.1f}" for x, y in points)
+
+
+def render_svg(labels: List[str], series: Dict[str, List],
+               title: str) -> str:
+    """A dependency-free multi-series line chart. Each series is
+    min-max normalised into the shared plot area (the absolute numbers
+    live in the sidecar JSON and the value labels); the chart's job is
+    the SHAPE of each trajectory across PRs."""
+    W, H = 960, 80 + 40 * max(len(series), 1)
+    ml, mr, mt, mb = 70, 260, 60, 50
+    pw, ph = W - ml - mr, H - mt - mb
+    n = max(len(labels), 1)
+    xs = [ml + pw * (i / max(n - 1, 1)) for i in range(n)]
+    bits = [
+        f'<svg xmlns="http://www.w3.org/2000/svg" width="{W}" '
+        f'height="{H}" viewBox="0 0 {W} {H}" font-family="sans-serif">',
+        f'<rect width="{W}" height="{H}" fill="white"/>',
+        f'<text x="{ml}" y="28" font-size="16" font-weight="bold">'
+        f'{title}</text>',
+        f'<rect x="{ml}" y="{mt}" width="{pw}" height="{ph}" '
+        f'fill="#fafafa" stroke="#ddd"/>',
+    ]
+    for i, lab in enumerate(labels):
+        bits.append(
+            f'<text x="{xs[i]:.1f}" y="{H - mb + 18}" font-size="11" '
+            f'text-anchor="middle" fill="#444">{lab}</text>')
+        bits.append(
+            f'<line x1="{xs[i]:.1f}" y1="{mt}" x2="{xs[i]:.1f}" '
+            f'y2="{mt + ph}" stroke="#eee"/>')
+    for si, (name, vals) in enumerate(sorted(series.items())):
+        color = PALETTE[si % len(PALETTE)]
+        present = [v for v in vals if v is not None]
+        if not present:
+            continue
+        lo, hi = min(present), max(present)
+        span = (hi - lo) or 1.0
+        pts = [(xs[i], mt + ph - ph * ((v - lo) / span) * 0.9 - ph * 0.05)
+               for i, v in enumerate(vals) if v is not None]
+        if len(pts) > 1:
+            bits.append(f'<polyline points="{_polyline(pts)}" '
+                        f'fill="none" stroke="{color}" '
+                        f'stroke-width="2"/>')
+        for x, y in pts:
+            bits.append(f'<circle cx="{x:.1f}" cy="{y:.1f}" r="3" '
+                        f'fill="{color}"/>')
+        last = present[-1]
+        ly = mt + 16 + 14 * si
+        bits.append(f'<rect x="{W - mr + 10}" y="{ly - 8}" width="10" '
+                    f'height="10" fill="{color}"/>')
+        bits.append(f'<text x="{W - mr + 26}" y="{ly}" font-size="11" '
+                    f'fill="#222">{name} (last: {last:g})</text>')
+    bits.append("</svg>")
+    return "\n".join(bits)
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(
+        description="Chart requests/s and table traffic across "
+                    "accumulated smoke-bench artifacts")
+    ap.add_argument("snapshots", nargs="+",
+                    help="artifact snapshot directories (or .json files),"
+                         " one per PR, in trajectory order")
+    ap.add_argument("-o", "--out", default="perf_trajectory.svg",
+                    help="output SVG path (a .json sidecar with the raw "
+                         "series is written next to it)")
+    ap.add_argument("--title", default="SpeCa serving perf trajectory")
+    args = ap.parse_args()
+    labels, series = collect(args.snapshots)
+    if not series:
+        print("no recognisable serve_throughput*/table_bench JSON found",
+              file=sys.stderr)
+        return 1
+    svg = render_svg(labels, series, args.title)
+    with open(args.out, "w") as f:
+        f.write(svg)
+    sidecar = os.path.splitext(args.out)[0] + ".json"
+    with open(sidecar, "w") as f:
+        json.dump({"snapshots": labels, "series": series}, f, indent=1)
+    print(f"wrote {args.out} and {sidecar} "
+          f"({len(series)} series × {len(labels)} snapshots)")
+    for name, vals in sorted(series.items()):
+        shown = ", ".join("-" if v is None else f"{v:g}" for v in vals)
+        print(f"  {name}: {shown}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
