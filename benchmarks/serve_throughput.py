@@ -25,6 +25,18 @@ forces more full forwards for the same guided work. Every JSON row
 carries a ``guidance`` column (0.0 = unguided) so the perf-trajectory
 artifact can chart guided vs unguided requests/s across PRs.
 
+``--draft-depth 1,3`` adds two rows per depth K (deep speculation,
+docs/serving.md): a ``depth=K`` row serving the full workload with
+per-request ``RequestPolicy(draft_depth=K)`` on a ``max_draft_depth=K``
+engine, and a ``depth=K,easy`` row serving only the EASY half of the
+workload (requests at or above the median depth-1 acceptance rate —
+exactly where chains run long, so where γ>1 drafting pays). Every row
+reports ``draft_accept_rate`` = Σ accepted drafted steps / Σ drafted
+steps — accounted PER DRAFTED STEP, so a depth-K chain that verifies
+once still counts K drafted steps and depths compare honestly. The win
+condition tracked by CI: ``depth=3,easy`` requests/s beats
+``depth=1,easy``.
+
 ``--scheduler fifo,sjf,edf`` adds one row per admission scheduler
 (serving API v2) serving a MIXED-LENGTH workload: long full-schedule
 requests alternating with short ``max_steps=steps/4`` requests that
@@ -123,6 +135,16 @@ def bench(engine: SpeCaEngine, requests, *, lanes: int):
     return results, wall
 
 
+def draft_accept_rate(results) -> float:
+    """Workload-level PER-DRAFTED-STEP acceptance: Σ accepted drafted
+    steps over Σ drafted chain positions. One depth-K chain contributes
+    K drafted steps to the denominator — counting it as one verify
+    would let deep runs inflate the rate."""
+    spec = sum(r.num_spec for r in results)
+    drafted = sum(r.num_drafted for r in results)
+    return spec / max(drafted, 1)
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--model", default="dit", choices=["dit", "flux"])
@@ -136,6 +158,10 @@ def main() -> None:
                     help=">0: classifier-free-guidance serving (paired "
                          "cond/uncond lanes) plus a split baseline row "
                          "serving the streams as independent requests")
+    ap.add_argument("--draft-depth", default="1",
+                    help="comma list of draft horizons, e.g. 1,3: adds a "
+                         "full-workload row and an easy-bucket row per "
+                         "depth K>0 beyond the base depth-1 rows")
     ap.add_argument("--devices", default="1",
                     help="comma list of lane-shard device counts, e.g. "
                          "1,2,4 (needs that many visible devices)")
@@ -155,10 +181,11 @@ def main() -> None:
     scfg = SpeCaConfig(taylor_order=2, max_draft=8, tau0=args.tau0,
                        beta=0.9)
 
-    def make_engine(D: int, *, guidance: bool = guided) -> SpeCaEngine:
+    def make_engine(D: int, *, guidance: bool = guided,
+                    depth: int = 1) -> SpeCaEngine:
         return SpeCaEngine(cfg, params, dcfg, scfg,
                            accept_mode=args.accept_mode,
-                           guidance=guidance,
+                           guidance=guidance, max_draft_depth=depth,
                            mesh=make_lane_mesh(D) if D > 1 else None)
 
     cond0 = {"labels": jnp.asarray([0])}
@@ -232,10 +259,12 @@ def main() -> None:
             "lanes": W_eff,
             "guidance": args.guidance_scale if guided else 0.0,
             "scheduler": "fifo",
+            "draft_depth": 1,
             "requests": n_user,
             "wall_s": round(wall, 2),
             "req_per_s": round(n_user / wall, 3),
             "alpha_mean": round(rep["alpha_mean"], 4),
+            "draft_accept_rate": round(draft_accept_rate(results), 4),
             "frac_easy": round(rep["frac_easy"], 3),
             "frac_hard": round(rep["frac_hard"], 3),
             "speedup_easy": round(rep["speedup_easy"], 3),
@@ -276,10 +305,12 @@ def main() -> None:
                                  for r in wl]),
                 "guidance": 0.0,
                 "scheduler": name,
+                "draft_depth": 1,
                 "requests": len(wl),
                 "wall_s": round(wall, 2),
                 "req_per_s": round(len(wl) / wall, 3),
                 "alpha_mean": round(rep["alpha_mean"], 4),
+                "draft_accept_rate": round(draft_accept_rate(results), 4),
                 "frac_easy": round(rep["frac_easy"], 3),
                 "frac_hard": round(rep["frac_hard"], 3),
                 "speedup_easy": round(rep["speedup_easy"], 3),
@@ -295,12 +326,71 @@ def main() -> None:
             sched_rows.append(row)
             rows.append(row)
 
+    # deep-speculation comparison (--draft-depth): per depth K one
+    # full-workload row and one row serving only the EASY bucket
+    # (requests at/above the median depth-1 acceptance rate — long
+    # accept runs, where a K-step chain replaces K scheduler ticks).
+    # All depth engines run at D=1 with per-request draft_depth
+    # policies; accept rates are per DRAFTED step on every row.
+    depths = sorted({int(d) for d in args.draft_depth.split(",") if d})
+    depth_rows = []
+    if depths and depths != [1]:
+        alphas = sorted(r.alpha for r in seq_results)
+        med = alphas[len(alphas) // 2]
+        easy_ids = {r.request_id for r in seq_results if r.alpha >= med}
+        for K in depths:
+            deng = make_engine(1, depth=K)
+            deng.warmup(cond0, lanes=lane_cap)
+            easy_cap = min(args.lanes, streams * len(easy_ids))
+            if easy_cap != lane_cap:
+                deng.warmup(cond0, lanes=easy_cap)
+            pol = RequestPolicy(draft_depth=K)
+            dreqs = [dataclasses.replace(r, policy=pol) for r in reqs]
+            for tag, subset in (
+                    ("", dreqs),
+                    (",easy", [r for r in dreqs
+                               if r.request_id in easy_ids])):
+                results, wall = bench(deng, subset, lanes=args.lanes)
+                rep = allocation_report(results, streams * fwd)
+                mean_ticks, hit = sched_stats(results)
+                mismatches = None if tag else sum(
+                    a.accepts != b.accepts
+                    for a, b in zip(seq_results, results))
+                row = {
+                    "mode": f"depth={K}{tag}",
+                    "devices": 1,
+                    "lanes": deng.lane_width(args.lanes, len(subset)),
+                    "guidance": args.guidance_scale if guided else 0.0,
+                    "scheduler": "fifo",
+                    "draft_depth": K,
+                    "requests": len(subset),
+                    "wall_s": round(wall, 2),
+                    "req_per_s": round(len(subset) / wall, 3),
+                    "alpha_mean": round(rep["alpha_mean"], 4),
+                    "draft_accept_rate": round(draft_accept_rate(results),
+                                               4),
+                    "frac_easy": round(rep["frac_easy"], 3),
+                    "frac_hard": round(rep["frac_hard"], 3),
+                    "speedup_easy": round(rep["speedup_easy"], 3),
+                    "speedup_hard": round(rep["speedup_hard"], 3),
+                    "speedup_all": round(rep["speedup_all"], 3),
+                    # the easy row serves half the workload — not
+                    # comparable to the sequential full-workload wall
+                    "serving_speedup": None if tag
+                    else round(seq_wall / wall, 3),
+                    "trajectory_mismatches": mismatches,
+                    "mean_completion_ticks": round(mean_ticks, 2),
+                    "deadline_hit_rate": hit,
+                }
+                depth_rows.append(row)
+                rows.append(row)
+
     print_table(f"serve_throughput ({args.model}, "
                 f"accept_mode={args.accept_mode}"
                 + (f", guidance={args.guidance_scale}" if guided else "")
                 + ")", rows)
     for row in rows[1:]:
-        if row["mode"].startswith("sched="):
+        if row["mode"].startswith(("sched=", "depth=")):
             continue
         line = (f"{row['mode']}: {row['serving_speedup']}x requests/s "
                 f"vs {seq_mode}")
@@ -308,6 +398,20 @@ def main() -> None:
             line += (f", {row['trajectory_mismatches']} trajectory "
                      "mismatches")
         print(line)
+    if depth_rows:
+        by_depth_easy = {r["draft_depth"]: r for r in depth_rows
+                         if r["mode"].endswith(",easy")}
+        for r in depth_rows:
+            print(f"{r['mode']}: {r['req_per_s']} req/s, "
+                  f"accept/drafted {r['draft_accept_rate']}")
+        if 1 in by_depth_easy:
+            base = by_depth_easy[1]["req_per_s"]
+            for K in sorted(by_depth_easy):
+                if K == 1:
+                    continue
+                ratio = by_depth_easy[K]["req_per_s"] / max(base, 1e-9)
+                print(f"depth={K} vs depth=1 easy-bucket requests/s: "
+                      f"{ratio:.2f}x")
     if sched_rows:
         by_name = {r["scheduler"]: r for r in sched_rows}
         for r in sched_rows:
@@ -334,7 +438,7 @@ def main() -> None:
         paired = next((r for r in rows[1:]
                        if r["devices"] == 1 and r["mode"].endswith(
                            ",paired")), None)
-        split_row = rows[-1]
+        split_row = next(r for r in rows if r["mode"].endswith(",split"))
         if paired is not None:
             ratio = paired["req_per_s"] / max(split_row["req_per_s"],
                                               1e-9)

@@ -48,6 +48,38 @@ decide the next dispatch):
                 (``taylor.init_state(lanes=W)``)
   ``gscale``   [W] f32  per-lane guidance scale — pair modes only
   ``paired``   [W] bool per-lane pair-slot mask — pair modes only
+  ``draft_k``  [W] i32  per-lane draft horizon K (requests carry their own
+                depth via ``RequestPolicy.draft_depth``; evaluated
+                per-lane inside the traced chain like ``tau0``)
+  ``max_step`` [W] i32  the lane's schedule length — a drafted chain never
+                advances a lane past its final denoising step
+
+Deep speculation (``max_draft_depth`` > 1) replaces the single
+draft-verify round with a drafted CHAIN of up to ``K = max_draft_depth``
+positions per tick (speculative-decoding style γ>1 drafting):
+
+  1. ONE fused chain-forecast kernel extrapolates every lane's table to
+     all K chain steps in a single table pass
+     (``kernels.ops.taylor_predict_chain_lanes``).
+  2. Position by position, lanes still alive in the chain verify their
+     forecast exactly as the depth-1 step does (same masked verify-layer
+     forward, same τ_t schedule at the position's step) and the latent
+     advances speculatively; a lane leaves the chain the first time a
+     position is rejected (→ served by the closing full forward) or its
+     per-lane budget ``min(draft_k, max_step − step)`` runs out (→ stops
+     clean at its accepted frontier).
+  3. The accepted steps therefore always form a PREFIX of the drafted
+     chain — position j only runs for lanes that accepted 0..j−1.
+  4. *Rollback*: latents advanced blindly during the chain are restored
+     per lane to the snapshot at its accepted-prefix length through the
+     exact-copy rollback kernel (``kernels.ops.lane_rollback``); ONE
+     closing full forward then serves every rejected lane at its
+     rolled-back step and refreshes only those lanes' table slices.
+
+With every lane at ``draft_k = 1`` the chain is the legacy step: position
+0 is the depth-1 draft/verify math term for term, and the closing full is
+the legacy masked refresh — ``max_draft_depth=1`` builds the original
+single-round program, byte-for-byte the same trace.
 
 Classifier-free guidance packs one *request* into a lane **pair**: the
 conditional stream at lane ``2k``, the unconditional (or negative-prompt)
@@ -83,13 +115,21 @@ Pair invariants (established by the engine's fill and preserved by every
 step): ``x``/``since``/``step``/``active``/``gscale``/``tau0``/``paired``
 are equal across the two lanes of a *paired* slot.
 
-Flags returned per tick (all [W]): ``attempted`` (the lane drafted),
-``ok`` (its error passed its τ), ``accepted`` (post-combiner decision that
-advanced the lane), ``full`` (the lane was served by the full forward),
-``err`` (verification error, NaN where the lane did not draft — see the
-sentinel semantics in ``speca_sample``), ``tau``. In a paired slot every
-flag is pair-equal: both lanes report the pair's single decision and the
-pair's guided-residual error.
+Flags returned per tick (all [W] unless noted): ``attempted`` (the lane
+drafted — chain position 0), ``ok`` (position 0 passed its τ),
+``accepted`` (position-0 post-combiner decision), ``full`` (the lane was
+served by the full forward), ``err`` (position-0 verification error, NaN
+where the lane did not draft — see the sentinel semantics in
+``speca_sample``), ``tau`` (position-0 threshold) — the legacy keys keep
+their depth-1 [W] shapes so every existing consumer reads them unchanged.
+Depth-aware counters: ``n_spec`` i32 (accepted drafted steps this tick),
+``n_drafted`` i32 (drafted positions this tick — the per-drafted-step
+accounting denominator), ``advanced`` i32 (``n_spec`` + served-by-full —
+total denoising steps the lane moved this tick). Chain detail (shape
+[K, W]): ``chain_attempted``/``chain_accepted`` bool,
+``chain_err``/``chain_tau`` f32. In a paired slot every flag is
+pair-equal: both lanes report the pair's single decision and the pair's
+guided-residual error.
 """
 from __future__ import annotations
 
@@ -194,6 +234,10 @@ def init_lane_state(cfg: ModelConfig, dcfg: DiffusionConfig,
         "step": jnp.zeros((W,), jnp.int32),
         "active": jnp.full((W,), bool(active)),
         "tau0": jnp.full((W,), float(scfg.tau0), jnp.float32),
+        # per-lane draft horizon (RequestPolicy.draft_depth at fill time)
+        # and schedule length — both read only by depth-K chain steps
+        "draft_k": jnp.ones((W,), jnp.int32),
+        "max_step": jnp.full((W,), dcfg.num_inference_steps, jnp.int32),
         "cond": cond,
         **tstate,
     }
@@ -220,6 +264,7 @@ def build_lane_step(cfg: ModelConfig, params: Dict[str, Any],
                     verify_backend: str = "jnp",
                     use_flash: bool = False,
                     guidance: Union[bool, str] = False,
+                    max_draft_depth: int = 1,
                     mesh: Optional[Any] = None
                     ) -> Callable[[Dict[str, Any]],
                                   Tuple[Dict[str, Any], Dict[str, Any]]]:
@@ -258,11 +303,22 @@ def build_lane_step(cfg: ModelConfig, params: Dict[str, Any],
     In the pair modes the lane width must be a multiple of ``2·D`` so a
     pair never straddles a shard boundary — every pair-fold below is then
     a shard-local reshape.
+
+    ``max_draft_depth`` is the COMPILED chain length K: the traced
+    program unrolls K draft-verify positions per tick, and every lane's
+    runtime horizon is its ``draft_k`` state entry clamped by this bound
+    (the engine validates ``RequestPolicy.draft_depth ≤ max_draft_depth``
+    at submit time). ``max_draft_depth=1`` builds the original depth-1
+    program — the exact legacy trace, so the default is bit-for-bit the
+    PR-5 engine.
     """
     if accept_mode not in ACCEPT_MODES:
         raise ValueError(f"unknown accept_mode {accept_mode!r}")
     if verify_backend not in VERIFY_BACKENDS:
         raise ValueError(f"unknown verify_backend {verify_backend!r}")
+    if max_draft_depth < 1:
+        raise ValueError(f"max_draft_depth must be >= 1, "
+                         f"got {max_draft_depth}")
     if scfg.error_metric != "rel_l2":
         verify_backend = "jnp"     # the fused kernel implements eq. 4 only
     _check_guidance(guidance, lanes)
@@ -442,8 +498,171 @@ def build_lane_step(cfg: ModelConfig, params: Dict[str, Any],
         s = s + active.astype(jnp.int32)
         new_state = dict(state)
         new_state.update(x=x, since=since, step=s, active=active, **tstate)
+        full = active & ~accept
         flags = {"attempted": want, "ok": ok, "accepted": accept,
-                 "full": active & ~accept, "err": err, "tau": tau}
+                 "full": full, "err": err, "tau": tau,
+                 # depth-aware counters (trivial at depth 1) so engine
+                 # accounting reads one flag layout for every K
+                 "n_spec": accept.astype(jnp.int32),
+                 "n_drafted": want.astype(jnp.int32),
+                 "advanced": active.astype(jnp.int32),
+                 "chain_attempted": want[None], "chain_accepted": accept[None],
+                 "chain_err": err[None], "chain_tau": tau[None]}
         return new_state, flags
 
-    return step
+    if max_draft_depth == 1:
+        return step
+    K = int(max_draft_depth)
+
+    def chain_step(state: Dict[str, Any]
+                   ) -> Tuple[Dict[str, Any], Dict[str, Any]]:
+        x, since, s, active = (state["x"], state["since"], state["step"],
+                               state["active"])
+        cond = state["cond"]
+        tstate = {k: state[k] for k in
+                  ("diffs", "n_anchors", "anchor_step", "gap")}
+        draft_k, max_step = state["draft_k"], state["max_step"]
+        warm = tstate["n_anchors"] > scfg.taylor_order
+        # ONE fused table pass forecasts every lane at all K chain steps;
+        # a lane alive at position j has accepted 0..j−1, so its step
+        # there is exactly step₀ + j (clamped to the schedule end).
+        steps_chain = jnp.minimum(
+            s[None, :] + jnp.arange(K, dtype=jnp.int32)[:, None], S - 1)
+        preds_chain = taylor.predict_chain_lanes(tstate, steps_chain,
+                                                 mode=draft_mode, mesh=mesh)
+        alive = active
+        stop_full = jnp.zeros((W,), bool)
+        n_acc = jnp.zeros((W,), jnp.int32)
+        n_drafted = jnp.zeros((W,), jnp.int32)
+        snaps = [x]
+        c_att, c_acc, c_err, c_tau = [], [], [], []
+        ok0 = None
+        for j in range(K):
+            s_eff = jnp.minimum(s, S - 1)
+            t_model = stepper.t_model[s_eff]
+            budget = (draft_k > j) & (s < max_step)
+            want = alive & budget & warm & (since < scfg.max_draft)
+            if pairing:
+                h = pair_head(want)
+                both = h[:, 0] & h[:, 1]
+                pw = with_tail(jnp.broadcast_to(both[:, None], (NP, 2)),
+                               want)
+                want = jnp.where(state["paired"], pw, want)
+            tau = threshold_schedule(stepper.t_frac[s_eff], state["tau0"],
+                                     scfg.beta)
+            preds = preds_chain[j]
+
+            def attempt(x, want=want, tau=tau, t_model=t_model,
+                        preds=preds):
+                inputs = model_inputs(cfg, x, t_model, cond)
+                out, extras = M.dit_forward(cfg, params, inputs,
+                                            branch_preds=preds,
+                                            compute_mask=cmask,
+                                            collect_branches=True,
+                                            use_flash=use_flash)
+                real_vl = (extras["branches"][vl][0]
+                           + extras["branches"][vl][1])
+                pred_vl = preds[vl][0] + preds[vl][1]
+                if pairing:
+                    err, ok = verify_mixed(pred_vl, real_vl, tau,
+                                           state["gscale"],
+                                           state["paired"])
+                else:
+                    err, ok = verify(pred_vl, real_vl, tau)
+                return (out.astype(jnp.float32),
+                        jnp.where(want, err, jnp.nan), ok & want)
+
+            def skip(x):
+                return (jnp.zeros(x_shape, jnp.float32),
+                        jnp.full((W,), jnp.nan, jnp.float32),
+                        jnp.zeros((W,), bool))
+
+            out_spec, err, ok = jax.lax.cond(jnp.any(want), attempt, skip,
+                                             x)
+            if accept_mode == "batch":
+                acc = want & jnp.all(ok | ~want)
+            else:
+                acc = want & ok
+            # a lane with budget at j that did not advance (could not
+            # draft, or drafted and failed) is served by the closing
+            # full; a lane whose budget ran out stops clean at its
+            # accepted frontier
+            stop_full = stop_full | (alive & budget & ~acc)
+            out = out_spec
+            if pairing:
+                h = pair_head(out)
+                gs_p = pair_head(state["gscale"])[:, 0]
+                g = guided_output(h[:, 0], h[:, 1], gs_p)
+                gb = with_tail(jnp.broadcast_to(g[:, None],
+                                                (NP, 2) + g.shape[1:]),
+                               out)
+                out = pair_select(state["paired"], gb, out)
+            # blind speculative advance: EVERY row steps on the drafted
+            # output (rows are sample-independent, so garbage rows of
+            # stopped lanes perturb nothing); the rollback below
+            # restores each lane to its accepted-prefix snapshot
+            x = stepper.advance(x, out, s_eff)
+            snaps.append(x)
+            since = jnp.where(acc, since + 1, since)
+            s = s + acc.astype(jnp.int32)
+            n_acc = n_acc + acc.astype(jnp.int32)
+            n_drafted = n_drafted + want.astype(jnp.int32)
+            alive = acc
+            if j == 0:
+                ok0 = ok
+            c_att.append(want)
+            c_acc.append(acc)
+            c_err.append(err)
+            c_tau.append(tau)
+        # rollback: per-lane exact-copy restore to the snapshot at the
+        # lane's accepted-prefix length (inactive/rejected-at-0 lanes get
+        # snapshot 0 — their pre-tick latent, bit-exactly)
+        chain = jnp.stack(snaps)
+        x = taylor.lane_rollback(chain, n_acc, lane_axis=0, mesh=mesh)
+        # ONE closing full forward serves every rejected lane at its
+        # rolled-back step and refreshes only those lanes' table slices
+        s_eff = jnp.minimum(s, S - 1)
+        t_model = stepper.t_model[s_eff]
+        need_full = jnp.any(stop_full)
+
+        def do_full(opers):
+            x, tstate = opers
+            inputs = model_inputs(cfg, x, t_model, cond)
+            out, extras = M.dit_forward(cfg, params, inputs,
+                                        collect_branches=True,
+                                        use_flash=use_flash)
+            tstate = taylor.update_lanes(tstate, extras["branches"],
+                                         s_eff, stop_full, mesh=mesh)
+            return out.astype(jnp.float32), tstate
+
+        def keep(opers):
+            x, tstate = opers
+            return jnp.zeros(x_shape, jnp.float32), tstate
+
+        out_full, tstate = jax.lax.cond(need_full, do_full, keep,
+                                        (x, tstate))
+        if pairing:
+            h = pair_head(out_full)
+            gs_p = pair_head(state["gscale"])[:, 0]
+            g = guided_output(h[:, 0], h[:, 1], gs_p)
+            gb = with_tail(jnp.broadcast_to(g[:, None],
+                                            (NP, 2) + g.shape[1:]),
+                           out_full)
+            out_full = pair_select(state["paired"], gb, out_full)
+        sel = stop_full.reshape((W,) + (1,) * (x.ndim - 1))
+        x = jnp.where(sel, stepper.advance(x, out_full, s_eff), x)
+        since = jnp.where(stop_full, 0, since)
+        s = s + stop_full.astype(jnp.int32)
+        new_state = dict(state)
+        new_state.update(x=x, since=since, step=s, active=active, **tstate)
+        flags = {"attempted": c_att[0], "ok": ok0, "accepted": c_acc[0],
+                 "full": stop_full, "err": c_err[0], "tau": c_tau[0],
+                 "n_spec": n_acc, "n_drafted": n_drafted,
+                 "advanced": n_acc + stop_full.astype(jnp.int32),
+                 "chain_attempted": jnp.stack(c_att),
+                 "chain_accepted": jnp.stack(c_acc),
+                 "chain_err": jnp.stack(c_err),
+                 "chain_tau": jnp.stack(c_tau)}
+        return new_state, flags
+
+    return chain_step

@@ -234,6 +234,63 @@ def predict_lanes(state: Dict[str, Any], step, mode: str = "taylor",
     return pred.astype(state["diffs"].dtype)
 
 
+def predict_chain_lanes(state: Dict[str, Any], steps,
+                        mode: str = "taylor", *, lane_axis: int = 2,
+                        backend: Optional[str] = None,
+                        mesh: Optional[Any] = None) -> jnp.ndarray:
+    """Per-lane forecast of a whole drafted chain (draft-K speculation).
+
+    ``steps`` is [K, B] — chain position k of lane b extrapolates the
+    lane's table to sampler step ``steps[k, b]`` — and the result is
+    [K, ...feat]. Position k is bit-identical to :func:`predict_lanes`
+    called with ``steps[k]`` (same weights, same kernel FMA order), but
+    the m+1 difference planes are read ONCE for all K positions.
+
+    Backend/mesh semantics match :func:`predict_lanes`.
+    """
+    d = (jnp.asarray(steps, jnp.int32) - state["anchor_step"]
+         ).astype(jnp.float32)                       # [K, B] via broadcast
+    order = state["diffs"].shape[0] - 1
+    w = prediction_weights(order, d, state["gap"], state["n_anchors"], mode)
+    if _table_backend(backend) == "kernel":
+        from repro.kernels import ops
+        if mesh is not None:
+            return ops.taylor_predict_chain_lanes_sharded(
+                state["diffs"], w.astype(jnp.float32), mesh=mesh,
+                lane_axis=lane_axis)
+        return ops.taylor_predict_chain_lanes(state["diffs"],
+                                              w.astype(jnp.float32),
+                                              lane_axis=lane_axis)
+    diffs = state["diffs"].astype(jnp.float32)
+    subs = "".join(chr(ord("a") + i) for i in range(diffs.ndim - 1))
+    lane = subs[lane_axis]
+    pred = jnp.einsum(f"zk{lane},z{subs}->k{subs}", w.astype(jnp.float32),
+                      diffs)
+    return pred.astype(state["diffs"].dtype)
+
+
+def lane_rollback(chain: jnp.ndarray, idx, *, lane_axis: int = 2,
+                  backend: Optional[str] = None,
+                  mesh: Optional[Any] = None) -> jnp.ndarray:
+    """Per-lane snapshot restore (speculation rollback).
+
+    ``chain`` [K+1, ...feat] stacks the state snapshots before/after each
+    drafted chain position; ``idx`` [B] (0..K) is each lane's accepted
+    prefix length. Returns chain[idx[lane]] per lane — exact copies, so
+    the restore is bit-exact whichever snapshot wins. ``lane_axis`` is
+    the lane axis of the *feature* layout.
+    """
+    idx = jnp.asarray(idx, jnp.int32)
+    if _table_backend(backend) == "kernel":
+        from repro.kernels import ops
+        if mesh is not None:
+            return ops.lane_rollback_sharded(chain, idx, mesh=mesh,
+                                             lane_axis=lane_axis)
+        return ops.lane_rollback(chain, idx, lane_axis=lane_axis)
+    from repro.kernels.ref import lane_rollback_ref
+    return lane_rollback_ref(chain, idx, lane_axis=lane_axis)
+
+
 def feature_shape_for(num_layers: int, batch: int, tokens: int, d_model: int):
     """Cached-feature tensor layout: per-layer, per-branch increments."""
     return (num_layers, 2, batch, tokens, d_model)

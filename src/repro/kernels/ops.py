@@ -137,6 +137,57 @@ def taylor_predict_lanes(diffs: jnp.ndarray, weights: jnp.ndarray, *,
 
 
 @functools.partial(jax.jit, static_argnames=("lane_axis", "block_c"))
+def taylor_predict_chain_lanes(diffs: jnp.ndarray, weights: jnp.ndarray, *,
+                               lane_axis: int = 2,
+                               block_c: int = 8192) -> jnp.ndarray:
+    """Per-lane fused Taylor CHAIN evaluation (draft-K speculation).
+
+    diffs [m+1, ...feat] with ``lane_axis`` the lane axis of the feature
+    part, weights [m+1, K, B] (each lane's weight column per chain
+    position) -> predictions [K, ...feat]. One pass over the table
+    serves all K positions; position k is bit-identical to
+    :func:`taylor_predict_lanes` with ``weights[:, k]``.
+    """
+    m1, K = weights.shape[0], weights.shape[1]
+    feat = diffs.shape[1:]
+    G, B, C = _lane_fold(feat, lane_axis)
+    flat = _pad_to(diffs.reshape(m1, G * B, C), 2, 128)
+    cp = flat.shape[2]
+    bc = min(block_c, cp)
+    while cp % bc:
+        bc //= 2
+    out = _tp.taylor_predict_chain_2d(flat, weights, lanes=B, block_c=bc,
+                                      interpret=_interpret())
+    return out[:, :, :C].reshape((K,) + feat)
+
+
+@functools.partial(jax.jit, static_argnames=("lane_axis", "block_c"))
+def lane_rollback(chain: jnp.ndarray, idx: jnp.ndarray, *,
+                  lane_axis: int = 2,
+                  block_c: int = 8192) -> jnp.ndarray:
+    """Per-lane snapshot restore (speculation rollback).
+
+    chain [K+1, ...feat] with ``lane_axis`` the lane axis of the feature
+    part (snapshot 0 = pre-draft state, snapshot k = after k accepted
+    drafted steps), idx [B] integer-valued in 0..K -> restored [...feat]
+    = chain[idx[lane]] per lane. Exact copies — bitwise against the
+    selected snapshot.
+    """
+    K1 = chain.shape[0]
+    feat = chain.shape[1:]
+    G, B, C = _lane_fold(feat, lane_axis)
+    flat = _pad_to(chain.reshape(K1, G * B, C), 2, 128)
+    cp = flat.shape[2]
+    bc = min(block_c, cp)
+    while cp % bc:
+        bc //= 2
+    out = _tp.lane_rollback_2d(flat, jnp.asarray(idx, jnp.float32),
+                               lanes=B, block_c=bc,
+                               interpret=_interpret())
+    return out[:, :C].reshape(feat)
+
+
+@functools.partial(jax.jit, static_argnames=("lane_axis", "block_c"))
 def taylor_update_lanes(old_diffs: jnp.ndarray, feats: jnp.ndarray,
                         mask: jnp.ndarray, *, lane_axis: int = 2,
                         block_c: int = 8192) -> jnp.ndarray:
@@ -340,6 +391,38 @@ def taylor_predict_lanes_sharded(diffs: jnp.ndarray, weights: jnp.ndarray,
     fn = functools.partial(taylor_predict_lanes, lane_axis=lane_axis,
                            block_c=block_c)
     return _shard_map(fn, mesh, (dspec, wspec), fspec)(diffs, weights)
+
+
+def taylor_predict_chain_lanes_sharded(diffs: jnp.ndarray,
+                                       weights: jnp.ndarray, *, mesh,
+                                       lane_axis: int = 2,
+                                       axis_name: str = "data",
+                                       block_c: int = 8192) -> jnp.ndarray:
+    """``taylor_predict_chain_lanes`` with the lane axis sharded.
+
+    diffs [m+1, ...feat] (lane axis over ``axis_name``), weights
+    [m+1, K, B] (lanes over ``axis_name``) -> predictions [K, ...feat],
+    lane-sharded like the input.
+    """
+    fspec = _lane_p(diffs.ndim, lane_axis + 1, axis_name)
+    dspec = _lane_p(diffs.ndim, lane_axis + 1, axis_name)
+    wspec = _lane_p(3, 2, axis_name)
+    fn = functools.partial(taylor_predict_chain_lanes, lane_axis=lane_axis,
+                           block_c=block_c)
+    return _shard_map(fn, mesh, (dspec, wspec), fspec)(diffs, weights)
+
+
+def lane_rollback_sharded(chain: jnp.ndarray, idx: jnp.ndarray, *, mesh,
+                          lane_axis: int = 2, axis_name: str = "data",
+                          block_c: int = 8192) -> jnp.ndarray:
+    """``lane_rollback`` with the lane axis sharded: each shard restores
+    its own lanes' snapshot rows — the chain never leaves its device."""
+    cspec = _lane_p(chain.ndim, lane_axis + 1, axis_name)
+    ospec = _lane_p(chain.ndim - 1, lane_axis, axis_name)
+    ispec = _lane_p(1, 0, axis_name)
+    fn = functools.partial(lane_rollback, lane_axis=lane_axis,
+                           block_c=block_c)
+    return _shard_map(fn, mesh, (cspec, ispec), ospec)(chain, idx)
 
 
 def taylor_update_lanes_sharded(old_diffs: jnp.ndarray, feats: jnp.ndarray,

@@ -29,6 +29,40 @@ def taylor_predict_lanes_ref(diffs: jnp.ndarray, weights: jnp.ndarray, *,
     return pred.astype(diffs.dtype)
 
 
+def taylor_predict_chain_lanes_ref(diffs: jnp.ndarray,
+                                   weights: jnp.ndarray, *,
+                                   lane_axis: int = 2) -> jnp.ndarray:
+    """Per-lane chain forecast oracle (draft-K speculation).
+
+    diffs [m+1, ...feat], weights [m+1, K, B] with ``lane_axis`` the lane
+    axis of the feature layout -> predictions [K, ...feat] (f32
+    accumulate). Position k of the chain equals
+    :func:`taylor_predict_lanes_ref` called with weights[:, k].
+    """
+    subs = "".join(chr(ord("a") + i) for i in range(diffs.ndim - 1))
+    lane = subs[lane_axis]
+    pred = jnp.einsum(f"zk{lane},z{subs}->k{subs}",
+                      weights.astype(jnp.float32),
+                      diffs.astype(jnp.float32))
+    return pred.astype(diffs.dtype)
+
+
+def lane_rollback_ref(chain: jnp.ndarray, idx: jnp.ndarray, *,
+                      lane_axis: int = 0) -> jnp.ndarray:
+    """Per-lane snapshot restore oracle (speculation rollback).
+
+    chain [K+1, ...feat] with ``lane_axis`` the lane axis of the feature
+    layout, idx [B] integer-valued (0..K) -> out [...feat] where each
+    lane's rows come from chain[idx[lane]]. Exact copies (bitwise)."""
+    ishape = [1] * (chain.ndim - 1)
+    ishape[lane_axis] = idx.shape[0]
+    sel = jnp.asarray(idx, jnp.int32).reshape(ishape)
+    out = chain[0]
+    for k in range(1, chain.shape[0]):
+        out = jnp.where(sel >= k, chain[k], out)
+    return out
+
+
 def taylor_update_lanes_ref(old_diffs: jnp.ndarray, feats: jnp.ndarray,
                             mask: jnp.ndarray, *, lane_axis: int = 2
                             ) -> jnp.ndarray:

@@ -100,6 +100,105 @@ def taylor_predict_lanes_2d(diffs: jnp.ndarray, weights: jnp.ndarray, *,
     )(weights.astype(jnp.float32), diffs)
 
 
+def _predict_chain_kernel(w_ref, d_ref, o_ref, *, order: int, depth: int):
+    # w_ref block is this lane's weight matrix [m+1, K, 1]; d_ref block is
+    # one (1, block_c) row-tile of each difference plane. The K chain
+    # positions share the m+1 table reads: each position k runs the SAME
+    # sequential FMA as ``_predict_lanes_kernel`` (identical association
+    # order, so position k of the chain is bit-equal to a depth-1 predict
+    # called with that position's weight column).
+    for k in range(depth):
+        acc = w_ref[0, k, 0] * d_ref[0].astype(jnp.float32)
+        for i in range(1, order + 1):
+            acc += w_ref[i, k, 0] * d_ref[i].astype(jnp.float32)
+        o_ref[k] = acc.astype(o_ref.dtype)
+
+
+def taylor_predict_chain_2d(diffs: jnp.ndarray, weights: jnp.ndarray, *,
+                            lanes: int, block_c: int = 512,
+                            interpret: bool = False) -> jnp.ndarray:
+    """Per-lane fused Taylor chain evaluation (draft-K speculation).
+
+    diffs [m+1, R, C] with R = G·lanes (lane = row % lanes), weights
+    [m+1, K, lanes] (each lane's w_i column per chain position),
+    C % block_c == 0 -> preds [K, R, C]. One pass over the table serves
+    all K chain positions — the m+1 difference planes are read once and
+    K predictions are written, instead of K round-trips through the
+    depth-1 kernel. At K=1 this is bit-identical to
+    ``taylor_predict_lanes_2d`` (same FMA order per position).
+    """
+    m1, R, C = diffs.shape
+    K = weights.shape[1]
+    assert R % lanes == 0, (R, lanes)
+    assert weights.shape == (m1, K, lanes), (weights.shape, m1, K, lanes)
+    block_c = min(block_c, C)
+    assert C % block_c == 0, (C, block_c)
+    G = R // lanes
+    grid = (G, lanes, C // block_c)
+    return pl.pallas_call(
+        functools.partial(_predict_chain_kernel, order=m1 - 1, depth=K),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((m1, K, 1), lambda g, b, c: (0, 0, b)),
+            pl.BlockSpec((m1, 1, block_c),
+                         lambda g, b, c: (0, g * lanes + b, c)),
+        ],
+        out_specs=pl.BlockSpec((K, 1, block_c),
+                               lambda g, b, c: (0, g * lanes + b, c)),
+        out_shape=jax.ShapeDtypeStruct((K, R, C), diffs.dtype),
+        interpret=interpret,
+    )(weights.astype(jnp.float32), diffs)
+
+
+def _lane_rollback_kernel(i_ref, c_ref, o_ref, *, depth: int):
+    # i_ref block is this lane's restore index as a [1, 1] f32 plane
+    # (integer-valued); c_ref holds the K+1 chain snapshots of one
+    # (1, block_c) row-tile. A where-chain over the static snapshot axis
+    # selects snapshot idx — exact copies, no arithmetic, so the restore
+    # is bitwise whichever snapshot wins.
+    idx = i_ref[0, 0]
+    sel = c_ref[0]
+    for k in range(1, depth):
+        sel = jnp.where(idx >= (k - 0.5), c_ref[k], sel)
+    o_ref[...] = sel
+
+
+def lane_rollback_2d(chain: jnp.ndarray, idx: jnp.ndarray, *, lanes: int,
+                     block_c: int = 512,
+                     interpret: bool = False) -> jnp.ndarray:
+    """Per-lane snapshot restore (speculation rollback).
+
+    chain [K+1, R, C] with R = G·lanes (lane = row % lanes) holds the
+    state snapshot before each drafted chain position (position 0 = the
+    pre-draft state, position k = after k accepted drafted steps); idx
+    [lanes] (integer-valued, 0..K) is each lane's accepted-prefix length
+    -> out [R, C] = chain[idx[row % lanes], row]. Exact copies, so the
+    rollback is bit-exact against the selected snapshot.
+    """
+    K1, R, C = chain.shape
+    assert R % lanes == 0, (R, lanes)
+    assert idx.shape == (lanes,), (idx.shape, lanes)
+    block_c = min(block_c, C)
+    assert C % block_c == 0, (C, block_c)
+    G = R // lanes
+    grid = (G, lanes, C // block_c)
+    # idx travels as a [lanes, 1] f32 plane so its block stays 2-D like
+    # every other VMEM operand (rank-1 blocks are a Mosaic lowering hazard)
+    return pl.pallas_call(
+        functools.partial(_lane_rollback_kernel, depth=K1),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda g, b, c: (b, 0)),
+            pl.BlockSpec((K1, 1, block_c),
+                         lambda g, b, c: (0, g * lanes + b, c)),
+        ],
+        out_specs=pl.BlockSpec((1, block_c),
+                               lambda g, b, c: (g * lanes + b, c)),
+        out_shape=jax.ShapeDtypeStruct((R, C), chain.dtype),
+        interpret=interpret,
+    )(idx.astype(jnp.float32).reshape(lanes, 1), chain)
+
+
 def _update_lanes_kernel(m_ref, d_ref, f_ref, o_ref, *, order: int):
     # One pass: each old plane is read exactly once, each new plane written
     # exactly once; lanes whose mask is 0 copy their old rows through

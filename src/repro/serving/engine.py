@@ -114,6 +114,12 @@ class Result:
     flops: float
     wall_s: float
     accepts: Optional[List[bool]] = None   # per-step accept trajectory
+    # drafted denoising steps (chain positions attempted): the
+    # denominator of the PER-DRAFTED-STEP acceptance rate — a depth-K
+    # chain that verifies once still counts K drafted steps, so deep
+    # speculation can never inflate the accept rate (0 on results from
+    # engines predating the field)
+    num_drafted: int = 0
     # False when the engine drained the lane before the request reached
     # its final denoising step (tick-budget shutdown) or never started it;
     # such requests are excluded from allocation_report (``n_dropped``)
@@ -129,6 +135,15 @@ class Result:
     def alpha(self) -> float:
         """Acceptance rate: fraction of steps served speculatively."""
         return self.num_spec / max(self.num_full + self.num_spec, 1)
+
+    @property
+    def draft_accept_rate(self) -> float:
+        """Accepted drafted steps per drafted step (speculative-decoding
+        style accounting): ``num_spec / num_drafted``. Counts every
+        chain position the request drafted — one depth-K chain is K
+        drafted steps, not one — so depth-1 and depth-K runs are
+        directly comparable. 0.0 when the request never drafted."""
+        return self.num_spec / max(self.num_drafted, 1)
 
     @property
     def deadline_met(self) -> Optional[bool]:
@@ -149,6 +164,7 @@ class _Entry:                          # may span two lanes
     start_tick: int
     t0: float
     done: int = 0       # host-tracked denoising step counter
+    draft_k: int = 1    # the request's draft horizon (policy.draft_depth)
 
     @property
     def streams(self) -> int:
@@ -233,7 +249,8 @@ class _Session:
                 free = half or free
             lanes = (free[0],)
         entry = _Entry(item=item, lanes=lanes, start_tick=self.tick,
-                       t0=time.time())
+                       t0=time.time(),
+                       draft_k=int(item.policy.draft_depth or 1))
         for l in lanes:
             self.lane_entry[l] = entry
         self._fill(entry)
@@ -254,13 +271,17 @@ class _Session:
                                   jnp.float32)
         tau0 = float(e.scfg.tau0 if pol.tau0 is None else pol.tau0)
         lane0 = entry.lanes[0]
-        self._fill_lane(lane0, req.cond, noise, tau0)
+        # draft_k is pair-equal by construction: a guided pair drafts
+        # pair-coherently, one chain decision per position (docs/cfg.md)
+        self._fill_lane(lane0, req.cond, noise, tau0, entry.draft_k,
+                        entry.item.steps)
         if entry.streams == 2:
             nc = pol.negative_cond
             if nc is None:
                 nc = e.null_cond if e.null_cond is not None \
                     else null_cond_like(e.cfg, req.cond)
-            self._fill_lane(lane0 + 1, nc, noise, tau0)
+            self._fill_lane(lane0 + 1, nc, noise, tau0, entry.draft_k,
+                            entry.item.steps)
             gs = float(pol.guidance_scale)
             st = dict(self.state)
             st["gscale"] = st["gscale"].at[lane0:lane0 + 2].set(gs)
@@ -272,9 +293,12 @@ class _Session:
             self.state = st
 
     def _fill_lane(self, lane: int, cond: Dict[str, Any],
-                   noise: jnp.ndarray, tau0: float) -> None:
+                   noise: jnp.ndarray, tau0: float, draft_k: int,
+                   max_step: int) -> None:
         state = dict(self.state)
         state["x"] = state["x"].at[lane].set(noise[0])
+        state["draft_k"] = state["draft_k"].at[lane].set(draft_k)
+        state["max_step"] = state["max_step"].at[lane].set(max_step)
         state["diffs"] = state["diffs"].at[:, :, :, lane].set(0.0)
         state["n_anchors"] = state["n_anchors"].at[lane].set(0)
         state["anchor_step"] = state["anchor_step"].at[lane].set(-1)
@@ -290,15 +314,22 @@ class _Session:
     # --- advance ---------------------------------------------------------
     def advance(self) -> List[Tuple[_Entry, Result]]:
         """One scheduler tick: dispatch the jitted step (async — no host
-        sync), then complete every entry whose schedule finished. Returns
-        the completions."""
+        sync while every in-flight request is depth-1), then complete
+        every entry whose schedule finished. With any deep-drafting
+        entry in flight the per-tick advancement is data-dependent (a
+        lane moves 0..K steps per tick), so the tick's ``advanced``
+        counters are fetched — the one host/device sync deep speculation
+        costs. Returns the completions."""
         state, flags = self.step_fn(self.state)   # async dispatch
         self.state = state
         self._flag_log.append(flags)
         self.tick += 1
+        deep = any(e.draft_k > 1 for e in self.entries())
+        adv = self._fetch(self.tick - 1)["advanced"] if deep else None
         completed: List[Tuple[_Entry, Result]] = []
         for entry in self.entries():
-            entry.done += 1              # active entries advance 1/tick
+            # depth-1 entries advance exactly 1/tick (host-predictable)
+            entry.done += int(adv[entry.lanes[0]]) if deep else 1
             if entry.done < entry.item.steps:
                 continue
             # request complete: NOW touch the device (sample readback +
@@ -323,7 +354,9 @@ class _Session:
         if t not in self._flag_np:
             self._flag_np[t] = {k: np.asarray(v)
                                 for k, v in self._flag_log[t].items()
-                                if k in ("attempted", "accepted", "full")}
+                                if k in ("attempted", "accepted", "full",
+                                         "n_spec", "n_drafted",
+                                         "advanced")}
         return self._flag_np[t]
 
     def _gc_flags(self) -> None:
@@ -346,18 +379,29 @@ class _Session:
         e = self.e
         item = entry.item
         lane0, k = entry.lanes[0], entry.streams
-        accepts, n_att, n_full = [], 0, 0
+        accepts: List[bool] = []
+        n_drafted, n_full = 0, 0
         for t in range(entry.start_tick, end_tick):
             f = self._fetch(t)
-            accepts.append(bool(f["accepted"][lane0]))
-            n_att += int(f["attempted"][lane0])
-            n_full += int(f["full"][lane0])
+            # per-STEP accept trajectory: each accepted drafted step is
+            # one True, a tick closed by the full forward appends one
+            # False — at depth 1 this is exactly the legacy per-tick
+            # [accepted] entry
+            ns, nf = int(f["n_spec"][lane0]), int(f["full"][lane0])
+            accepts.extend([True] * ns + [False] * nf)
+            n_full += nf
+            # drafted chain positions, NOT verify rounds: the
+            # per-drafted-step accounting denominator
+            n_drafted += int(f["n_drafted"][lane0])
         return Result(
             request_id=item.request.request_id,
             sample=jax.device_get(self.state["x"][lane0:lane0 + 1]),
             num_full=n_full, num_spec=entry.done - n_full,
+            num_drafted=n_drafted,
+            # every drafted position pays one verify-layer forward;
+            # every rejected tick pays one full forward
             flops=n_full * k * e._full_flops
-            + n_att * k * e._verify_flops,
+            + n_drafted * k * e._verify_flops,
             wall_s=time.time() - entry.t0,
             accepts=accepts, completed=completed,
             finish_tick=end_tick, deadline=item.policy.deadline,
@@ -421,6 +465,14 @@ class SpeCaEngine:
         beyond it (backpressure). ``None`` = unbounded.
     default_policy:
       * ``RequestPolicy`` applied to requests that do not carry one.
+    max_draft_depth:
+      * compiled draft-chain length K of the lane step (default 1 — the
+        exact legacy depth-1 program). Requests opt into deeper drafting
+        per-lane via ``RequestPolicy.draft_depth`` (validated ≤ this
+        bound at submit time); depth-1 requests on a deep engine follow
+        their depth-1 trajectories unchanged. FLOPs and accept-rate are
+        accounted PER DRAFTED STEP (``Result.num_drafted``/
+        ``draft_accept_rate``) so depths are directly comparable.
     lanes:
       * default lane width of the lifecycle session started by the
         first ``submit`` (``serve_batched`` takes its own ``lanes=``).
@@ -436,9 +488,13 @@ class SpeCaEngine:
                  scheduler: Any = "fifo",
                  max_queue: Optional[int] = None,
                  default_policy: Optional[RequestPolicy] = None,
+                 max_draft_depth: int = 1,
                  lanes: int = 4):
         if accept_mode not in LS.ACCEPT_MODES:
             raise ValueError(f"unknown accept_mode {accept_mode!r}")
+        if max_draft_depth < 1:
+            raise ValueError(f"max_draft_depth must be >= 1, "
+                             f"got {max_draft_depth}")
         if verify_backend not in LS.VERIFY_BACKENDS:
             raise ValueError(f"unknown verify_backend {verify_backend!r}")
         if mesh is not None and "data" not in mesh.axis_names:
@@ -462,6 +518,7 @@ class SpeCaEngine:
         self.scheduler_spec = scheduler
         self.max_queue = max_queue
         self.default_policy = default_policy
+        self.max_draft_depth = int(max_draft_depth)
         self.default_lanes = lanes
         # lanes one request occupies under the legacy engine-wide mode:
         # 1, or 2 for a guidance=True engine — kept for lane_width()
@@ -499,6 +556,12 @@ class SpeCaEngine:
         if self.guidance and pol.guidance_scale is None:
             pol = dataclasses.replace(
                 pol, guidance_scale=float(self.dcfg.guidance_scale))
+        dk = pol.draft_depth
+        if dk is not None and not 1 <= int(dk) <= self.max_draft_depth:
+            raise ValueError(
+                f"draft_depth={dk} outside this engine's compiled chain "
+                f"(1..max_draft_depth={self.max_draft_depth}); construct "
+                "SpeCaEngine(max_draft_depth=K) to serve deeper drafts")
         return pol
 
     def _lane_step(self, W: int, mode: Any = False):
@@ -511,7 +574,8 @@ class SpeCaEngine:
                 self.cfg, self.params, self.dcfg, self.scfg, lanes=W,
                 draft_mode=self.draft_mode, accept_mode=self.accept_mode,
                 verify_backend=self.verify_backend,
-                guidance=mode, mesh=self.mesh))
+                guidance=mode, max_draft_depth=self.max_draft_depth,
+                mesh=self.mesh))
         return self._lane_fns[key]
 
     def lane_width(self, lanes: int, n_requests: int) -> int:

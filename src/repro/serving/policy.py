@@ -54,6 +54,15 @@ class RequestPolicy:
         the PREFIX of the schedule — an early-stopped, cheaper sample —
         and is what makes shortest-job-first scheduling meaningful on
         mixed workloads.
+    draft_depth:
+        Per-request draft horizon K: the lane drafts up to K denoising
+        steps per scheduler tick before ONE closing verify/refresh round
+        serves any rejection (deep speculation — ``docs/serving.md``).
+        ``None`` (or 1) is classic depth-1 forecast-then-verify, bit-
+        identical to the pre-depth engine. Values above the engine's
+        compiled ``max_draft_depth`` are rejected at submit time. For a
+        guided request the pair drafts pair-coherently: both lanes share
+        one chain decision per position (``docs/cfg.md``).
     priority:
         Higher pops first within a scheduler's ordering class (FIFO
         orders by (priority, arrival); SJF/EDF use it as a tie-break).
@@ -68,6 +77,7 @@ class RequestPolicy:
     negative_cond: Optional[Dict[str, Any]] = None
     tau0: Optional[float] = None
     max_steps: Optional[int] = None
+    draft_depth: Optional[int] = None
     priority: int = 0
     deadline: Optional[float] = None
 

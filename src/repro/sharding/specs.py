@@ -239,11 +239,14 @@ LANE_AXIS = "data"
 # per-lane guidance scale and ``paired`` the per-lane pair-slot mask
 # (pair modes only; both pair-equal by invariant); ``tau0`` is the
 # per-lane base verification threshold (serving API v2 — every request
-# carries its own τ policy).
+# carries its own τ policy); ``draft_k`` is the per-lane draft horizon
+# (``RequestPolicy.draft_depth``) and ``max_step`` the lane's schedule
+# length — both read by depth-K chain steps.
 LANE_STATE_AXES = {
     "x": 0, "since": 0, "step": 0, "active": 0,
     "diffs": 3, "n_anchors": 0, "anchor_step": 0, "gap": 0,
     "gscale": 0, "paired": 0, "tau0": 0,
+    "draft_k": 0, "max_step": 0,
 }
 
 

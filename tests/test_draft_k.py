@@ -1,0 +1,395 @@
+"""Deep speculation (draft-K chains): depth-1 equivalence, the rollback
+invariant, and the multi-device parity proof.
+
+The load-bearing properties (ISSUE 6 acceptance):
+
+  * K=1 IS the legacy engine: a ``max_draft_depth=K`` engine serving
+    ``draft_depth=1`` requests reproduces the depth-1 engine BIT-FOR-BIT
+    — accept sequences, num_full/num_spec/num_drafted, FLOPs and samples
+    — at D ∈ {1, 2, 4} forced host devices (same D on both sides, so
+    local gemm shapes match and no reduction-order wobble applies);
+  * the rollback invariant: after a chain tick, every lane's state —
+    latent, difference-table slice, anchor metadata, since/step — equals
+    the state of the SAME lane after ``advanced`` iterations of the
+    legacy depth-1 step. A lane rejected at chain position j therefore
+    lands exactly on its last accepted snapshot (plus the one closing
+    refresh), bit-exactly: deep drafting changes how many verifies run,
+    never which trajectory a request takes (per-sample accept mode);
+  * depth-K serving finishes the same schedule in FEWER ticks (the
+    throughput mechanism), with per-drafted-step accounting
+    ``num_drafted >= len(accepts)``.
+
+The multi-device runs live in a subprocess so XLA_FLAGS (forced device
+count) never leaks into this test process.
+"""
+import dataclasses
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import SpeCaConfig
+from repro.core import lane_step as LS
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+W = 4
+ORDER = 2
+
+
+# ---------------------------------------------------------------------------
+# In-process: the rollback invariant at the lane-step level
+# ---------------------------------------------------------------------------
+
+def _chain_fixture(cfg, dcfg, params, tau0=0.5, K=3):
+    """Jitted (legacy depth-1 step, depth-K chain step) over the same
+    trained backbone and SpeCa config."""
+    scfg = SpeCaConfig(taylor_order=ORDER, max_draft=6, tau0=tau0,
+                      beta=0.9)
+    legacy = jax.jit(LS.build_lane_step(cfg, params, dcfg, scfg, lanes=W,
+                                        accept_mode="per_sample"))
+    chain = jax.jit(LS.build_lane_step(cfg, params, dcfg, scfg, lanes=W,
+                                       accept_mode="per_sample",
+                                       max_draft_depth=K))
+    return scfg, legacy, chain
+
+
+def _warm_state(cfg, dcfg, scfg, seed, tau_per_lane, draft_k):
+    """A mid-schedule state with warm tables: init, then run real full
+    forwards by stepping the legacy program from cold (cold lanes always
+    refresh, so the tables hold genuine backbone features)."""
+    key = jax.random.PRNGKey(seed)
+    state = LS.init_lane_state(cfg, dcfg, scfg, W,
+                               {"labels": jnp.asarray([0])}, active=True)
+    state["x"] = jax.random.normal(key, state["x"].shape, jnp.float32)
+    state["cond"] = {"labels": jnp.asarray(
+        [s % cfg.num_classes for s in range(seed, seed + W)])}
+    state["tau0"] = jnp.asarray(tau_per_lane, jnp.float32)
+    state["draft_k"] = jnp.asarray(draft_k, jnp.int32)
+    return state
+
+
+def test_rollback_restores_accepted_prefix_state(tiny_trained_dit):
+    """THE rollback invariant, at state level: run one depth-3 chain
+    tick; each lane's new state must be bitwise the state of that lane
+    after ``advanced[lane]`` legacy depth-1 ticks — latent, table slice,
+    anchor metadata, since and step. Rejections (full=True) thus restore
+    the last accepted snapshot exactly before the closing refresh; clean
+    budget exhaustion keeps the accumulated ``since``. Per-lane τ
+    straddles the spectrum so the assertion covers accept-all,
+    mid-chain rejection and reject-at-position-0 lanes at once."""
+    cfg, dcfg, params = tiny_trained_dit
+    K = 3
+    scfg, legacy, chain = _chain_fixture(cfg, dcfg, params, K=K)
+    # accept-everything, mixed, reject-immediately, mixed lanes
+    state = _warm_state(cfg, dcfg, scfg, 0, [1e12, 0.5, 1e-9, 0.3],
+                        [K] * W)
+    # warm the tables through real legacy ticks (cold lanes refresh)
+    for _ in range(ORDER + 2):
+        state, _ = legacy(state)
+    assert (np.asarray(state["n_anchors"]) > ORDER).all()
+
+    new, flags = jax.tree.map(np.asarray, chain(state))
+    adv = flags["advanced"]
+    assert adv.min() >= 1 and adv.max() <= K       # some spread
+    # non-vacuous: the τ spread produced both outcomes somewhere
+    assert flags["full"].any() and (flags["n_spec"] > 0).any()
+
+    # iterate the legacy step; snapshot after every tick
+    states = [jax.tree.map(np.asarray, state)]
+    s = state
+    for _ in range(K):
+        s, _ = legacy(s)
+        states.append(jax.tree.map(np.asarray, s))
+
+    for lane in range(W):
+        exp = states[int(adv[lane])]
+        for k in ("since", "step", "n_anchors", "anchor_step"):
+            assert new[k][lane] == exp[k][lane], (lane, k)
+        assert np.array_equal(new["x"][lane], exp["x"][lane]), lane
+        assert np.array_equal(new["diffs"][:, :, :, lane],
+                              exp["diffs"][:, :, :, lane]), lane
+
+
+def test_mixed_per_lane_depths_never_cross_contaminate(tiny_trained_dit):
+    """Lanes with different draft_k in ONE batch each follow their own
+    depth-1 trajectory (the invariant above, per lane), and a lane's
+    result is independent of its neighbours' depths: draft_k=[1,2,3,1]
+    and draft_k=[3,3,3,3] agree wherever the advance counts agree."""
+    cfg, dcfg, params = tiny_trained_dit
+    K = 3
+    scfg, legacy, chain = _chain_fixture(cfg, dcfg, params, K=K)
+
+    def run(draft_k):
+        state = _warm_state(cfg, dcfg, scfg, 3, [0.6, 0.4, 0.5, 0.3],
+                            draft_k)
+        for _ in range(ORDER + 2):
+            state, _ = legacy(state)
+        new, flags = jax.tree.map(np.asarray, chain(state))
+        states = [jax.tree.map(np.asarray, state)]
+        s = state
+        for _ in range(K):
+            s, _ = legacy(s)
+            states.append(jax.tree.map(np.asarray, s))
+        return new, flags, states
+
+    mixed_k = [1, 2, 3, 1]
+    new, flags, states = run(mixed_k)
+    # budget respected per lane
+    assert (flags["advanced"] <= np.asarray(mixed_k)).all()
+    assert (flags["n_drafted"] <= np.asarray(mixed_k)).all()
+    # every lane bitwise on its own depth-1 trajectory
+    for lane in range(W):
+        exp = states[int(flags["advanced"][lane])]
+        assert np.array_equal(new["x"][lane], exp["x"][lane]), lane
+        assert np.array_equal(new["diffs"][:, :, :, lane],
+                              exp["diffs"][:, :, :, lane]), lane
+    # neighbour independence: uniform-K run agrees lane-by-lane wherever
+    # the uniform run advanced the same number of steps
+    new_u, flags_u, _ = run([K] * W)
+    same = flags_u["advanced"] == flags["advanced"]
+    assert same.any()
+    for lane in np.flatnonzero(same):
+        assert np.array_equal(new["x"][lane], new_u["x"][lane]), lane
+
+
+def test_finished_lanes_frozen_under_drafting(tiny_trained_dit):
+    """Inactive lanes pass through a depth-3 chain tick untouched —
+    latents, tables, counters — and contribute nothing to the flags."""
+    cfg, dcfg, params = tiny_trained_dit
+    scfg, legacy, chain = _chain_fixture(cfg, dcfg, params, K=3)
+    state = _warm_state(cfg, dcfg, scfg, 5, [0.5] * W, [3] * W)
+    for _ in range(ORDER + 2):
+        state, _ = legacy(state)
+    state["active"] = jnp.asarray([True, False, True, False])
+    old = jax.tree.map(np.asarray, state)
+    new, flags = jax.tree.map(np.asarray, chain(state))
+    idle = ~old["active"]
+    assert np.array_equal(new["x"][idle], old["x"][idle])
+    assert np.array_equal(new["diffs"][:, :, :, idle],
+                          old["diffs"][:, :, :, idle])
+    for k in ("since", "step", "n_anchors", "anchor_step"):
+        assert np.array_equal(new[k][idle], old[k][idle]), k
+    assert (flags["advanced"][idle] == 0).all()
+    assert (flags["n_drafted"][idle] == 0).all()
+    assert not flags["full"][idle].any()
+
+
+def test_max_step_caps_the_chain(tiny_trained_dit):
+    """A lane whose remaining schedule is shorter than its draft budget
+    stops drafting at ``max_step`` — deep speculation never runs a
+    request past the end of its (possibly ``max_steps``-shortened)
+    schedule."""
+    cfg, dcfg, params = tiny_trained_dit
+    scfg, legacy, chain = _chain_fixture(cfg, dcfg, params, K=3)
+    state = _warm_state(cfg, dcfg, scfg, 1, [1e12] * W, [3] * W)
+    for _ in range(ORDER + 2):
+        state, _ = legacy(state)
+    s0 = np.asarray(state["step"])
+    cap = jnp.asarray(s0 + np.asarray([1, 2, 3, 0]), jnp.int32)
+    state["max_step"] = cap
+    new, flags = jax.tree.map(np.asarray, chain(state))
+    assert (np.asarray(new["step"]) <= np.asarray(cap)).all()
+    np.testing.assert_array_equal(flags["advanced"],
+                                  np.minimum([1, 2, 3, 0], 3))
+
+
+def test_depth1_policy_on_deep_engine_bitwise(tiny_trained_dit):
+    """Serving parity in-process at D=1: a ``max_draft_depth=3`` engine
+    given depth-1 requests returns Results bitwise identical to the
+    depth-1 engine — accepts, counters, FLOPs AND samples (the chain
+    program's K=1 slice is the same computation)."""
+    from repro.serving import Request, RequestPolicy, SpeCaEngine
+
+    cfg, dcfg, params = tiny_trained_dit
+    scfg = SpeCaConfig(taylor_order=ORDER, max_draft=6, tau0=0.5,
+                      beta=0.9)
+    reqs = [Request(request_id=i,
+                    cond={"labels": jnp.asarray([i % cfg.num_classes])},
+                    seed=i) for i in range(5)]
+    ref = SpeCaEngine(cfg, params, dcfg, scfg).serve_batched(reqs, lanes=W)
+    deep = SpeCaEngine(cfg, params, dcfg, scfg, max_draft_depth=3)
+    pol = RequestPolicy(draft_depth=1)
+    got = deep.serve_batched(
+        [dataclasses.replace(r, policy=pol) for r in reqs], lanes=W)
+    assert [r.accepts for r in got] == [r.accepts for r in ref]
+    for a, b in zip(ref, got):
+        assert (a.num_full, a.num_spec, a.num_drafted, a.flops) == \
+            (b.num_full, b.num_spec, b.num_drafted, b.flops)
+        assert np.array_equal(np.asarray(a.sample), np.asarray(b.sample))
+    # non-vacuous: the workload speculated AND refreshed
+    assert sum(sum(r.accepts) for r in ref) > 0
+    assert sum(r.num_full for r in ref) > 0
+
+
+def test_depth3_same_trajectories_fewer_ticks(tiny_trained_dit):
+    """Depth-3 serving (per-sample accept mode) is trajectory-preserving
+    — identical accept sequences and bitwise samples — while finishing
+    in strictly fewer scheduler ticks, with num_drafted accounting every
+    chain position (>= accepted steps)."""
+    from repro.serving import Request, RequestPolicy, SpeCaEngine
+
+    cfg, dcfg, params = tiny_trained_dit
+    scfg = SpeCaConfig(taylor_order=ORDER, max_draft=6, tau0=0.5,
+                      beta=0.9)
+    reqs = [Request(request_id=i,
+                    cond={"labels": jnp.asarray([i % cfg.num_classes])},
+                    seed=i) for i in range(5)]
+    ref = SpeCaEngine(cfg, params, dcfg, scfg).serve_batched(reqs, lanes=W)
+    deep = SpeCaEngine(cfg, params, dcfg, scfg, max_draft_depth=3)
+    pol = RequestPolicy(draft_depth=3)
+    got = deep.serve_batched(
+        [dataclasses.replace(r, policy=pol) for r in reqs], lanes=W)
+    assert [r.accepts for r in got] == [r.accepts for r in ref]
+    for a, b in zip(ref, got):
+        assert np.array_equal(np.asarray(a.sample), np.asarray(b.sample))
+        assert (a.num_full, a.num_spec) == (b.num_full, b.num_spec)
+        assert b.num_drafted >= b.num_spec
+        assert 0.0 <= b.draft_accept_rate <= 1.0
+    assert sum(r.finish_tick for r in got) < sum(r.finish_tick
+                                                 for r in ref)
+
+
+def test_submit_rejects_draft_depth_beyond_engine(tiny_trained_dit):
+    from repro.serving import Request, RequestPolicy, SpeCaEngine
+
+    cfg, dcfg, params = tiny_trained_dit
+    eng = SpeCaEngine(cfg, params, dcfg, SpeCaConfig(taylor_order=ORDER),
+                      max_draft_depth=2)
+    req = Request(request_id=0, cond={"labels": jnp.asarray([0])}, seed=0,
+                  policy=RequestPolicy(draft_depth=3))
+    with pytest.raises(ValueError, match="max_draft_depth"):
+        eng.resolve_policy(req)
+    with pytest.raises(ValueError, match="max_draft_depth"):
+        SpeCaEngine(cfg, params, dcfg, SpeCaConfig(), max_draft_depth=0)
+
+
+# ---------------------------------------------------------------------------
+# Subprocess: D ∈ {1, 2, 4} forced host devices
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_draft_k_multi_device_parity_subprocess():
+    """One subprocess with 4 forced host devices proves, for a briefly
+    trained reduced DiT served over 6 requests on 4 lanes:
+
+      * at every D ∈ {1, 2, 4}, a lane-sharded ``max_draft_depth=3``
+        engine serving depth-1 requests is BITWISE the depth-1 engine at
+        the same D (signatures incl. num_drafted, and samples exactly);
+      * depth-3 serving at D=1 preserves every accept sequence and
+        sample bit-for-bit while using fewer scheduler ticks;
+      * the chain-predict and rollback shard_map wrappers match their
+        unsharded kernels bit-for-bit at D=4.
+    """
+    code = textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+        import dataclasses, json
+        import jax, numpy as np
+        import jax.numpy as jnp
+        from repro.configs import (DiffusionConfig, SpeCaConfig,
+                                   TrainConfig, get_config, reduced)
+        from repro.kernels import ops
+        from repro.launch.mesh import make_lane_mesh
+        from repro.serving import Request, RequestPolicy, SpeCaEngine
+
+        cfg = dataclasses.replace(reduced(get_config("dit-xl2")),
+                                  num_layers=2, d_model=64, d_ff=128,
+                                  num_heads=4, num_kv_heads=4,
+                                  num_classes=8)
+        dcfg = DiffusionConfig(num_inference_steps=10, latent_size=8,
+                               schedule="cosine")
+        from repro.training.diffusion_trainer import train_diffusion
+        out = train_diffusion(cfg, dcfg,
+                              TrainConfig(global_batch=8, steps=60,
+                                          lr=2e-3), verbose=False)
+        params = out["state"]["params"]
+        scfg = SpeCaConfig(taylor_order=2, max_draft=6, tau0=0.5,
+                           beta=0.9)
+        reqs = [Request(request_id=i,
+                        cond={"labels": jnp.asarray([i % 8])}, seed=i)
+                for i in range(6)]
+        pol1 = RequestPolicy(draft_depth=1)
+        reqs1 = [dataclasses.replace(r, policy=pol1) for r in reqs]
+
+        def signature(results):
+            return [[r.accepts, r.num_full, r.num_spec, r.num_drafted,
+                     r.flops] for r in results]
+
+        res = {}
+        for D in (1, 2, 4):
+            mesh = make_lane_mesh(D) if D > 1 else None
+            ref = SpeCaEngine(cfg, params, dcfg, scfg,
+                              mesh=mesh).serve_batched(reqs, lanes=4)
+            got = SpeCaEngine(cfg, params, dcfg, scfg, max_draft_depth=3,
+                              mesh=mesh).serve_batched(reqs1, lanes=4)
+            res[f"d{D}_sig_equal"] = signature(got) == signature(ref)
+            res[f"d{D}_sample_max_diff"] = float(max(
+                np.abs(np.asarray(a.sample, np.float64)
+                       - np.asarray(b.sample, np.float64)).max()
+                for a, b in zip(ref, got)))
+            if D == 1:
+                res["ref_accepts_total"] = int(sum(
+                    sum(r.accepts) for r in ref))
+                res["ref_fulls_total"] = int(sum(r.num_full for r in ref))
+                pol3 = RequestPolicy(draft_depth=3)
+                deep = SpeCaEngine(cfg, params, dcfg, scfg,
+                                   max_draft_depth=3).serve_batched(
+                    [dataclasses.replace(r, policy=pol3) for r in reqs],
+                    lanes=4)
+                res["d1_depth3_accepts_equal"] = \\
+                    [r.accepts for r in deep] == [r.accepts for r in ref]
+                res["d1_depth3_samples_bitwise"] = all(
+                    np.array_equal(np.asarray(a.sample),
+                                   np.asarray(b.sample))
+                    for a, b in zip(ref, deep))
+                res["d1_depth3_fewer_ticks"] = (
+                    sum(r.finish_tick for r in deep)
+                    < sum(r.finish_tick for r in ref))
+                res["d1_depth3_drafted_ge_spec"] = all(
+                    r.num_drafted >= r.num_spec for r in deep)
+
+        # chain/rollback shard_map wrappers vs unsharded kernels at D=4
+        mesh4 = make_lane_mesh(4)
+        key = jax.random.PRNGKey(0)
+        feat = (2, 2, 4, 12, 24)
+        table = jax.random.normal(key, (3,) + feat, jnp.float32)
+        w = jax.random.normal(jax.random.fold_in(key, 1), (3, 3, 4))
+        res["kern_chain_bitwise"] = bool(np.array_equal(
+            np.asarray(ops.taylor_predict_chain_lanes_sharded(
+                table, w, mesh=mesh4, lane_axis=2)),
+            np.asarray(ops.taylor_predict_chain_lanes(table, w,
+                                                      lane_axis=2))))
+        chain = jax.random.normal(jax.random.fold_in(key, 2),
+                                  (4,) + feat)
+        idx = jnp.asarray([0, 3, 1, 2])
+        res["kern_rollback_bitwise"] = bool(np.array_equal(
+            np.asarray(ops.lane_rollback_sharded(chain, idx, mesh=mesh4,
+                                                 lane_axis=2)),
+            np.asarray(ops.lane_rollback(chain, idx, lane_axis=2))))
+        print(json.dumps(res))
+    """)
+    env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run([sys.executable, "-c", code], env=env,
+                         capture_output=True, text=True, timeout=560)
+    assert out.returncode == 0, out.stderr[-2000:]
+    res = json.loads(out.stdout.strip().splitlines()[-1])
+    # non-vacuous: the serve actually speculated AND refreshed
+    assert res["ref_accepts_total"] > 0
+    assert res["ref_fulls_total"] > 0
+    for D in (1, 2, 4):
+        assert res[f"d{D}_sig_equal"], (D, res)
+        assert res[f"d{D}_sample_max_diff"] == 0.0, (D, res)
+    assert res["d1_depth3_accepts_equal"]
+    assert res["d1_depth3_samples_bitwise"]
+    assert res["d1_depth3_fewer_ticks"]
+    assert res["d1_depth3_drafted_ge_spec"]
+    assert res["kern_chain_bitwise"]
+    assert res["kern_rollback_bitwise"]

@@ -302,6 +302,134 @@ def test_taylor_predict_kernel_matches_core_predict(order):
 
 
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("K", [1, 3])
+@pytest.mark.parametrize("feat,lane_axis", [
+    ((2, 2, 3, 13, 24), 2),    # serving layout (L, 2, B, T, D), odd T/D
+    ((3, 5, 7), 1),            # odd everything, interior lane axis
+    ((6, 129), 0),             # lane-leading, one past the 128 tile
+])
+def test_taylor_predict_chain_kernel(feat, lane_axis, K, dtype):
+    """Fused chain forecast vs the einsum oracle, and per-position
+    bitwise equality with the single-step lane kernel: position k of the
+    chain must be THE SAME FMA sequence as ``taylor_predict_lanes`` with
+    weight column k (the depth-K ≡ iterated depth-1 proof leans on
+    this)."""
+    m1 = 3
+    B = feat[lane_axis]
+    key = jax.random.PRNGKey(sum(feat) + K)
+    diffs = jax.random.normal(key, (m1,) + feat, jnp.float32).astype(dtype)
+    w = jax.random.normal(jax.random.fold_in(key, 1), (m1, K, B))
+    got = ops.taylor_predict_chain_lanes(diffs, w, lane_axis=lane_axis)
+    want = R.taylor_predict_chain_lanes_ref(diffs, w, lane_axis=lane_axis)
+    assert got.shape == (K,) + feat and got.dtype == diffs.dtype
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), **_tol(dtype))
+    for k in range(K):
+        single = ops.taylor_predict_lanes(diffs, w[:, k],
+                                          lane_axis=lane_axis)
+        assert np.array_equal(np.asarray(got[k], np.float32),
+                              np.asarray(single, np.float32)), k
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("feat,lane_axis", [
+    ((2, 2, 3, 13, 24), 2),
+    ((3, 5, 7), 1),
+    ((4, 2, 1, 33, 40), 2),
+    ((6, 129), 0),
+])
+def test_lane_rollback_kernel_bitwise(feat, lane_axis, dtype):
+    """Snapshot restore is EXACT COPIES — the kernel must match the
+    staged jnp oracle bit-for-bit at every dtype (the rollback invariant:
+    whichever snapshot a lane's accepted-prefix index selects comes back
+    untouched)."""
+    K = 3
+    B = feat[lane_axis]
+    key = jax.random.PRNGKey(sum(feat) + 7)
+    chain = jax.random.normal(key, (K + 1,) + feat,
+                              jnp.float32).astype(dtype)
+    idx = jax.random.randint(jax.random.fold_in(key, 1), (B,), 0, K + 1)
+    got = ops.lane_rollback(chain, idx, lane_axis=lane_axis)
+    want = R.lane_rollback_ref(chain, idx, lane_axis=lane_axis)
+    assert got.shape == feat and got.dtype == chain.dtype
+    assert np.array_equal(np.asarray(got, np.float32),
+                          np.asarray(want, np.float32))
+    # each lane really is the selected snapshot, bit-for-bit
+    gm = np.moveaxis(np.asarray(got, np.float32), lane_axis, 0)
+    cm = np.moveaxis(np.asarray(chain, np.float32), lane_axis + 1, 1)
+    for b in range(B):
+        assert np.array_equal(gm[b], cm[int(idx[b])][b])
+
+
+def test_chain_kernels_jnp_backend_and_sharded_wrappers():
+    """The ``REPRO_TABLE_BACKEND=jnp`` oracle path of
+    ``taylor.predict_chain_lanes`` agrees with the kernel path (allclose:
+    einsum vs FMA), ``taylor.lane_rollback`` is bitwise across backends
+    (copies are copies), and both 1-device shard_map wrappers ARE their
+    unsharded kernels bit-for-bit (the D=4 case runs in the
+    ``tests/test_draft_k.py`` subprocess)."""
+    from repro.core import taylor as T
+    from repro.launch.mesh import make_lane_mesh
+
+    order, feat, lane_axis = 2, (2, 2, 4, 12, 24), 2
+    B = feat[lane_axis]
+    key = jax.random.PRNGKey(11)
+    state = T.init_state(order, feat, jnp.float32, lanes=B)
+    state["diffs"] = jax.random.normal(key, (order + 1,) + feat)
+    state["n_anchors"] = jnp.full((B,), order + 2, jnp.int32)
+    state["anchor_step"] = jnp.arange(B, dtype=jnp.int32)
+    steps = state["anchor_step"][None, :] + 1 + jnp.arange(3)[:, None]
+    got = T.predict_chain_lanes(state, steps, backend="kernel")
+    want = T.predict_chain_lanes(state, steps, backend="jnp")
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+    chain = jax.random.normal(jax.random.fold_in(key, 1), (4,) + feat)
+    idx = jnp.asarray([0, 3, 1, 2])
+    assert np.array_equal(
+        np.asarray(T.lane_rollback(chain, idx, backend="kernel")),
+        np.asarray(T.lane_rollback(chain, idx, backend="jnp")))
+
+    mesh = make_lane_mesh(1)
+    w = jax.random.normal(jax.random.fold_in(key, 2), (order + 1, 3, B))
+    assert np.array_equal(
+        np.asarray(ops.taylor_predict_chain_lanes_sharded(
+            state["diffs"], w, mesh=mesh, lane_axis=lane_axis)),
+        np.asarray(ops.taylor_predict_chain_lanes(
+            state["diffs"], w, lane_axis=lane_axis)))
+    assert np.array_equal(
+        np.asarray(ops.lane_rollback_sharded(chain, idx, mesh=mesh,
+                                             lane_axis=lane_axis)),
+        np.asarray(ops.lane_rollback(chain, idx, lane_axis=lane_axis)))
+
+
+def test_chain_kernel_bf16_table_quantisation_bounded():
+    """bf16 difference tables through the chain kernel: f32 accumulation
+    keeps every chain position within bf16 rounding of the f32-table
+    forecast, and the bf16 rollback is still exact copies."""
+    m1, K, feat, lane_axis = 3, 3, (2, 2, 3, 13, 24), 2
+    B = feat[lane_axis]
+    key = jax.random.PRNGKey(17)
+    diffs = jax.random.normal(key, (m1,) + feat, jnp.float32)
+    w = jax.random.normal(jax.random.fold_in(key, 1), (m1, K, B))
+    got = ops.taylor_predict_chain_lanes(diffs.astype(jnp.bfloat16), w,
+                                         lane_axis=lane_axis)
+    want = ops.taylor_predict_chain_lanes(diffs, w, lane_axis=lane_axis)
+    assert got.dtype == jnp.bfloat16
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=3e-2, atol=3e-2)
+    chain = jax.random.normal(jax.random.fold_in(key, 2),
+                              (K + 1,) + feat).astype(jnp.bfloat16)
+    idx = jnp.asarray([2, 0, 3])
+    got = ops.lane_rollback(chain, idx, lane_axis=lane_axis)
+    want = R.lane_rollback_ref(chain, idx, lane_axis=lane_axis)
+    assert got.dtype == jnp.bfloat16
+    assert np.array_equal(np.asarray(got, np.float32),
+                          np.asarray(want, np.float32))
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
 @pytest.mark.parametrize("s,h,hd,causal,window", [
     (64, 2, 32, True, 0),
     (64, 2, 32, True, 16),

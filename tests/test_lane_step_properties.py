@@ -41,12 +41,15 @@ except ImportError:          # optional test extra; seeded tests still run
 
 W = 4
 ORDER = 2
+K_CHAIN = 3          # compiled draft horizon of the deep-speculation step
 
 
 @functools.lru_cache(maxsize=1)
 def _fixture():
     """Tiny DiT + jitted per-sample lane step (random params: the
-    invariants are structural, independent of training)."""
+    invariants are structural, independent of training). ``get`` returns
+    the legacy depth-1 step, ``get_chain`` the ``max_draft_depth=3``
+    chain step over the same backbone and config."""
     from repro.layers import model as M
 
     cfg = dataclasses.replace(reduced(get_config("dit-xl2")), num_layers=2,
@@ -56,6 +59,7 @@ def _fixture():
                            schedule="cosine")
     params = M.init_params(cfg, jax.random.PRNGKey(0))
     steps = {}
+    chains = {}
     scfgs = {}
 
     def get(tau0: float):
@@ -67,15 +71,26 @@ def _fixture():
                 accept_mode="per_sample", verify_backend="fused"))
         return scfgs[tau0], steps[tau0]
 
-    return cfg, dcfg, get
+    def get_chain(tau0: float):
+        if tau0 not in chains:
+            scfg, _ = get(tau0)
+            chains[tau0] = jax.jit(LS.build_lane_step(
+                cfg, params, dcfg, scfg, lanes=W,
+                accept_mode="per_sample", verify_backend="fused",
+                max_draft_depth=K_CHAIN))
+        return scfgs[tau0], chains[tau0]
+
+    return cfg, dcfg, get, get_chain
 
 
 def _build_state(seed: int, active, n_anchors, since, step_idx, scfg,
-                 cfg, dcfg):
+                 cfg, dcfg, draft_k=None):
     """Synthetic-but-consistent lane state from drawn parameters."""
     key = jax.random.PRNGKey(seed)
     state = LS.init_lane_state(cfg, dcfg, scfg, W,
                                {"labels": jnp.asarray([0])})
+    if draft_k is not None:
+        state["draft_k"] = jnp.asarray(draft_k, jnp.int32)
     S = dcfg.num_inference_steps
     state["x"] = jax.random.normal(key, state["x"].shape, jnp.float32)
     state["cond"] = {"labels": jnp.asarray(
@@ -95,7 +110,7 @@ def _build_state(seed: int, active, n_anchors, since, step_idx, scfg,
 
 
 def _check_step_invariants(seed, tau0, active, n_anchors, since, step_idx):
-    cfg, dcfg, get = _fixture()
+    cfg, dcfg, get, _ = _fixture()
     scfg, step_fn = get(tau0)
     state = _build_state(seed, active, n_anchors, since, step_idx, scfg,
                          cfg, dcfg)
@@ -184,7 +199,7 @@ def test_since_monotone_over_multiple_ticks():
     """Across consecutive ticks: ``since`` either increments by 1 or
     resets to 0 for active lanes, never exceeds max_draft, and frozen
     lanes hold their value."""
-    cfg, dcfg, get = _fixture()
+    cfg, dcfg, get, _ = _fixture()
     scfg, step_fn = get(0.8)
     state = _build_state(7, [1, 1, 1, 0], [3, 3, 3, 3], [0, 0, 0, 2],
                          [0, 1, 2, 3], scfg, cfg, dcfg)
@@ -196,6 +211,220 @@ def test_since_monotone_over_multiple_ticks():
         assert ((cur[act] == prev[act] + 1) | (cur[act] == 0)).all()
         assert (cur[act] <= scfg.max_draft).all()
         assert np.array_equal(cur[~act], prev[~act])
+        prev = cur
+
+
+# ---------------------------------------------------------------------------
+# Deep speculation (draft-K chain) invariants
+# ---------------------------------------------------------------------------
+
+def _eq(x, y) -> bool:
+    x, y = np.asarray(x), np.asarray(y)
+    if np.issubdtype(x.dtype, np.floating):
+        return np.array_equal(x, y, equal_nan=True)
+    return np.array_equal(x, y)
+
+
+def _check_chain_invariants(seed, tau0, active, n_anchors, since,
+                            step_idx, draft_k):
+    """Structural invariants of one depth-3 chain tick:
+
+      * accepted positions form a PREFIX of the drafted chain, and the
+        counters are its arithmetic (n_spec = |prefix|, n_drafted =
+        attempted positions <= draft_k, advanced = n_spec + full);
+      * since/step bookkeeping across rollback: step advances by exactly
+        ``advanced``; ``since`` accumulates the accepted run or resets
+        to 0 on the closing refresh;
+      * finished lanes frozen under drafting — latents, tables, every
+        counter;
+      * the one refreshed table slice is a fresh anchor at the lane's
+        own post-prefix step; every other lane's slice is untouched.
+    """
+    cfg, dcfg, _, get_chain = _fixture()
+    scfg, chain_fn = get_chain(tau0)
+    state = _build_state(seed, active, n_anchors, since, step_idx, scfg,
+                         cfg, dcfg, draft_k=draft_k)
+    new, flags = jax.tree.map(np.asarray, chain_fn(state))
+    old = jax.tree.map(np.asarray, state)
+
+    catt, cacc = flags["chain_attempted"], flags["chain_accepted"]
+    nspec, ndraft = flags["n_spec"], flags["n_drafted"]
+    full, adv = flags["full"], flags["advanced"]
+    act, dk = old["active"], np.asarray(draft_k)
+
+    # --- the accepted chain is a prefix -----------------------------------
+    assert (cacc <= catt).all()
+    assert np.array_equal(nspec, cacc.sum(0))
+    assert np.array_equal(ndraft, catt.sum(0))
+    for j in range(K_CHAIN - 1):        # no attempt past a non-accept
+        assert not (catt[j + 1] & ~cacc[j]).any()
+    for lane in range(W):
+        assert cacc[: nspec[lane], lane].all()
+        assert not cacc[nspec[lane]:, lane].any()
+    # position 0 is the legacy flag set
+    assert np.array_equal(flags["attempted"], catt[0])
+    assert np.array_equal(flags["accepted"], cacc[0])
+
+    # --- budget / counter algebra -----------------------------------------
+    assert (ndraft <= dk).all()
+    assert np.array_equal(adv, nspec + full.astype(nspec.dtype))
+    assert not full[~act].any()
+    assert (ndraft[~act] == 0).all()
+
+    # --- since/step bookkeeping across rollback ---------------------------
+    assert np.array_equal(new["step"], old["step"] + adv)
+    acconly = act & ~full
+    assert np.array_equal(new["since"][acconly],
+                          old["since"][acconly] + nspec[acconly])
+    assert (new["since"][full] == 0).all()
+
+    # --- finished lanes frozen under drafting -----------------------------
+    idle = ~act
+    assert np.array_equal(new["x"][idle], old["x"][idle])
+    assert np.array_equal(new["since"][idle], old["since"][idle])
+    assert np.array_equal(new["diffs"][:, :, :, idle],
+                          old["diffs"][:, :, :, idle])
+    assert np.array_equal(new["n_anchors"][idle], old["n_anchors"][idle])
+
+    # --- table refresh: only the closing full touches a slice -------------
+    keep = ~full
+    assert np.array_equal(new["diffs"][:, :, :, keep],
+                          old["diffs"][:, :, :, keep])
+    assert np.array_equal(new["n_anchors"][keep], old["n_anchors"][keep])
+    for i in range(1, ORDER + 1):       # fresh anchor: recursive chain
+        np.testing.assert_array_equal(
+            new["diffs"][i][:, :, full],
+            new["diffs"][i - 1][:, :, full]
+            - old["diffs"][i - 1][:, :, full])
+    assert np.array_equal(new["n_anchors"][full],
+                          old["n_anchors"][full] + 1)
+    s_eff = np.minimum(old["step"] + nspec, dcfg.num_inference_steps - 1)
+    assert np.array_equal(new["anchor_step"][full], s_eff[full])
+    return nspec, full, ndraft
+
+
+def _check_depth1_equals_legacy(seed, tau0, active, n_anchors, since,
+                                step_idx):
+    """draft_k=1 lanes through the compiled K=3 chain ARE the legacy
+    step: full state tree and all shared flags bitwise."""
+    cfg, dcfg, get, get_chain = _fixture()
+    scfg, step_fn = get(tau0)
+    _, chain_fn = get_chain(tau0)
+    state = _build_state(seed, active, n_anchors, since, step_idx, scfg,
+                         cfg, dcfg, draft_k=[1] * W)
+    a_new, a_flags = jax.tree.map(np.asarray, step_fn(state))
+    b_new, b_flags = jax.tree.map(np.asarray, chain_fn(state))
+    la, ta = jax.tree_util.tree_flatten(a_new)
+    lb, tb = jax.tree_util.tree_flatten(b_new)
+    assert ta == tb
+    for x, y in zip(la, lb):
+        assert _eq(x, y)
+    for k in ("attempted", "ok", "accepted", "full", "err", "tau",
+              "n_spec", "n_drafted", "advanced"):
+        assert _eq(a_flags[k], b_flags[k]), k
+
+
+def _check_no_cross_contamination(seed, tau0, active, n_anchors, since,
+                                  step_idx, dk_a, dk_b):
+    """A lane's chain outcome depends only on ITS OWN draft budget:
+    two runs whose draft_k vectors agree at a lane agree bitwise at that
+    lane — state columns and flag columns — whatever the neighbours'
+    budgets do."""
+    cfg, dcfg, _, get_chain = _fixture()
+    scfg, chain_fn = get_chain(tau0)
+
+    def run(dk):
+        state = _build_state(seed, active, n_anchors, since, step_idx,
+                             scfg, cfg, dcfg, draft_k=dk)
+        return jax.tree.map(np.asarray, chain_fn(state))
+
+    a_new, a_flags = run(dk_a)
+    b_new, b_flags = run(dk_b)
+    same = np.asarray(dk_a) == np.asarray(dk_b)
+    for lane in np.flatnonzero(same):
+        assert np.array_equal(a_new["x"][lane], b_new["x"][lane])
+        assert np.array_equal(a_new["diffs"][:, :, :, lane],
+                              b_new["diffs"][:, :, :, lane])
+        for k in ("since", "step", "n_anchors", "anchor_step"):
+            assert a_new[k][lane] == b_new[k][lane], (lane, k)
+        for k in ("full", "n_spec", "n_drafted", "advanced"):
+            assert a_flags[k][lane] == b_flags[k][lane], (lane, k)
+        assert np.array_equal(a_flags["chain_accepted"][:, lane]
+                              & a_flags["chain_attempted"][:, lane],
+                              b_flags["chain_accepted"][:, lane]
+                              & b_flags["chain_attempted"][:, lane])
+    return same
+
+
+CHAIN_CASES = [
+    # (seed, tau0, active, n_anchors, since, step_idx, draft_k)
+    (0, 1e12, [1, 1, 1, 1], [3, 3, 3, 3], [0, 1, 2, 3], [3, 4, 5, 6],
+     [3, 3, 3, 3]),
+    (1, 1e-6, [1, 1, 1, 1], [3, 4, 3, 4], [1, 0, 1, 0], [4, 4, 5, 5],
+     [2, 3, 1, 3]),
+    (2, 0.5, [1, 0, 1, 0], [3, 0, 4, 3], [0, 0, 3, 0], [2, 0, 7, 1],
+     [3, 1, 2, 3]),
+    (5, 0.5, [1, 1, 0, 1], [4, 0, 3, 3], [4, 0, 0, 2], [6, 1, 3, 8],
+     [1, 2, 3, 3]),
+    (6, 0.3, [1, 1, 1, 1], [3, 3, 4, 4], [0, 1, 4, 2], [9, 10, 11, 3],
+     [3, 3, 3, 1]),
+]
+
+
+@pytest.mark.parametrize("case", CHAIN_CASES)
+def test_chain_step_invariants_seeded(case):
+    _check_chain_invariants(*case)
+
+
+def test_chain_cases_cover_all_outcomes():
+    """Jointly non-vacuous: some lane accepts a multi-step prefix, some
+    rejects, some exhausts its budget cleanly, some is inactive."""
+    saw_deep = saw_rej = saw_clean = saw_idle = False
+    for case in CHAIN_CASES:
+        nspec, full, ndraft = _check_chain_invariants(*case)
+        act = np.asarray(case[2], bool)
+        saw_deep |= (nspec > 1).any()
+        saw_rej |= full.any()
+        saw_clean |= (act & ~full & (nspec > 0)).any()
+        saw_idle |= not act.all()
+    assert saw_deep and saw_rej and saw_clean and saw_idle
+
+
+@pytest.mark.parametrize("case", CHAIN_CASES)
+def test_chain_depth1_equals_legacy_seeded(case):
+    _check_depth1_equals_legacy(*case[:6])
+
+
+def test_chain_no_cross_contamination_seeded():
+    same = _check_no_cross_contamination(
+        2, 0.5, [1, 1, 1, 1], [3, 3, 4, 3], [0, 1, 0, 2], [4, 5, 6, 7],
+        [1, 3, 2, 1], [3, 3, 1, 1])
+    assert same.any() and not same.all()    # non-vacuous comparison
+
+
+def test_chain_since_step_monotone_over_multiple_ticks():
+    """Across consecutive chain ticks: ``step`` advances by exactly
+    ``advanced``, ``since`` accumulates the accepted run or resets on a
+    rollback's closing refresh, never exceeds max_draft, and frozen
+    lanes hold their values."""
+    cfg, dcfg, _, get_chain = _fixture()
+    scfg, chain_fn = get_chain(0.8)
+    state = _build_state(7, [1, 1, 1, 0], [3, 3, 3, 3], [0, 0, 0, 2],
+                         [0, 1, 2, 3], scfg, cfg, dcfg,
+                         draft_k=[1, 2, 3, 2])
+    prev = jax.tree.map(np.asarray, state)
+    for _ in range(5):
+        state, flags = chain_fn(state)
+        cur, f = jax.tree.map(np.asarray, (state, flags))
+        act = prev["active"]
+        assert np.array_equal(cur["step"], prev["step"] + f["advanced"])
+        acconly = act & ~f["full"]
+        assert np.array_equal(cur["since"][acconly],
+                              prev["since"][acconly]
+                              + f["n_spec"][acconly])
+        assert (cur["since"][f["full"]] == 0).all()
+        assert (cur["since"][act] <= scfg.max_draft).all()
+        assert np.array_equal(cur["since"][~act], prev["since"][~act])
         prev = cur
 
 
@@ -271,3 +500,49 @@ if hypothesis is not None:
         for i in range(1, order + 1):
             np.testing.assert_array_equal(nd[i][mask],
                                           nd[i - 1][mask] - od[i - 1][mask])
+
+    draft_bits = st.lists(st.integers(1, K_CHAIN), min_size=W, max_size=W)
+
+    @_settings
+    @given(seed=st.integers(0, 2**16),
+           tau0=st.sampled_from([1e-6, 0.3, 0.8, 1e12]),
+           active=lane_bits,
+           n_anchors=st.lists(st.integers(0, ORDER + 3), min_size=W,
+                              max_size=W),
+           since=st.lists(st.integers(0, 5), min_size=W, max_size=W),
+           step_idx=st.lists(st.integers(0, 11), min_size=W, max_size=W),
+           draft_k=draft_bits)
+    def test_chain_step_invariants_hypothesis(seed, tau0, active,
+                                              n_anchors, since, step_idx,
+                                              draft_k):
+        _check_chain_invariants(seed, tau0, active, n_anchors, since,
+                                step_idx, draft_k)
+
+    @_settings
+    @given(seed=st.integers(0, 2**16),
+           tau0=st.sampled_from([1e-6, 0.3, 0.8, 1e12]),
+           active=lane_bits,
+           n_anchors=st.lists(st.integers(0, ORDER + 3), min_size=W,
+                              max_size=W),
+           since=st.lists(st.integers(0, 5), min_size=W, max_size=W),
+           step_idx=st.lists(st.integers(0, 11), min_size=W, max_size=W))
+    def test_chain_depth1_equals_legacy_hypothesis(seed, tau0, active,
+                                                   n_anchors, since,
+                                                   step_idx):
+        _check_depth1_equals_legacy(seed, tau0, active, n_anchors, since,
+                                    step_idx)
+
+    @_settings
+    @given(seed=st.integers(0, 2**16),
+           tau0=st.sampled_from([0.3, 0.8]),
+           n_anchors=st.lists(st.integers(0, ORDER + 3), min_size=W,
+                              max_size=W),
+           since=st.lists(st.integers(0, 5), min_size=W, max_size=W),
+           step_idx=st.lists(st.integers(0, 11), min_size=W, max_size=W),
+           dk_a=draft_bits, dk_b=draft_bits)
+    def test_chain_no_cross_contamination_hypothesis(seed, tau0,
+                                                     n_anchors, since,
+                                                     step_idx, dk_a,
+                                                     dk_b):
+        _check_no_cross_contamination(seed, tau0, [1] * W, n_anchors,
+                                      since, step_idx, dk_a, dk_b)

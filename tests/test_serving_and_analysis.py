@@ -73,6 +73,61 @@ def test_serving_engine_counts(tiny_trained_dit):
     assert 0.0 <= rep["alpha_mean"] <= 1.0
 
 
+def test_draft_accept_rate_per_drafted_step_pinned():
+    """The accept-rate denominator is DRAFTED CHAIN POSITIONS, not
+    verify rounds: a depth-3 chain that verifies once still counts 3
+    drafted steps. Pinned by hand so the accounting can't silently
+    regress to per-verify (which would inflate deep-draft rates)."""
+    from repro.serving import Result
+    # depth-3 request: three 3-deep chains drafted (9 positions), 6
+    # accepted, 2 closing refreshes — per-drafted-step rate 6/9, where
+    # the old per-verify accounting would have claimed 6/3
+    r = Result(request_id=0, sample=None, num_full=2, num_spec=6,
+               num_drafted=9, flops=0.0, wall_s=1.0)
+    assert r.draft_accept_rate == pytest.approx(6 / 9)
+    # depth-1 degenerate: drafted == attempted verify rounds, so the
+    # rate is the classic accepted/attempted
+    r1 = Result(request_id=1, sample=None, num_full=4, num_spec=6,
+                num_drafted=8, flops=0.0, wall_s=1.0)
+    assert r1.draft_accept_rate == pytest.approx(6 / 8)
+    # never drafted (all warmup fulls): rate is 0, not a ZeroDivision
+    r2 = Result(request_id=2, sample=None, num_full=5, num_spec=0,
+                num_drafted=0, flops=0.0, wall_s=1.0)
+    assert r2.draft_accept_rate == 0.0
+
+
+def test_engine_harvest_per_drafted_step_accounting(tiny_trained_dit):
+    """Served Results carry the per-drafted-step fields coherently:
+    num_drafted counts every chain position (>= num_spec; at depth 1
+    exactly the attempted verify rounds = S - warmup/cold fulls), and
+    depth-3 serving reports MORE drafted positions for the same accepted
+    trajectory — the honest denominator the benchmark divides by."""
+    import dataclasses as _dc
+
+    from repro.serving import Request, RequestPolicy, SpeCaEngine
+    cfg, dcfg, params = tiny_trained_dit
+    scfg = SpeCaConfig(taylor_order=2, max_draft=8, tau0=0.4, beta=0.9)
+    reqs = [Request(request_id=i, cond={"labels": jnp.asarray([i % 8])},
+                    seed=i) for i in range(3)]
+    res1 = SpeCaEngine(cfg, params, dcfg, scfg).serve(reqs)
+    for r in res1:
+        # depth 1: every draft is its own verify round; rejected drafts
+        # make num_drafted exceed num_spec, cold ticks draft nothing
+        assert r.num_spec <= r.num_drafted <= len(r.accepts)
+        # each full pays for at most one failed draft, and the first
+        # taylor_order+1 cold ticks can't draft at all
+        assert r.num_drafted <= r.num_spec + r.num_full - 3
+        assert 0.0 <= r.draft_accept_rate <= 1.0
+    deep = SpeCaEngine(cfg, params, dcfg, scfg, max_draft_depth=3)
+    pol = RequestPolicy(draft_depth=3)
+    res3 = deep.serve([_dc.replace(r, policy=pol) for r in reqs])
+    for a, b in zip(res1, res3):
+        assert b.accepts == a.accepts            # same trajectory...
+        assert b.num_spec == a.num_spec
+        assert b.num_drafted >= a.num_drafted    # ...more drafted steps
+        assert b.draft_accept_rate <= a.draft_accept_rate
+
+
 def test_ssm_flops_pinned_against_hand_computed():
     """Regression pin for the `2 * ns * nh // nh` precedence bug: the B/C
     in-projection streams are per-head (2·ns·nh, matching
