@@ -140,6 +140,39 @@ def _train_video(cfg, dcfg, tcfg):
     return state["params"]
 
 
+def get_lm_model(arch: str = "mamba2-130m", *, steps: int = 30,
+                 verbose: bool = True):
+    """Reduced LM for decode-workload serving benchmarks: returns
+    ``(cfg, params)``, training briefly on the synthetic LM stream and
+    caching on disk like the diffusion zoo (a trained net gives stable
+    feature trajectories, so decode accept rates are reproducible
+    across CI runs instead of artifacts of random init)."""
+    from repro.optim.adamw import AdamWConfig
+    from repro.training import lm as T
+    cfg = reduced(get_config(arch))
+    path = os.path.join(MODELS, f"lm-{arch}")
+    key = jax.random.PRNGKey(0)
+    if os.path.isdir(path):
+        template = jax.eval_shape(lambda: M.init_params(cfg, key))
+        params = restore_checkpoint(
+            path, jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                               template))
+        return cfg, params
+    if verbose:
+        print(f"[zoo] training lm-{arch} ({steps} steps)...")
+    state = T.make_train_state(cfg, key, AdamWConfig(lr=1e-3))
+    data_cfg = syn.LMStreamConfig(vocab_size=cfg.vocab_size, seq_len=64,
+                                  num_codebooks=cfg.num_codebooks)
+    it = syn.ShardedIterator(partial(syn.lm_batch, data_cfg), 8)
+    step_fn = jax.jit(partial(T.train_step, cfg,
+                              AdamWConfig(lr=1e-3)))
+    for _ in range(steps):
+        state, _ = step_fn(state, next(it))
+    params = state["params"]
+    save_checkpoint(path, params, step=steps)
+    return cfg, params
+
+
 def make_cond(cfg, dcfg, batch: int, seed: int = 123) -> Dict[str, Any]:
     cond: Dict[str, Any] = {}
     key = jax.random.PRNGKey(seed)

@@ -7,6 +7,18 @@ easy/hard and each bucket's realised FLOPs speedup is shown. Because the
 lane scheduler reproduces the exact batch=1 accept trajectories, the two
 modes serve identical work — the requests/s delta is pure scheduling.
 
+``--workload diffusion,decode,mixed`` selects WHICH traffic is served
+(workload-agnostic lane core, docs/llm_serving.md). Every row carries a
+``workload`` column. ``decode`` serves LLM self-speculative decode lanes
+(``DecodeWorkload`` over a small cached LM) twice — once at
+``--decode-tau0`` and once reject-always (τ0=0, plain greedy decoding) —
+so the artifact tracks the decode accept rate AND the FLOPs win of
+self-speculation over always-full decoding (``tok_per_s`` is the decode
+throughput column). ``mixed`` serves diffusion and decode requests
+through ONE engine concurrently and reports one row per workload with
+per-workload accept rates — the CI liveness signal that heterogeneous
+traffic shares the engine without perturbing either side.
+
 ``--devices 1,2,4`` adds one lane-scheduler row per device count D: the
 engine lane-shards over a D-device ``('data',)`` mesh (requests/s per
 device count is the CI artifact column tracking how serving capacity
@@ -57,21 +69,48 @@ Run (repo root must be on the path for ``benchmarks.common``):
       --requests 8 --lanes 4 --steps 12 --guidance-scale 4.0
   PYTHONPATH=src:. python benchmarks/serve_throughput.py \
       --requests 8 --lanes 2 --steps 12 --scheduler fifo,sjf,edf
+  PYTHONPATH=src:. python benchmarks/serve_throughput.py \
+      --requests 4 --lanes 2 --steps 12 --workload diffusion,decode,mixed
 """
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import time
 
+import jax
 import jax.numpy as jnp
+import numpy as np
 
-from benchmarks.common import get_model, print_table, write_result
+from benchmarks.common import (get_lm_model, get_model, print_table,
+                               write_result)
 from repro.configs import SpeCaConfig
 from repro.core.complexity import forward_flops
 from repro.diffusion.pipeline import null_cond_like
 from repro.launch.mesh import make_lane_mesh
-from repro.serving import (Request, RequestPolicy, SpeCaEngine,
-                           allocation_report)
+from repro.serving import (DecodeWorkload, Request, RequestPolicy,
+                           SpeCaEngine, allocation_report)
+
+# one shared column schema across diffusion/decode/mixed rows so the
+# printed table and the artifact JSON stay rectangular (print_table
+# takes its header from the first row)
+ROW_COLS = ("mode", "workload", "devices", "lanes", "guidance",
+            "scheduler", "draft_depth", "requests", "wall_s", "req_per_s",
+            "tok_per_s", "alpha_mean", "draft_accept_rate", "frac_easy",
+            "frac_hard", "speedup_easy", "speedup_hard", "speedup_all",
+            "serving_speedup", "trajectory_mismatches",
+            "mean_completion_ticks", "deadline_hit_rate")
+
+
+def _row(**kw):
+    row = {c: None for c in ROW_COLS}
+    row.update({"workload": "diffusion", "devices": 1, "guidance": 0.0,
+                "scheduler": "fifo", "draft_depth": 1})
+    unknown = set(kw) - set(ROW_COLS)
+    if unknown:
+        raise KeyError(f"unknown row columns: {sorted(unknown)}")
+    row.update(kw)
+    return row
 
 
 def make_requests(cfg, n: int, *, offset: int = 0, guidance_scale=None):
@@ -79,6 +118,24 @@ def make_requests(cfg, n: int, *, offset: int = 0, guidance_scale=None):
                     cond={"labels": jnp.asarray([i % cfg.num_classes])},
                     seed=offset + i, guidance_scale=guidance_scale)
             for i in range(n)]
+
+
+def decode_requests(lm_cfg, n: int, prompt_len: int, *, tau0: float,
+                    offset: int = 0, max_steps=None):
+    """Decode-workload traffic: each request carries a distinct random
+    prompt and a per-request τ0 policy (τ0=0 → reject-always greedy)."""
+    out = []
+    for i in range(n):
+        prompt = np.asarray(
+            jax.random.randint(jax.random.PRNGKey(offset + i),
+                               (1, prompt_len), 0, lm_cfg.vocab_size),
+            np.int32)
+        out.append(Request(
+            request_id=offset + i, cond={"tokens": prompt},
+            seed=offset + i,
+            policy=RequestPolicy(workload="decode", tau0=tau0,
+                                 max_steps=max_steps)))
+    return out
 
 
 def deadline_workload(cfg, n: int, steps: int, lanes: int):
@@ -145,39 +202,24 @@ def draft_accept_rate(results) -> float:
     return spec / max(drafted, 1)
 
 
-def main() -> None:
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--model", default="dit", choices=["dit", "flux"])
-    ap.add_argument("--requests", type=int, default=12)
-    ap.add_argument("--lanes", type=int, default=4)
-    ap.add_argument("--steps", type=int, default=30)
-    ap.add_argument("--tau0", type=float, default=0.4)
-    ap.add_argument("--accept-mode", default="per_sample",
-                    choices=["per_sample", "batch"])
-    ap.add_argument("--guidance-scale", type=float, default=0.0,
-                    help=">0: classifier-free-guidance serving (paired "
-                         "cond/uncond lanes) plus a split baseline row "
-                         "serving the streams as independent requests")
-    ap.add_argument("--draft-depth", default="1",
-                    help="comma list of draft horizons, e.g. 1,3: adds a "
-                         "full-workload row and an easy-bucket row per "
-                         "depth K>0 beyond the base depth-1 rows")
-    ap.add_argument("--devices", default="1",
-                    help="comma list of lane-shard device counts, e.g. "
-                         "1,2,4 (needs that many visible devices)")
-    ap.add_argument("--scheduler", default="",
-                    help="comma list of admission schedulers to compare "
-                         "on a mixed-length deadline workload, e.g. "
-                         "fifo,sjf,edf (adds one row per scheduler)")
-    args = ap.parse_args()
+def _rep_cols(rep):
+    return dict(
+        alpha_mean=round(rep["alpha_mean"], 4),
+        frac_easy=round(rep["frac_easy"], 3),
+        frac_hard=round(rep["frac_hard"], 3),
+        speedup_easy=round(rep["speedup_easy"], 3),
+        speedup_hard=round(rep["speedup_hard"], 3),
+        speedup_all=round(rep["speedup_all"], 3))
+
+
+def run_diffusion(args, model):
+    """The diffusion serving benchmark (sequential vs lanes, devices,
+    CFG pairs, draft depths, schedulers). Returns the artifact rows."""
+    cfg, dcfg, params = model
     device_counts = sorted({int(d) for d in args.devices.split(",")})
     guided = args.guidance_scale > 0
     gs = args.guidance_scale if guided else None
     streams = 2 if guided else 1
-
-    cfg, dcfg, params = get_model(args.model)
-    import dataclasses
-    dcfg = dataclasses.replace(dcfg, num_inference_steps=args.steps)
     scfg = SpeCaConfig(taylor_order=2, max_draft=8, tau0=args.tau0,
                        beta=0.9)
 
@@ -253,28 +295,18 @@ def main() -> None:
         # requests serve N user requests' work
         n_user = len(results) // (2 if split else 1)
         mean_ticks, hit = sched_stats(results)
-        rows.append({
-            "mode": mode,
-            "devices": D,
-            "lanes": W_eff,
-            "guidance": args.guidance_scale if guided else 0.0,
-            "scheduler": "fifo",
-            "draft_depth": 1,
-            "requests": n_user,
-            "wall_s": round(wall, 2),
-            "req_per_s": round(n_user / wall, 3),
-            "alpha_mean": round(rep["alpha_mean"], 4),
-            "draft_accept_rate": round(draft_accept_rate(results), 4),
-            "frac_easy": round(rep["frac_easy"], 3),
-            "frac_hard": round(rep["frac_hard"], 3),
-            "speedup_easy": round(rep["speedup_easy"], 3),
-            "speedup_hard": round(rep["speedup_hard"], 3),
-            "speedup_all": round(rep["speedup_all"], 3),
-            "serving_speedup": round(seq_wall / wall, 3),
-            "trajectory_mismatches": mismatches,
-            "mean_completion_ticks": round(mean_ticks, 2),
-            "deadline_hit_rate": hit,
-        })
+        rows.append(_row(
+            mode=mode, devices=D, lanes=W_eff,
+            guidance=args.guidance_scale if guided else 0.0,
+            requests=n_user,
+            wall_s=round(wall, 2),
+            req_per_s=round(n_user / wall, 3),
+            draft_accept_rate=round(draft_accept_rate(results), 4),
+            serving_speedup=round(seq_wall / wall, 3),
+            trajectory_mismatches=mismatches,
+            mean_completion_ticks=round(mean_ticks, 2),
+            deadline_hit_rate=hit,
+            **_rep_cols(rep)))
 
     # scheduler comparison (serving API v2): one row per admission
     # policy, same engine, same mixed-length deadline workload — the
@@ -297,32 +329,21 @@ def main() -> None:
             # --guidance-scale: unguided step cost and guidance=0.0
             rep = allocation_report(results, fwd)
             mean_ticks, hit = sched_stats(results)
-            row = {
-                "mode": f"sched={name}",
-                "devices": 1,
-                "lanes": sched_engine._width_for(
+            row = _row(
+                mode=f"sched={name}",
+                lanes=sched_engine._width_for(
                     args.lanes, [sched_engine.resolve_policy(r)
                                  for r in wl]),
-                "guidance": 0.0,
-                "scheduler": name,
-                "draft_depth": 1,
-                "requests": len(wl),
-                "wall_s": round(wall, 2),
-                "req_per_s": round(len(wl) / wall, 3),
-                "alpha_mean": round(rep["alpha_mean"], 4),
-                "draft_accept_rate": round(draft_accept_rate(results), 4),
-                "frac_easy": round(rep["frac_easy"], 3),
-                "frac_hard": round(rep["frac_hard"], 3),
-                "speedup_easy": round(rep["speedup_easy"], 3),
-                "speedup_hard": round(rep["speedup_hard"], 3),
-                "speedup_all": round(rep["speedup_all"], 3),
+                scheduler=name,
+                requests=len(wl),
+                wall_s=round(wall, 2),
+                req_per_s=round(len(wl) / wall, 3),
+                draft_accept_rate=round(draft_accept_rate(results), 4),
                 # the sequential baseline timed a different (all
-                # full-length) workload — not comparable here
-                "serving_speedup": None,
-                "trajectory_mismatches": None,
-                "mean_completion_ticks": round(mean_ticks, 2),
-                "deadline_hit_rate": hit,
-            }
+                # full-length) workload — serving_speedup not comparable
+                mean_completion_ticks=round(mean_ticks, 2),
+                deadline_hit_rate=hit,
+                **_rep_cols(rep))
             sched_rows.append(row)
             rows.append(row)
 
@@ -356,39 +377,27 @@ def main() -> None:
                 mismatches = None if tag else sum(
                     a.accepts != b.accepts
                     for a, b in zip(seq_results, results))
-                row = {
-                    "mode": f"depth={K}{tag}",
-                    "devices": 1,
-                    "lanes": deng.lane_width(args.lanes, len(subset)),
-                    "guidance": args.guidance_scale if guided else 0.0,
-                    "scheduler": "fifo",
-                    "draft_depth": K,
-                    "requests": len(subset),
-                    "wall_s": round(wall, 2),
-                    "req_per_s": round(len(subset) / wall, 3),
-                    "alpha_mean": round(rep["alpha_mean"], 4),
-                    "draft_accept_rate": round(draft_accept_rate(results),
-                                               4),
-                    "frac_easy": round(rep["frac_easy"], 3),
-                    "frac_hard": round(rep["frac_hard"], 3),
-                    "speedup_easy": round(rep["speedup_easy"], 3),
-                    "speedup_hard": round(rep["speedup_hard"], 3),
-                    "speedup_all": round(rep["speedup_all"], 3),
+                row = _row(
+                    mode=f"depth={K}{tag}",
+                    lanes=deng.lane_width(args.lanes, len(subset)),
+                    guidance=args.guidance_scale if guided else 0.0,
+                    draft_depth=K,
+                    requests=len(subset),
+                    wall_s=round(wall, 2),
+                    req_per_s=round(len(subset) / wall, 3),
+                    draft_accept_rate=round(draft_accept_rate(results),
+                                            4),
                     # the easy row serves half the workload — not
                     # comparable to the sequential full-workload wall
-                    "serving_speedup": None if tag
+                    serving_speedup=None if tag
                     else round(seq_wall / wall, 3),
-                    "trajectory_mismatches": mismatches,
-                    "mean_completion_ticks": round(mean_ticks, 2),
-                    "deadline_hit_rate": hit,
-                }
+                    trajectory_mismatches=mismatches,
+                    mean_completion_ticks=round(mean_ticks, 2),
+                    deadline_hit_rate=hit,
+                    **_rep_cols(rep))
                 depth_rows.append(row)
                 rows.append(row)
 
-    print_table(f"serve_throughput ({args.model}, "
-                f"accept_mode={args.accept_mode}"
-                + (f", guidance={args.guidance_scale}" if guided else "")
-                + ")", rows)
     for row in rows[1:]:
         if row["mode"].startswith(("sched=", "depth=")):
             continue
@@ -435,16 +444,202 @@ def main() -> None:
         # the D=1 paired row specifically — with --devices 2,4 the first
         # lane row is a multi-device run and would conflate mesh scaling
         # with the one-decision-per-pair win
-        paired = next((r for r in rows[1:]
+        paired = next((r for r in rows
                        if r["devices"] == 1 and r["mode"].endswith(
-                           ",paired")), None)
+                           ",paired") and not r["mode"].startswith(
+                           "batch=1")), None)
         split_row = next(r for r in rows if r["mode"].endswith(",split"))
         if paired is not None:
             ratio = paired["req_per_s"] / max(split_row["req_per_s"],
                                               1e-9)
             print(f"paired vs split (cond+uncond as independent lanes): "
                   f"{ratio:.2f}x requests/s")
-    suffix = "_cfg" if guided else ""
+    return rows
+
+
+def run_decode(args, lm):
+    """LLM decode lanes: one engine, two request batches — speculative
+    (τ0 = --decode-tau0) and reject-always (τ0 = 0, exact greedy
+    decoding) — served at identical lane widths. The tracked win:
+    accept rate > 0 AND fewer total FLOPs than reject-always for the
+    same emitted tokens-per-request."""
+    lm_cfg, lm_params = lm
+    wl = DecodeWorkload(lm_cfg, lm_params,
+                        SpeCaConfig(tau0=args.decode_tau0),
+                        max_new_tokens=args.gen_len,
+                        max_seq_len=args.prompt_len + args.gen_len)
+    eng = SpeCaEngine(workloads={"decode": wl}, lanes=args.lanes)
+    warm = decode_requests(lm_cfg, 1, args.prompt_len,
+                           tau0=args.decode_tau0, offset=90_000)[0]
+    eng.warmup(warm.cond, lanes=min(args.lanes, args.requests),
+               workload="decode")
+
+    rows, flops = [], {}
+    for mode, tau0 in (("decode", args.decode_tau0),
+                       ("decode,reject", 0.0)):
+        reqs = decode_requests(lm_cfg, args.requests, args.prompt_len,
+                               tau0=tau0)
+        t0 = time.time()
+        results = eng.serve_batched(reqs, lanes=args.lanes)
+        wall = time.time() - t0
+        rep = allocation_report(results, wl.full_flops)
+        flops[mode] = sum(r.flops for r in results)
+        mean_ticks, _ = sched_stats(results)
+        rows.append(_row(
+            mode=mode, workload="decode",
+            lanes=eng.lane_width(args.lanes, len(reqs)),
+            requests=len(reqs),
+            wall_s=round(wall, 2),
+            req_per_s=round(len(reqs) / wall, 3),
+            tok_per_s=round(len(reqs) * args.gen_len / wall, 1),
+            draft_accept_rate=round(draft_accept_rate(results), 4),
+            mean_completion_ticks=round(mean_ticks, 2),
+            **_rep_cols(rep)))
+    spec_row = rows[0]
+    ratio = flops["decode,reject"] / max(flops["decode"], 1e-9)
+    print(f"decode: accept rate {spec_row['alpha_mean']}, "
+          f"{flops['decode'] / 1e9:.3f} GFLOPs vs "
+          f"{flops['decode,reject'] / 1e9:.3f} reject-always "
+          f"({ratio:.2f}x fewer FLOPs)")
+    return rows
+
+
+def run_mixed(args, model, lm):
+    """Diffusion + decode traffic interleaved through ONE engine (one
+    scheduler, per-workload sessions). One row per workload with that
+    side's accept rate; ``wall_s`` is the SHARED wall of the whole
+    mixed batch, so the per-row req/s reflect concurrent service."""
+    cfg, dcfg, params = model
+    lm_cfg, lm_params = lm
+    scfg = SpeCaConfig(taylor_order=2, max_draft=8, tau0=args.tau0,
+                       beta=0.9)
+    wl = DecodeWorkload(lm_cfg, lm_params,
+                        SpeCaConfig(tau0=args.decode_tau0),
+                        max_new_tokens=args.gen_len,
+                        max_seq_len=args.prompt_len + args.gen_len)
+    eng = SpeCaEngine(cfg, params, dcfg, scfg,
+                      workloads={"decode": wl}, lanes=args.lanes)
+    n = args.requests
+    dreqs = make_requests(cfg, n)
+    treqs = decode_requests(lm_cfg, n, args.prompt_len,
+                            tau0=args.decode_tau0, offset=1000)
+    # warm both per-tag slot programs at the widths the timed batch will
+    # use (same per-tag request counts → same _width_for result); the
+    # warm requests run truncated 2-step schedules — compilation depends
+    # on width and tag, not schedule length
+    k = min(args.lanes, n)
+    warm = [dataclasses.replace(r, request_id=-1 - i,
+                                policy=RequestPolicy(max_steps=2))
+            for i, r in enumerate(dreqs[:k])] \
+        + decode_requests(lm_cfg, k, args.prompt_len,
+                          tau0=args.decode_tau0, offset=91_000,
+                          max_steps=2)
+    eng.serve_batched(warm, lanes=args.lanes)
+
+    reqs = [r for pair in zip(dreqs, treqs) for r in pair]
+    t0 = time.time()
+    results = eng.serve_batched(reqs, lanes=args.lanes)
+    wall = time.time() - t0
+    n_tok = (dcfg.latent_size // cfg.patch_size) ** 2 \
+        * max(dcfg.num_frames, 1)
+    fwd_ref = {"diffusion": forward_flops(cfg, n_tok),
+               "decode": wl.full_flops}
+    rows = []
+    for tag in ("diffusion", "decode"):
+        rs = [r for r in results if r.workload == tag]
+        rep = allocation_report(rs, fwd_ref[tag])
+        mean_ticks, _ = sched_stats(rs)
+        rows.append(_row(
+            mode=f"mixed,{tag}", workload=tag,
+            lanes=eng.lane_width(args.lanes, len(rs)),
+            requests=len(rs),
+            wall_s=round(wall, 2),
+            req_per_s=round(len(rs) / wall, 3),
+            tok_per_s=round(len(rs) * args.gen_len / wall, 1)
+            if tag == "decode" else None,
+            draft_accept_rate=round(draft_accept_rate(rs), 4),
+            mean_completion_ticks=round(mean_ticks, 2),
+            **_rep_cols(rep)))
+    print(f"mixed: diffusion accept {rows[0]['alpha_mean']}, "
+          f"decode accept {rows[1]['alpha_mean']} — "
+          f"{len(results)} requests through one engine in {wall:.2f}s")
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--model", default="dit", choices=["dit", "flux"])
+    ap.add_argument("--requests", type=int, default=12)
+    ap.add_argument("--lanes", type=int, default=4)
+    ap.add_argument("--steps", type=int, default=30)
+    ap.add_argument("--tau0", type=float, default=0.4)
+    ap.add_argument("--accept-mode", default="per_sample",
+                    choices=["per_sample", "batch"])
+    ap.add_argument("--workload", default="diffusion",
+                    help="comma list of traffic kinds to serve: "
+                         "diffusion, decode (LLM self-speculative "
+                         "lanes, spec vs reject-always rows), mixed "
+                         "(both kinds through one engine)")
+    ap.add_argument("--lm-arch", default="mamba2-130m",
+                    help="registry arch of the decode-workload LM")
+    ap.add_argument("--decode-tau0", type=float, default=5.0,
+                    help="verification threshold of the decode rows "
+                         "(the reject-always baseline always runs τ0=0)")
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--gen-len", type=int, default=16,
+                    help="new tokens per decode request")
+    ap.add_argument("--guidance-scale", type=float, default=0.0,
+                    help=">0: classifier-free-guidance serving (paired "
+                         "cond/uncond lanes) plus a split baseline row "
+                         "serving the streams as independent requests")
+    ap.add_argument("--draft-depth", default="1",
+                    help="comma list of draft horizons, e.g. 1,3: adds a "
+                         "full-workload row and an easy-bucket row per "
+                         "depth K>0 beyond the base depth-1 rows")
+    ap.add_argument("--devices", default="1",
+                    help="comma list of lane-shard device counts, e.g. "
+                         "1,2,4 (needs that many visible devices)")
+    ap.add_argument("--scheduler", default="",
+                    help="comma list of admission schedulers to compare "
+                         "on a mixed-length deadline workload, e.g. "
+                         "fifo,sjf,edf (adds one row per scheduler)")
+    args = ap.parse_args()
+    wls = []
+    for w in args.workload.split(","):
+        w = w.strip()
+        if w and w not in wls:
+            wls.append(w)
+    unknown = set(wls) - {"diffusion", "decode", "mixed"}
+    if unknown or not wls:
+        ap.error(f"--workload must name diffusion/decode/mixed, got "
+                 f"{args.workload!r}")
+    guided = args.guidance_scale > 0
+
+    model = None
+    if "diffusion" in wls or "mixed" in wls:
+        cfg, dcfg, params = get_model(args.model)
+        dcfg = dataclasses.replace(dcfg, num_inference_steps=args.steps)
+        model = (cfg, dcfg, params)
+    lm = get_lm_model(args.lm_arch) \
+        if "decode" in wls or "mixed" in wls else None
+
+    rows = []
+    if "diffusion" in wls:
+        rows += run_diffusion(args, model)
+    if "decode" in wls:
+        rows += run_decode(args, lm)
+    if "mixed" in wls:
+        rows += run_mixed(args, model, lm)
+
+    print_table(f"serve_throughput ({args.model}, "
+                f"accept_mode={args.accept_mode}"
+                + (f", guidance={args.guidance_scale}" if guided else "")
+                + (f", workload={'+'.join(wls)}"
+                   if wls != ["diffusion"] else "")
+                + ")", rows)
+    suffix = "_cfg" if guided and "diffusion" in wls else ""
+    if wls != ["diffusion"]:
+        suffix += "".join(f"_{w}" for w in wls if w != "diffusion")
     path = write_result(f"serve_throughput_{args.model}{suffix}", rows)
     print(f"wrote {path}")
 

@@ -1,6 +1,19 @@
-"""LM-mode example: train a reduced assigned architecture and run
-prefill + decode with the same step functions the 256/512-chip dry-run
-lowers. Works for any --arch in the registry (dense/MoE/SSM/hybrid/audio).
+"""LM-mode example: train a reduced assigned architecture, run
+prefill + greedy decode with the same step functions the 256/512-chip
+dry-run lowers, then serve the SAME decode through the ``SpeCaEngine``
+request lifecycle (``submit() -> Ticket -> result``) as a
+self-speculative decode lane:
+
+  * at τ0 = 0 every drafted step is rejected, so the engine must emit
+    the greedy token sequence EXACTLY — asserted below;
+  * at ``--tau0`` > 0 the lane's TaylorSeer table forecasts the
+    verify-layer features across decode steps and accepted steps emit
+    their token from the forecast logits — the printed accept rate is
+    the fraction of tokens that skipped the full forward.
+
+Works for any --arch in the registry (dense/MoE/SSM/hybrid/audio);
+engine serving is skipped (with a note) for configs the decode workload
+gates out (audio codebooks, ring-buffer caches).
 
 Run:  PYTHONPATH=src python examples/llm_decode_demo.py --arch mamba2-130m
 """
@@ -10,10 +23,12 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
-from repro.configs import get_config, reduced
+from repro.configs import SpeCaConfig, get_config, reduced
 from repro.data import synthetic as syn
 from repro.layers import model as M
 from repro.optim.adamw import AdamWConfig
+from repro.serving import (DecodeWorkload, Request, RequestPolicy,
+                           SpeCaEngine)
 from repro.training import lm as T
 
 
@@ -23,6 +38,11 @@ def main() -> None:
     ap.add_argument("--steps", type=int, default=30)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen-len", type=int, default=16)
+    ap.add_argument("--tau0", type=float, default=5.0,
+                    help="verification threshold of the speculative "
+                         "serving pass (0 disables acceptance)")
+    ap.add_argument("--draft-depth", type=int, default=2,
+                    help="draft-chain length K of the speculative pass")
     args = ap.parse_args()
 
     cfg = reduced(get_config(args.arch))
@@ -76,7 +96,45 @@ def main() -> None:
             generated.append(int(tok[0, 0, 0]))
         else:
             generated.append(int(tok[0, 0]))
-    print(f"generated tokens: {generated}")
+    print(f"greedy tokens:          {generated}")
+
+    # --- the same decode as a SpeCa serving lane (API v2 lifecycle) ---
+    try:
+        wl0 = DecodeWorkload(cfg, params, SpeCaConfig(tau0=0.0),
+                             max_new_tokens=args.gen_len,
+                             max_seq_len=max_len)
+    except ValueError as e:
+        print(f"engine serving skipped for this config: {e}")
+        return
+    pol = RequestPolicy(workload="decode")
+    req = Request(request_id=0, cond={"tokens": prompt}, policy=pol)
+
+    engine = SpeCaEngine(workloads={"decode": wl0}, lanes=1)
+    ticket = engine.submit(req)
+    print(f"submitted ticket {ticket.ticket_id} "
+          f"(status {engine.status(ticket)!r})")
+    res = engine.result(ticket)
+    served = [int(t) for t in res.sample]
+    print(f"engine tokens (τ0=0):   {served}")
+    assert served == generated, \
+        "τ0=0 decode lanes must reproduce greedy decoding exactly"
+
+    wl = DecodeWorkload(cfg, params, SpeCaConfig(tau0=args.tau0),
+                        max_new_tokens=args.gen_len, max_seq_len=max_len)
+    spec = SpeCaEngine(workloads={"decode": wl}, lanes=1,
+                       max_draft_depth=max(args.draft_depth, 1))
+    t2 = spec.submit(Request(
+        request_id=1, cond={"tokens": prompt},
+        policy=RequestPolicy(workload="decode",
+                             draft_depth=max(args.draft_depth, 1))))
+    res2 = spec.result(t2)
+    toks = [int(t) for t in res2.sample]
+    print(f"engine tokens (τ0={args.tau0:g}): {toks}")
+    print(f"  accepted {res2.num_spec}/{args.gen_len} steps "
+          f"(accept rate {res2.alpha:.2f}, "
+          f"draft accept {res2.draft_accept_rate:.2f}, "
+          f"{res2.flops / 1e6:.1f} MFLOPs vs "
+          f"{res.flops / 1e6:.1f} reject-always)")
 
 
 if __name__ == "__main__":

@@ -88,6 +88,58 @@ def gamma(cfg: ModelConfig, tokens: int) -> float:
     return verify_flops(cfg, tokens) / forward_flops(cfg, tokens)
 
 
+def decode_block_flops(cfg: ModelConfig, kv_tokens: int) -> float:
+    """One block, ONE decode position attending over a kv_tokens cache.
+
+    ``kv_tokens`` is the static cache length of the decode lane — the
+    engine accounts the allocated attention window, not the data-
+    dependent filled prefix (per-step cost is then a constant, which is
+    what a per-tick accumulator needs)."""
+    f = 0.0
+    if cfg.has_attention and cfg.num_heads:
+        f += _attn_flops(cfg, 1, kv_tokens=kv_tokens)
+    f += _ffn_flops(cfg, 1)
+    f += _ssm_flops(cfg, 1)
+    return f
+
+
+def decode_glue_flops(cfg: ModelConfig) -> float:
+    """Embedding lookup, final norm and the LM head for one position."""
+    d = cfg.d_model
+    f = 2.0 * d
+    if cfg.vocab_size:
+        f += 2.0 * d * cfg.vocab_size
+    return f
+
+
+def decode_forward_flops(cfg: ModelConfig, kv_tokens: int) -> float:
+    """Full decode step: every layer + glue, one position."""
+    return cfg.num_layers * decode_block_flops(cfg, kv_tokens) \
+        + decode_glue_flops(cfg)
+
+
+def decode_spec_cache_flops(cfg: ModelConfig) -> float:
+    """Per-layer cost of the speculative cache write: K/V projections of
+    the forecast stream (attention archs) and/or the SSM mixer advance —
+    the part of a layer a speculative decode step cannot skip."""
+    d = cfg.d_model
+    f = 0.0
+    if cfg.has_attention and cfg.num_heads:
+        f += 2.0 * d * cfg.resolved_head_dim * 2 * cfg.num_kv_heads
+    if cfg.is_ssm or cfg.is_hybrid:
+        f += _ssm_flops(cfg, 1)
+    return f
+
+
+def decode_verify_flops(cfg: ModelConfig, kv_tokens: int) -> float:
+    """One speculative decode step: verify layer computed, every other
+    layer pays only its cache write, + glue + Taylor eval."""
+    taylor = 4.0 * cfg.num_layers * 2 * cfg.d_model
+    return decode_block_flops(cfg, kv_tokens) \
+        + (cfg.num_layers - 1) * decode_spec_cache_flops(cfg) \
+        + decode_glue_flops(cfg) + taylor
+
+
 def speedup_model(alpha: float, gamma_: float, overhead_ratio: float = 0.0
                   ) -> float:
     """Eq. (8) / Theorem G.3 lower bound."""

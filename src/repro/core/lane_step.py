@@ -12,6 +12,19 @@ scan bodies) and ``engine.py`` (``_build`` + ``_build_lane_step``) are
 collapsed into this module, so a semantics change (or bugfix) is a
 single-site edit.
 
+The loop itself is *workload-agnostic*: everything diffusion-specific —
+what the dynamic payload is (the latent ``x``), how it advances on a
+model output (the ``rf_euler_step`` sampler update), the
+timestep-indexed τ schedule and the verify-layer forward — lives behind
+the ``Workload`` adapter (``repro.core.workload``). ``build_workload_step``
+builds the generic step for any adapter; ``build_lane_step`` /
+``init_lane_state`` are the original diffusion entry points, now thin
+wrappers over a ``DiffusionWorkload`` instance (bitwise the same trace —
+the adapter hooks inline to exactly the pre-seam expressions). The
+``DecodeWorkload`` adapter drives the SAME loop for self-speculative LLM
+decoding: the payload is (input token, emitted-token buffer, KV/SSM
+caches), advance is argmax-emit + cache write, and τ_t is constant at τ0.
+
 One step, entirely inside the traced function:
 
   1. *Draft* (``lax.cond``, runs iff ANY lane is warm and under its draft
@@ -34,25 +47,32 @@ One step, entirely inside the traced function:
      output via a per-lane select.
 
 State layout (all device-side; the host never has to read any of it to
-decide the next dispatch):
+decide the next dispatch). Shared, workload-independent keys:
 
-  ``x``        [W, …]   current latents, one row per lane
   ``since``    [W] i32  consecutive accepted drafts since the last anchor
-  ``step``     [W] i32  the lane's denoising step index
+  ``step``     [W] i32  the lane's schedule step index
   ``active``   [W] bool lane occupancy (inactive lanes are frozen)
   ``tau0``     [W] f32  per-lane base verification threshold (filled from
                 ``SpeCaConfig.tau0`` or the request's ``RequestPolicy``)
-  ``cond``     {k: [W, …]} conditioning values, one row per lane
   ``diffs``    [m+1, L, 2, W, T, D] TaylorSeer difference table
   ``n_anchors``/``anchor_step``/``gap`` [W] per-lane anchor metadata
                 (``taylor.init_state(lanes=W)``)
-  ``gscale``   [W] f32  per-lane guidance scale — pair modes only
-  ``paired``   [W] bool per-lane pair-slot mask — pair modes only
   ``draft_k``  [W] i32  per-lane draft horizon K (requests carry their own
                 depth via ``RequestPolicy.draft_depth``; evaluated
                 per-lane inside the traced chain like ``tau0``)
   ``max_step`` [W] i32  the lane's schedule length — a drafted chain never
-                advances a lane past its final denoising step
+                advances a lane past its final step
+
+Per-workload payload keys (``Workload.dyn_keys`` — threaded through the
+step, snapshotted by draft-K chains and restored by rollback):
+
+  diffusion: ``x`` [W, …] latents (lane axis 0), plus ``cond``
+             {k: [W, …]} conditioning rows and — pair modes only —
+             ``gscale`` [W] f32 / ``paired`` [W] bool
+  decode:    ``tok`` [W, 1] i32 current input token, ``tokens`` [W, S]
+             i32 emitted-token buffer, ``k``/``v`` [L, W, S, kv, hd] and
+             ``ssm_state``/``conv_state`` [L, W, …] caches (lane axis 1),
+             plus the static ``pos0`` [W] i32 prompt length
 
 Deep speculation (``max_draft_depth`` > 1) replaces the single
 draft-verify round with a drafted CHAIN of up to ``K = max_draft_depth``
@@ -63,18 +83,20 @@ positions per tick (speculative-decoding style γ>1 drafting):
      (``kernels.ops.taylor_predict_chain_lanes``).
   2. Position by position, lanes still alive in the chain verify their
      forecast exactly as the depth-1 step does (same masked verify-layer
-     forward, same τ_t schedule at the position's step) and the latent
+     forward, same τ_t schedule at the position's step) and the payload
      advances speculatively; a lane leaves the chain the first time a
      position is rejected (→ served by the closing full forward) or its
      per-lane budget ``min(draft_k, max_step − step)`` runs out (→ stops
      clean at its accepted frontier).
   3. The accepted steps therefore always form a PREFIX of the drafted
      chain — position j only runs for lanes that accepted 0..j−1.
-  4. *Rollback*: latents advanced blindly during the chain are restored
-     per lane to the snapshot at its accepted-prefix length through the
-     exact-copy rollback kernel (``kernels.ops.lane_rollback``); ONE
-     closing full forward then serves every rejected lane at its
-     rolled-back step and refreshes only those lanes' table slices.
+  4. *Rollback*: payload leaves advanced blindly during the chain are
+     restored per lane to the snapshot at its accepted-prefix length
+     through the exact-copy rollback kernel
+     (``kernels.ops.lane_rollback``; integer leaves — decode token
+     buffers — roll back through an equivalent jnp gather); ONE closing
+     full forward then serves every rejected lane at its rolled-back
+     step and refreshes only those lanes' table slices.
 
 With every lane at ``draft_k = 1`` the chain is the legacy step: position
 0 is the depth-1 draft/verify math term for term, and the closing full is
@@ -89,7 +111,9 @@ feature streams are forecast independently). The verify residual is
 computed on the guided combination ``u + s·(c − u)`` at the verify layer
 and a single accept/reject decision drives both lanes, so the pair's
 anchors can never de-synchronize — see ``docs/cfg.md`` for why one
-decision per pair is required for anchor coherence.
+decision per pair is required for anchor coherence. Pairing exists only
+for workloads that declare ``supports_pairing`` (diffusion); guided
+decode requests are rejected at policy resolution.
 
 ``guidance`` selects among three step programs:
 
@@ -125,7 +149,7 @@ their depth-1 [W] shapes so every existing consumer reads them unchanged.
 Depth-aware counters: ``n_spec`` i32 (accepted drafted steps this tick),
 ``n_drafted`` i32 (drafted positions this tick — the per-drafted-step
 accounting denominator), ``advanced`` i32 (``n_spec`` + served-by-full —
-total denoising steps the lane moved this tick). Chain detail (shape
+total schedule steps the lane moved this tick). Chain detail (shape
 [K, W]): ``chain_attempted``/``chain_accepted`` bool,
 ``chain_err``/``chain_tau`` f32. In a paired slot every flag is
 pair-equal: both lanes report the pair's single decision and the pair's
@@ -141,9 +165,7 @@ import jax.numpy as jnp
 from repro.configs.base import DiffusionConfig, ModelConfig, SpeCaConfig
 from repro.core import taylor
 from repro.core.verify import relative_error, threshold_schedule
-from repro.diffusion.pipeline import (guided_output, latent_shape,
-                                      make_stepper, model_inputs)
-from repro.layers import model as M
+from repro.diffusion.pipeline import guided_output
 
 ACCEPT_MODES = ("batch", "per_sample")
 VERIFY_BACKENDS = ("fused", "jnp")
@@ -184,16 +206,19 @@ def _check_guidance(guidance: Union[bool, str], lanes: int) -> None:
                          "must be even")
 
 
-def init_lane_state(cfg: ModelConfig, dcfg: DiffusionConfig,
-                    scfg: SpeCaConfig, lanes: int,
-                    cond_template: Dict[str, Any], *,
-                    x: Optional[jnp.ndarray] = None,
-                    active: bool = False,
-                    guidance: Union[bool, str] = False,
-                    mesh: Optional[Any] = None) -> Dict[str, Any]:
-    """Fresh lane-batch state. ``cond_template`` supplies per-key shapes
-    (leading axis is replaced by ``lanes``); pass ``x`` to start from a
-    concrete latent (the sampler) instead of zeros (the scheduler).
+def init_workload_state(wl, lanes: int, cond_template: Dict[str, Any], *,
+                        x: Optional[jnp.ndarray] = None,
+                        active: bool = False,
+                        guidance: Union[bool, str] = False,
+                        mesh: Optional[Any] = None) -> Dict[str, Any]:
+    """Fresh lane-batch state for any ``Workload`` adapter.
+
+    The shared keys (``since``/``step``/``active``/``tau0``/``draft_k``/
+    ``max_step`` and the TaylorSeer table) are laid out identically for
+    every workload; the adapter contributes its dynamic payload through
+    ``wl.init_payload`` and decides whether per-lane conditioning rides
+    in state (``wl.cond_in_state`` — diffusion) or is consumed host-side
+    at fill time (decode prompts → prefill).
 
     ``tau0`` initialises to ``SpeCaConfig.tau0`` for every lane; the
     serving engine overwrites a lane's entry at fill time when its
@@ -205,40 +230,45 @@ def init_lane_state(cfg: ModelConfig, dcfg: DiffusionConfig,
     ``2k``/``2k+1`` form the cond/uncond pair of one request.
     ``guidance="mixed"`` initialises ``paired`` all-False instead: pair
     slots switch between guided-pair and independent-lane semantics as
-    the engine fills them.
+    the engine fills them. Pair modes require ``wl.supports_pairing``.
 
     With ``mesh`` every lane-indexed array is placed with its
     ``NamedSharding`` from the lane-axis rules in
-    ``repro.sharding.specs`` — the difference table and all per-lane
-    vectors shard their lane axis over the mesh's ``'data'`` axis, so a
-    D-device mesh holds 1/D of the table per device. ``lanes`` must then
-    be divisible by the lane-shard count — and in any pair-capable mode
-    by ``2 × lane_shard_count`` so a pair slot never straddles a shard
-    boundary (the guided combination is a cross-lane op inside the
-    pair; keeping pairs shard-local keeps it communication-free).
+    ``repro.sharding.specs`` — the difference table, decode caches and
+    all per-lane vectors shard their lane axis over the mesh's ``'data'``
+    axis, so a D-device mesh holds 1/D of the table per device. ``lanes``
+    must then be divisible by the lane-shard count — and in any
+    pair-capable mode by ``2 × lane_shard_count`` so a pair slot never
+    straddles a shard boundary (the guided combination is a cross-lane op
+    inside the pair; keeping pairs shard-local keeps it
+    communication-free).
     """
     W = lanes
     _check_guidance(guidance, W)
     pairing = bool(guidance)
-    feat_shape = taylor.feature_shape_for(cfg.num_layers, W,
-                                          num_tokens(cfg, dcfg), cfg.d_model)
-    tstate = taylor.init_state(scfg.taylor_order, feat_shape,
-                               table_dtype(cfg, scfg), lanes=W)
-    cond = {k: jnp.broadcast_to(jnp.asarray(v), (W,) + jnp.shape(v)[1:])
-            for k, v in cond_template.items()}
-    if x is None:
-        x = jnp.zeros(latent_shape(cfg, dcfg, W), jnp.float32)
+    if pairing and not wl.supports_pairing:
+        raise ValueError(f"workload {wl.tag!r} does not support guided "
+                         "lane pairs")
+    feat_shape = taylor.feature_shape_for(wl.cfg.num_layers, W,
+                                          wl.num_tokens, wl.cfg.d_model)
+    tstate = taylor.init_state(wl.scfg.taylor_order, feat_shape,
+                               wl.table_dtype, lanes=W)
+    if wl.cond_in_state:
+        cond = {k: jnp.broadcast_to(jnp.asarray(v), (W,) + jnp.shape(v)[1:])
+                for k, v in cond_template.items()}
+    else:
+        cond = {}
     state = {
-        "x": x,
         "since": jnp.zeros((W,), jnp.int32),
         "step": jnp.zeros((W,), jnp.int32),
         "active": jnp.full((W,), bool(active)),
-        "tau0": jnp.full((W,), float(scfg.tau0), jnp.float32),
+        "tau0": jnp.full((W,), float(wl.scfg.tau0), jnp.float32),
         # per-lane draft horizon (RequestPolicy.draft_depth at fill time)
         # and schedule length — both read only by depth-K chain steps
         "draft_k": jnp.ones((W,), jnp.int32),
-        "max_step": jnp.full((W,), dcfg.num_inference_steps, jnp.int32),
+        "max_step": jnp.full((W,), wl.num_steps, jnp.int32),
         "cond": cond,
+        **wl.init_payload(W, x=x),
         **tstate,
     }
     if pairing:
@@ -257,37 +287,53 @@ def init_lane_state(cfg: ModelConfig, dcfg: DiffusionConfig,
     return state
 
 
-def build_lane_step(cfg: ModelConfig, params: Dict[str, Any],
-                    dcfg: DiffusionConfig, scfg: SpeCaConfig, *,
-                    lanes: int, draft_mode: str = "taylor",
-                    accept_mode: str = "per_sample",
-                    verify_backend: str = "jnp",
-                    use_flash: bool = False,
+def init_lane_state(cfg: ModelConfig, dcfg: DiffusionConfig,
+                    scfg: SpeCaConfig, lanes: int,
+                    cond_template: Dict[str, Any], *,
+                    x: Optional[jnp.ndarray] = None,
+                    active: bool = False,
                     guidance: Union[bool, str] = False,
-                    max_draft_depth: int = 1,
-                    mesh: Optional[Any] = None
-                    ) -> Callable[[Dict[str, Any]],
-                                  Tuple[Dict[str, Any], Dict[str, Any]]]:
-    """Build the traced lane step: ``state -> (state, flags)``.
+                    mesh: Optional[Any] = None) -> Dict[str, Any]:
+    """Fresh DIFFUSION lane-batch state (the original entry point —
+    ``init_workload_state`` over a ``DiffusionWorkload``).
+    ``cond_template`` supplies per-key shapes (leading axis is replaced
+    by ``lanes``); pass ``x`` to start from a concrete latent (the
+    sampler) instead of zeros (the scheduler)."""
+    from repro.core.workload import DiffusionWorkload
+    wl = DiffusionWorkload(cfg, params=None, dcfg=dcfg, scfg=scfg)
+    return init_workload_state(wl, lanes, cond_template, x=x,
+                               active=active, guidance=guidance, mesh=mesh)
+
+
+def build_workload_step(wl, *, lanes: int, draft_mode: str = "taylor",
+                        accept_mode: str = "per_sample",
+                        verify_backend: str = "jnp",
+                        guidance: Union[bool, str] = False,
+                        max_draft_depth: int = 1,
+                        mesh: Optional[Any] = None
+                        ) -> Callable[[Dict[str, Any]],
+                                      Tuple[Dict[str, Any], Dict[str, Any]]]:
+    """Build the traced lane step for a ``Workload``: ``state -> (state,
+    flags)``.
 
     Not jitted here — the sampler scans it inside one XLA program, the
-    engine jits it per lane width.
+    engine jits it per (workload, lane width).
 
     ``guidance`` selects the step program (see the module docstring):
     ``False`` is plain per-lane serving, ``True`` forces every pair slot
-    guided (state from ``init_lane_state(..., guidance=True)``), and
+    guided (state from ``init_workload_state(..., guidance=True)``), and
     ``"mixed"`` reads the per-lane ``paired`` mask so guided pairs and
-    independent unguided lanes share one batch. In the pair modes lanes
-    ``2k``/``2k+1`` form slot k: where paired, both streams draft
-    through their own tables in the same dispatch, verification compares
-    the *guided* residual ``u + s·(c − u)`` at the verify layer against
-    the pair's τ (one decision per pair — ``kernels.ops.
-    verify_accept_mixed``), and the latent advances on the guided model
-    output, identically for both lanes; a rejected pair's full forward
-    refreshes BOTH lanes' table slices, so cond and uncond anchors stay
-    in lock-step by construction. Where unpaired, each lane drafts,
-    verifies and advances on its own stream exactly as in the plain
-    program.
+    independent unguided lanes share one batch. Pair modes require
+    ``wl.supports_pairing``. In the pair modes lanes ``2k``/``2k+1``
+    form slot k: where paired, both streams draft through their own
+    tables in the same dispatch, verification compares the *guided*
+    residual ``u + s·(c − u)`` at the verify layer against the pair's τ
+    (one decision per pair — ``kernels.ops.verify_accept_mixed``), and
+    the latent advances on the guided model output, identically for both
+    lanes; a rejected pair's full forward refreshes BOTH lanes' table
+    slices, so cond and uncond anchors stay in lock-step by
+    construction. Where unpaired, each lane drafts, verifies and
+    advances on its own stream exactly as in the plain program.
 
     ``mesh`` shards the lane axis over the mesh's ``'data'`` axis: the
     backbone, threshold schedule and lane selects partition natively
@@ -312,6 +358,7 @@ def build_lane_step(cfg: ModelConfig, params: Dict[str, Any],
     program — the exact legacy trace, so the default is bit-for-bit the
     PR-5 engine.
     """
+    scfg = wl.scfg
     if accept_mode not in ACCEPT_MODES:
         raise ValueError(f"unknown accept_mode {accept_mode!r}")
     if verify_backend not in VERIFY_BACKENDS:
@@ -322,14 +369,14 @@ def build_lane_step(cfg: ModelConfig, params: Dict[str, Any],
     if scfg.error_metric != "rel_l2":
         verify_backend = "jnp"     # the fused kernel implements eq. 4 only
     _check_guidance(guidance, lanes)
-    stepper = make_stepper(dcfg)
+    if bool(guidance) and not wl.supports_pairing:
+        raise ValueError(f"workload {wl.tag!r} does not support guided "
+                         "lane pairs")
     W = lanes
     NP = W // 2                    # number of pair slots (pair modes)
     pairing = bool(guidance) and NP > 0
-    S = stepper.num_steps
-    vl = verify_layer(cfg, scfg)
-    cmask = jnp.arange(cfg.num_layers) == vl
-    x_shape = latent_shape(cfg, dcfg, W)
+    S = wl.num_steps
+    vl = wl.verify_layer
 
     def pair_head(v):
         """[W, …] -> [NP, 2, …]: the pair-slot fold of the first 2·NP
@@ -350,6 +397,16 @@ def build_lane_step(cfg: ModelConfig, params: Dict[str, Any],
         """Per-lane select between pair-slot and per-lane semantics."""
         pm = paired.reshape((W,) + (1,) * (lane_val.ndim - 1))
         return jnp.where(pm, pair_val, lane_val)
+
+    def pair_combine(out, gscale, paired):
+        """Guided pair combine of a (bare-array) model output: a paired
+        slot advances on ``u + s·(c − u)``, identical for both lanes."""
+        h = pair_head(out)
+        gs_p = pair_head(gscale)[:, 0]
+        g = guided_output(h[:, 0], h[:, 1], gs_p)
+        gb = with_tail(jnp.broadcast_to(g[:, None],
+                                        (NP, 2) + g.shape[1:]), out)
+        return pair_select(paired, gb, out)
 
     def verify(pred_vl, real_vl, tau):
         """(err [W], ok [W]) — identical math on every execution path."""
@@ -405,13 +462,13 @@ def build_lane_step(cfg: ModelConfig, params: Dict[str, Any],
 
     def step(state: Dict[str, Any]
              ) -> Tuple[Dict[str, Any], Dict[str, Any]]:
-        x, since, s, active = (state["x"], state["since"], state["step"],
-                               state["active"])
+        dyn = {k: state[k] for k in wl.dyn_keys}
+        since, s, active = state["since"], state["step"], state["active"]
         cond = state["cond"]
         tstate = {k: state[k] for k in
                   ("diffs", "n_anchors", "anchor_step", "gap")}
         s_eff = jnp.minimum(s, S - 1)
-        t_model = stepper.t_model[s_eff]                          # [W]
+        ctx = wl.step_context(state, s_eff)                       # [W]
         warm = tstate["n_anchors"] > scfg.taylor_order
         want = active & warm & (since < scfg.max_draft)
         if pairing:
@@ -423,20 +480,14 @@ def build_lane_step(cfg: ModelConfig, params: Dict[str, Any],
             pw = with_tail(jnp.broadcast_to(both[:, None], (NP, 2)), want)
             want = jnp.where(state["paired"], pw, want)
         # per-lane τ_t = τ0·β^((T−t)/T): every request carries its own
-        # base threshold (state["tau0"]) at its own denoising step
-        tau = threshold_schedule(stepper.t_frac[s_eff], state["tau0"],
+        # base threshold (state["tau0"]) at its own schedule step
+        tau = threshold_schedule(wl.t_frac(s_eff), state["tau0"],
                                  scfg.beta)                       # [W]
 
-        def attempt(x):
+        def attempt(dyn):
             preds = taylor.predict_lanes(tstate, s_eff, mode=draft_mode,
                                          mesh=mesh)
-            inputs = model_inputs(cfg, x, t_model, cond)
-            out, extras = M.dit_forward(cfg, params, inputs,
-                                        branch_preds=preds,
-                                        compute_mask=cmask,
-                                        collect_branches=True,
-                                        use_flash=use_flash)
-            real_vl = extras["branches"][vl][0] + extras["branches"][vl][1]
+            out, real_vl = wl.spec_forward(dyn, cond, ctx, preds)
             pred_vl = preds[vl][0] + preds[vl][1]
             if pairing:
                 err, ok = verify_mixed(pred_vl, real_vl, tau,
@@ -446,15 +497,14 @@ def build_lane_step(cfg: ModelConfig, params: Dict[str, Any],
             # NaN marks "did not draft": it cannot poison downstream
             # means/percentiles the way the old inf sentinel did, and it
             # still fails every `err <= tau` comparison.
-            return (out.astype(jnp.float32),
-                    jnp.where(want, err, jnp.nan), ok & want)
+            return out, jnp.where(want, err, jnp.nan), ok & want
 
-        def skip(x):
-            return (jnp.zeros(x_shape, jnp.float32),
+        def skip(dyn):
+            return (wl.zero_out(W),
                     jnp.full((W,), jnp.nan, jnp.float32),
                     jnp.zeros((W,), bool))
 
-        out_spec, err, ok = jax.lax.cond(jnp.any(want), attempt, skip, x)
+        out_spec, err, ok = jax.lax.cond(jnp.any(want), attempt, skip, dyn)
         if accept_mode == "batch":
             # parity mode: every drafting lane must pass or all reject
             accept = want & jnp.all(ok | ~want)
@@ -463,41 +513,32 @@ def build_lane_step(cfg: ModelConfig, params: Dict[str, Any],
         need_full = jnp.any(active & ~accept)
 
         def do_full(opers):
-            x, tstate = opers
-            inputs = model_inputs(cfg, x, t_model, cond)
-            out, extras = M.dit_forward(cfg, params, inputs,
-                                        collect_branches=True,
-                                        use_flash=use_flash)
-            tstate = taylor.update_lanes(tstate, extras["branches"],
+            dyn, tstate = opers
+            out, branches = wl.full_forward(dyn, cond, ctx)
+            tstate = taylor.update_lanes(tstate, branches,
                                          s_eff, active & ~accept,
                                          mesh=mesh)
-            return out.astype(jnp.float32), tstate
+            return out, tstate
 
         def keep(opers):
-            x, tstate = opers
-            return jnp.zeros(x_shape, jnp.float32), tstate
+            dyn, tstate = opers
+            return wl.zero_out(W), tstate
 
         out_full, tstate = jax.lax.cond(need_full, do_full, keep,
-                                        (x, tstate))
-        sel = accept.reshape((W,) + (1,) * (x.ndim - 1))
-        out = jnp.where(sel, out_spec, out_full)
+                                        (dyn, tstate))
+        out = wl.select_out(accept, out_spec, out_full)
         if pairing:
             # a paired slot's latent advances on the guided model output;
             # both its lanes receive the identical value (x stays
             # pair-equal). Unpaired lanes advance on their own output.
-            h = pair_head(out)
-            gs_p = pair_head(state["gscale"])[:, 0]
-            g = guided_output(h[:, 0], h[:, 1], gs_p)
-            gb = with_tail(jnp.broadcast_to(g[:, None],
-                                            (NP, 2) + g.shape[1:]), out)
-            out = pair_select(state["paired"], gb, out)
-        x_next = stepper.advance(x, out, s_eff)
-        amask = active.reshape(sel.shape)
-        x = jnp.where(amask, x_next, x)
+            out = pair_combine(out, state["gscale"], state["paired"])
+        dyn_next = wl.advance(dyn, out, ctx, s_eff)
+        dyn = wl.select_dyn(active, dyn_next, dyn)
         since = jnp.where(accept, since + 1, jnp.where(active, 0, since))
         s = s + active.astype(jnp.int32)
         new_state = dict(state)
-        new_state.update(x=x, since=since, step=s, active=active, **tstate)
+        new_state.update(since=since, step=s, active=active,
+                         **dyn, **tstate)
         full = active & ~accept
         flags = {"attempted": want, "ok": ok, "accepted": accept,
                  "full": full, "err": err, "tau": tau,
@@ -516,8 +557,8 @@ def build_lane_step(cfg: ModelConfig, params: Dict[str, Any],
 
     def chain_step(state: Dict[str, Any]
                    ) -> Tuple[Dict[str, Any], Dict[str, Any]]:
-        x, since, s, active = (state["x"], state["since"], state["step"],
-                               state["active"])
+        dyn = {k: state[k] for k in wl.dyn_keys}
+        since, s, active = state["since"], state["step"], state["active"]
         cond = state["cond"]
         tstate = {k: state[k] for k in
                   ("diffs", "n_anchors", "anchor_step", "gap")}
@@ -534,12 +575,12 @@ def build_lane_step(cfg: ModelConfig, params: Dict[str, Any],
         stop_full = jnp.zeros((W,), bool)
         n_acc = jnp.zeros((W,), jnp.int32)
         n_drafted = jnp.zeros((W,), jnp.int32)
-        snaps = [x]
+        snaps = [dyn]
         c_att, c_acc, c_err, c_tau = [], [], [], []
         ok0 = None
         for j in range(K):
             s_eff = jnp.minimum(s, S - 1)
-            t_model = stepper.t_model[s_eff]
+            ctx = wl.step_context(state, s_eff)
             budget = (draft_k > j) & (s < max_step)
             want = alive & budget & warm & (since < scfg.max_draft)
             if pairing:
@@ -548,20 +589,12 @@ def build_lane_step(cfg: ModelConfig, params: Dict[str, Any],
                 pw = with_tail(jnp.broadcast_to(both[:, None], (NP, 2)),
                                want)
                 want = jnp.where(state["paired"], pw, want)
-            tau = threshold_schedule(stepper.t_frac[s_eff], state["tau0"],
+            tau = threshold_schedule(wl.t_frac(s_eff), state["tau0"],
                                      scfg.beta)
             preds = preds_chain[j]
 
-            def attempt(x, want=want, tau=tau, t_model=t_model,
-                        preds=preds):
-                inputs = model_inputs(cfg, x, t_model, cond)
-                out, extras = M.dit_forward(cfg, params, inputs,
-                                            branch_preds=preds,
-                                            compute_mask=cmask,
-                                            collect_branches=True,
-                                            use_flash=use_flash)
-                real_vl = (extras["branches"][vl][0]
-                           + extras["branches"][vl][1])
+            def attempt(dyn, want=want, tau=tau, ctx=ctx, preds=preds):
+                out, real_vl = wl.spec_forward(dyn, cond, ctx, preds)
                 pred_vl = preds[vl][0] + preds[vl][1]
                 if pairing:
                     err, ok = verify_mixed(pred_vl, real_vl, tau,
@@ -569,16 +602,15 @@ def build_lane_step(cfg: ModelConfig, params: Dict[str, Any],
                                            state["paired"])
                 else:
                     err, ok = verify(pred_vl, real_vl, tau)
-                return (out.astype(jnp.float32),
-                        jnp.where(want, err, jnp.nan), ok & want)
+                return out, jnp.where(want, err, jnp.nan), ok & want
 
-            def skip(x):
-                return (jnp.zeros(x_shape, jnp.float32),
+            def skip(dyn):
+                return (wl.zero_out(W),
                         jnp.full((W,), jnp.nan, jnp.float32),
                         jnp.zeros((W,), bool))
 
             out_spec, err, ok = jax.lax.cond(jnp.any(want), attempt, skip,
-                                             x)
+                                             dyn)
             if accept_mode == "batch":
                 acc = want & jnp.all(ok | ~want)
             else:
@@ -590,19 +622,13 @@ def build_lane_step(cfg: ModelConfig, params: Dict[str, Any],
             stop_full = stop_full | (alive & budget & ~acc)
             out = out_spec
             if pairing:
-                h = pair_head(out)
-                gs_p = pair_head(state["gscale"])[:, 0]
-                g = guided_output(h[:, 0], h[:, 1], gs_p)
-                gb = with_tail(jnp.broadcast_to(g[:, None],
-                                                (NP, 2) + g.shape[1:]),
-                               out)
-                out = pair_select(state["paired"], gb, out)
+                out = pair_combine(out, state["gscale"], state["paired"])
             # blind speculative advance: EVERY row steps on the drafted
             # output (rows are sample-independent, so garbage rows of
             # stopped lanes perturb nothing); the rollback below
             # restores each lane to its accepted-prefix snapshot
-            x = stepper.advance(x, out, s_eff)
-            snaps.append(x)
+            dyn = wl.advance(dyn, out, ctx, s_eff)
+            snaps.append(dyn)
             since = jnp.where(acc, since + 1, since)
             s = s + acc.astype(jnp.int32)
             n_acc = n_acc + acc.astype(jnp.int32)
@@ -616,45 +642,38 @@ def build_lane_step(cfg: ModelConfig, params: Dict[str, Any],
             c_tau.append(tau)
         # rollback: per-lane exact-copy restore to the snapshot at the
         # lane's accepted-prefix length (inactive/rejected-at-0 lanes get
-        # snapshot 0 — their pre-tick latent, bit-exactly)
-        chain = jnp.stack(snaps)
-        x = taylor.lane_rollback(chain, n_acc, lane_axis=0, mesh=mesh)
+        # snapshot 0 — their pre-tick payload, bit-exactly)
+        chain = {k: jnp.stack([sn[k] for sn in snaps]) for k in wl.dyn_keys}
+        dyn = wl.rollback(chain, n_acc, mesh=mesh)
         # ONE closing full forward serves every rejected lane at its
         # rolled-back step and refreshes only those lanes' table slices
         s_eff = jnp.minimum(s, S - 1)
-        t_model = stepper.t_model[s_eff]
+        ctx = wl.step_context(state, s_eff)
         need_full = jnp.any(stop_full)
 
         def do_full(opers):
-            x, tstate = opers
-            inputs = model_inputs(cfg, x, t_model, cond)
-            out, extras = M.dit_forward(cfg, params, inputs,
-                                        collect_branches=True,
-                                        use_flash=use_flash)
-            tstate = taylor.update_lanes(tstate, extras["branches"],
+            dyn, tstate = opers
+            out, branches = wl.full_forward(dyn, cond, ctx)
+            tstate = taylor.update_lanes(tstate, branches,
                                          s_eff, stop_full, mesh=mesh)
-            return out.astype(jnp.float32), tstate
+            return out, tstate
 
         def keep(opers):
-            x, tstate = opers
-            return jnp.zeros(x_shape, jnp.float32), tstate
+            dyn, tstate = opers
+            return wl.zero_out(W), tstate
 
         out_full, tstate = jax.lax.cond(need_full, do_full, keep,
-                                        (x, tstate))
+                                        (dyn, tstate))
         if pairing:
-            h = pair_head(out_full)
-            gs_p = pair_head(state["gscale"])[:, 0]
-            g = guided_output(h[:, 0], h[:, 1], gs_p)
-            gb = with_tail(jnp.broadcast_to(g[:, None],
-                                            (NP, 2) + g.shape[1:]),
-                           out_full)
-            out_full = pair_select(state["paired"], gb, out_full)
-        sel = stop_full.reshape((W,) + (1,) * (x.ndim - 1))
-        x = jnp.where(sel, stepper.advance(x, out_full, s_eff), x)
+            out_full = pair_combine(out_full, state["gscale"],
+                                    state["paired"])
+        dyn_f = wl.advance(dyn, out_full, ctx, s_eff)
+        dyn = wl.select_dyn(stop_full, dyn_f, dyn)
         since = jnp.where(stop_full, 0, since)
         s = s + stop_full.astype(jnp.int32)
         new_state = dict(state)
-        new_state.update(x=x, since=since, step=s, active=active, **tstate)
+        new_state.update(since=since, step=s, active=active,
+                         **dyn, **tstate)
         flags = {"attempted": c_att[0], "ok": ok0, "accepted": c_acc[0],
                  "full": stop_full, "err": c_err[0], "tau": c_tau[0],
                  "n_spec": n_acc, "n_drafted": n_drafted,
@@ -666,3 +685,29 @@ def build_lane_step(cfg: ModelConfig, params: Dict[str, Any],
         return new_state, flags
 
     return chain_step
+
+
+def build_lane_step(cfg: ModelConfig, params: Dict[str, Any],
+                    dcfg: DiffusionConfig, scfg: SpeCaConfig, *,
+                    lanes: int, draft_mode: str = "taylor",
+                    accept_mode: str = "per_sample",
+                    verify_backend: str = "jnp",
+                    use_flash: bool = False,
+                    guidance: Union[bool, str] = False,
+                    max_draft_depth: int = 1,
+                    mesh: Optional[Any] = None
+                    ) -> Callable[[Dict[str, Any]],
+                                  Tuple[Dict[str, Any], Dict[str, Any]]]:
+    """Build the traced DIFFUSION lane step (the original entry point —
+    ``build_workload_step`` over a ``DiffusionWorkload``): ``state ->
+    (state, flags)``. See ``build_workload_step`` for the knobs; the
+    adapter hooks inline to exactly the pre-seam expressions, so the
+    built program is the same trace as before the workload seam."""
+    from repro.core.workload import DiffusionWorkload
+    wl = DiffusionWorkload(cfg, params=params, dcfg=dcfg, scfg=scfg,
+                           use_flash=use_flash)
+    return build_workload_step(wl, lanes=lanes, draft_mode=draft_mode,
+                               accept_mode=accept_mode,
+                               verify_backend=verify_backend,
+                               guidance=guidance,
+                               max_draft_depth=max_draft_depth, mesh=mesh)

@@ -132,6 +132,43 @@ def decode_attention(q: jnp.ndarray, k_cache: jnp.ndarray,
     return attention_core(q, k, v, bias)
 
 
+def decode_attention_lanes(q: jnp.ndarray, k_cache: jnp.ndarray,
+                           v_cache: jnp.ndarray, cur_pos,
+                           window) -> jnp.ndarray:
+    """One-token decode with a PER-SAMPLE position vector.
+
+    q [B,1,H,hd] vs cache [B,S,KV,hd]; ``cur_pos`` [B] is each sample's
+    own query position (serving lanes sit at different prompt lengths /
+    accepted-token counts). Mask semantics are exactly ``_mask_bias``
+    evaluated per sample — at B=1 this is value-identical to
+    ``decode_attention``.
+    """
+    n_rep = q.shape[2] // k_cache.shape[2]
+    k = repeat_kv(k_cache, n_rep)
+    v = repeat_kv(v_cache, n_rep)
+    sk = k.shape[1]
+    k_pos = jnp.arange(sk, dtype=jnp.int32)
+    diff = jnp.asarray(cur_pos, jnp.int32)[:, None] - k_pos[None, :]  # [B,Sk]
+    ok = diff >= 0
+    windowed = jnp.logical_and(ok, diff < jnp.maximum(window, 1))
+    ok = jnp.where(window > 0, windowed, ok)
+    bias = jnp.where(ok, 0.0, NEG_INF).astype(jnp.float32)[:, None, None]
+    return attention_core(q, k, v, bias)                  # bias [B,1,1,Sk]
+
+
+def update_kv_cache_lanes(k_cache: jnp.ndarray, v_cache: jnp.ndarray,
+                          k_new: jnp.ndarray, v_new: jnp.ndarray, pos
+                          ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Insert one-token K/V ([B, 1, KV, hd]) at each sample's OWN
+    position ``pos`` [B] (per-lane scatter; ``update_kv_cache`` writes
+    one shared position)."""
+    b = jnp.arange(k_cache.shape[0])
+    pos = jnp.asarray(pos, jnp.int32)
+    k_cache = k_cache.at[b, pos].set(k_new[:, 0].astype(k_cache.dtype))
+    v_cache = v_cache.at[b, pos].set(v_new[:, 0].astype(v_cache.dtype))
+    return k_cache, v_cache
+
+
 def decode_attention_ring(q: jnp.ndarray, k_cache: jnp.ndarray,
                           v_cache: jnp.ndarray, cur_pos) -> jnp.ndarray:
     """Ring-buffer decode for fully-windowed attention (§Perf residuals).

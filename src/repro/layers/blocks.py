@@ -231,3 +231,141 @@ def block_decode(cfg: ModelConfig, bp: Dict[str, Any], h: jnp.ndarray,
     out, _ = ffn_branch(cfg, bp, rms_norm(h, bp["ln2"], eps))
     new_cache.update(k=kc, v=vc)
     return h + out, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Lane-batched decode block with the SpeCa branch seam.
+#
+# Decode lanes in the serving engine sit at DIFFERENT absolute positions
+# (each request has its own prompt length and accepted-token count), so
+# the single traced-scalar ``pos`` of ``block_decode`` becomes a per-lane
+# ``positions`` [B] vector and cache updates scatter at each lane's own
+# slot. The block is split into the same (inc0, inc1) residual branches
+# as ``block_branches_full`` so a speculative decode step can substitute
+# TaylorSeer-predicted increments — plus ``spec_cache``, the piece a
+# speculative step can NOT skip: the forecast stream's K/V projections
+# (written at the lane's position, keeping the drafted chain's attention
+# self-consistent) and the SSM/conv state advance. For pure-SSM blocks
+# the state advance IS the mixer, so a speculative step saves only the
+# (absent) FFN there — the γ accounting in ``core.complexity.
+# decode_verify_flops`` reflects exactly this split.
+# ---------------------------------------------------------------------------
+
+def attn_branch_decode_lanes(cfg: ModelConfig, bp: Dict[str, Any],
+                             x: jnp.ndarray, *, angles, window, k_cache,
+                             v_cache, positions):
+    """One-token attention at per-lane positions [B]; returns
+    (out, (k_cache', v_cache'))."""
+    q, k, v = _qkv(cfg, bp, x)
+    if angles is not None:
+        q = apply_rope(q, angles)
+        k = apply_rope(k, angles)
+    k_cache, v_cache = attn_lib.update_kv_cache_lanes(k_cache, v_cache,
+                                                      k, v, positions)
+    out = attn_lib.decode_attention_lanes(q, k_cache, v_cache, positions,
+                                          window)
+    B = x.shape[0]
+    out = jnp.einsum("bse,ed->bsd",
+                     out.reshape(B, 1, cfg.num_heads * cfg.resolved_head_dim),
+                     bp["wo"])
+    return out, (k_cache, v_cache)
+
+
+def _kv_write_lanes(cfg: ModelConfig, bp: Dict[str, Any], x: jnp.ndarray,
+                    *, angles, k_cache, v_cache, positions):
+    """K/V projections of the forecast stream written at each lane's
+    position — the speculative cache write (no q, no attention, no wo)."""
+    hd = cfg.resolved_head_dim
+    B = x.shape[0]
+    k = jnp.einsum("bsd,de->bse", x, bp["wk"])
+    v = jnp.einsum("bsd,de->bse", x, bp["wv"])
+    if cfg.qkv_bias:
+        k, v = k + bp["bk"], v + bp["bv"]
+    k = k.reshape(B, 1, cfg.num_kv_heads, hd)
+    v = v.reshape(B, 1, cfg.num_kv_heads, hd)
+    if angles is not None:
+        k = apply_rope(k, angles)
+    return attn_lib.update_kv_cache_lanes(k_cache, v_cache, k, v, positions)
+
+
+def block_decode_branches(cfg: ModelConfig, bp: Dict[str, Any],
+                          cache_slice: Dict[str, Any], *, angles, window,
+                          positions):
+    """Returns (fn0, fn1, spec_cache) for the lane-batched decode step.
+
+    ``fn0(h) -> (inc0, new_cache_slice)`` and ``fn1(h) -> inc1`` compute
+    the real residual branches (identical math and add order to
+    ``block_decode``); ``spec_cache(h) -> new_cache_slice`` advances only
+    the cache from the forecast stream. Both cache paths return the same
+    keys/dtypes so they can sit in one ``lax.cond``.
+    """
+    eps = cfg.norm_eps
+
+    def ssm_step(x):
+        return ssm_lib.mamba2_decode(
+            bp["ssm"], x, cache_slice["ssm_state"],
+            cache_slice["conv_state"], d_inner=cfg.ssm_d_inner,
+            n_state=cfg.ssm_state, n_heads=cfg.resolved_ssm_heads,
+            head_dim=cfg.ssm_head_dim, norm_eps=eps)
+
+    if cfg.arch_type == "ssm":
+        def fn0(h):
+            x = rms_norm(h, bp["ln1"], eps)
+            out, s, c = ssm_step(x)
+            return out, {"ssm_state": s, "conv_state": c}
+
+        def fn1(h):
+            return jnp.zeros_like(h)
+
+        def spec_cache(h):
+            x = rms_norm(h, bp["ln1"], eps)
+            _, s, c = ssm_step(x)
+            return {"ssm_state": s, "conv_state": c}
+        return fn0, fn1, spec_cache
+
+    if cfg.arch_type == "hybrid":
+        def fn0(h):
+            x = rms_norm(h, bp["ln1"], eps)
+            a_out, (kc, vc) = attn_branch_decode_lanes(
+                cfg, bp, x, angles=angles, window=window,
+                k_cache=cache_slice["k"], v_cache=cache_slice["v"],
+                positions=positions)
+            s_out, s, c = ssm_step(x)
+            return 0.5 * (a_out + s_out), {"k": kc, "v": vc,
+                                           "ssm_state": s, "conv_state": c}
+
+        def fn1(h):
+            out, _ = ffn_branch(cfg, bp, rms_norm(h, bp["ln2"], eps))
+            return out
+
+        def spec_cache(h):
+            x = rms_norm(h, bp["ln1"], eps)
+            kc, vc = _kv_write_lanes(cfg, bp, x, angles=angles,
+                                     k_cache=cache_slice["k"],
+                                     v_cache=cache_slice["v"],
+                                     positions=positions)
+            _, s, c = ssm_step(x)
+            return {"k": kc, "v": vc, "ssm_state": s, "conv_state": c}
+        return fn0, fn1, spec_cache
+
+    # dense / moe / vlm
+    def fn0(h):
+        x = rms_norm(h, bp["ln1"], eps)
+        out, (kc, vc) = attn_branch_decode_lanes(
+            cfg, bp, x, angles=angles, window=window,
+            k_cache=cache_slice["k"], v_cache=cache_slice["v"],
+            positions=positions)
+        return out, {"k": kc, "v": vc}
+
+    def fn1(h):
+        out, _ = ffn_branch(cfg, bp, rms_norm(h, bp["ln2"], eps))
+        return out
+
+    def spec_cache(h):
+        x = rms_norm(h, bp["ln1"], eps)
+        kc, vc = _kv_write_lanes(cfg, bp, x, angles=angles,
+                                 k_cache=cache_slice["k"],
+                                 v_cache=cache_slice["v"],
+                                 positions=positions)
+        return {"k": kc, "v": vc}
+    return fn0, fn1, spec_cache

@@ -395,6 +395,75 @@ def decode_step_h(cfg: ModelConfig, params: Dict[str, Any], h: jnp.ndarray,
     return h, new_cache
 
 
+def decode_branches_step(cfg: ModelConfig, params: Dict[str, Any],
+                         tok: jnp.ndarray, cache: Dict[str, Any],
+                         positions: jnp.ndarray, *,
+                         branch_preds: Optional[jnp.ndarray] = None,
+                         compute_mask: Optional[jnp.ndarray] = None,
+                         collect_branches: bool = False
+                         ) -> Tuple[jnp.ndarray, Dict[str, Any],
+                                    Optional[jnp.ndarray]]:
+    """Lane-batched decode forward with the SpeCa branch seam.
+
+    The decode analogue of the masked diffusion forward: tok [B,1] i32
+    input tokens, cache {k/v [L,B,S,kv,hd], ssm_state/conv_state
+    [L,B,…]}, positions [B] i32 per-lane absolute query positions.
+    ``branch_preds`` [L,2,B,1,D] substitutes predicted residual
+    increments; ``compute_mask`` [L] selects which blocks run for real
+    (None = all). EVERY layer advances its cache either way — a
+    speculative layer writes its forecast stream's K/V projections and
+    SSM state (``blk.block_decode_branches``'s ``spec_cache``), keeping
+    the drafted chain self-consistent. Returns (logits [B,1,V],
+    new_cache, branches [L,2,B,1,D] | None).
+    """
+    h = emb.token_embed(params["embed"]["tok"], tok)
+    B = h.shape[0]
+    dtype = h.dtype
+    L = cfg.num_layers
+    windows = layer_windows(cfg)
+    angles = None
+    if cfg.has_attention:
+        p = jnp.asarray(positions, jnp.int32)[:, None]          # [B,1]
+        if cfg.mrope_sections:
+            p = jnp.broadcast_to(p[..., None], (B, 1, 3))
+        angles = _angles_for(cfg, p)
+    if branch_preds is None:
+        branch_preds = jnp.zeros((L, 2) + h.shape, dtype)
+    else:
+        branch_preds = branch_preds.astype(dtype)
+    if compute_mask is None:
+        compute_mask = jnp.ones((L,), bool)
+
+    def body(hh, xs):
+        bp, window, cache_slice, preds, cmask = xs
+        fn0, fn1, spec_cache = blk.block_decode_branches(
+            cfg, bp, cache_slice, angles=angles, window=window,
+            positions=positions)
+
+        def real(hh):
+            inc0, new_slice = fn0(hh)
+            h1 = hh + inc0
+            inc1 = fn1(h1)
+            return inc0, inc1, new_slice
+
+        def spec(hh):
+            return preds[0], preds[1], spec_cache(hh)
+
+        inc0, inc1, new_slice = jax.lax.cond(cmask, real, spec, hh)
+        hh = hh + inc0 + inc1
+        ys = {"cache": new_slice}
+        if collect_branches:
+            ys["branches"] = jnp.stack([inc0, inc1])
+        return hh, ys
+
+    h, ys = jax.lax.scan(body, h,
+                         (params["blocks"], windows, cache, branch_preds,
+                          compute_mask),
+                         unroll=_scan_unroll())
+    logits = lm_logits(cfg, params, h)
+    return logits, ys["cache"], ys.get("branches")
+
+
 # ---------------------------------------------------------------------------
 # Heads
 # ---------------------------------------------------------------------------

@@ -1,3 +1,5 @@
+from repro.core.workload import (DecodeWorkload,  # noqa: F401
+                                 DiffusionWorkload, Workload)
 from repro.serving.engine import (Request, Result, SpeCaEngine,  # noqa: F401
                                   allocation_report)
 from repro.serving.policy import (QueueFull, RequestPolicy,  # noqa: F401

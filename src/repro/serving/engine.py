@@ -1,4 +1,5 @@
-"""SpeCa diffusion serving engine — per-request policy, slot-width lanes.
+"""SpeCa serving engine — per-request policy, slot-width lanes, and
+workload-agnostic sessions (diffusion denoising + LLM decode).
 
 The paper's sample-adaptive allocation (§1) says each sample should get
 exactly as much computation as its complexity demands. The engine realises
@@ -45,6 +46,18 @@ Serving API v2 (this module's public surface):
     ``serve`` are thin wrappers over the lifecycle that reproduce the
     pre-v2 trajectories (pinned in ``tests/test_serving_v2.py``);
     ``SpeCaEngine(guidance=True)`` becomes a default policy.
+  * **Workload routing** — the forecast-verify loop is workload-
+    agnostic (``repro.core.workload``): the same engine serves
+    diffusion denoising lanes AND self-speculative LLM decode lanes.
+    ``RequestPolicy.workload`` names the lane batch a request rides in;
+    ONE scheduler admits both kinds from one queue (backfill across
+    slot shapes), each workload tag owns one fixed-width session whose
+    jitted step is compiled from its ``Workload`` adapter, and all busy
+    sessions advance every engine tick. Construct with
+    ``workloads={"decode": DecodeWorkload(...)}`` alongside (or instead
+    of) the diffusion ``(cfg, params, dcfg, scfg)`` quartet; FLOPs
+    accounting, accept rates and draft-K depth policy are per-workload
+    (``Result.workload``).
 
 Host/device discipline: the step function needs NOTHING from the host to
 decide warm/draft/accept — all decision state lives on-device, and lane
@@ -61,14 +74,12 @@ import time
 from typing import Any, Dict, Iterator, List, Optional, Tuple, Union
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import DiffusionConfig, ModelConfig, SpeCaConfig
 from repro.core import lane_step as LS
-from repro.core.complexity import forward_flops, verify_flops
-from repro.diffusion.pipeline import (latent_shape, make_stepper,
-                                      null_cond_like)
+from repro.core.workload import DiffusionWorkload, Workload
+from repro.diffusion.pipeline import null_cond_like
 from repro.serving.policy import QueueFull, RequestPolicy, Ticket
 from repro.serving.scheduler import (QueueItem, Scheduler, fresh_scheduler,
                                      make_scheduler)
@@ -130,6 +141,10 @@ class Result:
     finish_tick: Optional[int] = None
     deadline: Optional[float] = None
     ticket_id: Optional[int] = None
+    # which lane workload served the request ("diffusion" / "decode"):
+    # ``sample`` is a latent batch for diffusion, the emitted token row
+    # for decode, and the FLOPs fields are that workload's cost model
+    workload: str = "diffusion"
 
     @property
     def alpha(self) -> float:
@@ -172,25 +187,30 @@ class _Entry:                          # may span two lanes
 
 
 class _Session:
-    """One serving session: a fixed-width lane batch, its jitted step,
-    and the host-side slot bookkeeping. The engine's lifecycle API holds
-    one long-lived session; the ``serve_batched`` wrapper spins up a
-    private one per call so one-shot serving never perturbs lifecycle
-    state.
+    """One serving session: a fixed-width lane batch of ONE workload,
+    its jitted step, and the host-side slot bookkeeping. The engine's
+    lifecycle API holds one long-lived session per workload tag; the
+    ``serve_batched`` wrapper spins up private ones per call so one-shot
+    serving never perturbs lifecycle state.
 
     ``paired`` sessions compile the slot-width ("mixed") step program
     and can admit guided requests into pair slots; plain sessions
     compile the pre-v2 per-lane program (bit-identical trajectories for
-    pure-unguided traffic).
+    pure-unguided traffic). Pairing requires a workload that supports it
+    (diffusion CFG); decode sessions are always plain.
     """
 
     def __init__(self, engine: "SpeCaEngine", width: int, *,
-                 paired: bool) -> None:
+                 paired: bool,
+                 workload: Optional[Workload] = None) -> None:
         self.e = engine
+        self.wl = engine.workloads["diffusion"] if workload is None \
+            else workload
         self.W = width
-        self.paired = bool(paired) and width >= 2
+        self.paired = bool(paired) and width >= 2 \
+            and self.wl.supports_pairing
         self.step_fn = engine._lane_step(
-            width, "mixed" if self.paired else False)
+            width, "mixed" if self.paired else False, tag=self.wl.tag)
         self.state: Optional[Dict[str, Any]] = None
         self.lane_entry: List[Optional[_Entry]] = [None] * width
         self.tick = 0
@@ -217,23 +237,13 @@ class _Session:
                 and self.lane_entry[2 * k + 1] is None]
 
     def fits(self, item: QueueItem) -> bool:
+        if item.policy.workload != self.wl.tag:
+            return False
         if item.streams == 2:
             return self.paired and bool(self._free_pairs())
         return bool(self._free_lanes())
 
     # --- admission -------------------------------------------------------
-    def admit(self, sched: Scheduler) -> List[_Entry] :
-        """Pop fitting requests from the scheduler into free slots until
-        nothing fits (continuous batching; the scheduler decides the
-        order, the session decides the placement)."""
-        placed: List[_Entry] = []
-        while len(sched):
-            item = sched.pop(self.fits)
-            if item is None:
-                break
-            placed.append(self._place(item))
-        return placed
-
     def _place(self, item: QueueItem) -> _Entry:
         if item.streams == 2:
             lane0 = 2 * self._free_pairs()[0]
@@ -259,29 +269,27 @@ class _Session:
     def _fill(self, entry: _Entry) -> None:
         """Reset the entry's lane slice(s) for its request (host-side;
         every update is lane-local — on a mesh the SPMD partitioner
-        serves it from the owning shard, the table is never gathered)."""
-        e = self.e
+        serves it from the owning shard, the table is never gathered).
+        The workload contributes its dynamic payload through
+        ``fill_payload`` (diffusion: the seed noise latent; decode: one
+        prompt prefill scattered into the lane's cache slice)."""
+        e, wl = self.e, self.wl
         req, pol = entry.item.request, entry.item.policy
         if self.state is None:
-            self.state = LS.init_lane_state(
-                e.cfg, e.dcfg, e.scfg, self.W, req.cond,
+            self.state = LS.init_workload_state(
+                wl, self.W, req.cond if wl.cond_in_state else {},
                 guidance="mixed" if self.paired else False, mesh=e.mesh)
-        noise = jax.random.normal(jax.random.PRNGKey(req.seed),
-                                  latent_shape(e.cfg, e.dcfg, 1),
-                                  jnp.float32)
-        tau0 = float(e.scfg.tau0 if pol.tau0 is None else pol.tau0)
+        tau0 = float(wl.scfg.tau0 if pol.tau0 is None else pol.tau0)
         lane0 = entry.lanes[0]
         # draft_k is pair-equal by construction: a guided pair drafts
         # pair-coherently, one chain decision per position (docs/cfg.md)
-        self._fill_lane(lane0, req.cond, noise, tau0, entry.draft_k,
-                        entry.item.steps)
+        self._fill_lane(lane0, req.cond, tau0, entry)
         if entry.streams == 2:
             nc = pol.negative_cond
             if nc is None:
                 nc = e.null_cond if e.null_cond is not None \
-                    else null_cond_like(e.cfg, req.cond)
-            self._fill_lane(lane0 + 1, nc, noise, tau0, entry.draft_k,
-                            entry.item.steps)
+                    else null_cond_like(wl.cfg, req.cond)
+            self._fill_lane(lane0 + 1, nc, tau0, entry)
             gs = float(pol.guidance_scale)
             st = dict(self.state)
             st["gscale"] = st["gscale"].at[lane0:lane0 + 2].set(gs)
@@ -292,13 +300,13 @@ class _Session:
             st["paired"] = st["paired"].at[lane0].set(False)
             self.state = st
 
-    def _fill_lane(self, lane: int, cond: Dict[str, Any],
-                   noise: jnp.ndarray, tau0: float, draft_k: int,
-                   max_step: int) -> None:
+    def _fill_lane(self, lane: int, cond: Dict[str, Any], tau0: float,
+                   entry: _Entry) -> None:
+        wl = self.wl
         state = dict(self.state)
-        state["x"] = state["x"].at[lane].set(noise[0])
-        state["draft_k"] = state["draft_k"].at[lane].set(draft_k)
-        state["max_step"] = state["max_step"].at[lane].set(max_step)
+        state["draft_k"] = state["draft_k"].at[lane].set(entry.draft_k)
+        state["max_step"] = state["max_step"].at[lane].set(
+            entry.item.steps)
         state["diffs"] = state["diffs"].at[:, :, :, lane].set(0.0)
         state["n_anchors"] = state["n_anchors"].at[lane].set(0)
         state["anchor_step"] = state["anchor_step"].at[lane].set(-1)
@@ -307,9 +315,11 @@ class _Session:
         state["step"] = state["step"].at[lane].set(0)
         state["active"] = state["active"].at[lane].set(True)
         state["tau0"] = state["tau0"].at[lane].set(tau0)
-        state["cond"] = {k: v.at[lane].set(cond[k][0])
-                         for k, v in state["cond"].items()}
-        self.state = state
+        if wl.cond_in_state:
+            state["cond"] = {k: v.at[lane].set(cond[k][0])
+                             for k, v in state["cond"].items()}
+        self.state = wl.fill_payload(state, lane, entry.item.request,
+                                     entry.item.steps)
 
     # --- advance ---------------------------------------------------------
     def advance(self) -> List[Tuple[_Entry, Result]]:
@@ -376,7 +386,6 @@ class _Session:
         partial and full accounting can never diverge. Flags are read at
         the entry's first lane: for a guided pair the flags are
         pair-equal, so this is the pair's single decision."""
-        e = self.e
         item = entry.item
         lane0, k = entry.lanes[0], entry.streams
         accepts: List[bool] = []
@@ -395,17 +404,18 @@ class _Session:
             n_drafted += int(f["n_drafted"][lane0])
         return Result(
             request_id=item.request.request_id,
-            sample=jax.device_get(self.state["x"][lane0:lane0 + 1]),
+            sample=self.wl.emit(self.state, lane0, entry.done),
             num_full=n_full, num_spec=entry.done - n_full,
             num_drafted=n_drafted,
             # every drafted position pays one verify-layer forward;
-            # every rejected tick pays one full forward
-            flops=n_full * k * e._full_flops
-            + n_drafted * k * e._verify_flops,
+            # every rejected tick pays one full forward — both at the
+            # WORKLOAD's analytic cost (denoiser rows vs decode steps)
+            flops=n_full * k * self.wl.full_flops
+            + n_drafted * k * self.wl.verify_flops,
             wall_s=time.time() - entry.t0,
             accepts=accepts, completed=completed,
             finish_tick=end_tick, deadline=item.policy.deadline,
-            ticket_id=item.ticket_id)
+            ticket_id=item.ticket_id, workload=self.wl.tag)
 
     def drain(self) -> List[Tuple[_Entry, Result]]:
         """Tick-budget shutdown: harvest every in-flight entry as
@@ -423,7 +433,8 @@ def _dropped_result(item: QueueItem) -> Result:
     return Result(request_id=item.request.request_id, sample=None,
                   num_full=0, num_spec=0, flops=0.0, wall_s=0.0,
                   accepts=[], completed=False,
-                  deadline=item.policy.deadline, ticket_id=item.ticket_id)
+                  deadline=item.policy.deadline, ticket_id=item.ticket_id,
+                  workload=item.policy.workload)
 
 
 class SpeCaEngine:
@@ -476,10 +487,20 @@ class SpeCaEngine:
     lanes:
       * default lane width of the lifecycle session started by the
         first ``submit`` (``serve_batched`` takes its own ``lanes=``).
+    workloads:
+      * extra ``Workload`` adapters keyed by tag, e.g. ``{"decode":
+        DecodeWorkload(lm_cfg, lm_params, scfg, ...)}``. Requests route
+        by ``RequestPolicy.workload``; every tag gets its own lane
+        session (its own width, jitted step and FLOPs model) but shares
+        the scheduler, the admission queue and the lifecycle API. The
+        diffusion quartet ``(cfg, params, dcfg, scfg)`` may be omitted
+        entirely for a decode-only engine.
     """
 
-    def __init__(self, cfg: ModelConfig, params, dcfg: DiffusionConfig,
-                 scfg: SpeCaConfig, *, draft_mode: str = "taylor",
+    def __init__(self, cfg: Optional[ModelConfig] = None, params=None,
+                 dcfg: Optional[DiffusionConfig] = None,
+                 scfg: Optional[SpeCaConfig] = None, *,
+                 draft_mode: str = "taylor",
                  accept_mode: str = "per_sample",
                  verify_backend: str = "fused",
                  guidance: bool = False,
@@ -489,7 +510,8 @@ class SpeCaEngine:
                  max_queue: Optional[int] = None,
                  default_policy: Optional[RequestPolicy] = None,
                  max_draft_depth: int = 1,
-                 lanes: int = 4):
+                 lanes: int = 4,
+                 workloads: Optional[Dict[str, Workload]] = None):
         if accept_mode not in LS.ACCEPT_MODES:
             raise ValueError(f"unknown accept_mode {accept_mode!r}")
         if max_draft_depth < 1:
@@ -500,20 +522,43 @@ class SpeCaEngine:
         if mesh is not None and "data" not in mesh.axis_names:
             raise ValueError("serving mesh needs a 'data' axis "
                              f"(got {mesh.axis_names})")
-        LS.table_dtype(cfg, scfg)      # fail fast on a bad dtype string
         make_scheduler(scheduler)      # fail fast on a bad scheduler spec
         self.cfg, self.params = cfg, params
         self.dcfg, self.scfg = dcfg, scfg
-        self.stepper = make_stepper(dcfg)
-        self.vl = LS.verify_layer(cfg, scfg)
-        self.n_tok = LS.num_tokens(cfg, dcfg)
+        self.workloads: Dict[str, Workload] = {}
+        if cfg is not None:
+            if dcfg is None or scfg is None:
+                raise ValueError("diffusion serving needs the full "
+                                 "(cfg, params, dcfg, scfg) quartet")
+            # the adapter ctor resolves verify layer/table dtype — the
+            # same fail-fast the pre-workload engine ran inline
+            self.workloads["diffusion"] = DiffusionWorkload(
+                cfg, params, dcfg, scfg)
+        for tag, wl in (workloads or {}).items():
+            if tag != wl.tag:
+                raise ValueError(f"workloads key {tag!r} does not match "
+                                 f"adapter tag {wl.tag!r}")
+            self.workloads[tag] = wl
+        if not self.workloads:
+            raise ValueError("engine needs at least one workload: pass "
+                             "the diffusion (cfg, params, dcfg, scfg) "
+                             "quartet and/or workloads={...}")
+        diff = self.workloads.get("diffusion")
+        self.stepper = getattr(diff, "stepper", None)
+        self.vl = diff.verify_layer if diff is not None else None
+        self.n_tok = diff.num_tokens if diff is not None else None
         self.draft_mode = draft_mode
         self.accept_mode = accept_mode
-        if scfg.error_metric != "rel_l2":
+        if any(wl.scfg.error_metric != "rel_l2"
+               for wl in self.workloads.values()):
             verify_backend = "jnp"
         self.verify_backend = verify_backend
         self.mesh = mesh
         self.guidance = bool(guidance)
+        if self.guidance and diff is None:
+            raise ValueError("guidance=True is the legacy all-guided "
+                             "diffusion mode; this engine serves no "
+                             "diffusion workload")
         self.null_cond = null_cond
         self.scheduler_spec = scheduler
         self.max_queue = max_queue
@@ -525,12 +570,12 @@ class SpeCaEngine:
         self._streams = 2 if self.guidance else 1
         from repro.sharding.specs import lane_shard_count
         self._lane_shards = lane_shard_count(mesh)
-        self._full_flops = forward_flops(cfg, self.n_tok)
-        self._verify_flops = verify_flops(cfg, self.n_tok)
-        self._lane_fns: Dict[Tuple[int, Any], Any] = {}
-        # lifecycle state (shared long-lived session; serve_batched uses
-        # private per-call sessions instead)
-        self._session: Optional[_Session] = None
+        self._full_flops = diff.full_flops if diff is not None else 0.0
+        self._verify_flops = diff.verify_flops if diff is not None else 0.0
+        self._lane_fns: Dict[Tuple[str, int, Any], Any] = {}
+        # lifecycle state (shared long-lived sessions, one per workload
+        # tag; serve_batched uses private per-call sessions instead)
+        self._sessions: Dict[str, _Session] = {}
         self._sched: Scheduler = make_scheduler(scheduler)
         self._seq = 0
         self._results: Dict[int, Result] = {}
@@ -550,12 +595,19 @@ class SpeCaEngine:
         pol = base if base is not None \
             else req.policy if req.policy is not None \
             else (self.default_policy or RequestPolicy())
+        wl = self._workload(pol.workload)
         if req.guidance_scale is not None:
             pol = dataclasses.replace(
                 pol, guidance_scale=float(req.guidance_scale))
-        if self.guidance and pol.guidance_scale is None:
+        if self.guidance and wl.supports_pairing \
+                and pol.guidance_scale is None:
             pol = dataclasses.replace(
                 pol, guidance_scale=float(self.dcfg.guidance_scale))
+        if pol.guided and not wl.supports_pairing:
+            raise ValueError(
+                f"workload {wl.tag!r} does not support guided lane "
+                "pairs — classifier-free guidance is a diffusion "
+                "concept; submit decode requests unguided")
         dk = pol.draft_depth
         if dk is not None and not 1 <= int(dk) <= self.max_draft_depth:
             raise ValueError(
@@ -564,14 +616,23 @@ class SpeCaEngine:
                 "SpeCaEngine(max_draft_depth=K) to serve deeper drafts")
         return pol
 
-    def _lane_step(self, W: int, mode: Any = False):
-        """The jitted W-lane step (compiled once per width × program):
-        ``mode=False`` is the plain per-lane program, ``"mixed"`` the
-        slot-width pair-mask program."""
-        key = (W, mode)
+    def _workload(self, tag: str) -> Workload:
+        try:
+            return self.workloads[tag]
+        except KeyError:
+            raise ValueError(
+                f"unknown workload {tag!r} (this engine serves "
+                f"{sorted(self.workloads)})") from None
+
+    def _lane_step(self, W: int, mode: Any = False,
+                   tag: str = "diffusion"):
+        """The jitted W-lane step (compiled once per workload × width ×
+        program): ``mode=False`` is the plain per-lane program,
+        ``"mixed"`` the slot-width pair-mask program."""
+        key = (tag, W, mode)
         if key not in self._lane_fns:
-            self._lane_fns[key] = jax.jit(LS.build_lane_step(
-                self.cfg, self.params, self.dcfg, self.scfg, lanes=W,
+            self._lane_fns[key] = jax.jit(LS.build_workload_step(
+                self._workload(tag), lanes=W,
                 draft_mode=self.draft_mode, accept_mode=self.accept_mode,
                 verify_backend=self.verify_backend,
                 guidance=mode, max_draft_depth=self.max_draft_depth,
@@ -607,7 +668,7 @@ class SpeCaEngine:
     # --- lifecycle API ---------------------------------------------------
     @property
     def current_tick(self) -> int:
-        return self._session.tick if self._session is not None else 0
+        return max((s.tick for s in self._sessions.values()), default=0)
 
     def pending(self) -> int:
         """Queued (not yet admitted) request count."""
@@ -615,22 +676,34 @@ class SpeCaEngine:
 
     def in_flight(self) -> int:
         """Admitted, not yet completed request count."""
-        if self._session is None:
-            return 0
-        return len(self._session.entries())
+        return sum(len(s.entries()) for s in self._sessions.values())
 
-    def start(self, *, lanes: Optional[int] = None) -> None:
-        """Start the lifecycle session explicitly (otherwise the first
-        ``submit`` starts it at the engine's default width). The width
-        rounds up to a multiple of ``2·D`` — lifecycle sessions are
-        always pair-capable, so guided and unguided submissions mix."""
-        if self._session is not None:
-            raise RuntimeError("serving session already started; "
-                               "shutdown() first to resize")
-        W = max(lanes if lanes is not None else self.default_lanes, 2)
-        mult = 2 * self._lane_shards
+    def _new_session(self, wl: Workload, lanes: int) -> _Session:
+        """A session for one workload tag: pair-capable diffusion slots
+        (width a multiple of ``2·D``, minimum one pair) or plain decode
+        lanes (width a multiple of ``D``)."""
+        if wl.supports_pairing:
+            W, mult, paired = max(lanes, 2), 2 * self._lane_shards, True
+        else:
+            W, mult, paired = max(lanes, 1), self._lane_shards, False
         W = -(-W // mult) * mult
-        self._session = _Session(self, W, paired=True)
+        return _Session(self, W, paired=paired, workload=wl)
+
+    def start(self, *, lanes: Optional[int] = None,
+              workload: str = "diffusion") -> None:
+        """Start one workload's lifecycle session explicitly (otherwise
+        the first ``submit`` routed to that workload starts it at the
+        engine's default width). Diffusion sessions are always
+        pair-capable — the width rounds up to a multiple of ``2·D`` so
+        guided and unguided submissions mix; decode sessions round to a
+        multiple of the lane-shard count."""
+        wl = self._workload(workload)
+        if workload in self._sessions:
+            raise RuntimeError(
+                f"serving session for workload {workload!r} already "
+                "started; shutdown() first to resize")
+        self._sessions[workload] = self._new_session(
+            wl, lanes if lanes is not None else self.default_lanes)
 
     def submit(self, req: Request,
                policy: Optional[RequestPolicy] = None) -> Ticket:
@@ -639,18 +712,22 @@ class SpeCaEngine:
         ``policy`` overrides ``req.policy`` wholesale when given (the
         legacy ``Request.guidance_scale`` field and ``guidance=True``
         engine default still fold in on top, exactly as in
-        ``serve_batched``). Raises ``QueueFull`` when the admission
-        queue is at ``max_queue`` (bounded-queue backpressure — the
-        caller sheds or retries; admitted work is never dropped)."""
+        ``serve_batched``). The policy's ``workload`` tag routes the
+        request to that workload's session (started lazily at the
+        default width). Raises ``QueueFull`` when the admission queue
+        is at ``max_queue`` (bounded-queue backpressure — the caller
+        sheds or retries; admitted work is never dropped)."""
         if self.max_queue is not None and len(self._sched) >= self.max_queue:
             raise QueueFull(
                 f"admission queue at max_queue={self.max_queue}")
-        if self._session is None:
-            self.start()
         pol = self.resolve_policy(req, base=policy)
+        if pol.workload not in self._sessions:
+            self.start(workload=pol.workload)
+        sess = self._sessions[pol.workload]
         item = QueueItem(seq=self._seq, request=req, policy=pol,
-                         steps=pol.steps(self.stepper.num_steps),
-                         submit_tick=self._session.tick,
+                         steps=pol.steps(
+                             self.workloads[pol.workload].num_steps),
+                         submit_tick=sess.tick,
                          ticket_id=self._seq)
         self._seq += 1
         self._sched.push(item)
@@ -659,21 +736,47 @@ class SpeCaEngine:
                       request_id=req.request_id,
                       submit_tick=item.submit_tick)
 
+    @staticmethod
+    def _admit_into(sessions: Dict[str, _Session],
+                    sched: Scheduler) -> List[Tuple[_Session, _Entry]]:
+        """Pop fitting requests into the sessions' free slots until
+        nothing fits (continuous batching with cross-workload backfill:
+        the scheduler decides the order, each workload's session decides
+        the placement; a request whose session is full never blocks a
+        request another session could admit)."""
+        placed: List[Tuple[_Session, _Entry]] = []
+
+        def fits(item: QueueItem) -> bool:
+            sess = sessions.get(item.policy.workload)
+            return sess is not None and sess.fits(item)
+
+        while len(sched):
+            item = sched.pop(fits)
+            if item is None:
+                break
+            sess = sessions[item.policy.workload]
+            placed.append((sess, sess._place(item)))
+        return placed
+
     def tick(self, n: int = 1) -> List[Result]:
-        """Advance the lifecycle session up to ``n`` scheduler ticks
-        (admission + one async step dispatch each); returns the Results
-        completed along the way. Stops early when the engine is idle."""
+        """Advance the lifecycle sessions up to ``n`` scheduler ticks
+        (admission + one async step dispatch per busy session each);
+        returns the Results completed along the way. Stops early when
+        the engine is idle."""
         done: List[Result] = []
         for _ in range(n):
-            if self._session is None:
+            if not self._sessions:
                 break
-            for entry in self._session.admit(self._sched):
+            for _sess, entry in self._admit_into(self._sessions,
+                                                 self._sched):
                 self._ticket_status[entry.item.ticket_id] = "running"
-            if not self._session.busy():
+            busy = [s for s in self._sessions.values() if s.busy()]
+            if not busy:
                 break
-            for entry, res in self._session.advance():
-                self._record(res)
-                done.append(res)
+            for sess in busy:
+                for entry, res in sess.advance():
+                    self._record(res)
+                    done.append(res)
         return done
 
     def _record(self, res: Result) -> None:
@@ -734,8 +837,7 @@ class SpeCaEngine:
 
     def _idle(self) -> bool:
         return not (len(self._sched)
-                    or (self._session is not None
-                        and self._session.busy()))
+                    or any(s.busy() for s in self._sessions.values()))
 
     def results(self, tickets: List[Union[Ticket, int]]) -> List[Result]:
         """``result`` over a ticket list, preserving order."""
@@ -780,15 +882,15 @@ class SpeCaEngine:
         back never-started; the session is discarded (a new one starts
         on the next ``submit``). Returns the drained Results."""
         out: List[Result] = []
-        if self._session is not None:
-            for entry, res in self._session.drain():
+        for sess in self._sessions.values():
+            for entry, res in sess.drain():
                 self._record(res)
                 out.append(res)
         for item in self._sched.drain():
             res = _dropped_result(item)
             self._record(res)
             out.append(res)
-        self._session = None
+        self._sessions = {}
         return out
 
     # --- batch=1 serving: the lanes=streams case of the scheduler --------
@@ -836,33 +938,47 @@ class SpeCaEngine:
         if not requests:
             return []
         policies = [self.resolve_policy(r) for r in requests]
-        any_guided = any(p.guided for p in policies)
-        W = self._width_for(max(lanes, 1), policies)
-        sess = _Session(self, W, paired=any_guided)
+        # one private session per workload tag present in the batch:
+        # each gets its own width (sized to ITS requests) and jitted
+        # step; a single-workload batch reproduces the pre-workload
+        # trajectories exactly
+        sessions: Dict[str, _Session] = {}
+        for tag in sorted({p.workload for p in policies}):
+            pols = [p for p in policies if p.workload == tag]
+            any_guided = any(p.guided for p in pols)
+            W = self._width_for(max(lanes, 1), pols)
+            sessions[tag] = _Session(self, W, paired=any_guided,
+                                     workload=self.workloads[tag])
         # a FRESH private queue: reusing a caller-supplied scheduler
         # instance here would drain lifecycle submissions into this
         # one-shot session
         sched = fresh_scheduler(self.scheduler_spec if scheduler is None
                                 else scheduler)
-        S = self.stepper.num_steps
         # queue/results key on queue position, not request_id, so
         # duplicate ids still get their own Result (matching lanes=1)
         for i, (req, pol) in enumerate(zip(requests, policies)):
-            sched.push(QueueItem(seq=i, request=req, policy=pol,
-                                 steps=pol.steps(S), ticket_id=i))
+            sched.push(QueueItem(
+                seq=i, request=req, policy=pol,
+                steps=pol.steps(self.workloads[pol.workload].num_steps),
+                ticket_id=i))
         results: Dict[int, Result] = {}
-        while len(sched) or sess.busy():
-            if max_ticks is not None and sess.tick >= max_ticks:
+        while len(sched) or any(s.busy() for s in sessions.values()):
+            if max_ticks is not None and max(
+                    s.tick for s in sessions.values()) >= max_ticks:
                 break
-            sess.admit(sched)
-            for entry, res in sess.advance():
-                results[entry.item.seq] = res
+            self._admit_into(sessions, sched)
+            for sess in sessions.values():
+                if not sess.busy():
+                    continue
+                for entry, res in sess.advance():
+                    results[entry.item.seq] = res
         # tick-budget shutdown: drain in-flight entries as UNFINISHED and
         # mark never-started queue entries the same way, so
         # allocation_report reports them in n_dropped instead of counting
         # them as served
-        for entry, res in sess.drain():
-            results[entry.item.seq] = res
+        for sess in sessions.values():
+            for entry, res in sess.drain():
+                results[entry.item.seq] = res
         for item in sched.drain():
             results[item.seq] = _dropped_result(item)
         return [results[i] for i in range(len(requests))]
@@ -876,20 +992,38 @@ class SpeCaEngine:
                                   max_ticks=max_ticks)
 
     def warmup(self, cond: Dict[str, Any], *, lanes: int = 1,
-               mixed: bool = False) -> None:
+               mixed: bool = False, workload: str = "diffusion") -> None:
         """Compile the serving step for ``lanes`` outside any timed window
         by serving enough dummy requests end-to-end to fill that width
         (this also warms the host loop and both lax.cond branches).
-        ``cond`` is a conditioning template with leading axis 1; the lane
-        step compiles per lane width AND per program, so warm the shape
-        the real serve will use: the default warms the engine-mode
-        program (plain, or all-guided pairs on a legacy ``guidance=True``
+        ``workload`` selects WHICH slot program to pre-compile — the
+        lane step compiles per workload tag as well as per width and
+        program, so a mixed-traffic deployment warms each tag it will
+        serve (``warmup(prompt_cond, workload="decode")`` compiles the
+        decode lane step; pre-workload engines only ever warmed the
+        diffusion programs).
+
+        ``cond`` is a conditioning template with leading axis 1 — for
+        decode a ``{"tokens": [1, P]}`` prompt dict; the lane step
+        compiles per lane width AND per program, so warm the shape the
+        real serve will use: the default warms the engine-mode program
+        (plain, or all-guided pairs on a legacy ``guidance=True``
         engine), while ``mixed=True`` warms the v2 slot-width program —
         a guided+unguided dummy mix at this width — which is what
         lifecycle sessions (``submit``/``stream``) and heterogeneous
         ``serve_batched`` workloads compile — and is the ONLY program
-        warmed then (those call sites never run the plain one)."""
+        warmed then (those call sites never run the plain one).
+        ``mixed`` is a pair-slot (diffusion) concept and is ignored for
+        non-pairing workloads."""
         lanes = max(lanes, 1)
+        wl = self._workload(workload)
+        if not wl.supports_pairing:
+            pol = RequestPolicy(workload=workload)
+            reqs = [Request(request_id=-1 - i, cond=cond,
+                            seed=90_000 + i, policy=pol)
+                    for i in range(lanes)]
+            self.serve_batched(reqs, lanes=lanes)
+            return
         if not mixed or self.guidance:
             n = max(-(-lanes // self._streams), 1)
             reqs = [Request(request_id=-1 - i, cond=cond, seed=90_000 + i)

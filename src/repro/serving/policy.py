@@ -63,6 +63,15 @@ class RequestPolicy:
         compiled ``max_draft_depth`` are rejected at submit time. For a
         guided request the pair drafts pair-coherently: both lanes share
         one chain decision per position (``docs/cfg.md``).
+    workload:
+        Which lane workload serves the request — ``"diffusion"``
+        (default: SpeCa denoising lanes) or ``"decode"`` (self-
+        speculative LLM decode lanes, ``repro.core.workload.
+        DecodeWorkload``). The engine routes the request to the session
+        of that workload's lane batch; one scheduler admits both kinds
+        from one queue. Tags must name a workload the engine was
+        constructed with. Guidance is a diffusion concept: a guided
+        policy on a non-pairing workload is rejected at resolution.
     priority:
         Higher pops first within a scheduler's ordering class (FIFO
         orders by (priority, arrival); SJF/EDF use it as a tie-break).
@@ -78,6 +87,7 @@ class RequestPolicy:
     tau0: Optional[float] = None
     max_steps: Optional[int] = None
     draft_depth: Optional[int] = None
+    workload: str = "diffusion"
     priority: int = 0
     deadline: Optional[float] = None
 

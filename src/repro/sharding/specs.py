@@ -242,11 +242,20 @@ LANE_AXIS = "data"
 # carries its own τ policy); ``draft_k`` is the per-lane draft horizon
 # (``RequestPolicy.draft_depth``) and ``max_step`` the lane's schedule
 # length — both read by depth-K chain steps.
+#
+# Decode-workload payload keys (``repro.core.workload.DecodeWorkload``):
+# ``tok``/``tokens``/``pos0`` are per-lane token vectors (lane axis 0);
+# the KV/SSM caches are laid out [L, W, ...] so their lane axis is 1 —
+# lane-sharding them is exactly the "decode state sharded like the
+# table" rule: each shard owns its lanes' cache slices, and the fill
+# path's lane-local scatter never gathers the cache.
 LANE_STATE_AXES = {
     "x": 0, "since": 0, "step": 0, "active": 0,
     "diffs": 3, "n_anchors": 0, "anchor_step": 0, "gap": 0,
     "gscale": 0, "paired": 0, "tau0": 0,
     "draft_k": 0, "max_step": 0,
+    "tok": 0, "tokens": 0, "pos0": 0,
+    "k": 1, "v": 1, "ssm_state": 1, "conv_state": 1,
 }
 
 

@@ -1,0 +1,256 @@
+"""LLM decode lanes through the workload-agnostic lane core + engine.
+
+The acceptance pins of the workload seam (ISSUE 7):
+
+  * τ0 = 0 decode lanes through ``SpeCaEngine`` reproduce plain greedy
+    decoding token-for-token (every step rejected → every step is the
+    full forward — the engine is then an exact greedy decoder);
+  * τ0 > 0 engine trajectories match a standalone self-speculation
+    oracle (the raw ``build_workload_step`` loop) bitwise — emitted
+    tokens AND accept counters;
+  * draft-K chains roll the decode state back bitwise: tokens and the
+    KV/SSM caches of a depth-3 run equal the depth-1 run's exactly;
+  * one engine serves diffusion and decode traffic concurrently, with
+    per-workload accounting, and each side's results are unchanged by
+    the other's presence.
+"""
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import SpeCaConfig, get_config, reduced
+from repro.core import lane_step as LS
+from repro.core.workload import DecodeWorkload
+from repro.layers import model as M
+from repro.serving import Request, RequestPolicy, SpeCaEngine
+
+P, G = 8, 10   # prompt length / new tokens (max_seq_len = P + G)
+
+
+@functools.lru_cache(maxsize=None)
+def _lm(arch):
+    cfg = reduced(get_config(arch))
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def _prompt(cfg, seed=7):
+    return np.asarray(jax.random.randint(jax.random.PRNGKey(seed),
+                                         (1, P), 0, cfg.vocab_size),
+                      np.int32)
+
+
+def _greedy_ref(cfg, params, prompt, gen, max_len):
+    """Plain greedy decode: prefill + ``lm_decode_step`` loop (the same
+    reference loop as examples/llm_decode_demo.py)."""
+    logits, extras = M.lm_forward(cfg, params,
+                                  {"tokens": jnp.asarray(prompt)},
+                                  collect_cache=True)
+    cache = extras["cache"]
+    dec = M.init_cache(cfg, 1, max_len)
+    if "k" in dec:
+        dec["k"] = dec["k"].at[:, :, :P].set(cache["k"])
+        dec["v"] = dec["v"].at[:, :, :P].set(cache["v"])
+    if "ssm_state" in dec:
+        dec["ssm_state"] = cache["ssm_state"]
+        dec["conv_state"] = cache["conv_state"]
+    tok = jnp.argmax(logits[:, -1:], axis=-1)
+    step = jax.jit(functools.partial(M.lm_decode_step, cfg, params))
+    out = []
+    for pos in range(P, P + gen):
+        la, dec = step(tok, dec, pos)
+        tok = jnp.argmax(la, axis=-1)
+        out.append(int(tok[0, 0]))
+    return out
+
+
+def _decode_engine(cfg, params, scfg, **kw):
+    wl = DecodeWorkload(cfg, params, scfg, max_new_tokens=G,
+                        max_seq_len=P + G)
+    return SpeCaEngine(workloads={"decode": wl}, **kw), wl
+
+
+def _decode_req(prompt, rid=0, **pol):
+    return Request(request_id=rid, cond={"tokens": prompt},
+                   policy=RequestPolicy(workload="decode", **pol))
+
+
+@pytest.mark.parametrize("arch", ["llama3-8b", "mamba2-130m",
+                                  "hymba-1.5b"])
+def test_tau0_zero_engine_is_greedy(arch):
+    """A τ0=0 decode lane rejects every draft → the engine must emit the
+    greedy decode token-for-token, all steps accounted full."""
+    cfg, params = _lm(arch)
+    prompt = _prompt(cfg)
+    ref = _greedy_ref(cfg, params, prompt, G, P + G)
+    eng, _ = _decode_engine(cfg, params, SpeCaConfig(tau0=0.0))
+    res = eng.serve_batched([_decode_req(prompt)], lanes=1)[0]
+    assert res.workload == "decode"
+    assert res.completed and res.num_full == G and res.num_spec == 0
+    assert list(res.sample) == ref, arch
+
+
+def test_spec_trajectory_matches_oracle():
+    """τ0 > 0 through the LIFECYCLE API (submit → Ticket → result) must
+    match the standalone self-speculation oracle — the raw workload-step
+    loop — bitwise: same tokens, same accept count, accepts > 0."""
+    cfg, params = _lm("llama3-8b")
+    scfg = SpeCaConfig(tau0=5.0)
+    prompt = _prompt(cfg)
+    wl = DecodeWorkload(cfg, params, scfg, max_new_tokens=G,
+                        max_seq_len=P + G)
+
+    # oracle: one lane, raw step loop
+    state = LS.init_workload_state(wl, 1, {}, active=True)
+    state = wl.fill_payload(state, 0, _decode_req(prompt), G)
+    step = jax.jit(LS.build_workload_step(wl, lanes=1,
+                                          verify_backend="fused"))
+    n_spec = 0
+    while int(state["step"][0]) < G:
+        state, flags = step(state)
+        n_spec += int(flags["n_spec"][0])
+    oracle = list(np.asarray(state["tokens"][0]))
+    assert n_spec > 0      # self-speculation actually fires
+
+    eng, _ = _decode_engine(cfg, params, scfg, lanes=1)
+    ticket = eng.submit(_decode_req(prompt))
+    res = eng.result(ticket)
+    assert res.workload == "decode" and res.completed
+    assert list(res.sample) == oracle
+    assert res.num_spec == n_spec
+    assert res.num_full + res.num_spec == G
+    assert res.flops > 0 and res.draft_accept_rate > 0
+
+
+@pytest.mark.parametrize("arch", ["llama3-8b", "mamba2-130m"])
+def test_draft_chain_rollback_bitwise(arch):
+    """Depth-3 chains must land on the depth-1 state EXACTLY: emitted
+    tokens and every cache leaf (KV and/or SSM/conv) bitwise equal —
+    the rejected chain suffix's token writes AND cache writes are all
+    rolled back."""
+    cfg, params = _lm(arch)
+    scfg = SpeCaConfig(tau0=5.0)
+    gen = 16
+    wl = DecodeWorkload(cfg, params, scfg, max_new_tokens=gen,
+                        max_seq_len=P + gen)
+    prompt = _prompt(cfg)
+
+    def run(depth):
+        state = LS.init_workload_state(wl, 1, {}, active=True)
+        state = wl.fill_payload(state, 0, _decode_req(prompt), gen)
+        state["draft_k"] = jnp.full((1,), depth, jnp.int32)
+        step = jax.jit(LS.build_workload_step(wl, lanes=1,
+                                              verify_backend="fused",
+                                              max_draft_depth=depth))
+        spec = ticks = 0
+        while int(state["step"][0]) < gen:
+            state, flags = step(state)
+            spec += int(flags["n_spec"][0])
+            ticks += 1
+        return state, spec, ticks
+
+    s1, spec1, t1 = run(1)
+    s3, spec3, t3 = run(3)
+    assert spec1 > 0 and t3 < t1     # chains actually compress ticks
+    for k in wl.dyn_keys:
+        a, b = np.asarray(s1[k]), np.asarray(s3[k])
+        assert a.dtype == b.dtype and (a == b).all(), \
+            f"{arch}: dyn leaf {k!r} diverged between depth 1 and 3"
+
+
+def test_mixed_diffusion_decode_lifecycle(tiny_trained_dit):
+    """One engine, one scheduler, both workloads in flight at once —
+    and each side's results identical to its single-workload run."""
+    dit_cfg, dcfg, dit_params = tiny_trained_dit
+    lm_cfg, lm_params = _lm("llama3-8b")
+    scfg = SpeCaConfig(tau0=0.05)
+    lm_scfg = SpeCaConfig(tau0=5.0)
+    wl = DecodeWorkload(lm_cfg, lm_params, lm_scfg, max_new_tokens=G,
+                        max_seq_len=P + G)
+    cond = {"label": np.array([3])}
+    dreqs = [Request(request_id=10, cond=cond, seed=1),
+             Request(request_id=11, cond=cond, seed=2,
+                     policy=RequestPolicy(guidance_scale=2.0))]
+    treqs = [_decode_req(_prompt(lm_cfg, seed=s), rid=20 + s, tau0=5.0)
+             for s in (3, 4)]
+
+    mixed = SpeCaEngine(dit_cfg, dit_params, dcfg, scfg,
+                        workloads={"decode": wl}, lanes=2)
+    tickets = [mixed.submit(r) for r in dreqs + treqs]
+    # both sessions really run concurrently
+    mixed.tick(2)
+    assert mixed.in_flight() >= 2
+    results = mixed.results(tickets)
+    assert [r.workload for r in results] == ["diffusion", "diffusion",
+                                             "decode", "decode"]
+    assert all(r.completed for r in results)
+
+    # single-workload references (same widths → same jitted programs)
+    solo_d = SpeCaEngine(dit_cfg, dit_params, dcfg, scfg, lanes=2)
+    dref = [solo_d.result(solo_d.submit(r)) for r in dreqs]
+    solo_t = SpeCaEngine(workloads={"decode": wl}, lanes=2)
+    tref = [solo_t.result(solo_t.submit(r)) for r in treqs]
+
+    for got, want in zip(results[:2], dref):
+        assert got.accepts == want.accepts
+        assert got.flops == want.flops
+        np.testing.assert_array_equal(got.sample, want.sample)
+    for got, want in zip(results[2:], tref):
+        assert list(got.sample) == list(want.sample)
+        assert got.num_spec == want.num_spec
+        assert got.flops == want.flops
+    # per-workload FLOPs models actually differ
+    assert results[0].flops != results[2].flops
+
+
+def test_policy_and_constructor_validation():
+    cfg, params = _lm("llama3-8b")
+    scfg = SpeCaConfig(tau0=0.0)
+    eng, wl = _decode_engine(cfg, params, scfg)
+    prompt = _prompt(cfg)
+    # unknown workload tag
+    with pytest.raises(ValueError, match="unknown workload"):
+        eng.resolve_policy(Request(request_id=0, cond={},
+                                   policy=RequestPolicy(workload="video")))
+    # decode-only engine rejects diffusion-policy requests
+    with pytest.raises(ValueError, match="unknown workload"):
+        eng.submit(Request(request_id=1, cond={"label": np.array([0])}))
+    # guidance is a diffusion concept
+    with pytest.raises(ValueError, match="guided"):
+        eng.resolve_policy(Request(
+            request_id=2, cond={"tokens": prompt},
+            policy=RequestPolicy(workload="decode", guidance_scale=2.0)))
+    # workloads dict keys must match adapter tags
+    with pytest.raises(ValueError, match="does not match"):
+        SpeCaEngine(workloads={"llm": wl})
+    # no workload at all
+    with pytest.raises(ValueError, match="at least one workload"):
+        SpeCaEngine()
+    # legacy all-guided mode needs a diffusion workload
+    with pytest.raises(ValueError, match="guidance=True"):
+        SpeCaEngine(workloads={"decode": wl}, guidance=True)
+    # DecodeWorkload gates: diffusion backbones and bad schedule lengths
+    dit = reduced(get_config("dit-xl2"))
+    with pytest.raises(ValueError, match="autoregressive"):
+        DecodeWorkload(dit, None, scfg, max_new_tokens=4, max_seq_len=8)
+    with pytest.raises(ValueError, match="max_new_tokens"):
+        DecodeWorkload(cfg, params, scfg, max_new_tokens=0, max_seq_len=8)
+    # prompt too long for the lane cache
+    long = np.zeros((1, P + G), np.int32)
+    with pytest.raises(ValueError, match="max_seq_len"):
+        eng.serve_batched([_decode_req(long)], lanes=1)
+
+
+def test_warmup_is_workload_aware():
+    """``warmup(workload="decode")`` must pre-compile the DECODE slot
+    program (pre-workload engines only ever warmed diffusion)."""
+    cfg, params = _lm("mamba2-130m")
+    eng, _ = _decode_engine(cfg, params, SpeCaConfig(tau0=0.0))
+    assert not eng._lane_fns
+    eng.warmup({"tokens": _prompt(cfg)}, lanes=1, workload="decode")
+    assert ("decode", 1, False) in eng._lane_fns
+    with pytest.raises(ValueError, match="unknown workload"):
+        eng.warmup({"tokens": _prompt(cfg)}, workload="diffusion")

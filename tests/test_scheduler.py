@@ -26,9 +26,11 @@ from repro.serving.scheduler import (EDFScheduler, FIFOScheduler, QueueItem,
                                      SJFScheduler, make_scheduler)
 
 
-def _item(seq, *, steps=10, priority=0, deadline=None, streams=1):
+def _item(seq, *, steps=10, priority=0, deadline=None, streams=1,
+          workload="diffusion"):
     pol = RequestPolicy(priority=priority, deadline=deadline,
-                        guidance_scale=4.0 if streams == 2 else None)
+                        guidance_scale=4.0 if streams == 2 else None,
+                        workload=workload)
     return QueueItem(seq=seq, request=None, policy=pol, steps=steps,
                      ticket_id=seq)
 
@@ -170,6 +172,130 @@ def test_edf_no_starvation_under_backpressure(seed):
         t += 1
     assert sorted(admitted) == [a[0] for a in arrivals][:len(admitted)]
     assert len(admitted) == 30                    # nothing starved/lost
+
+
+class _SlotSim:
+    """Host-only mirror of the engine's per-workload slot shapes: a
+    paired diffusion session (``pairs`` pair slots = 2·pairs lanes) and
+    a plain decode session (``decode_lanes`` lanes). ``fits`` is exactly
+    the engine's cross-session admission predicate."""
+
+    def __init__(self, pairs=1, decode_lanes=1):
+        self.pair_free = [True] * pairs        # a pair slot = 2 lanes
+        self.half_free = [0] * pairs           # singles parked per slot
+        self.decode_free = decode_lanes
+
+    def fits(self, item):
+        if item.policy.workload == "decode":
+            return self.decode_free > 0
+        if item.streams == 2:
+            return any(self.pair_free)
+        # a single fits a free pair slot or the free half of one
+        return any(self.pair_free) or any(h == 1 for h in self.half_free)
+
+    def place(self, item):
+        if item.policy.workload == "decode":
+            self.decode_free -= 1
+            return ("decode", None)
+        if item.streams == 2:
+            k = self.pair_free.index(True)
+            self.pair_free[k] = False
+            self.half_free[k] = 2
+            return ("pair", k)
+        # unguided diffusion: prefer a half-occupied slot (the engine's
+        # keep-pairs-free placement), else open a fresh pair slot
+        for k, h in enumerate(self.half_free):
+            if h == 1 and not self.pair_free[k]:
+                self.half_free[k] = 2
+                return ("single", k)
+        k = self.pair_free.index(True)
+        self.pair_free[k] = False
+        self.half_free[k] = 1
+        return ("single", k)
+
+    def release(self, placed):
+        kind, k = placed
+        if kind == "decode":
+            self.decode_free += 1
+        elif kind == "pair":
+            self.pair_free[k], self.half_free[k] = True, 0
+        else:
+            self.half_free[k] -= 1
+            if self.half_free[k] == 0:
+                self.pair_free[k] = True
+
+
+def test_backfill_across_heterogeneous_slot_shapes():
+    """Decode lane + guided pair + unguided diffusion lane competing for
+    one slot batch: a shape that does not fit its session's free slots
+    never blocks a fitting request of ANOTHER shape behind it, and is
+    never lost."""
+    sim = _SlotSim(pairs=1, decode_lanes=1)
+    s = FIFOScheduler()
+    # occupy the pair slot's first lane so the guided pair cannot fit
+    first = _item(0, steps=5)
+    assert sim.fits(first)
+    sim.place(first)
+    s.push(_item(1, steps=5, streams=2))             # guided pair: stuck
+    s.push(_item(2, steps=5, workload="decode"))     # decode: fits
+    s.push(_item(3, steps=5))                        # single: fits
+    got = s.pop(sim.fits)
+    assert got.seq == 2 and got.policy.workload == "decode"
+    sim.place(got)
+    got = s.pop(sim.fits)
+    assert got.seq == 3                              # half-slot backfill
+    sim.place(got)
+    assert s.pop(sim.fits) is None                   # pair still stuck
+    assert len(s) == 1                               # ...but not lost
+    # decode traffic keeps flowing while the pair waits
+    s.push(_item(4, steps=5, workload="decode"))
+    sim.release(("decode", None))
+    got = s.pop(sim.fits)
+    assert got.seq == 4
+
+
+@pytest.mark.parametrize("cls", [FIFOScheduler, SJFScheduler, EDFScheduler])
+@pytest.mark.parametrize("seed", range(4))
+def test_mixed_shapes_never_starve(cls, seed):
+    """Randomized mixed-shape admission: a two-session engine (one pair
+    slot + one decode lane) serving random arrivals of all three shapes
+    admits EVERY request eventually, and each pop is the scheduler's
+    best-key choice among the requests that currently fit."""
+    rng = random.Random(500 + seed)
+    sim = _SlotSim(pairs=1, decode_lanes=1)
+    s = cls()
+    n = 24
+    arrivals = [
+        _item(i, steps=rng.randint(1, 5),
+              deadline=float(rng.randint(10, 99)),
+              **rng.choice([dict(streams=1), dict(streams=2),
+                            dict(workload="decode")]))
+        for i in range(n)
+    ]
+    pending = list(arrivals)
+    in_flight = []          # (finish_t, placed)
+    admitted = []
+    t = 0
+    while len(admitted) < n:
+        t += 1
+        assert t < 10_000, "mixed-shape admission starved"
+        while pending and rng.random() < 0.7:
+            s.push(pending.pop(0))
+        for fin, placed in [e for e in in_flight if e[0] <= t]:
+            sim.release(placed)
+            in_flight.remove((fin, placed))
+        while True:
+            fitting = [it for it in s._items if sim.fits(it)]
+            got = s.pop(sim.fits)
+            if got is None:
+                assert not fitting
+                break
+            # the pop is the best fitting key (backfill never reorders
+            # within the fitting set)
+            assert s.key(got) == min(s.key(it) for it in fitting)
+            in_flight.append((t + got.steps, sim.place(got)))
+            admitted.append(got.seq)
+    assert sorted(admitted) == list(range(n))
 
 
 def test_fresh_scheduler_never_shares_queues():

@@ -77,6 +77,17 @@ def extract_series(entry: str) -> Dict[str, float]:
                         out[f"mean-ticks {mode}"] = \
                             float(row["mean_completion_ticks"])
                     continue
+                # workload-tagged rows (decode / mixed traffic through
+                # the workload-agnostic engine): keyed by mode so they
+                # never collide with the diffusion lane series
+                wl = str(row.get("workload") or "diffusion")
+                if wl != "diffusion" or mode.startswith("mixed,"):
+                    out[f"req/s {mode}"] = float(rps)
+                    if row.get("tok_per_s") is not None:
+                        out[f"tok/s {mode}"] = float(row["tok_per_s"])
+                    if row.get("alpha_mean") is not None:
+                        out[f"accept {mode}"] = float(row["alpha_mean"])
+                    continue
                 guided = float(row.get("guidance", 0.0) or 0.0) > 0
                 if mode.startswith("batch=1"):
                     key = "req/s batch=1"
