@@ -109,8 +109,9 @@ class Workload:
 
     Traced hooks (called inside the jitted step): ``t_frac``,
     ``step_context``, ``spec_forward``, ``full_forward``, ``zero_out``,
-    ``select_out``, ``advance``, ``rollback``. Host hooks (engine fill /
-    harvest): ``init_payload``, ``fill_payload``, ``emit``.
+    ``select_out``, ``advance``, ``rollback``. Host hooks (engine
+    validate / fill / harvest): ``validate_request``, ``init_payload``,
+    ``fill_payload``, ``emit``.
     """
 
     tag: str = "?"
@@ -157,6 +158,14 @@ class Workload:
                 for k, v in cur.items()}
 
     # --- host hooks ------------------------------------------------------
+    def validate_request(self, request, steps: int) -> None:
+        """Reject a request whose payload this workload cannot serve
+        (raise ``ValueError``). Called by the engine BEFORE any side
+        effect of admission — session start, ticket issue, queue push —
+        so a bad request (e.g. a malformed decode prompt) fails the
+        ``submit()`` itself instead of blowing up ``fill_payload``
+        mid-tick inside a live session. Default: accept everything."""
+
     def init_payload(self, lanes: int, *, x=None) -> Dict[str, Any]:
         raise NotImplementedError
 
@@ -366,8 +375,16 @@ class DecodeWorkload(Workload):
         payload.update(M.init_cache(self.cfg, lanes, self.max_seq_len))
         return payload
 
-    def fill_payload(self, state, lane, request, steps):
-        prompt = np.asarray(request.cond["tokens"], np.int32)
+    def _prompt_of(self, request, steps) -> np.ndarray:
+        """The request's normalised [1, P] prompt, or ``ValueError``
+        when malformed / too long for the lane cache — shared by
+        ``validate_request`` (submit time) and ``fill_payload``
+        (admission time) so the two can never disagree."""
+        try:
+            prompt = np.asarray(request.cond["tokens"], np.int32)
+        except (KeyError, TypeError, ValueError) as e:
+            raise ValueError("decode request needs an integer "
+                             f"cond['tokens'] prompt: {e}") from None
         if prompt.ndim == 1:
             prompt = prompt[None]
         if prompt.ndim != 2 or prompt.shape[0] != 1 or prompt.shape[1] < 1:
@@ -378,6 +395,14 @@ class DecodeWorkload(Workload):
             raise ValueError(
                 f"prompt length {P} + {steps} new tokens exceeds the "
                 f"workload's max_seq_len={self.max_seq_len}")
+        return prompt
+
+    def validate_request(self, request, steps):
+        self._prompt_of(request, steps)
+
+    def fill_payload(self, state, lane, request, steps):
+        prompt = self._prompt_of(request, steps)
+        P = prompt.shape[1]
         logits, cache = self._prefill(jnp.asarray(prompt))
         tok0 = int(np.argmax(np.asarray(jax.device_get(logits))[0]))
         state = dict(state)

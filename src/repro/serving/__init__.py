@@ -1,9 +1,9 @@
 from repro.core.workload import (DecodeWorkload,  # noqa: F401
                                  DiffusionWorkload, Workload)
-from repro.serving.engine import (Request, Result, SpeCaEngine,  # noqa: F401
-                                  allocation_report)
+from repro.serving.engine import (Preview, Request, Result,  # noqa: F401
+                                  SpeCaEngine, allocation_report)
 from repro.serving.policy import (QueueFull, RequestPolicy,  # noqa: F401
                                   Ticket)
 from repro.serving.scheduler import (EDFScheduler, FIFOScheduler,  # noqa: F401
                                      QueueItem, SJFScheduler, Scheduler,
-                                     make_scheduler)
+                                     WFQScheduler, make_scheduler)

@@ -21,7 +21,7 @@ scheduler tick:
   * lanes live at *different* denoising steps: when a lane finishes, the
     scheduler immediately refills it from the admission queue (continuous
     batching), in the order the pluggable ``Scheduler`` decides (FIFO /
-    SJF / EDF — ``repro.serving.scheduler``).
+    SJF / EDF / weighted-fair WFQ — ``repro.serving.scheduler``).
 
 Serving API v2 (this module's public surface):
 
@@ -38,10 +38,13 @@ Serving API v2 (this module's public surface):
     per pair (``docs/cfg.md``). On a mesh the width rounds to ``2·D``
     so pair slots never straddle a shard.
   * **Request lifecycle** — ``submit() -> Ticket``, ``poll``/``result``/
-    ``results``, a ``stream()`` generator, explicit ``tick()``, and
+    ``results``, a ``stream()`` generator (``previews=True`` adds
+    per-step progressive snapshots), explicit ``tick()``, and
     ``shutdown()``. Requests are admitted continuously into free slots
     mid-run; a bounded admission queue (``max_queue``) raises
-    ``QueueFull`` for backpressure.
+    ``QueueFull`` for backpressure. Every ticket walks the state
+    machine queued → running → done | dropped (→ released) reported by
+    ``status()`` — ``docs/serving.md``.
   * **Back-compat wrappers** — ``run_request``/``serve_batched``/
     ``serve`` are thin wrappers over the lifecycle that reproduce the
     pre-v2 trajectories (pinned in ``tests/test_serving_v2.py``);
@@ -145,6 +148,9 @@ class Result:
     # ``sample`` is a latent batch for diffusion, the emitted token row
     # for decode, and the FLOPs fields are that workload's cost model
     workload: str = "diffusion"
+    # the policy's fair-queueing class, echoed back so per-tenant share
+    # accounting (WFQ, benchmarks/serve_load.py) needs no side table
+    tenant: str = "default"
 
     @property
     def alpha(self) -> float:
@@ -168,6 +174,30 @@ class Result:
                 or not self.completed:
             return None
         return self.finish_tick <= self.deadline
+
+
+@dataclasses.dataclass(frozen=True)
+class Preview:
+    """One per-step streaming snapshot of a RUNNING request
+    (``SpeCaEngine.stream(previews=True)``).
+
+    ``sample`` is the request's current intermediate state read through
+    the workload's ``emit`` hook — the partially-denoised latent batch
+    for diffusion, the emitted-token prefix for decode. Snapshots are
+    pure reads of the lane state: the request's final ``Result.sample``
+    is bitwise identical to a non-streaming run (pinned in
+    ``tests/test_serving_lifecycle.py``). ``step`` counts schedule
+    steps completed at the snapshot (always < the request's resolved
+    schedule length — the final state arrives as the ``Result``);
+    ``tick`` is the serving session's scheduler tick.
+    """
+
+    ticket_id: int
+    request_id: int
+    tick: int
+    step: int
+    sample: Any
+    workload: str = "diffusion"
 
 
 @dataclasses.dataclass(eq=False)       # identity semantics: one _Entry
@@ -415,7 +445,8 @@ class _Session:
             wall_s=time.time() - entry.t0,
             accepts=accepts, completed=completed,
             finish_tick=end_tick, deadline=item.policy.deadline,
-            ticket_id=item.ticket_id, workload=self.wl.tag)
+            ticket_id=item.ticket_id, workload=self.wl.tag,
+            tenant=item.policy.tenant)
 
     def drain(self) -> List[Tuple[_Entry, Result]]:
         """Tick-budget shutdown: harvest every in-flight entry as
@@ -434,7 +465,8 @@ def _dropped_result(item: QueueItem) -> Result:
                   num_full=0, num_spec=0, flops=0.0, wall_s=0.0,
                   accepts=[], completed=False,
                   deadline=item.policy.deadline, ticket_id=item.ticket_id,
-                  workload=item.policy.workload)
+                  workload=item.policy.workload,
+                  tenant=item.policy.tenant)
 
 
 class SpeCaEngine:
@@ -581,6 +613,10 @@ class SpeCaEngine:
         self._results: Dict[int, Result] = {}
         self._completion_order: List[int] = []
         self._ticket_status: Dict[int, str] = {}
+        # tickets whose Result was release()d: no longer in _results /
+        # _ticket_status, but NOT unknown — status() says "released" and
+        # stream() treats them as already-consumed
+        self._released: set = set()
 
     # --- policy resolution ----------------------------------------------
     def resolve_policy(self, req: Request,
@@ -614,6 +650,9 @@ class SpeCaEngine:
                 f"draft_depth={dk} outside this engine's compiled chain "
                 f"(1..max_draft_depth={self.max_draft_depth}); construct "
                 "SpeCaEngine(max_draft_depth=K) to serve deeper drafts")
+        if not pol.weight > 0:
+            raise ValueError(
+                f"RequestPolicy.weight must be > 0, got {pol.weight}")
         return pol
 
     def _workload(self, tag: str) -> Workload:
@@ -716,17 +755,26 @@ class SpeCaEngine:
         request to that workload's session (started lazily at the
         default width). Raises ``QueueFull`` when the admission queue
         is at ``max_queue`` (bounded-queue backpressure — the caller
-        sheds or retries; admitted work is never dropped)."""
+        sheds or retries; admitted work is never dropped).
+
+        Rejection is side-effect free: the resolved policy AND the
+        request payload (``Workload.validate_request`` — e.g. a decode
+        prompt's shape/length) are validated BEFORE the workload session
+        lazily starts or the ticket sequence advances, so a rejected
+        submit leaves no empty compiled session behind (pinned in
+        ``tests/test_serving_lifecycle.py``)."""
         if self.max_queue is not None and len(self._sched) >= self.max_queue:
             raise QueueFull(
                 f"admission queue at max_queue={self.max_queue}")
         pol = self.resolve_policy(req, base=policy)
+        wl = self.workloads[pol.workload]
+        steps = pol.steps(wl.num_steps)
+        wl.validate_request(req, steps)
         if pol.workload not in self._sessions:
             self.start(workload=pol.workload)
         sess = self._sessions[pol.workload]
         item = QueueItem(seq=self._seq, request=req, policy=pol,
-                         steps=pol.steps(
-                             self.workloads[pol.workload].num_steps),
+                         steps=steps,
                          submit_tick=sess.tick,
                          ticket_id=self._seq)
         self._seq += 1
@@ -782,7 +830,11 @@ class SpeCaEngine:
     def _record(self, res: Result) -> None:
         self._results[res.ticket_id] = res
         self._completion_order.append(res.ticket_id)
-        self._ticket_status[res.ticket_id] = "done"
+        # "dropped", not "done", for a request the engine did not finish
+        # (drained mid-flight or never started at shutdown) — its Result
+        # is still pollable/releasable, with completed=False
+        self._ticket_status[res.ticket_id] = \
+            "done" if res.completed else "dropped"
 
     @staticmethod
     def _tid(ticket: Union[Ticket, int]) -> int:
@@ -809,12 +861,28 @@ class SpeCaEngine:
         for tid in tids:
             self._results.pop(tid)
             self._ticket_status.pop(tid, None)
+            self._released.add(tid)
         # _completion_order keeps its (integer) entries so any in-flight
-        # stream() cursor stays valid — streams skip released tickets
+        # stream() cursor stays valid — streams skip released tickets;
+        # _released distinguishes them from never-seen tickets (status()
+        # "released", stream([t]) already-consumed instead of KeyError)
 
     def status(self, ticket: Union[Ticket, int]) -> str:
-        """``"queued"`` | ``"running"`` | ``"done"`` | ``"unknown"``."""
-        return self._ticket_status.get(self._tid(ticket), "unknown")
+        """The ticket's lifecycle state (``docs/serving.md`` for the
+        full state machine):
+
+        * ``"queued"``   — admitted to the queue, not yet in a lane
+        * ``"running"``  — occupying lanes in a workload session
+        * ``"done"``     — completed its full schedule; Result pollable
+        * ``"dropped"``  — drained unfinished or never started at
+          ``shutdown()``; Result pollable with ``completed=False``
+        * ``"released"`` — Result consumed and evicted via ``release()``
+        * ``"unknown"``  — this engine never issued the ticket
+        """
+        tid = self._tid(ticket)
+        if tid in self._released:
+            return "released"
+        return self._ticket_status.get(tid, "unknown")
 
     def result(self, ticket: Union[Ticket, int],
                max_ticks: Optional[int] = None) -> Result:
@@ -843,19 +911,55 @@ class SpeCaEngine:
         """``result`` over a ticket list, preserving order."""
         return [self.result(t) for t in tickets]
 
-    def stream(self, tickets: Optional[List[Union[Ticket, int]]] = None
-               ) -> Iterator[Result]:
+    def _previews(self, want: Optional[set]) -> List[Preview]:
+        """Per-step snapshots of the wanted RUNNING entries — a pure
+        read of each lane's current state through the workload's
+        ``emit`` hook. Only called from ``stream(previews=True)``, so
+        non-streaming serving never pays the per-tick host sync."""
+        out: List[Preview] = []
+        for sess in self._sessions.values():
+            for entry in sess.entries():
+                tid = entry.item.ticket_id
+                # deep-draft lanes can advance 0 steps on a tick: no
+                # snapshot until the entry has progress to show
+                if (want is None or tid in want) and entry.done > 0:
+                    out.append(Preview(
+                        ticket_id=tid,
+                        request_id=entry.item.request.request_id,
+                        tick=sess.tick,
+                        step=min(entry.done, entry.item.steps),
+                        sample=sess.wl.emit(sess.state, entry.lanes[0],
+                                            entry.done),
+                        workload=sess.wl.tag))
+        return out
+
+    def stream(self, tickets: Optional[List[Union[Ticket, int]]] = None,
+               *, previews: bool = False
+               ) -> Iterator[Union[Result, Preview]]:
         """Yield Results in COMPLETION order as the engine runs —
         ``tickets=None`` streams completions from this call on, until
         the engine is idle (previously streamed/collected Results are
         never replayed); a ticket list streams exactly those tickets —
         including any already completed — until all of them have been
         yielded, and raises ``KeyError`` up front for a ticket this
-        engine has never seen. New submissions made while streaming are
-        admitted continuously."""
+        engine has never seen. A ``release()``d ticket is treated as
+        already-consumed: it contributes nothing and never blocks the
+        stream. New submissions made while streaming are admitted
+        continuously.
+
+        ``previews=True`` additionally yields a :class:`Preview` per
+        wanted RUNNING request after every scheduler tick — progressive
+        per-step output (partially-denoised latents / decoded-token
+        prefixes). Previews are pure reads of lane state: final Results
+        are bitwise identical with previews on or off, and the extra
+        host syncs are paid ONLY inside this generator — ticks driven
+        by ``result()``/``tick()``/non-preview streams never fetch
+        intermediate lane state."""
         want = None if tickets is None else {self._tid(t) for t in tickets}
         if want is not None:
-            unknown = [t for t in want if t not in self._ticket_status]
+            unknown = [t for t in want
+                       if t not in self._ticket_status
+                       and t not in self._released]
             if unknown:
                 raise KeyError(f"tickets {sorted(unknown)} are not known "
                                "to this engine")
@@ -869,12 +973,18 @@ class SpeCaEngine:
                     yield self._results[tid]
             if want is not None and all(
                     t in self._results            # completed
-                    or t not in self._ticket_status  # or released
+                    or t in self._released        # or consumed+evicted
                     for t in want):
                 return
             if self._idle():
                 return
             self.tick()
+            if previews:
+                # snapshot entries still in flight AFTER the tick; the
+                # tick's completions are about to be yielded as Results
+                # by the drain loop above, never as a preview
+                for pv in self._previews(want):
+                    yield pv
 
     def shutdown(self) -> List[Result]:
         """Stop the lifecycle session NOW: in-flight requests come back
@@ -938,6 +1048,11 @@ class SpeCaEngine:
         if not requests:
             return []
         policies = [self.resolve_policy(r) for r in requests]
+        # reject bad payloads BEFORE any session compiles (same
+        # side-effect-free validation order as submit())
+        for req, pol in zip(requests, policies):
+            self.workloads[pol.workload].validate_request(
+                req, pol.steps(self.workloads[pol.workload].num_steps))
         # one private session per workload tag present in the batch:
         # each gets its own width (sized to ITS requests) and jitted
         # step; a single-workload batch reproduces the pre-workload

@@ -80,6 +80,20 @@ class RequestPolicy:
         consumed by the EDF scheduler and reported as
         ``Result.deadline`` for hit-rate accounting. ``None`` = no
         deadline (sorts last under EDF).
+    tenant:
+        Fair-queueing class of the request (a user / customer / traffic
+        class). Consumed by the ``WFQScheduler``: each tenant's queued
+        work is charged against its own virtual-time ledger, so one
+        tenant's burst cannot starve another's steady trickle. Other
+        schedulers ignore it. Reported back as ``Result.tenant`` for
+        per-tenant share accounting.
+    weight:
+        The tenant's fair share under WFQ — service (schedule steps ×
+        streams) is allocated across continuously-backlogged tenants
+        proportionally to their weights. Must be > 0; requests of one
+        tenant should agree on the weight (the ledger charges each
+        request at its own weight, so disagreeing requests just shift
+        that tenant's internal order).
     """
 
     guidance_scale: Optional[float] = None
@@ -90,6 +104,8 @@ class RequestPolicy:
     workload: str = "diffusion"
     priority: int = 0
     deadline: Optional[float] = None
+    tenant: str = "default"
+    weight: float = 1.0
 
     @property
     def guided(self) -> bool:

@@ -20,8 +20,19 @@ Implementations:
   * ``EDFScheduler``  — earliest deadline first: maximises deadline hit
     rate (EDF is optimal for feasible workloads on a single resource);
     deadline-less requests sort last.
+  * ``WFQScheduler``  — weighted fair queueing over
+    ``RequestPolicy.tenant``: every request is stamped a virtual
+    *finish tag* at push time (tenant's ledger advanced by the
+    request's service demand ``steps × streams`` divided by its
+    ``weight``) and pops in finish-tag order, so continuously
+    backlogged tenants receive service proportional to their weights
+    and a burst from one tenant can delay another tenant's next
+    request by at most the in-service horizon (starvation bound,
+    property-tested in ``tests/test_scheduler.py``). ``priority``
+    stays an intra-tag tie-break — fairness is between tenants,
+    priority within one.
 
-All three skip over queued requests that do not fit the free slots
+All four skip over queued requests that do not fit the free slots
 (backfill): a guided request waiting for a whole pair never blocks an
 unguided request that could use the lone free lane. Ties break by
 priority (higher first), then arrival — admission is deterministic, so
@@ -145,10 +156,79 @@ class EDFScheduler(_KeyedScheduler):
                 -item.policy.priority, item.seq)
 
 
+class WFQScheduler:
+    """Weighted fair queueing keyed on ``RequestPolicy.tenant``.
+
+    Start-time fair queueing over an abstract service unit of one
+    schedule step per lane stream: a request demanding ``steps ×
+    streams`` service from tenant ``t`` (weight ``w``) is stamped
+
+        start  = max(V, finish[t])          # V: global virtual time
+        finish = start + steps·streams / w
+
+    at push time, and ``pop`` returns the *fitting* queued request with
+    the smallest ``(finish, -priority, seq)``. ``V`` advances to the
+    popped request's finish tag, so a tenant that was idle re-enters at
+    the current virtual time instead of replaying its unused past share
+    (no unbounded credit), while a backlogged tenant's tags grow at
+    ``1/w`` per service unit — over any interval in which a set of
+    tenants stays backlogged, each receives service proportional to
+    its weight.
+
+    Starvation bound: once queued, a request's finish tag is fixed;
+    every later push lands a strictly larger tag within the same
+    tenant and at least ``V``-anchored tags elsewhere, so at most the
+    finite set of already-queued smaller-tag requests (plus non-fitting
+    skips) can be served first — no arrival pattern can indefinitely
+    postpone it. Deterministic: equal tags break by priority, then
+    arrival ``seq``.
+    """
+
+    name = "wfq"
+
+    def __init__(self) -> None:
+        self._items: List[Tuple[float, QueueItem]] = []   # (finish tag, item)
+        self._vtime = 0.0
+        self._finish: dict = {}                           # tenant -> tag
+
+    def push(self, item: QueueItem) -> None:
+        pol = item.policy
+        w = float(pol.weight)
+        if not w > 0.0:
+            raise ValueError(f"RequestPolicy.weight must be > 0, got {w}")
+        start = max(self._vtime, self._finish.get(pol.tenant, 0.0))
+        finish = start + item.steps * item.streams / w
+        self._finish[pol.tenant] = finish
+        self._items.append((finish, item))
+
+    def pop(self, can_fit: Optional[FitFn] = None) -> Optional[QueueItem]:
+        best_i, best_k = -1, None
+        for i, (tag, item) in enumerate(self._items):
+            if can_fit is not None and not can_fit(item):
+                continue
+            k = (tag, -item.policy.priority, item.seq)
+            if best_k is None or k < best_k:
+                best_i, best_k = i, k
+        if best_i < 0:
+            return None
+        tag, item = self._items.pop(best_i)
+        self._vtime = max(self._vtime, tag)
+        return item
+
+    def drain(self) -> List[QueueItem]:
+        out = [item for _, item in self._items]
+        self._items = []
+        return out
+
+    def __len__(self) -> int:
+        return len(self._items)
+
+
 SCHEDULERS = {
     "fifo": FIFOScheduler,
     "sjf": SJFScheduler,
     "edf": EDFScheduler,
+    "wfq": WFQScheduler,
 }
 
 

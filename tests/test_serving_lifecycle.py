@@ -1,0 +1,221 @@
+"""Serving-lifecycle hardening (ISSUE 8): streaming previews, the
+queued→running→done/dropped state machine, and side-effect-free submit
+rejection.
+
+Load-bearing pins:
+
+  * ``stream(previews=True)`` yields ≥1 intermediate per-step snapshot
+    per running request, and the final ``Result`` — accept sequence,
+    counters AND sample, bitwise — is identical to a preview-free run
+    of the same engine config (previews are pure reads of lane state).
+  * ``status()`` walks queued → running → done; ``shutdown()`` reports
+    ``"dropped"`` (not ``"done"``) for drained/never-started requests
+    (pre-PR-8 bug), dropped Results stay pollable/releasable, and a
+    post-shutdown re-submit serves normally on a fresh session.
+  * A rejected ``submit()`` — guided decode, malformed/oversized decode
+    prompt, out-of-range draft depth, non-positive WFQ weight — leaves
+    NO side effects: no lazily-started session, no ticket issued, no
+    queue entry (pre-PR-8 the decode-prompt case submitted fine and
+    blew up ``fill_payload`` inside the live session one tick later).
+  * ``release()`` ↔ in-flight ``stream()`` cursors, and
+    ``result(max_ticks=)`` timeout semantics.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import SpeCaConfig, get_config, reduced
+from repro.core.workload import DecodeWorkload
+from repro.layers import model as M
+from repro.serving import Preview, Request, RequestPolicy, SpeCaEngine
+
+
+@pytest.fixture(scope="module")
+def base(tiny_trained_dit):
+    cfg, dcfg, params = tiny_trained_dit
+    scfg = SpeCaConfig(taylor_order=2, max_draft=8, tau0=0.4, beta=0.9)
+    return cfg, dcfg, params, scfg
+
+
+def _engine(base, **kw):
+    cfg, dcfg, params, scfg = base
+    return SpeCaEngine(cfg, params, dcfg, scfg, **kw)
+
+
+def _req(cfg, i, **pol):
+    return Request(request_id=i,
+                   cond={"labels": jnp.asarray([i % cfg.num_classes])},
+                   seed=100 + i,
+                   policy=RequestPolicy(**pol) if pol else None)
+
+
+def test_status_walks_queued_running_done_released(tiny_trained_dit,
+                                                   base):
+    cfg = base[0]
+    life = _engine(base, lanes=2)
+    tickets = [life.submit(_req(cfg, i)) for i in range(3)]
+    assert [life.status(t) for t in tickets] == ["queued"] * 3
+    life.tick()                       # width 2: two admitted, one waits
+    assert life.status(tickets[0]) == "running"
+    assert life.status(tickets[1]) == "running"
+    assert life.status(tickets[2]) == "queued"
+    res = life.result(tickets[0])
+    assert res.completed and life.status(tickets[0]) == "done"
+    life.release(tickets[0])
+    assert life.status(tickets[0]) == "released"
+    assert life.poll(tickets[0]) is None
+    assert life.status(987654) == "unknown"
+    for t in tickets[1:]:
+        assert life.result(t).completed
+
+
+def test_shutdown_reports_dropped_not_done(tiny_trained_dit, base):
+    cfg = base[0]
+    life = _engine(base, lanes=2)
+    tickets = [life.submit(_req(cfg, i)) for i in range(4)]
+    life.tick(2)                      # partial progress on two lanes
+    drained = life.shutdown()
+    assert {r.ticket_id for r in drained} \
+        == {t.ticket_id for t in tickets}
+    for t in tickets:
+        # the pre-PR-8 engine reported "done" here even though the
+        # request never finished (completed=False)
+        assert life.status(t) == "dropped"
+        res = life.poll(t)
+        assert res is not None and not res.completed
+    drained_mid = [r for r in drained if r.finish_tick is not None]
+    never_started = [r for r in drained if r.finish_tick is None]
+    assert len(drained_mid) == 2 and len(never_started) == 2
+    assert all(r.sample is None for r in never_started)
+    # dropped Results are releasable like done ones
+    life.release(*tickets)
+    assert all(life.status(t) == "released" for t in tickets)
+    # post-shutdown re-submit: fresh session, normal service
+    t = life.submit(_req(cfg, 9))
+    assert life.status(t) == "queued"
+    assert life.result(t).completed
+    assert life.status(t) == "done"
+
+
+def test_rejected_submit_leaves_no_side_effects(tiny_trained_dit, base):
+    cfg = base[0]
+    lm_cfg = reduced(get_config("llama3-8b"))
+    lm_params = M.init_params(lm_cfg, jax.random.PRNGKey(0))
+    wl = DecodeWorkload(lm_cfg, lm_params, SpeCaConfig(tau0=0.0),
+                        max_new_tokens=4, max_seq_len=10)
+    eng = _engine(base, workloads={"decode": wl})
+
+    def decode_req(rid, cond):
+        return Request(request_id=rid, cond=cond,
+                       policy=RequestPolicy(workload="decode"))
+
+    ok = np.zeros((1, 6), np.int32)
+    rejected = [
+        # guided decode: rejected at policy resolution
+        (pytest.raises(ValueError, match="guided"),
+         Request(request_id=0, cond={"tokens": ok},
+                 policy=RequestPolicy(workload="decode",
+                                      guidance_scale=2.0))),
+        # missing / malformed / oversized decode prompt payloads:
+        # rejected by Workload.validate_request at submit time
+        (pytest.raises(ValueError, match="tokens"),
+         decode_req(1, {})),
+        (pytest.raises(ValueError, match="prompt"),
+         decode_req(2, {"tokens": np.zeros((2, 6), np.int32)})),
+        (pytest.raises(ValueError, match="max_seq_len"),
+         decode_req(3, {"tokens": np.zeros((1, 9), np.int32)})),
+        # engine-level policy validation
+        (pytest.raises(ValueError, match="draft_depth"),
+         _req(cfg, 4, draft_depth=3)),
+        (pytest.raises(ValueError, match="weight"),
+         _req(cfg, 5, weight=0.0)),
+    ]
+    for ctx, req in rejected:
+        with ctx:
+            eng.submit(req)
+        # the pre-PR-8 submit lazily start()ed the workload session
+        # before validation could reject the request
+        assert eng._sessions == {}
+        assert eng.pending() == 0
+        assert eng._ticket_status == {}
+        assert eng._seq == 0          # no ticket id consumed
+    # a valid submit still works and starts exactly its own session
+    t = eng.submit(decode_req(6, {"tokens": ok}))
+    assert set(eng._sessions) == {"decode"}
+    assert eng.result(t).completed
+
+
+def test_stream_previews_progressive_and_bitwise_final(tiny_trained_dit,
+                                                       base):
+    cfg, dcfg = base[0], base[1]
+    S = dcfg.num_inference_steps
+    reqs = [_req(cfg, 0),
+            _req(cfg, 1, guidance_scale=3.0)]   # one unguided + one pair
+    life = _engine(base, lanes=2)
+    tickets = [life.submit(r) for r in reqs]
+    previews, finals = {}, {}
+    for item in life.stream(previews=True):
+        if isinstance(item, Preview):
+            previews.setdefault(item.ticket_id, []).append(item)
+        else:
+            finals[item.ticket_id] = item
+    # ≥1 intermediate snapshot per request, steps strictly increasing
+    # and strictly before the final state
+    assert set(previews) == {t.ticket_id for t in tickets}
+    assert set(finals) == {t.ticket_id for t in tickets}
+    for t, req in zip(tickets, reqs):
+        pvs = previews[t.ticket_id]
+        steps = [p.step for p in pvs]
+        assert len(pvs) >= 1
+        assert steps == sorted(set(steps)) and steps[-1] < S
+        assert all(p.request_id == req.request_id for p in pvs)
+        assert all(p.workload == "diffusion" for p in pvs)
+        # snapshots are real latents of the final sample's shape
+        final = np.asarray(finals[t.ticket_id].sample)
+        for p in pvs:
+            assert np.asarray(p.sample).shape == final.shape
+    # the intermediate states actually progress (denoising moves them)
+    p_first, p_last = previews[tickets[0].ticket_id][0], \
+        previews[tickets[0].ticket_id][-1]
+    assert not np.array_equal(np.asarray(p_first.sample),
+                              np.asarray(p_last.sample))
+    # final Results bitwise identical to a preview-free run
+    ref = _engine(base, lanes=2)
+    ref_tickets = [ref.submit(r) for r in reqs]
+    for t, rt in zip(tickets, ref_tickets):
+        a, b = finals[t.ticket_id], ref.result(rt)
+        assert a.accepts == b.accepts
+        assert (a.num_full, a.num_spec) == (b.num_full, b.num_spec)
+        assert np.array_equal(np.asarray(a.sample), np.asarray(b.sample))
+
+
+def test_release_mid_stream_keeps_cursor_valid(tiny_trained_dit, base):
+    cfg = base[0]
+    life = _engine(base, lanes=2)
+    tickets = [life.submit(_req(cfg, i)) for i in range(3)]
+    tids = {t.ticket_id for t in tickets}
+    gen = life.stream(tickets)
+    first = next(gen)
+    life.release(first.ticket_id)     # evict while the stream is open
+    rest = [r.ticket_id for r in gen]
+    assert first.ticket_id not in rest
+    assert set(rest) == tids - {first.ticket_id}
+    # a fresh stream over the same list: the released ticket is
+    # already-consumed, the others replay from the Result store
+    again = [r.ticket_id for r in life.stream(tickets)]
+    assert again == rest
+
+
+def test_result_max_ticks_timeout(tiny_trained_dit, base):
+    cfg = base[0]
+    life = _engine(base, lanes=2)
+    t = life.submit(_req(cfg, 0))
+    with pytest.raises(TimeoutError):
+        life.result(t, max_ticks=3)   # 20-step schedule: cannot finish
+    # the timeout left the request running with its progress intact
+    assert life.status(t) == "running"
+    res = life.result(t)
+    assert res.completed and res.finish_tick is not None
+    # zero budget on a completed ticket returns without ticking
+    assert life.result(t, max_ticks=0) is res

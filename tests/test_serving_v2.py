@@ -386,9 +386,14 @@ def test_stream_never_replays_and_release_evicts(tiny_trained_dit,
     assert life.poll(t1) is not None             # untouched
     with pytest.raises(KeyError):
         life.release(t0)                         # already gone
-    # released tickets are skipped by later ticket-list streams' guard
-    with pytest.raises(KeyError):
-        list(life.stream([t0]))                  # no longer known
+    # a released ticket is already-consumed, NOT unknown: streaming it
+    # again completes immediately with nothing to yield (the pre-PR-8
+    # engine wrongly raised KeyError here), and never blocks a mixed
+    # released+pending list
+    assert list(life.stream([t0])) == []
+    assert life.status(t0) == "released"
+    assert [r.ticket_id for r in life.stream([t0, t1])] \
+        == [t1.ticket_id]
 
 
 def test_serve_batched_never_drains_lifecycle_queue(tiny_trained_dit,

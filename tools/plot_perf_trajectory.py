@@ -14,7 +14,10 @@ JSON) tracking, per snapshot:
   * table kernel traffic (``predict+update MB`` moved per draft step,
     ``kernel`` backend row) from ``table_bench.json``;
   * EDF/SJF scheduler quality columns (``deadline_hit_rate``,
-    ``mean_completion_ticks``) when present.
+    ``mean_completion_ticks``) when present;
+  * sustained-load p50/p99 completion latency, deadline hit rate and
+    peak queue depth per scheduler from ``serve_load.json`` /
+    ``serve_load_queue.json`` (``benchmarks/serve_load.py``).
 
 This closes the ROADMAP "perf trajectory" item: download a few PRs'
 ``smoke-bench-results`` artifacts next to each other and run
@@ -98,6 +101,27 @@ def extract_series(entry: str) -> Dict[str, float]:
                 if guided:
                     key += " guided"
                 out[key] = float(rps)
+        elif name.startswith("serve_load_queue"):
+            # queue-depth-over-time rows: the cross-PR series is each
+            # scheduler's peak outstanding work (queued + in flight)
+            peaks: Dict[str, float] = {}
+            for row in rows:
+                sched = str(row.get("scheduler", "?"))
+                depth = float(row.get("queued", 0) or 0) \
+                    + float(row.get("in_flight", 0) or 0)
+                peaks[sched] = max(peaks.get(sched, 0.0), depth)
+            for sched, peak in peaks.items():
+                out[f"load peak-depth sched={sched}"] = peak
+        elif name.startswith("serve_load"):
+            for row in rows:
+                sched = str(row.get("scheduler", "?"))
+                for col, label in (("p50_latency", "p50-ticks"),
+                                   ("p99_latency", "p99-ticks"),
+                                   ("deadline_hit_rate", "hit-rate"),
+                                   ("req_per_s", "req/s")):
+                    if row.get(col) is not None:
+                        out[f"load {label} sched={sched}"] = \
+                            float(row[col])
         elif name.startswith("table_bench"):
             for row in rows:
                 if row.get("backend") == "kernel":
