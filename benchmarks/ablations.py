@@ -209,6 +209,107 @@ def table10_bf16_tables(batch=16):
     return rows
 
 
+def table11_controller_frontier(requests=4, lanes=2, steps=12,
+                                taus=(0.1, 0.3, 0.6)):
+    """Closed-loop controller vs static-τ frontier (ISSUE 9 tentpole).
+
+    For each τ0 on the grid, serve the SAME request batch twice through
+    ``SpeCaEngine``: a static engine (τ0 fixed for the whole schedule)
+    and a controller engine (``RequestPolicy.controller`` — accept-SLO
+    feedback adapting τ0/draft_k/order in flight, docs/forecasters.md).
+    Quality is ``rel_dev`` against a τ0=0 run of the same engine class —
+    τ0=0 rejects every draft, so those samples ARE exact full sampling
+    from each request's own noise.  Efficiency is the FLOPs speedup from
+    the engine's own accounting (S·full / served).
+
+    The tracked claim (the ``frontier_verdict`` row, asserted by the CI
+    smoke leg): every static operating point is dominated-or-matched by
+    SOME controller point — rel_dev no worse than static + eps AND
+    speedup no worse than static − eps.  In accept mode the controller's
+    τ0 can only tighten below its base (quality never degrades) while
+    depth adaptation recovers the speculation volume, so the controller
+    curve should trace the static frontier from above."""
+    import time
+
+    from repro.core.controller import ControllerPolicy
+    from repro.serving import Request, RequestPolicy, SpeCaEngine
+
+    cfg, dcfg, params = C.get_model("dit")
+    dcfg = dataclasses.replace(dcfg, num_inference_steps=steps)
+    n_tok = (dcfg.latent_size // cfg.patch_size) ** 2 \
+        * max(dcfg.num_frames, 1)
+    fwd = CX.forward_flops(cfg, n_tok)
+
+    def make_reqs(policy=None):
+        return [Request(request_id=i,
+                        cond={"labels": jnp.asarray([i % cfg.num_classes])},
+                        seed=i, policy=policy)
+                for i in range(requests)]
+
+    def serve(scfg, *, controller, policy=None, depth=1):
+        eng = SpeCaEngine(cfg, params, dcfg, scfg, max_draft_depth=depth,
+                          controller=controller)
+        t0 = time.time()
+        results = eng.serve_batched(make_reqs(policy), lanes=lanes)
+        return results, time.time() - t0
+
+    # exact full sampling per request: τ0 = 0 rejects every draft, so
+    # each sample is the plain sampler from that request's own noise
+    ref_results, _ = serve(SpeCaConfig(taylor_order=2, max_draft=8,
+                                       tau0=0.0, beta=0.9),
+                           controller=False)
+    ref = {r.request_id: np.asarray(r.sample) for r in ref_results}
+
+    def measure(results, wall, label, mode, tau0):
+        devs = [C.rel_dev(jnp.asarray(np.asarray(r.sample)),
+                          jnp.asarray(ref[r.request_id]))
+                for r in results]
+        served = sum(r.flops for r in results)
+        spec = sum(r.num_spec for r in results)
+        drafted = sum(r.num_drafted for r in results)
+        return {
+            "config": label, "mode": mode, "tau0": tau0,
+            "accept_rate": round(spec / max(drafted, 1), 4),
+            "rel_dev": round(float(np.mean(devs)), 5),
+            "speedup_flops": round(len(results) * steps * fwd / served, 3),
+            "ticks": sum(r.finish_tick for r in results),
+            "wall_s": round(wall, 2),
+        }
+
+    rows = []
+    cpol = RequestPolicy(controller=ControllerPolicy(
+        target_accept=0.5, gain=0.25, ema=0.6))
+    for tau0 in taus:
+        scfg = SpeCaConfig(taylor_order=2, max_draft=8, tau0=tau0,
+                           beta=0.9)
+        res_s, wall_s = serve(scfg, controller=False)
+        rows.append(measure(res_s, wall_s, f"static tau0={tau0}",
+                            "static", tau0))
+        res_c, wall_c = serve(scfg, controller=True, policy=cpol, depth=4)
+        rows.append(measure(res_c, wall_c, f"controller tau0={tau0}",
+                            "controller", tau0))
+
+    # frontier check: every static point dominated-or-matched by SOME
+    # controller point (eps-tolerant on both axes)
+    eps_dev, eps_speed = 0.02, 0.05
+    ctl = [r for r in rows if r["mode"] == "controller"]
+    verdicts = []
+    for srow in [r for r in rows if r["mode"] == "static"]:
+        verdicts.append(any(
+            c["rel_dev"] <= srow["rel_dev"] + eps_dev
+            and c["speedup_flops"] >= srow["speedup_flops"] - eps_speed
+            for c in ctl))
+    rows.append({"config": "frontier_verdict", "mode": "verdict",
+                 "controller_dominates": bool(all(verdicts)),
+                 "points_dominated": sum(verdicts),
+                 "points_total": len(verdicts),
+                 "eps_rel_dev": eps_dev, "eps_speedup": eps_speed})
+    C.print_table("table11_controller_frontier (closed-loop vs static τ)",
+                  rows)
+    C.write_result("table11_controller_frontier", rows)
+    return rows
+
+
 if __name__ == "__main__":
     table4_decay()
     table5_threshold()
@@ -217,6 +318,7 @@ if __name__ == "__main__":
     table8_metrics()
     speedup_model_check()
     table10_bf16_tables()
+    table11_controller_frontier()
 
 
 def table9_beyond_paper(batch=16):

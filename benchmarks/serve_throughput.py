@@ -49,6 +49,13 @@ once still counts K drafted steps and depths compare honestly. The win
 condition tracked by CI: ``depth=3,easy`` requests/s beats
 ``depth=1,easy``.
 
+``--forecaster taylor,spectral`` adds one row per forecaster family
+(pluggable forecasters, docs/forecasters.md): the same diffusion
+workload served by an engine compiled with that forecaster, with
+per-drafted-step accept rate and total served GFLOPs columns — the CI
+artifact tracks what the spectral frequency-band basis buys over the
+Taylor difference table at identical τ0 and width.
+
 ``--scheduler fifo,sjf,edf`` adds one row per admission scheduler
 (serving API v2) serving a MIXED-LENGTH workload: long full-schedule
 requests alternating with short ``max_steps=steps/4`` requests that
@@ -95,17 +102,19 @@ from repro.serving import (DecodeWorkload, Request, RequestPolicy,
 # printed table and the artifact JSON stay rectangular (print_table
 # takes its header from the first row)
 ROW_COLS = ("mode", "workload", "devices", "lanes", "guidance",
-            "scheduler", "draft_depth", "requests", "wall_s", "req_per_s",
-            "tok_per_s", "alpha_mean", "draft_accept_rate", "frac_easy",
-            "frac_hard", "speedup_easy", "speedup_hard", "speedup_all",
-            "serving_speedup", "trajectory_mismatches",
-            "mean_completion_ticks", "deadline_hit_rate")
+            "scheduler", "draft_depth", "forecaster", "requests", "wall_s",
+            "req_per_s", "tok_per_s", "alpha_mean", "draft_accept_rate",
+            "gflops", "frac_easy", "frac_hard", "speedup_easy",
+            "speedup_hard", "speedup_all", "serving_speedup",
+            "trajectory_mismatches", "mean_completion_ticks",
+            "deadline_hit_rate")
 
 
 def _row(**kw):
     row = {c: None for c in ROW_COLS}
     row.update({"workload": "diffusion", "devices": 1, "guidance": 0.0,
-                "scheduler": "fifo", "draft_depth": 1})
+                "scheduler": "fifo", "draft_depth": 1,
+                "forecaster": "taylor"})
     unknown = set(kw) - set(ROW_COLS)
     if unknown:
         raise KeyError(f"unknown row columns: {sorted(unknown)}")
@@ -457,6 +466,47 @@ def run_diffusion(args, model):
     return rows
 
 
+def run_forecasters(args, model):
+    """Forecaster comparison (``--forecaster taylor,spectral``): one row
+    per forecaster family serving the SAME diffusion workload on its own
+    engine — the Taylor difference table vs the spectral frequency-band
+    ring (docs/forecasters.md).  The tracked columns: per-drafted-step
+    accept rate and total served GFLOPs, so the artifact shows what each
+    extrapolation basis buys (or costs) at identical τ0/width."""
+    cfg, dcfg, params = model
+    scfg = SpeCaConfig(taylor_order=2, max_draft=8, tau0=args.tau0,
+                       beta=0.9)
+    names = [f for f in args.forecaster.split(",") if f]
+    reqs = make_requests(cfg, args.requests)
+    cond0 = {"labels": jnp.asarray([0])}
+    rows = []
+    n_tok = (dcfg.latent_size // cfg.patch_size) ** 2 \
+        * max(dcfg.num_frames, 1)
+    fwd = forward_flops(cfg, n_tok)
+    for name in names:
+        eng = SpeCaEngine(cfg, params, dcfg, scfg,
+                          accept_mode=args.accept_mode, forecaster=name)
+        eng.warmup(cond0, lanes=min(args.lanes, args.requests))
+        results, wall = bench(eng, reqs, lanes=args.lanes)
+        rep = allocation_report(results, fwd)
+        mean_ticks, _ = sched_stats(results)
+        rows.append(_row(
+            mode=f"forecaster={name}", forecaster=name,
+            lanes=eng.lane_width(args.lanes, len(reqs)),
+            requests=len(reqs),
+            wall_s=round(wall, 2),
+            req_per_s=round(len(reqs) / wall, 3),
+            draft_accept_rate=round(draft_accept_rate(results), 4),
+            gflops=round(sum(r.flops for r in results) / 1e9, 3),
+            mean_completion_ticks=round(mean_ticks, 2),
+            **_rep_cols(rep)))
+        print(f"forecaster={name}: accept/drafted "
+              f"{rows[-1]['draft_accept_rate']}, "
+              f"{rows[-1]['gflops']} GFLOPs, "
+              f"{rows[-1]['req_per_s']} req/s")
+    return rows
+
+
 def run_decode(args, lm):
     """LLM decode lanes: one engine, two request batches — speculative
     (τ0 = --decode-tau0) and reject-always (τ0 = 0, exact greedy
@@ -592,6 +642,11 @@ def main() -> None:
                     help=">0: classifier-free-guidance serving (paired "
                          "cond/uncond lanes) plus a split baseline row "
                          "serving the streams as independent requests")
+    ap.add_argument("--forecaster", default="",
+                    help="comma list of forecaster families to compare "
+                         "on the diffusion workload, e.g. taylor,"
+                         "spectral (adds one row per forecaster with "
+                         "accept-rate and GFLOPs columns)")
     ap.add_argument("--draft-depth", default="1",
                     help="comma list of draft horizons, e.g. 1,3: adds a "
                          "full-workload row and an easy-bucket row per "
@@ -626,6 +681,8 @@ def main() -> None:
     rows = []
     if "diffusion" in wls:
         rows += run_diffusion(args, model)
+        if args.forecaster:
+            rows += run_forecasters(args, model)
     if "decode" in wls:
         rows += run_decode(args, lm)
     if "mixed" in wls:

@@ -1,0 +1,298 @@
+"""Pluggable feature forecasters behind the lane step (the draft model).
+
+``repro.core.lane_step`` forecasts every lane's verify-layer features
+from a per-lane table, verifies the forecast against a full forward, and
+refreshes rejected lanes' table slices — but nothing in that loop cares
+*how* the table extrapolates.  This module extracts that seam: a
+``Forecaster`` owns the table layout (init/shape), the fused per-lane
+prediction (single step and draft-K chain), the lane-masked anchor
+refresh, and the rollback hook, all behind five traced methods.  The
+loop in ``build_workload_step`` calls only this surface.
+
+Two forecasters ship:
+
+``TaylorForecaster`` (default)
+    The extracted TaylorSeer difference-table code (``repro.core.taylor``,
+    paper §3.3) — a pure delegation wrapper, so the default lane step
+    traces to EXACTLY the pre-seam program (the seam pin in
+    ``tests/test_forecaster_seam.py`` asserts jaxpr + bitwise
+    trajectory identity against the frozen PR-8 step).
+
+``SpectralForecaster``
+    Per-lane frequency-band extrapolation (Adaptive Spectral Feature
+    Forecasting, PAPERS.md arxiv 2603.01623).  The table keeps the last
+    m+1 RAW anchor feature snapshots in a per-lane ring (row 0 = newest
+    anchor) — the SAME ``[m+1, L, 2, W, T, D]`` layout, dtype and anchor
+    metadata as the Taylor table, so sharding rules, engine fill/reset
+    and the bf16-table flag all apply unchanged.  Prediction projects
+    the M = m+1 samples onto the M discrete frequency bands (DFT
+    trigonometric extrapolation) with per-band damping
+    ``ρ^(ν_k·τ)`` — the alias-folded band index ν_k = min(k, M−k)
+    decays faster the further past the anchor (τ = d/gap) the forecast
+    reaches, which is what keeps high-frequency content from ringing at
+    extrapolation distances where Taylor's polynomial blows up.  At
+    τ = 0 the weights are exactly δ_{j0} (reproduce the newest anchor).
+    The masked ring-shift refresh is a new lane-masked Pallas kernel
+    (``repro.kernels.spectral``); the prediction contraction
+    Σ_j w_j·row_j reuses the fused Taylor prediction kernels (the
+    contraction is forecaster-agnostic — only the weight columns
+    differ).  ``REPRO_TABLE_BACKEND=jnp`` selects the staged jnp oracle
+    exactly as for the Taylor kernels.
+
+``order_cap`` (both forecasters): an optional per-lane [B] i32 vector
+capping the effective forecast order — Taylor trusts only Δ⁰..Δ^cap,
+spectral keeps only bands ν_k ≤ cap.  ``None`` (the default) adds
+nothing to the trace; the closed-loop controller
+(``repro.core.controller``) threads its per-lane order state through it.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax.numpy as jnp
+
+from repro.core import taylor
+
+
+class Forecaster:
+    """The lane-step forecaster protocol.
+
+    State contract: ``init_state`` returns a dict with exactly
+    ``state_keys`` — the feature table under ``"diffs"`` (layout
+    ``[m+1, *feat_shape]``; the name is historical, the semantics of the
+    m+1 rows belong to the forecaster) plus the per-lane anchor metadata
+    ``n_anchors``/``anchor_step``/``gap`` shared by every forecaster.
+    Keeping one state contract is what lets the engine's fill/reset and
+    the sharding rules (``repro.sharding.specs``) stay
+    forecaster-agnostic.
+    """
+
+    name: str = "?"
+    state_keys: Tuple[str, ...] = ("diffs", "n_anchors", "anchor_step",
+                                   "gap")
+
+    def init_state(self, order: int, feat_shape, dtype,
+                   lanes: int) -> Dict[str, Any]:
+        raise NotImplementedError
+
+    def warm(self, tstate: Dict[str, Any], scfg) -> jnp.ndarray:
+        """[B] bool — lanes whose table holds enough anchors to draft."""
+        raise NotImplementedError
+
+    def predict_lanes(self, tstate: Dict[str, Any], step, *,
+                      mode: str = "taylor", mesh: Optional[Any] = None,
+                      order_cap: Optional[jnp.ndarray] = None
+                      ) -> jnp.ndarray:
+        raise NotImplementedError
+
+    def predict_chain_lanes(self, tstate: Dict[str, Any], steps, *,
+                            mode: str = "taylor",
+                            mesh: Optional[Any] = None,
+                            order_cap: Optional[jnp.ndarray] = None
+                            ) -> jnp.ndarray:
+        raise NotImplementedError
+
+    def update_lanes(self, tstate: Dict[str, Any], feats, step, mask, *,
+                     mesh: Optional[Any] = None) -> Dict[str, Any]:
+        raise NotImplementedError
+
+    def lane_rollback(self, chain: jnp.ndarray, idx, *, lane_axis: int,
+                      mesh: Optional[Any] = None) -> jnp.ndarray:
+        """Payload-snapshot restore used by draft-K chains.  The table
+        itself never rolls back (it only refreshes at the closing full
+        forward), so both shipped forecasters share the exact-copy
+        kernel — the hook exists for forecasters that would need a
+        custom restore."""
+        return taylor.lane_rollback(chain, idx, lane_axis=lane_axis,
+                                    mesh=mesh)
+
+
+class TaylorForecaster(Forecaster):
+    """TaylorSeer difference tables — the extracted default.
+
+    Every method delegates to ``repro.core.taylor`` with the exact
+    call expressions the pre-seam lane step used, so the default-path
+    trace is unchanged (seam pin: ``tests/test_forecaster_seam.py``).
+    """
+
+    name = "taylor"
+
+    def init_state(self, order, feat_shape, dtype, lanes):
+        return taylor.init_state(order, feat_shape, dtype, lanes=lanes)
+
+    def warm(self, tstate, scfg):
+        return tstate["n_anchors"] > scfg.taylor_order
+
+    def predict_lanes(self, tstate, step, *, mode="taylor", mesh=None,
+                      order_cap=None):
+        return taylor.predict_lanes(tstate, step, mode=mode, mesh=mesh,
+                                    order_cap=order_cap)
+
+    def predict_chain_lanes(self, tstate, steps, *, mode="taylor",
+                            mesh=None, order_cap=None):
+        return taylor.predict_chain_lanes(tstate, steps, mode=mode,
+                                          mesh=mesh, order_cap=order_cap)
+
+    def update_lanes(self, tstate, feats, step, mask, *, mesh=None):
+        return taylor.update_lanes(tstate, feats, step, mask, mesh=mesh)
+
+
+def spectral_weights(order: int, d, gap, n_anchors, *,
+                     band_decay: float = 0.85,
+                     order_cap: Optional[jnp.ndarray] = None
+                     ) -> jnp.ndarray:
+    """Per-ring-row spectral extrapolation weights with validity masking.
+
+    The table rows are the last M = order+1 raw anchor snapshots at
+    relative positions u = 0, −1, …, −(M−1) anchor-gaps (row 0 newest).
+    Extrapolating to u = τ = d/gap through the length-M DFT gives the
+    row weights
+
+        w_j(τ) = (1/M) · Σ_k  ρ^(ν_k·τ) · cos(ω_k·(τ + j)),
+        ω_k = 2πk/M,  ν_k = min(k, M−k)
+
+    — trigonometric interpolation of the ring samples with each band
+    damped by ``band_decay`` per anchor-gap of extrapolation, scaled by
+    its folded frequency ν_k (DC never damps; the Nyquist band damps
+    fastest).  At τ = 0 the weights are exactly δ_{j0}.
+
+    ``d``/``gap``/``n_anchors`` may be scalars, per-lane [B] or chain
+    [K, B] arrays (weights [m+1], [m+1, B] or [m+1, K, B]).  Rows with
+    no anchor behind them (j ≥ n_anchors) get w = 0, like the Taylor
+    validity mask; ``order_cap`` [B] zeroes bands with ν_k > cap.
+    """
+    d = jnp.asarray(d, jnp.float32)
+    gap = jnp.asarray(gap, jnp.float32)
+    shape = jnp.broadcast_shapes(jnp.shape(d), jnp.shape(gap))
+    tau = jnp.broadcast_to(d / gap, shape)
+    M = order + 1
+    ws = []
+    for j in range(M):
+        acc = jnp.zeros(shape, jnp.float32)
+        for k in range(M):
+            nu = min(k, M - k)
+            damp = jnp.asarray(float(band_decay), jnp.float32) ** (nu * tau)
+            if order_cap is not None:
+                damp = jnp.where(nu <= order_cap, damp, 0.0)
+            acc = acc + damp * jnp.cos((2.0 * math.pi * k / M) * (tau + j))
+        ws.append(acc / M)
+    w = jnp.stack(ws)
+    valid = jnp.arange(M).reshape((-1,) + (1,) * len(shape)) < n_anchors
+    return jnp.where(valid, w, 0.0)
+
+
+class SpectralForecaster(Forecaster):
+    """Frequency-band extrapolation over a raw-anchor ring table.
+
+    ``band_decay`` ρ ∈ (0, 1] is the per-band damping base (see
+    :func:`spectral_weights`); ρ = 1 is pure trigonometric
+    extrapolation.  ``mode`` is accepted for lane-step symmetry but the
+    draft-mode families (newton/reuse/ab2) are Taylor-table concepts
+    and are ignored here.
+    """
+
+    name = "spectral"
+
+    def __init__(self, band_decay: float = 0.85) -> None:
+        if not 0.0 < band_decay <= 1.0:
+            raise ValueError(f"band_decay must be in (0, 1], "
+                             f"got {band_decay}")
+        self.band_decay = float(band_decay)
+
+    def init_state(self, order, feat_shape, dtype, lanes):
+        # same layout + metadata as the Taylor table; the rows hold raw
+        # anchor snapshots instead of differences
+        return taylor.init_state(order, feat_shape, dtype, lanes=lanes)
+
+    def warm(self, tstate, scfg):
+        # the ring needs all m+1 rows filled before the band projection
+        # is meaningful — the same warmup gate as the Taylor table
+        return tstate["n_anchors"] > scfg.taylor_order
+
+    def _weights(self, tstate, steps, order_cap):
+        d = (jnp.asarray(steps, jnp.int32) - tstate["anchor_step"]
+             ).astype(jnp.float32)
+        order = tstate["diffs"].shape[0] - 1
+        return spectral_weights(order, d, tstate["gap"],
+                                tstate["n_anchors"],
+                                band_decay=self.band_decay,
+                                order_cap=order_cap)
+
+    def predict_lanes(self, tstate, step, *, mode="taylor", mesh=None,
+                      order_cap=None):
+        w = self._weights(tstate, step, order_cap)
+        if taylor._table_backend() == "kernel":
+            from repro.kernels import ops
+            if mesh is not None:
+                return ops.spectral_predict_lanes_sharded(
+                    tstate["diffs"], w.astype(jnp.float32), mesh=mesh)
+            return ops.spectral_predict_lanes(tstate["diffs"],
+                                              w.astype(jnp.float32))
+        from repro.kernels.ref import spectral_predict_lanes_ref
+        return spectral_predict_lanes_ref(tstate["diffs"],
+                                          w.astype(jnp.float32))
+
+    def predict_chain_lanes(self, tstate, steps, *, mode="taylor",
+                            mesh=None, order_cap=None):
+        w = self._weights(tstate, steps, order_cap)
+        if taylor._table_backend() == "kernel":
+            from repro.kernels import ops
+            if mesh is not None:
+                return ops.spectral_predict_chain_lanes_sharded(
+                    tstate["diffs"], w.astype(jnp.float32), mesh=mesh)
+            return ops.spectral_predict_chain_lanes(tstate["diffs"],
+                                                    w.astype(jnp.float32))
+        from repro.kernels.ref import spectral_predict_chain_lanes_ref
+        return spectral_predict_chain_lanes_ref(tstate["diffs"],
+                                                w.astype(jnp.float32))
+
+    def update_lanes(self, tstate, feats, step, mask, *, mesh=None):
+        old = tstate["diffs"]
+        mask = jnp.asarray(mask, bool)
+        if taylor._table_backend() == "kernel":
+            from repro.kernels import ops
+            if mesh is not None:
+                diffs = ops.spectral_update_lanes_sharded(old, feats, mask,
+                                                          mesh=mesh)
+            else:
+                diffs = ops.spectral_update_lanes(old, feats, mask)
+        else:
+            from repro.kernels.ref import spectral_update_lanes_ref
+            diffs = spectral_update_lanes_ref(old, feats, mask)
+        # anchor metadata refreshes exactly as the Taylor table's does
+        step = jnp.broadcast_to(jnp.asarray(step, jnp.int32), mask.shape)
+        gap = jnp.where(tstate["anchor_step"] >= 0,
+                        (step - tstate["anchor_step"]).astype(jnp.float32),
+                        jnp.ones(mask.shape, jnp.float32))
+        return {
+            "diffs": diffs,
+            "n_anchors": jnp.where(mask, tstate["n_anchors"] + 1,
+                                   tstate["n_anchors"]),
+            "anchor_step": jnp.where(mask, step, tstate["anchor_step"]),
+            "gap": jnp.where(mask, jnp.maximum(gap, 1.0), tstate["gap"]),
+        }
+
+
+FORECASTERS = ("taylor", "spectral")
+
+
+def get_forecaster(forecaster) -> Forecaster:
+    """Resolve ``None`` / a name / a ``Forecaster`` instance.
+
+    ``None`` and ``"taylor"`` give the default ``TaylorForecaster`` —
+    the bitwise pre-seam path.
+    """
+    if forecaster is None:
+        return TaylorForecaster()
+    if isinstance(forecaster, Forecaster):
+        return forecaster
+    if isinstance(forecaster, str):
+        if forecaster == "taylor":
+            return TaylorForecaster()
+        if forecaster == "spectral":
+            return SpectralForecaster()
+        raise ValueError(f"unknown forecaster {forecaster!r} "
+                         f"(have {FORECASTERS})")
+    raise TypeError(f"forecaster must be None, a name in {FORECASTERS} "
+                    f"or a Forecaster instance, got {type(forecaster)}")

@@ -163,7 +163,9 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import DiffusionConfig, ModelConfig, SpeCaConfig
+from repro.core import controller as _ctl
 from repro.core import taylor
+from repro.core.forecaster import get_forecaster
 from repro.core.verify import relative_error, threshold_schedule
 from repro.diffusion.pipeline import guided_output
 
@@ -210,6 +212,8 @@ def init_workload_state(wl, lanes: int, cond_template: Dict[str, Any], *,
                         x: Optional[jnp.ndarray] = None,
                         active: bool = False,
                         guidance: Union[bool, str] = False,
+                        forecaster: Optional[Any] = None,
+                        controller: bool = False,
                         mesh: Optional[Any] = None) -> Dict[str, Any]:
     """Fresh lane-batch state for any ``Workload`` adapter.
 
@@ -242,6 +246,14 @@ def init_workload_state(wl, lanes: int, cond_template: Dict[str, Any], *,
     straddles a shard boundary (the guided combination is a cross-lane op
     inside the pair; keeping pairs shard-local keeps it
     communication-free).
+
+    ``forecaster`` selects the feature-forecast table implementation (a
+    name or ``repro.core.forecaster.Forecaster`` instance; ``None`` →
+    Taylor — bitwise the pre-seam state). ``controller=True`` adds the
+    all-off closed-loop controller vectors
+    (``repro.core.controller.CONTROLLER_KEYS``, all [W]) so a
+    controller-capable step program can read them; they too shard their
+    lane axis under ``mesh``.
     """
     W = lanes
     _check_guidance(guidance, W)
@@ -249,10 +261,11 @@ def init_workload_state(wl, lanes: int, cond_template: Dict[str, Any], *,
     if pairing and not wl.supports_pairing:
         raise ValueError(f"workload {wl.tag!r} does not support guided "
                          "lane pairs")
+    fc = get_forecaster(forecaster)
     feat_shape = taylor.feature_shape_for(wl.cfg.num_layers, W,
                                           wl.num_tokens, wl.cfg.d_model)
-    tstate = taylor.init_state(wl.scfg.taylor_order, feat_shape,
-                               wl.table_dtype, lanes=W)
+    tstate = fc.init_state(wl.scfg.taylor_order, feat_shape,
+                           wl.table_dtype, lanes=W)
     if wl.cond_in_state:
         cond = {k: jnp.broadcast_to(jnp.asarray(v), (W,) + jnp.shape(v)[1:])
                 for k, v in cond_template.items()}
@@ -274,6 +287,8 @@ def init_workload_state(wl, lanes: int, cond_template: Dict[str, Any], *,
     if pairing:
         state["gscale"] = jnp.ones((W,), jnp.float32)
         state["paired"] = jnp.full((W,), guidance is True)
+    if controller:
+        state.update(_ctl.init_controller_state(W, wl.scfg.taylor_order))
     if mesh is not None:
         from repro.sharding import specs as SH
         mult = SH.lane_width_multiple(mesh, streams=2 if pairing else 1)
@@ -310,6 +325,8 @@ def build_workload_step(wl, *, lanes: int, draft_mode: str = "taylor",
                         verify_backend: str = "jnp",
                         guidance: Union[bool, str] = False,
                         max_draft_depth: int = 1,
+                        forecaster: Optional[Any] = None,
+                        controller: bool = False,
                         mesh: Optional[Any] = None
                         ) -> Callable[[Dict[str, Any]],
                                       Tuple[Dict[str, Any], Dict[str, Any]]]:
@@ -357,8 +374,26 @@ def build_workload_step(wl, *, lanes: int, draft_mode: str = "taylor",
     at submit time). ``max_draft_depth=1`` builds the original depth-1
     program — the exact legacy trace, so the default is bit-for-bit the
     PR-5 engine.
+
+    ``forecaster`` picks the table implementation behind the draft: a
+    registered name (``"taylor"``/``"spectral"``), a
+    ``repro.core.forecaster.Forecaster`` instance, or ``None`` for the
+    Taylor default — whose built program is the IDENTICAL jaxpr to the
+    pre-seam step (the ``TaylorForecaster`` hooks inline to exactly the
+    expressions this module used to call; pinned in
+    ``tests/test_forecaster_seam.py``).
+
+    ``controller=True`` builds the closed-loop variant: state must carry
+    the ``repro.core.controller`` vectors (``init_workload_state(...,
+    controller=True)``), each lane's forecast weights are capped at its
+    adapted ``ctl_order``, and after every tick the traced controller
+    update adapts controller-on lanes' ``tau0``/``draft_k``/``ctl_order``
+    from their own accept statistics (see ``core/controller.py`` for the
+    SLO semantics). ``controller=False`` (default) adds no controller
+    ops at all — the trace is unchanged.
     """
     scfg = wl.scfg
+    fc = get_forecaster(forecaster)
     if accept_mode not in ACCEPT_MODES:
         raise ValueError(f"unknown accept_mode {accept_mode!r}")
     if verify_backend not in VERIFY_BACKENDS:
@@ -465,11 +500,11 @@ def build_workload_step(wl, *, lanes: int, draft_mode: str = "taylor",
         dyn = {k: state[k] for k in wl.dyn_keys}
         since, s, active = state["since"], state["step"], state["active"]
         cond = state["cond"]
-        tstate = {k: state[k] for k in
-                  ("diffs", "n_anchors", "anchor_step", "gap")}
+        tstate = {k: state[k] for k in fc.state_keys}
+        order_cap = state["ctl_order"] if controller else None
         s_eff = jnp.minimum(s, S - 1)
         ctx = wl.step_context(state, s_eff)                       # [W]
-        warm = tstate["n_anchors"] > scfg.taylor_order
+        warm = fc.warm(tstate, scfg)
         want = active & warm & (since < scfg.max_draft)
         if pairing:
             # a paired slot drafts iff BOTH its streams can (with the
@@ -485,8 +520,8 @@ def build_workload_step(wl, *, lanes: int, draft_mode: str = "taylor",
                                  scfg.beta)                       # [W]
 
         def attempt(dyn):
-            preds = taylor.predict_lanes(tstate, s_eff, mode=draft_mode,
-                                         mesh=mesh)
+            preds = fc.predict_lanes(tstate, s_eff, mode=draft_mode,
+                                     mesh=mesh, order_cap=order_cap)
             out, real_vl = wl.spec_forward(dyn, cond, ctx, preds)
             pred_vl = preds[vl][0] + preds[vl][1]
             if pairing:
@@ -515,9 +550,9 @@ def build_workload_step(wl, *, lanes: int, draft_mode: str = "taylor",
         def do_full(opers):
             dyn, tstate = opers
             out, branches = wl.full_forward(dyn, cond, ctx)
-            tstate = taylor.update_lanes(tstate, branches,
-                                         s_eff, active & ~accept,
-                                         mesh=mesh)
+            tstate = fc.update_lanes(tstate, branches,
+                                     s_eff, active & ~accept,
+                                     mesh=mesh)
             return out, tstate
 
         def keep(opers):
@@ -539,6 +574,12 @@ def build_workload_step(wl, *, lanes: int, draft_mode: str = "taylor",
         new_state = dict(state)
         new_state.update(since=since, step=s, active=active,
                          **dyn, **tstate)
+        if controller:
+            new_state.update(_ctl.controller_update(
+                state, step_new=s,
+                n_spec=accept.astype(jnp.int32),
+                n_drafted=want.astype(jnp.int32),
+                advanced=active.astype(jnp.int32), active=active))
         full = active & ~accept
         flags = {"attempted": want, "ok": ok, "accepted": accept,
                  "full": full, "err": err, "tau": tau,
@@ -560,17 +601,18 @@ def build_workload_step(wl, *, lanes: int, draft_mode: str = "taylor",
         dyn = {k: state[k] for k in wl.dyn_keys}
         since, s, active = state["since"], state["step"], state["active"]
         cond = state["cond"]
-        tstate = {k: state[k] for k in
-                  ("diffs", "n_anchors", "anchor_step", "gap")}
+        tstate = {k: state[k] for k in fc.state_keys}
+        order_cap = state["ctl_order"] if controller else None
         draft_k, max_step = state["draft_k"], state["max_step"]
-        warm = tstate["n_anchors"] > scfg.taylor_order
+        warm = fc.warm(tstate, scfg)
         # ONE fused table pass forecasts every lane at all K chain steps;
         # a lane alive at position j has accepted 0..j−1, so its step
         # there is exactly step₀ + j (clamped to the schedule end).
         steps_chain = jnp.minimum(
             s[None, :] + jnp.arange(K, dtype=jnp.int32)[:, None], S - 1)
-        preds_chain = taylor.predict_chain_lanes(tstate, steps_chain,
-                                                 mode=draft_mode, mesh=mesh)
+        preds_chain = fc.predict_chain_lanes(tstate, steps_chain,
+                                             mode=draft_mode, mesh=mesh,
+                                             order_cap=order_cap)
         alive = active
         stop_full = jnp.zeros((W,), bool)
         n_acc = jnp.zeros((W,), jnp.int32)
@@ -654,8 +696,8 @@ def build_workload_step(wl, *, lanes: int, draft_mode: str = "taylor",
         def do_full(opers):
             dyn, tstate = opers
             out, branches = wl.full_forward(dyn, cond, ctx)
-            tstate = taylor.update_lanes(tstate, branches,
-                                         s_eff, stop_full, mesh=mesh)
+            tstate = fc.update_lanes(tstate, branches,
+                                     s_eff, stop_full, mesh=mesh)
             return out, tstate
 
         def keep(opers):
@@ -674,6 +716,11 @@ def build_workload_step(wl, *, lanes: int, draft_mode: str = "taylor",
         new_state = dict(state)
         new_state.update(since=since, step=s, active=active,
                          **dyn, **tstate)
+        if controller:
+            new_state.update(_ctl.controller_update(
+                state, step_new=s, n_spec=n_acc, n_drafted=n_drafted,
+                advanced=n_acc + stop_full.astype(jnp.int32),
+                active=active))
         flags = {"attempted": c_att[0], "ok": ok0, "accepted": c_acc[0],
                  "full": stop_full, "err": c_err[0], "tau": c_tau[0],
                  "n_spec": n_acc, "n_drafted": n_drafted,
@@ -695,6 +742,8 @@ def build_lane_step(cfg: ModelConfig, params: Dict[str, Any],
                     use_flash: bool = False,
                     guidance: Union[bool, str] = False,
                     max_draft_depth: int = 1,
+                    forecaster: Optional[Any] = None,
+                    controller: bool = False,
                     mesh: Optional[Any] = None
                     ) -> Callable[[Dict[str, Any]],
                                   Tuple[Dict[str, Any], Dict[str, Any]]]:
@@ -710,4 +759,6 @@ def build_lane_step(cfg: ModelConfig, params: Dict[str, Any],
                                accept_mode=accept_mode,
                                verify_backend=verify_backend,
                                guidance=guidance,
-                               max_draft_depth=max_draft_depth, mesh=mesh)
+                               max_draft_depth=max_draft_depth,
+                               forecaster=forecaster,
+                               controller=controller, mesh=mesh)

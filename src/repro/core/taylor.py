@@ -142,12 +142,18 @@ def update_lanes(state: Dict[str, Any], feats: jnp.ndarray, step, mask,
 
 
 def prediction_weights(order: int, d, gap, n_anchors,
-                       mode: str = "taylor") -> jnp.ndarray:
+                       mode: str = "taylor", *,
+                       order_cap: Optional[Any] = None) -> jnp.ndarray:
     """Per-order weights w_i with validity masking.
 
     Only Δⁱ built from ≥ i+1 anchors are trusted; higher orders get w=0.
     ``d`` / ``gap`` / ``n_anchors`` may be scalars (whole-batch anchors) or
     per-lane [B] arrays, giving weights [m+1] or [m+1, B] respectively.
+
+    ``order_cap`` (optional, per-lane [B] i32) additionally zeroes the
+    weights of orders i > cap — the closed-loop controller's per-lane
+    forecast-order knob (``repro.core.controller``). ``None`` adds
+    nothing to the trace.
     """
     d = jnp.asarray(d, jnp.float32)
     gap = jnp.asarray(gap, jnp.float32)
@@ -178,8 +184,10 @@ def prediction_weights(order: int, d, gap, n_anchors,
             w = (d ** i) / (math.factorial(i) * (gap ** i))
         ws.append(jnp.broadcast_to(jnp.asarray(w, jnp.float32), shape))
     w = jnp.stack(ws)
-    valid = jnp.arange(order + 1).reshape((-1,) + (1,) * len(shape)) \
-        < n_anchors
+    orders = jnp.arange(order + 1).reshape((-1,) + (1,) * len(shape))
+    valid = orders < n_anchors
+    if order_cap is not None:
+        valid = valid & (orders <= order_cap)
     return jnp.where(valid, w, 0.0)
 
 
@@ -199,7 +207,8 @@ def predict(state: Dict[str, Any], step, mode: str = "taylor"
 def predict_lanes(state: Dict[str, Any], step, mode: str = "taylor",
                   *, lane_axis: int = 2,
                   backend: Optional[str] = None,
-                  mesh: Optional[Any] = None) -> jnp.ndarray:
+                  mesh: Optional[Any] = None,
+                  order_cap: Optional[Any] = None) -> jnp.ndarray:
     """Per-lane forecast: each lane extrapolates from its own anchor.
 
     ``step`` may be a scalar or per-lane [B]; the state must hold per-lane
@@ -215,7 +224,8 @@ def predict_lanes(state: Dict[str, Any], step, mode: str = "taylor",
     d = (jnp.asarray(step, jnp.int32) - state["anchor_step"]
          ).astype(jnp.float32)
     order = state["diffs"].shape[0] - 1
-    w = prediction_weights(order, d, state["gap"], state["n_anchors"], mode)
+    w = prediction_weights(order, d, state["gap"], state["n_anchors"], mode,
+                           order_cap=order_cap)
     if _table_backend(backend) == "kernel":
         from repro.kernels import ops
         if mesh is not None:
@@ -237,7 +247,8 @@ def predict_lanes(state: Dict[str, Any], step, mode: str = "taylor",
 def predict_chain_lanes(state: Dict[str, Any], steps,
                         mode: str = "taylor", *, lane_axis: int = 2,
                         backend: Optional[str] = None,
-                        mesh: Optional[Any] = None) -> jnp.ndarray:
+                        mesh: Optional[Any] = None,
+                        order_cap: Optional[Any] = None) -> jnp.ndarray:
     """Per-lane forecast of a whole drafted chain (draft-K speculation).
 
     ``steps`` is [K, B] — chain position k of lane b extrapolates the
@@ -251,7 +262,8 @@ def predict_chain_lanes(state: Dict[str, Any], steps,
     d = (jnp.asarray(steps, jnp.int32) - state["anchor_step"]
          ).astype(jnp.float32)                       # [K, B] via broadcast
     order = state["diffs"].shape[0] - 1
-    w = prediction_weights(order, d, state["gap"], state["n_anchors"], mode)
+    w = prediction_weights(order, d, state["gap"], state["n_anchors"], mode,
+                           order_cap=order_cap)
     if _table_backend(backend) == "kernel":
         from repro.kernels import ops
         if mesh is not None:

@@ -36,6 +36,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import flash_attention as _fa
+from repro.kernels import spectral as _sp
 from repro.kernels import taylor_predict as _tp
 from repro.kernels import verify_error as _ve
 from repro.kernels import ref as ref  # noqa: F401 (re-export for tests)
@@ -209,6 +210,43 @@ def taylor_update_lanes(old_diffs: jnp.ndarray, feats: jnp.ndarray,
     out = _tp.taylor_update_lanes_2d(od, f, mask, lanes=B, block_c=bc,
                                      interpret=_interpret())
     return out[:, :, :C].reshape((m1,) + feat)
+
+
+@functools.partial(jax.jit, static_argnames=("lane_axis", "block_c"))
+def spectral_update_lanes(old_ring: jnp.ndarray, feats: jnp.ndarray,
+                          mask: jnp.ndarray, *, lane_axis: int = 2,
+                          block_c: int = 8192) -> jnp.ndarray:
+    """Masked per-lane ring-shift refresh of the spectral raw-anchor
+    table (one pass).
+
+    old_ring [m+1, ...feat], feats [...feat], mask [B] (True = refresh
+    that lane) -> new ring [m+1, ...feat]: refreshed lanes shift their
+    ring (row 0 = feats, row i = old row i−1); accepted lanes' rows
+    pass through unchanged. Exact copies — bitwise against
+    ``ref.spectral_update_lanes_ref``.
+    """
+    m1 = old_ring.shape[0]
+    feat = old_ring.shape[1:]
+    G, B, C = _lane_fold(feat, lane_axis)
+    od = _pad_to(old_ring.reshape(m1, G * B, C), 2, 128)
+    f = _pad_to(feats.astype(old_ring.dtype).reshape(G * B, C), 1, 128)
+    cp = od.shape[2]
+    bc = min(block_c, cp)
+    while cp % bc:
+        bc //= 2
+    out = _sp.spectral_update_lanes_2d(od, f, mask, lanes=B, block_c=bc,
+                                       interpret=_interpret())
+    return out[:, :, :C].reshape((m1,) + feat)
+
+
+# The spectral PREDICTION is the same fused per-lane contraction
+# Σ_j w_j·table_j the Taylor kernels run — only the weight columns
+# differ (frequency-band extrapolation weights computed in
+# ``repro.core.forecaster.spectral_weights``). The named aliases keep
+# the spectral kernel surface complete and let the two diverge later
+# without touching callers.
+spectral_predict_lanes = taylor_predict_lanes
+spectral_predict_chain_lanes = taylor_predict_chain_lanes
 
 
 @functools.partial(jax.jit, static_argnames=("eps", "block_c"))
@@ -440,6 +478,28 @@ def taylor_update_lanes_sharded(old_diffs: jnp.ndarray, feats: jnp.ndarray,
                            block_c=block_c)
     return _shard_map(fn, mesh, (dspec, fspec, mspec),
                       dspec)(old_diffs, feats, mask)
+
+
+def spectral_update_lanes_sharded(old_ring: jnp.ndarray,
+                                  feats: jnp.ndarray, mask: jnp.ndarray,
+                                  *, mesh, lane_axis: int = 2,
+                                  axis_name: str = "data",
+                                  block_c: int = 8192) -> jnp.ndarray:
+    """Masked per-lane ring shift with the lane axis sharded: each shard
+    shifts its own lanes' ring rows in place — the raw-anchor table is
+    never gathered."""
+    fspec = _lane_p(feats.ndim, lane_axis, axis_name)
+    dspec = _lane_p(old_ring.ndim, lane_axis + 1, axis_name)
+    mspec = _lane_p(1, 0, axis_name)
+    fn = functools.partial(spectral_update_lanes, lane_axis=lane_axis,
+                           block_c=block_c)
+    return _shard_map(fn, mesh, (dspec, fspec, mspec),
+                      dspec)(old_ring, feats, mask)
+
+
+# sharded spectral prediction: the shared contraction, spectral weights
+spectral_predict_lanes_sharded = taylor_predict_lanes_sharded
+spectral_predict_chain_lanes_sharded = taylor_predict_chain_lanes_sharded
 
 
 def verify_accept_sharded(pred: jnp.ndarray, ref_: jnp.ndarray,

@@ -76,6 +76,55 @@ def taylor_update_lanes_ref(old_diffs: jnp.ndarray, feats: jnp.ndarray,
     return jnp.where(jnp.asarray(mask, bool).reshape(mshape), new, old_diffs)
 
 
+def spectral_update_lanes_ref(old_ring: jnp.ndarray, feats: jnp.ndarray,
+                              mask: jnp.ndarray, *, lane_axis: int = 2
+                              ) -> jnp.ndarray:
+    """Masked per-lane ring-shift oracle (spectral raw-anchor table).
+
+    old_ring [m+1, ...feat], feats [...feat], mask [B] (True = refresh
+    that lane) -> new ring: refreshed lanes get row 0 = feats and row i
+    = old row i−1 (the oldest snapshot drops); untouched lanes keep all
+    rows. Exact copies — bitwise against the Pallas kernel."""
+    new = jnp.concatenate([feats[None].astype(old_ring.dtype),
+                           old_ring[:-1]], axis=0)
+    mshape = [1] * old_ring.ndim
+    mshape[lane_axis + 1] = mask.shape[0]
+    return jnp.where(jnp.asarray(mask, bool).reshape(mshape), new, old_ring)
+
+
+def spectral_predict_lanes_ref(ring: jnp.ndarray, weights: jnp.ndarray, *,
+                               lane_axis: int = 2) -> jnp.ndarray:
+    """Per-lane spectral forecast oracle: Σ_j w_j·row_j, sequential f32
+    accumulation in the kernel's association order — agreement with the
+    fused prediction kernel is at multiply-add fusion rounding (≤1 ulp
+    per term: XLA may contract the kernel's mul+add into an FMA), far
+    tighter than the reduction-order gap of the einsum Taylor oracle.
+
+    ring [m+1, ...feat], weights [m+1, B] with ``lane_axis`` the lane
+    axis of the feature layout -> prediction [...feat]."""
+    wshape = [1] * (ring.ndim - 1)
+    wshape[lane_axis] = weights.shape[1]
+    w = weights.astype(jnp.float32)
+    acc = w[0].reshape(wshape) * ring[0].astype(jnp.float32)
+    for i in range(1, ring.shape[0]):
+        acc = acc + w[i].reshape(wshape) * ring[i].astype(jnp.float32)
+    return acc.astype(ring.dtype)
+
+
+def spectral_predict_chain_lanes_ref(ring: jnp.ndarray,
+                                     weights: jnp.ndarray, *,
+                                     lane_axis: int = 2) -> jnp.ndarray:
+    """Per-lane spectral CHAIN forecast oracle (draft-K speculation).
+
+    ring [m+1, ...feat], weights [m+1, K, B] -> predictions
+    [K, ...feat]; position k equals :func:`spectral_predict_lanes_ref`
+    with weights[:, k] (same sequential accumulation)."""
+    return jnp.stack([
+        spectral_predict_lanes_ref(ring, weights[:, k],
+                                   lane_axis=lane_axis)
+        for k in range(weights.shape[1])])
+
+
 def verify_error_ref(pred: jnp.ndarray, ref: jnp.ndarray,
                      eps: float = 1e-8) -> jnp.ndarray:
     """Per-sample relative L2: ‖p−r‖₂ / (‖r‖₂ + ε). pred/ref [B, N] -> [B]."""

@@ -80,7 +80,9 @@ import jax
 import numpy as np
 
 from repro.configs.base import DiffusionConfig, ModelConfig, SpeCaConfig
+from repro.core import controller as CT
 from repro.core import lane_step as LS
+from repro.core.forecaster import get_forecaster
 from repro.core.workload import DiffusionWorkload, Workload
 from repro.diffusion.pipeline import null_cond_like
 from repro.serving.policy import QueueFull, RequestPolicy, Ticket
@@ -308,7 +310,9 @@ class _Session:
         if self.state is None:
             self.state = LS.init_workload_state(
                 wl, self.W, req.cond if wl.cond_in_state else {},
-                guidance="mixed" if self.paired else False, mesh=e.mesh)
+                guidance="mixed" if self.paired else False,
+                forecaster=e.forecaster, controller=e.controller,
+                mesh=e.mesh)
         tau0 = float(wl.scfg.tau0 if pol.tau0 is None else pol.tau0)
         lane0 = entry.lanes[0]
         # draft_k is pair-equal by construction: a guided pair drafts
@@ -345,6 +349,14 @@ class _Session:
         state["step"] = state["step"].at[lane].set(0)
         state["active"] = state["active"].at[lane].set(True)
         state["tau0"] = state["tau0"].at[lane].set(tau0)
+        if self.e.controller:
+            # closed-loop lanes start at the request's resolved knobs;
+            # controller-free lanes get the all-off row (bitwise inert)
+            cv = CT.lane_values(entry.item.policy.controller, tau0=tau0,
+                                order=wl.scfg.taylor_order,
+                                max_draft_depth=self.e.max_draft_depth)
+            for ck, cval in cv.items():
+                state[ck] = state[ck].at[lane].set(cval)
         if wl.cond_in_state:
             state["cond"] = {k: v.at[lane].set(cond[k][0])
                              for k, v in state["cond"].items()}
@@ -364,7 +376,11 @@ class _Session:
         self.state = state
         self._flag_log.append(flags)
         self.tick += 1
-        deep = any(e.draft_k > 1 for e in self.entries())
+        # controller entries adapt draft_k ON DEVICE, so their host-side
+        # draft_k is only the starting point: treat them as deep (their
+        # per-tick advancement is data-dependent like any chain lane)
+        deep = any(e.draft_k > 1 or e.item.policy.controller is not None
+                   for e in self.entries())
         adv = self._fetch(self.tick - 1)["advanced"] if deep else None
         completed: List[Tuple[_Entry, Result]] = []
         for entry in self.entries():
@@ -519,6 +535,21 @@ class SpeCaEngine:
     lanes:
       * default lane width of the lifecycle session started by the
         first ``submit`` (``serve_batched`` takes its own ``lanes=``).
+    forecaster:
+      * the feature-forecast table implementation behind the draft — a
+        registered name (``"taylor"``/``"spectral"``) or a
+        ``repro.core.forecaster.Forecaster`` instance. The default
+        (``None`` → Taylor) builds the IDENTICAL trace to the
+        pre-forecaster engine (``docs/forecasters.md``).
+    controller:
+      * ``True`` compiles the controller-capable step program: requests
+        carrying a ``RequestPolicy.controller``
+        (``repro.core.controller.ControllerPolicy``) get closed-loop
+        per-lane adaptation of τ0 / draft depth / forecast order toward
+        their SLO; controller-free requests in the same batch are
+        bitwise unaffected. The default ``False`` builds the exact
+        controller-free program, and controller policies are rejected
+        at submit time (mirroring ``max_draft_depth``).
     workloads:
       * extra ``Workload`` adapters keyed by tag, e.g. ``{"decode":
         DecodeWorkload(lm_cfg, lm_params, scfg, ...)}``. Requests route
@@ -543,6 +574,8 @@ class SpeCaEngine:
                  default_policy: Optional[RequestPolicy] = None,
                  max_draft_depth: int = 1,
                  lanes: int = 4,
+                 forecaster: Any = None,
+                 controller: bool = False,
                  workloads: Optional[Dict[str, Workload]] = None):
         if accept_mode not in LS.ACCEPT_MODES:
             raise ValueError(f"unknown accept_mode {accept_mode!r}")
@@ -597,6 +630,11 @@ class SpeCaEngine:
         self.default_policy = default_policy
         self.max_draft_depth = int(max_draft_depth)
         self.default_lanes = lanes
+        # resolve the forecaster NOW so a bad name fails at construction,
+        # not at first compile; the instance is fixed per engine (part of
+        # every session's compiled program)
+        self.forecaster = get_forecaster(forecaster)
+        self.controller = bool(controller)
         # lanes one request occupies under the legacy engine-wide mode:
         # 1, or 2 for a guidance=True engine — kept for lane_width()
         self._streams = 2 if self.guidance else 1
@@ -650,6 +688,17 @@ class SpeCaEngine:
                 f"draft_depth={dk} outside this engine's compiled chain "
                 f"(1..max_draft_depth={self.max_draft_depth}); construct "
                 "SpeCaEngine(max_draft_depth=K) to serve deeper drafts")
+        if pol.controller is not None:
+            if not isinstance(pol.controller, CT.ControllerPolicy):
+                raise TypeError(
+                    "RequestPolicy.controller must be a "
+                    "repro.core.controller.ControllerPolicy, got "
+                    f"{type(pol.controller).__name__}")
+            if not self.controller:
+                raise ValueError(
+                    "this engine compiled the controller-free step "
+                    "program; construct SpeCaEngine(controller=True) to "
+                    "serve closed-loop requests")
         if not pol.weight > 0:
             raise ValueError(
                 f"RequestPolicy.weight must be > 0, got {pol.weight}")
@@ -675,6 +724,7 @@ class SpeCaEngine:
                 draft_mode=self.draft_mode, accept_mode=self.accept_mode,
                 verify_backend=self.verify_backend,
                 guidance=mode, max_draft_depth=self.max_draft_depth,
+                forecaster=self.forecaster, controller=self.controller,
                 mesh=self.mesh))
         return self._lane_fns[key]
 

@@ -24,6 +24,8 @@ from __future__ import annotations
 import dataclasses
 from typing import Any, Dict, Optional
 
+from repro.core.controller import ControllerPolicy
+
 
 @dataclasses.dataclass(frozen=True)
 class RequestPolicy:
@@ -94,6 +96,17 @@ class RequestPolicy:
         tenant should agree on the weight (the ledger charges each
         request at its own weight, so disagreeing requests just shift
         that tenant's internal order).
+    controller:
+        Closed-loop per-lane adaptation policy
+        (``repro.core.controller.ControllerPolicy``): the request's τ0,
+        draft depth and forecast order become *starting points* that a
+        traced feedback controller adapts in-flight from the lane's own
+        accept statistics toward an accept-rate or deadline SLO
+        (``docs/forecasters.md``). ``None`` (default) serves the request
+        statically — bitwise the controller-free engine, even when
+        sharing a batch with controlled requests. Requires an engine
+        constructed with ``controller=True`` (the controller-capable
+        step program); rejected at submit time otherwise.
     """
 
     guidance_scale: Optional[float] = None
@@ -106,6 +119,7 @@ class RequestPolicy:
     deadline: Optional[float] = None
     tenant: str = "default"
     weight: float = 1.0
+    controller: Optional[ControllerPolicy] = None
 
     @property
     def guided(self) -> bool:

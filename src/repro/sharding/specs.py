@@ -256,6 +256,15 @@ LANE_STATE_AXES = {
     "draft_k": 0, "max_step": 0,
     "tok": 0, "tokens": 0, "pos0": 0,
     "k": 1, "v": 1, "ssm_state": 1, "conv_state": 1,
+    # closed-loop controller vectors (repro.core.controller): all [W]
+    # lane-local statistics/bounds, updated inside the traced step with
+    # no cross-lane traffic — plain axis-0 lane shards
+    "ctl_on": 0, "ctl_dl": 0, "ctl_rate": 0, "ctl_adv": 0,
+    "ctl_target": 0, "ctl_gain": 0, "ctl_ema": 0,
+    "ctl_tau_lo": 0, "ctl_tau_hi": 0, "ctl_tau_base": 0,
+    "ctl_k_lo": 0, "ctl_k_hi": 0,
+    "ctl_order": 0, "ctl_order_lo": 0, "ctl_order_hi": 0,
+    "ctl_ticks": 0, "ctl_deadline": 0,
 }
 
 

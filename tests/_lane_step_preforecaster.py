@@ -1,0 +1,373 @@
+"""FROZEN pre-forecaster-seam lane step (PR-8 HEAD snapshot).
+
+This module is the oracle for ``tests/test_forecaster_seam.py``: a
+verbatim copy of ``repro.core.lane_step.init_workload_state`` /
+``build_workload_step`` as they stood BEFORE the forecaster seam
+(``core/forecaster.py``) was extracted.  The seam pin asserts that the
+refactored step with the default ``TaylorForecaster`` builds the exact
+same trace (and bitwise-identical multi-step trajectories) as this
+snapshot, for diffusion AND decode workloads at depth 1 and K=3.
+
+Do not "modernise" this file — its value is that it does NOT track
+``lane_step.py``.  (Same convention as ``tests/_speca_prerefactor.py``.)
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Optional, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import taylor
+from repro.core.verify import relative_error, threshold_schedule
+from repro.diffusion.pipeline import guided_output
+
+ACCEPT_MODES = ("batch", "per_sample")
+VERIFY_BACKENDS = ("fused", "jnp")
+GUIDANCE_MODES = (False, True, "mixed")
+
+
+def _check_guidance(guidance: Union[bool, str], lanes: int) -> None:
+    if guidance not in GUIDANCE_MODES:
+        raise ValueError(f"unknown guidance mode {guidance!r} "
+                         f"(have {GUIDANCE_MODES})")
+    if guidance is True and lanes % 2 != 0:
+        raise ValueError(f"guidance mode packs lane PAIRS: lanes={lanes} "
+                         "must be even")
+
+
+def init_workload_state(wl, lanes: int, cond_template: Dict[str, Any], *,
+                        x: Optional[jnp.ndarray] = None,
+                        active: bool = False,
+                        guidance: Union[bool, str] = False,
+                        mesh: Optional[Any] = None) -> Dict[str, Any]:
+    """PR-8 snapshot of ``lane_step.init_workload_state``."""
+    W = lanes
+    _check_guidance(guidance, W)
+    pairing = bool(guidance)
+    if pairing and not wl.supports_pairing:
+        raise ValueError(f"workload {wl.tag!r} does not support guided "
+                         "lane pairs")
+    feat_shape = taylor.feature_shape_for(wl.cfg.num_layers, W,
+                                          wl.num_tokens, wl.cfg.d_model)
+    tstate = taylor.init_state(wl.scfg.taylor_order, feat_shape,
+                               wl.table_dtype, lanes=W)
+    if wl.cond_in_state:
+        cond = {k: jnp.broadcast_to(jnp.asarray(v), (W,) + jnp.shape(v)[1:])
+                for k, v in cond_template.items()}
+    else:
+        cond = {}
+    state = {
+        "since": jnp.zeros((W,), jnp.int32),
+        "step": jnp.zeros((W,), jnp.int32),
+        "active": jnp.full((W,), bool(active)),
+        "tau0": jnp.full((W,), float(wl.scfg.tau0), jnp.float32),
+        "draft_k": jnp.ones((W,), jnp.int32),
+        "max_step": jnp.full((W,), wl.num_steps, jnp.int32),
+        "cond": cond,
+        **wl.init_payload(W, x=x),
+        **tstate,
+    }
+    if pairing:
+        state["gscale"] = jnp.ones((W,), jnp.float32)
+        state["paired"] = jnp.full((W,), guidance is True)
+    if mesh is not None:
+        from repro.sharding import specs as SH
+        mult = SH.lane_width_multiple(mesh, streams=2 if pairing else 1)
+        if W % mult != 0:
+            raise ValueError(
+                f"lanes={W} not divisible by {mult} (lane-shard count "
+                f"{SH.lane_shard_count(mesh)}"
+                + (" × 2 streams — a pair slot must never straddle a "
+                   "shard boundary)" if pairing else ")"))
+        state = jax.device_put(state, SH.lane_state_shardings(mesh, state))
+    return state
+
+
+def build_workload_step(wl, *, lanes: int, draft_mode: str = "taylor",
+                        accept_mode: str = "per_sample",
+                        verify_backend: str = "jnp",
+                        guidance: Union[bool, str] = False,
+                        max_draft_depth: int = 1,
+                        mesh: Optional[Any] = None
+                        ) -> Callable[[Dict[str, Any]],
+                                      Tuple[Dict[str, Any], Dict[str, Any]]]:
+    """PR-8 snapshot of ``lane_step.build_workload_step``."""
+    scfg = wl.scfg
+    if accept_mode not in ACCEPT_MODES:
+        raise ValueError(f"unknown accept_mode {accept_mode!r}")
+    if verify_backend not in VERIFY_BACKENDS:
+        raise ValueError(f"unknown verify_backend {verify_backend!r}")
+    if max_draft_depth < 1:
+        raise ValueError(f"max_draft_depth must be >= 1, "
+                         f"got {max_draft_depth}")
+    if scfg.error_metric != "rel_l2":
+        verify_backend = "jnp"     # the fused kernel implements eq. 4 only
+    _check_guidance(guidance, lanes)
+    if bool(guidance) and not wl.supports_pairing:
+        raise ValueError(f"workload {wl.tag!r} does not support guided "
+                         "lane pairs")
+    W = lanes
+    NP = W // 2                    # number of pair slots (pair modes)
+    pairing = bool(guidance) and NP > 0
+    S = wl.num_steps
+    vl = wl.verify_layer
+
+    def pair_head(v):
+        return v[:2 * NP].reshape((NP, 2) + v.shape[1:])
+
+    def with_tail(head2, v):
+        out = head2.reshape((2 * NP,) + head2.shape[2:])
+        if W % 2:
+            out = jnp.concatenate([out, v[2 * NP:]], axis=0)
+        return out
+
+    def pair_select(paired, pair_val, lane_val):
+        pm = paired.reshape((W,) + (1,) * (lane_val.ndim - 1))
+        return jnp.where(pm, pair_val, lane_val)
+
+    def pair_combine(out, gscale, paired):
+        h = pair_head(out)
+        gs_p = pair_head(gscale)[:, 0]
+        g = guided_output(h[:, 0], h[:, 1], gs_p)
+        gb = with_tail(jnp.broadcast_to(g[:, None],
+                                        (NP, 2) + g.shape[1:]), out)
+        return pair_select(paired, gb, out)
+
+    def verify(pred_vl, real_vl, tau):
+        tau = jnp.broadcast_to(jnp.asarray(tau, jnp.float32), (W,))
+        if verify_backend == "fused":
+            from repro.kernels import ops
+            if mesh is not None:
+                return ops.verify_accept_sharded(pred_vl.reshape(W, -1),
+                                                 real_vl.reshape(W, -1),
+                                                 tau, mesh=mesh,
+                                                 eps=scfg.eps)
+            return ops.verify_accept(pred_vl.reshape(W, -1),
+                                     real_vl.reshape(W, -1), tau,
+                                     eps=scfg.eps)
+        err = relative_error(pred_vl, real_vl, metric=scfg.error_metric,
+                             eps=scfg.eps, batch_axis=0)
+        return err, err <= tau
+
+    def verify_mixed(pred_vl, real_vl, tau, gs, paired):
+        tau = jnp.broadcast_to(jnp.asarray(tau, jnp.float32), (W,))
+        if verify_backend == "fused":
+            from repro.kernels import ops
+            if mesh is not None:
+                return ops.verify_accept_mixed_sharded(
+                    pred_vl.reshape(W, -1), real_vl.reshape(W, -1),
+                    tau, gs, paired, mesh=mesh, eps=scfg.eps)
+            return ops.verify_accept_mixed(
+                pred_vl.reshape(W, -1), real_vl.reshape(W, -1),
+                tau, gs, paired, eps=scfg.eps)
+        err_lane = relative_error(pred_vl, real_vl,
+                                  metric=scfg.error_metric,
+                                  eps=scfg.eps, batch_axis=0)
+        ph = pair_head(pred_vl).astype(jnp.float32)
+        rh = pair_head(real_vl).astype(jnp.float32)
+        gs_p = pair_head(gs)[:, 0]
+        err_p = relative_error(
+            guided_output(ph[:, 0], ph[:, 1], gs_p),
+            guided_output(rh[:, 0], rh[:, 1], gs_p),
+            metric=scfg.error_metric, eps=scfg.eps, batch_axis=0)
+        err_pair = with_tail(jnp.broadcast_to(err_p[:, None], (NP, 2)),
+                             err_lane)
+        err = jnp.where(paired, err_pair, err_lane)
+        return err, err <= tau
+
+    def step(state: Dict[str, Any]
+             ) -> Tuple[Dict[str, Any], Dict[str, Any]]:
+        dyn = {k: state[k] for k in wl.dyn_keys}
+        since, s, active = state["since"], state["step"], state["active"]
+        cond = state["cond"]
+        tstate = {k: state[k] for k in
+                  ("diffs", "n_anchors", "anchor_step", "gap")}
+        s_eff = jnp.minimum(s, S - 1)
+        ctx = wl.step_context(state, s_eff)                       # [W]
+        warm = tstate["n_anchors"] > scfg.taylor_order
+        want = active & warm & (since < scfg.max_draft)
+        if pairing:
+            h = pair_head(want)
+            both = h[:, 0] & h[:, 1]
+            pw = with_tail(jnp.broadcast_to(both[:, None], (NP, 2)), want)
+            want = jnp.where(state["paired"], pw, want)
+        tau = threshold_schedule(wl.t_frac(s_eff), state["tau0"],
+                                 scfg.beta)                       # [W]
+
+        def attempt(dyn):
+            preds = taylor.predict_lanes(tstate, s_eff, mode=draft_mode,
+                                         mesh=mesh)
+            out, real_vl = wl.spec_forward(dyn, cond, ctx, preds)
+            pred_vl = preds[vl][0] + preds[vl][1]
+            if pairing:
+                err, ok = verify_mixed(pred_vl, real_vl, tau,
+                                       state["gscale"], state["paired"])
+            else:
+                err, ok = verify(pred_vl, real_vl, tau)
+            return out, jnp.where(want, err, jnp.nan), ok & want
+
+        def skip(dyn):
+            return (wl.zero_out(W),
+                    jnp.full((W,), jnp.nan, jnp.float32),
+                    jnp.zeros((W,), bool))
+
+        out_spec, err, ok = jax.lax.cond(jnp.any(want), attempt, skip, dyn)
+        if accept_mode == "batch":
+            accept = want & jnp.all(ok | ~want)
+        else:
+            accept = want & ok
+        need_full = jnp.any(active & ~accept)
+
+        def do_full(opers):
+            dyn, tstate = opers
+            out, branches = wl.full_forward(dyn, cond, ctx)
+            tstate = taylor.update_lanes(tstate, branches,
+                                         s_eff, active & ~accept,
+                                         mesh=mesh)
+            return out, tstate
+
+        def keep(opers):
+            dyn, tstate = opers
+            return wl.zero_out(W), tstate
+
+        out_full, tstate = jax.lax.cond(need_full, do_full, keep,
+                                        (dyn, tstate))
+        out = wl.select_out(accept, out_spec, out_full)
+        if pairing:
+            out = pair_combine(out, state["gscale"], state["paired"])
+        dyn_next = wl.advance(dyn, out, ctx, s_eff)
+        dyn = wl.select_dyn(active, dyn_next, dyn)
+        since = jnp.where(accept, since + 1, jnp.where(active, 0, since))
+        s = s + active.astype(jnp.int32)
+        new_state = dict(state)
+        new_state.update(since=since, step=s, active=active,
+                         **dyn, **tstate)
+        full = active & ~accept
+        flags = {"attempted": want, "ok": ok, "accepted": accept,
+                 "full": full, "err": err, "tau": tau,
+                 "n_spec": accept.astype(jnp.int32),
+                 "n_drafted": want.astype(jnp.int32),
+                 "advanced": active.astype(jnp.int32),
+                 "chain_attempted": want[None], "chain_accepted": accept[None],
+                 "chain_err": err[None], "chain_tau": tau[None]}
+        return new_state, flags
+
+    if max_draft_depth == 1:
+        return step
+    K = int(max_draft_depth)
+
+    def chain_step(state: Dict[str, Any]
+                   ) -> Tuple[Dict[str, Any], Dict[str, Any]]:
+        dyn = {k: state[k] for k in wl.dyn_keys}
+        since, s, active = state["since"], state["step"], state["active"]
+        cond = state["cond"]
+        tstate = {k: state[k] for k in
+                  ("diffs", "n_anchors", "anchor_step", "gap")}
+        draft_k, max_step = state["draft_k"], state["max_step"]
+        warm = tstate["n_anchors"] > scfg.taylor_order
+        steps_chain = jnp.minimum(
+            s[None, :] + jnp.arange(K, dtype=jnp.int32)[:, None], S - 1)
+        preds_chain = taylor.predict_chain_lanes(tstate, steps_chain,
+                                                 mode=draft_mode, mesh=mesh)
+        alive = active
+        stop_full = jnp.zeros((W,), bool)
+        n_acc = jnp.zeros((W,), jnp.int32)
+        n_drafted = jnp.zeros((W,), jnp.int32)
+        snaps = [dyn]
+        c_att, c_acc, c_err, c_tau = [], [], [], []
+        ok0 = None
+        for j in range(K):
+            s_eff = jnp.minimum(s, S - 1)
+            ctx = wl.step_context(state, s_eff)
+            budget = (draft_k > j) & (s < max_step)
+            want = alive & budget & warm & (since < scfg.max_draft)
+            if pairing:
+                h = pair_head(want)
+                both = h[:, 0] & h[:, 1]
+                pw = with_tail(jnp.broadcast_to(both[:, None], (NP, 2)),
+                               want)
+                want = jnp.where(state["paired"], pw, want)
+            tau = threshold_schedule(wl.t_frac(s_eff), state["tau0"],
+                                     scfg.beta)
+            preds = preds_chain[j]
+
+            def attempt(dyn, want=want, tau=tau, ctx=ctx, preds=preds):
+                out, real_vl = wl.spec_forward(dyn, cond, ctx, preds)
+                pred_vl = preds[vl][0] + preds[vl][1]
+                if pairing:
+                    err, ok = verify_mixed(pred_vl, real_vl, tau,
+                                           state["gscale"],
+                                           state["paired"])
+                else:
+                    err, ok = verify(pred_vl, real_vl, tau)
+                return out, jnp.where(want, err, jnp.nan), ok & want
+
+            def skip(dyn):
+                return (wl.zero_out(W),
+                        jnp.full((W,), jnp.nan, jnp.float32),
+                        jnp.zeros((W,), bool))
+
+            out_spec, err, ok = jax.lax.cond(jnp.any(want), attempt, skip,
+                                             dyn)
+            if accept_mode == "batch":
+                acc = want & jnp.all(ok | ~want)
+            else:
+                acc = want & ok
+            stop_full = stop_full | (alive & budget & ~acc)
+            out = out_spec
+            if pairing:
+                out = pair_combine(out, state["gscale"], state["paired"])
+            dyn = wl.advance(dyn, out, ctx, s_eff)
+            snaps.append(dyn)
+            since = jnp.where(acc, since + 1, since)
+            s = s + acc.astype(jnp.int32)
+            n_acc = n_acc + acc.astype(jnp.int32)
+            n_drafted = n_drafted + want.astype(jnp.int32)
+            alive = acc
+            if j == 0:
+                ok0 = ok
+            c_att.append(want)
+            c_acc.append(acc)
+            c_err.append(err)
+            c_tau.append(tau)
+        chain = {k: jnp.stack([sn[k] for sn in snaps]) for k in wl.dyn_keys}
+        dyn = wl.rollback(chain, n_acc, mesh=mesh)
+        s_eff = jnp.minimum(s, S - 1)
+        ctx = wl.step_context(state, s_eff)
+        need_full = jnp.any(stop_full)
+
+        def do_full(opers):
+            dyn, tstate = opers
+            out, branches = wl.full_forward(dyn, cond, ctx)
+            tstate = taylor.update_lanes(tstate, branches,
+                                         s_eff, stop_full, mesh=mesh)
+            return out, tstate
+
+        def keep(opers):
+            dyn, tstate = opers
+            return wl.zero_out(W), tstate
+
+        out_full, tstate = jax.lax.cond(need_full, do_full, keep,
+                                        (dyn, tstate))
+        if pairing:
+            out_full = pair_combine(out_full, state["gscale"],
+                                    state["paired"])
+        dyn_f = wl.advance(dyn, out_full, ctx, s_eff)
+        dyn = wl.select_dyn(stop_full, dyn_f, dyn)
+        since = jnp.where(stop_full, 0, since)
+        s = s + stop_full.astype(jnp.int32)
+        new_state = dict(state)
+        new_state.update(since=since, step=s, active=active,
+                         **dyn, **tstate)
+        flags = {"attempted": c_att[0], "ok": ok0, "accepted": c_acc[0],
+                 "full": stop_full, "err": c_err[0], "tau": c_tau[0],
+                 "n_spec": n_acc, "n_drafted": n_drafted,
+                 "advanced": n_acc + stop_full.astype(jnp.int32),
+                 "chain_attempted": jnp.stack(c_att),
+                 "chain_accepted": jnp.stack(c_acc),
+                 "chain_err": jnp.stack(c_err),
+                 "chain_tau": jnp.stack(c_tau)}
+        return new_state, flags
+
+    return chain_step

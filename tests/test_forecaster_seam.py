@@ -1,0 +1,266 @@
+"""Forecaster-seam equivalence pins (ISSUE 9 tentpole).
+
+``core/forecaster.py`` extracted the Taylor table behind a ``Forecaster``
+protocol; these pins freeze the refactor's zero-cost claim against
+``tests/_lane_step_preforecaster.py`` (a verbatim PR-8 HEAD snapshot of
+``lane_step``):
+
+  * the default path (``forecaster=None`` → Taylor, ``controller=False``)
+    builds the IDENTICAL trace — jaxpr string equality, not allclose —
+    for diffusion AND decode workloads at depth 1 and K=3 chains;
+  * driven to completion, the seamed step reproduces the frozen step's
+    per-tick flags and final lane state bitwise, leaf for leaf;
+  * the spectral shard_map wrappers match their unsharded kernels
+    bit-for-bit at D ∈ {2, 4} forced host devices (D=1 lives in
+    tests/test_kernels.py; the multi-device runs sit in a subprocess so
+    XLA_FLAGS never leaks into this process);
+  * ``warmup()`` on a spectral+controller engine pre-compiles the
+    spectral slot program — real traffic afterwards triggers NO new
+    compilation.
+"""
+import functools
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import SpeCaConfig, get_config, reduced
+from repro.core import lane_step as LS
+from repro.core.workload import DecodeWorkload, DiffusionWorkload
+from repro.layers import model as M
+from repro.serving import Request, RequestPolicy, SpeCaEngine
+
+import _lane_step_preforecaster as OLD
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+W = 4
+P, G = 8, 10   # decode: prompt length / new tokens
+
+
+@functools.lru_cache(maxsize=None)
+def _lm():
+    cfg = reduced(get_config("llama3-8b"))
+    return cfg, M.init_params(cfg, jax.random.PRNGKey(0))
+
+
+def _decode_wl(scfg):
+    cfg, params = _lm()
+    return cfg, DecodeWorkload(cfg, params, scfg, max_new_tokens=G,
+                               max_seq_len=P + G)
+
+
+def _assert_tree_bitwise(got, want, where):
+    ka = jax.tree_util.tree_leaves_with_path(got)
+    kb = jax.tree_util.tree_leaves_with_path(want)
+    assert len(ka) == len(kb), where
+    for (pa, la), (pb, lb) in zip(ka, kb):
+        assert pa == pb, (where, pa, pb)
+        a, b = np.asarray(la), np.asarray(lb)
+        # byte equality = genuinely bitwise (NaN placeholder rows in the
+        # chain_err flag would defeat array_equal)
+        assert (a.dtype == b.dtype and a.shape == b.shape
+                and a.tobytes() == b.tobytes()), \
+            f"{where}: leaf {jax.tree_util.keystr(pa)} diverged"
+
+
+# ---------------------------------------------------------------------------
+# Trace identity: the seam is free
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("K", [1, 3])
+def test_diffusion_seam_jaxpr_identical(tiny_trained_dit, K):
+    """Same state in, same TRACE out: the seamed diffusion step (default
+    Taylor forecaster, controller off) prints the exact jaxpr of the
+    frozen PR-8 step — at depth 1 and as a K=3 chain."""
+    cfg, dcfg, params = tiny_trained_dit
+    scfg = SpeCaConfig(taylor_order=2, max_draft=6, tau0=0.05, beta=0.9)
+    wl = DiffusionWorkload(cfg, params=params, dcfg=dcfg, scfg=scfg)
+    cond = {"labels": jnp.asarray([0])}
+    state = LS.init_workload_state(wl, W, cond, active=True)
+    _assert_tree_bitwise(state, OLD.init_workload_state(wl, W, cond,
+                                                        active=True),
+                         "init_workload_state")
+    f_new = LS.build_workload_step(wl, lanes=W, max_draft_depth=K)
+    f_old = OLD.build_workload_step(wl, lanes=W, max_draft_depth=K)
+    assert str(jax.make_jaxpr(f_new)(state)) == \
+        str(jax.make_jaxpr(f_old)(state))
+
+
+@pytest.mark.parametrize("K", [1, 3])
+def test_decode_seam_jaxpr_identical(K):
+    """The seam is workload-agnostic: the decode (self-speculation) step
+    traces identically through the forecaster protocol too."""
+    cfg, wl = _decode_wl(SpeCaConfig(tau0=5.0))
+    state = LS.init_workload_state(wl, 2, {}, active=True)
+    _assert_tree_bitwise(state, OLD.init_workload_state(wl, 2, {},
+                                                        active=True),
+                         "init_workload_state")
+    f_new = LS.build_workload_step(wl, lanes=2, verify_backend="fused",
+                                   max_draft_depth=K)
+    f_old = OLD.build_workload_step(wl, lanes=2, verify_backend="fused",
+                                    max_draft_depth=K)
+    assert str(jax.make_jaxpr(f_new)(state)) == \
+        str(jax.make_jaxpr(f_old)(state))
+
+
+# ---------------------------------------------------------------------------
+# Trajectory identity: driven to completion, bitwise
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("K", [1, 3])
+def test_diffusion_seam_trajectory_bitwise(tiny_trained_dit, K):
+    """Full sampling runs through both steps land on the SAME state:
+    per-tick flags and every final lane-state leaf bitwise equal, with
+    real speculation in flight (accepts AND refreshes both non-zero)."""
+    cfg, dcfg, params = tiny_trained_dit
+    scfg = SpeCaConfig(taylor_order=2, max_draft=6, tau0=0.5, beta=0.9)
+    wl = DiffusionWorkload(cfg, params=params, dcfg=dcfg, scfg=scfg)
+
+    def seed_state():
+        state = LS.init_workload_state(wl, W, {"labels": jnp.asarray([0])},
+                                       active=True)
+        for lane in range(W):
+            req = Request(request_id=lane,
+                          cond={"labels": jnp.asarray([lane % 8])},
+                          seed=lane)
+            state = wl.fill_payload(state, lane, req, wl.num_steps)
+        return state
+
+    s_new, s_old = seed_state(), seed_state()
+    f_new = jax.jit(LS.build_workload_step(wl, lanes=W, max_draft_depth=K))
+    f_old = jax.jit(OLD.build_workload_step(wl, lanes=W,
+                                            max_draft_depth=K))
+    spec = full = 0
+    for tick in range(2 * wl.num_steps):
+        if not bool(np.asarray(s_new["active"]).any()):
+            break
+        s_new, fl_new = f_new(s_new)
+        s_old, fl_old = f_old(s_old)
+        _assert_tree_bitwise(fl_new, fl_old, f"flags @tick {tick}")
+        spec += int(np.asarray(fl_new["n_spec"]).sum())
+        full += int(np.asarray(fl_new["full"]).sum())
+        s_new["active"] = s_new["active"] & (s_new["step"]
+                                             < s_new["max_step"])
+        s_old["active"] = s_old["active"] & (s_old["step"]
+                                             < s_old["max_step"])
+    assert not bool(np.asarray(s_new["active"]).any())
+    assert spec > 0 and full > 0   # non-vacuous: both branches exercised
+    _assert_tree_bitwise(s_new, s_old, "final state")
+
+
+def test_decode_seam_trajectory_bitwise():
+    """Same pin for the decode workload at K=3: emitted tokens, caches,
+    tables — every leaf — bitwise across the seam."""
+    cfg, wl = _decode_wl(SpeCaConfig(tau0=5.0))
+    prompt = np.asarray(jax.random.randint(jax.random.PRNGKey(7), (1, P),
+                                           0, cfg.vocab_size), np.int32)
+    req = Request(request_id=0, cond={"tokens": prompt},
+                  policy=RequestPolicy(workload="decode"))
+
+    def run(build):
+        state = LS.init_workload_state(wl, 1, {}, active=True)
+        state = wl.fill_payload(state, 0, req, G)
+        state["draft_k"] = jnp.full((1,), 3, jnp.int32)
+        step = jax.jit(build(wl, lanes=1, verify_backend="fused",
+                             max_draft_depth=3))
+        spec = 0
+        while int(state["step"][0]) < G:
+            state, flags = step(state)
+            spec += int(flags["n_spec"][0])
+        return state, spec
+
+    s_new, spec_new = run(LS.build_workload_step)
+    s_old, spec_old = run(OLD.build_workload_step)
+    assert spec_new == spec_old and spec_new > 0
+    _assert_tree_bitwise(s_new, s_old, "decode final state")
+
+
+# ---------------------------------------------------------------------------
+# Spectral shard_map wrappers at D ∈ {2, 4} (subprocess)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_spectral_sharded_parity_multi_device_subprocess():
+    """The spectral sharded wrappers (ring update, predict, chain
+    predict) are pure lane-parallel maps: at D ∈ {2, 4} forced host
+    devices each must match its unsharded kernel BIT-FOR-BIT — the
+    copies exactly and the per-lane contractions too (each lane's FMA
+    sequence runs on exactly one shard, so no reduction crosses a
+    device boundary)."""
+    code = textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+        import json
+        import jax, numpy as np
+        import jax.numpy as jnp
+        from repro.kernels import ops
+        from repro.launch.mesh import make_lane_mesh
+
+        m1, feat, lane_axis = 4, (2, 2, 8, 12, 24), 2
+        B = feat[lane_axis]
+        key = jax.random.PRNGKey(5)
+        ring = jax.random.normal(key, (m1,) + feat, jnp.float32)
+        feats = jax.random.normal(jax.random.fold_in(key, 1), feat)
+        mask = jnp.asarray([True, False] * (B // 2))
+        w = jax.random.normal(jax.random.fold_in(key, 2), (m1, B))
+        wc = jax.random.normal(jax.random.fold_in(key, 3), (m1, 3, B))
+        res = {}
+        for D in (2, 4):
+            mesh = make_lane_mesh(D)
+            res[f"d{D}_update"] = bool(np.array_equal(
+                np.asarray(ops.spectral_update_lanes_sharded(
+                    ring, feats, mask, mesh=mesh, lane_axis=lane_axis)),
+                np.asarray(ops.spectral_update_lanes(
+                    ring, feats, mask, lane_axis=lane_axis))))
+            res[f"d{D}_predict"] = bool(np.array_equal(
+                np.asarray(ops.spectral_predict_lanes_sharded(
+                    ring, w, mesh=mesh, lane_axis=lane_axis)),
+                np.asarray(ops.spectral_predict_lanes(
+                    ring, w, lane_axis=lane_axis))))
+            res[f"d{D}_chain"] = bool(np.array_equal(
+                np.asarray(ops.spectral_predict_chain_lanes_sharded(
+                    ring, wc, mesh=mesh, lane_axis=lane_axis)),
+                np.asarray(ops.spectral_predict_chain_lanes(
+                    ring, wc, lane_axis=lane_axis))))
+        print(json.dumps(res))
+    """)
+    env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run([sys.executable, "-c", code], env=env,
+                         capture_output=True, text=True, timeout=560)
+    assert out.returncode == 0, out.stderr[-2000:]
+    res = json.loads(out.stdout.strip().splitlines()[-1])
+    for D in (2, 4):
+        for op in ("update", "predict", "chain"):
+            assert res[f"d{D}_{op}"], (D, op, res)
+
+
+# ---------------------------------------------------------------------------
+# warmup() pre-compiles the spectral slot program
+# ---------------------------------------------------------------------------
+
+def test_warmup_precompiles_spectral_program(tiny_trained_dit):
+    """``warmup()`` on a spectral+controller engine must compile the
+    spectral slot program up front: the slot key appears in the program
+    cache, and serving real traffic at the same width afterwards adds NO
+    new entry (the timed path never compiles)."""
+    cfg, dcfg, params = tiny_trained_dit
+    scfg = SpeCaConfig(taylor_order=2, max_draft=6, tau0=0.05, beta=0.9)
+    eng = SpeCaEngine(cfg, params, dcfg, scfg, forecaster="spectral",
+                      controller=True)
+    assert not eng._lane_fns
+    eng.warmup({"labels": np.asarray([0])}, lanes=2)
+    assert ("diffusion", 2, False) in eng._lane_fns
+    n_programs = len(eng._lane_fns)
+    res = eng.serve_batched(
+        [Request(request_id=i, cond={"labels": np.asarray([i % 8])},
+                 seed=i) for i in range(2)], lanes=2)
+    assert all(r.completed for r in res)
+    assert len(eng._lane_fns) == n_programs

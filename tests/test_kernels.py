@@ -464,3 +464,218 @@ def test_flash_matches_model_attention_path():
     flash = A.full_attention(q, k, v, 0, use_flash=True)
     np.testing.assert_allclose(np.asarray(flash), np.asarray(naive),
                                rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# Spectral forecaster kernels: raw-anchor ring-shift + shared contraction
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("feat,lane_axis", [
+    ((2, 2, 3, 13, 24), 2),    # serving layout (L, 2, B, T, D), odd T/D
+    ((3, 5, 7), 1),            # odd everything, interior lane axis
+    ((4, 2, 1, 33, 40), 2),    # single lane
+    ((6, 129), 0),             # lane-leading, one past the 128 tile
+])
+def test_spectral_update_lanes_kernel_bitwise(feat, lane_axis, dtype):
+    """The masked ring-shift refresh is BIT-IDENTICAL to the staged
+    (concatenate + where) oracle — refreshed lanes shift their ring one
+    row (newest anchor in, oldest out), masked-out lanes pass through
+    untouched. Exact copies at every dtype."""
+    m1 = 4
+    B = feat[lane_axis]
+    key = jax.random.PRNGKey(sum(feat) + 13)
+    ring = jax.random.normal(key, (m1,) + feat, jnp.float32).astype(dtype)
+    feats = jax.random.normal(jax.random.fold_in(key, 1), feat,
+                              jnp.float32).astype(dtype)
+    mask = jnp.asarray([i % 2 == 0 for i in range(B)])
+    got = ops.spectral_update_lanes(ring, feats, mask, lane_axis=lane_axis)
+    want = R.spectral_update_lanes_ref(ring, feats, mask,
+                                       lane_axis=lane_axis)
+    assert got.shape == ring.shape and got.dtype == ring.dtype
+    assert np.array_equal(np.asarray(got, np.float32),
+                          np.asarray(want, np.float32))
+    gm = np.moveaxis(np.asarray(got, np.float32), lane_axis + 1, 1)
+    rm = np.moveaxis(np.asarray(ring, np.float32), lane_axis + 1, 1)
+    fm = np.moveaxis(np.asarray(feats, np.float32), lane_axis, 0)
+    for b in range(B):
+        if bool(mask[b]):
+            # row 0 = new anchor, row i = old row i-1, oldest dropped
+            assert np.array_equal(gm[0, b], fm[b])
+            assert np.array_equal(gm[1:, b], rm[:-1, b])
+        else:
+            assert np.array_equal(gm[:, b], rm[:, b])
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("feat,lane_axis", [
+    ((2, 2, 3, 13, 24), 2),
+    ((3, 5, 7), 1),
+    ((6, 129), 0),
+])
+def test_spectral_predict_lanes_kernel_vs_oracle(feat, lane_axis, dtype):
+    """The spectral prediction is the SAME fused per-lane contraction
+    the Taylor kernels run (only the weight columns differ), and the
+    spectral jnp oracle replays the kernel's sequential f32 accumulation
+    order — agreement is at multiply-add FUSION rounding (XLA may
+    contract mul+add into an FMA: ≤1 ulp per term), orders tighter than
+    the einsum Taylor oracle's reduction-order tolerance."""
+    m1 = 4
+    B = feat[lane_axis]
+    key = jax.random.PRNGKey(sum(feat) + 29)
+    ring = jax.random.normal(key, (m1,) + feat, jnp.float32).astype(dtype)
+    w = jax.random.normal(jax.random.fold_in(key, 1), (m1, B))
+    got = ops.spectral_predict_lanes(ring, w, lane_axis=lane_axis)
+    want = R.spectral_predict_lanes_ref(ring, w, lane_axis=lane_axis)
+    assert got.shape == feat and got.dtype == ring.dtype
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=1e-6, atol=1e-6)
+
+
+@pytest.mark.parametrize("K", [1, 3])
+def test_spectral_predict_chain_position_k_is_single_step(K):
+    """Chain position k through the spectral kernel surface is the SAME
+    FMA sequence as the single-step kernel with weight column k
+    (BITWISE — both run the one kernel program), and the chain oracle
+    tracks the chain kernel to multiply-add fusion rounding."""
+    m1, feat, lane_axis = 3, (2, 2, 3, 13, 24), 2
+    B = feat[lane_axis]
+    key = jax.random.PRNGKey(K + 41)
+    ring = jax.random.normal(key, (m1,) + feat, jnp.float32)
+    w = jax.random.normal(jax.random.fold_in(key, 1), (m1, K, B))
+    got = ops.spectral_predict_chain_lanes(ring, w, lane_axis=lane_axis)
+    want = R.spectral_predict_chain_lanes_ref(ring, w,
+                                              lane_axis=lane_axis)
+    assert got.shape == (K,) + feat
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-6, atol=1e-6)
+    for k in range(K):
+        single = ops.spectral_predict_lanes(ring, w[:, k],
+                                            lane_axis=lane_axis)
+        assert np.array_equal(np.asarray(got[k]), np.asarray(single)), k
+
+
+def test_spectral_bf16_table_quantisation_bounded():
+    """bf16 raw-anchor rings: the contraction accumulates in f32, so a
+    bf16 ring's prediction stays within bf16 rounding of the f32-ring
+    prediction, and the bf16 ring-shift is still exact copies."""
+    m1, feat, lane_axis = 4, (2, 2, 3, 13, 24), 2
+    B = feat[lane_axis]
+    key = jax.random.PRNGKey(53)
+    ring = jax.random.normal(key, (m1,) + feat, jnp.float32)
+    w = jax.random.normal(jax.random.fold_in(key, 1), (m1, B))
+    got = ops.spectral_predict_lanes(ring.astype(jnp.bfloat16), w,
+                                     lane_axis=lane_axis)
+    want = ops.spectral_predict_lanes(ring, w, lane_axis=lane_axis)
+    assert got.dtype == jnp.bfloat16
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=3e-2, atol=3e-2)
+    feats = jax.random.normal(jax.random.fold_in(key, 2), feat)
+    mask = jnp.asarray([True, False, True])
+    got = ops.spectral_update_lanes(ring.astype(jnp.bfloat16),
+                                    feats.astype(jnp.bfloat16), mask,
+                                    lane_axis=lane_axis)
+    want = R.spectral_update_lanes_ref(ring.astype(jnp.bfloat16),
+                                       feats.astype(jnp.bfloat16), mask,
+                                       lane_axis=lane_axis)
+    assert got.dtype == jnp.bfloat16
+    assert np.array_equal(np.asarray(got, np.float32),
+                          np.asarray(want, np.float32))
+
+
+def test_spectral_weights_semantics():
+    """The frequency-band weights: exactly-at-anchor (d=0) selects the
+    newest ring row; rows beyond a lane's anchor history get weight 0;
+    ``order_cap`` masks high bands so a capped lane's weights change
+    while an uncapped lane's are untouched."""
+    from repro.core.forecaster import spectral_weights
+    order = 3
+    gap = jnp.full((4,), 2.0)
+    n_anchors = jnp.asarray([5, 2, 5, 5], jnp.int32)
+    w0 = spectral_weights(order, jnp.zeros((4,), jnp.int32), gap,
+                          n_anchors)
+    assert w0.shape == (order + 1, 4)
+    np.testing.assert_allclose(np.asarray(w0[0]), 1.0, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(w0[1:, 0]), 0.0, atol=1e-6)
+    # lane 1 has only 2 anchors: rows >= 2 are EXACTLY zero at any d
+    wd = spectral_weights(order, jnp.full((4,), 3, jnp.int32), gap,
+                          n_anchors)
+    assert np.all(np.asarray(wd[2:, 1]) == 0.0)
+    assert np.any(np.asarray(wd[1:, 0]) != 0.0)
+    # order_cap: capped lane's weights differ, uncapped lane's bitwise
+    cap = jnp.asarray([0, 3, 3, 3], jnp.int32)
+    wc = spectral_weights(order, jnp.full((4,), 3, jnp.int32), gap,
+                          n_anchors, order_cap=cap)
+    assert not np.array_equal(np.asarray(wc[:, 0]), np.asarray(wd[:, 0]))
+    assert np.array_equal(np.asarray(wc[:, 2:]), np.asarray(wd[:, 2:]))
+
+
+def test_spectral_sharded_wrappers_bitwise_d1():
+    """The 1-device shard_map wrappers of the spectral kernel surface
+    ARE their unsharded kernels bit-for-bit (D ∈ {2, 4} runs in the
+    ``tests/test_forecaster_seam.py`` subprocess)."""
+    from repro.launch.mesh import make_lane_mesh
+
+    mesh = make_lane_mesh(1)
+    m1, feat, lane_axis = 3, (2, 2, 4, 12, 24), 2
+    B = feat[lane_axis]
+    key = jax.random.PRNGKey(61)
+    ring = jax.random.normal(key, (m1,) + feat, jnp.float32)
+    feats = jax.random.normal(jax.random.fold_in(key, 1), feat)
+    mask = jnp.asarray([True, False, True, False])
+    assert np.array_equal(
+        np.asarray(ops.spectral_update_lanes_sharded(
+            ring, feats, mask, mesh=mesh, lane_axis=lane_axis)),
+        np.asarray(ops.spectral_update_lanes(ring, feats, mask,
+                                             lane_axis=lane_axis)))
+    w = jax.random.normal(jax.random.fold_in(key, 2), (m1, B))
+    assert np.array_equal(
+        np.asarray(ops.spectral_predict_lanes_sharded(
+            ring, w, mesh=mesh, lane_axis=lane_axis)),
+        np.asarray(ops.spectral_predict_lanes(ring, w,
+                                              lane_axis=lane_axis)))
+    wc = jax.random.normal(jax.random.fold_in(key, 3), (m1, 2, B))
+    assert np.array_equal(
+        np.asarray(ops.spectral_predict_chain_lanes_sharded(
+            ring, wc, mesh=mesh, lane_axis=lane_axis)),
+        np.asarray(ops.spectral_predict_chain_lanes(
+            ring, wc, lane_axis=lane_axis)))
+
+
+def test_spectral_forecaster_jnp_backend_parity(monkeypatch):
+    """REPRO_TABLE_BACKEND=jnp routes the SpectralForecaster through the
+    pure-jnp oracles: the masked ring update agrees BITWISE (exact
+    copies), predictions to multiply-add fusion rounding (the oracles
+    replay the kernel's sequential f32 accumulation order)."""
+    from repro.core.forecaster import SpectralForecaster
+
+    fc = SpectralForecaster()
+    order, feat = 2, (2, 2, 4, 12, 24)
+    B = feat[2]
+    key = jax.random.PRNGKey(67)
+    tstate = fc.init_state(order, feat, jnp.float32, lanes=B)
+    tstate["diffs"] = jax.random.normal(key, (order + 1,) + feat)
+    tstate["n_anchors"] = jnp.asarray([3, 1, 4, 2], jnp.int32)
+    tstate["anchor_step"] = jnp.asarray([4, 6, 2, 0], jnp.int32)
+    tstate["gap"] = jnp.full((B,), 2.0)
+    steps = jnp.asarray([6, 7, 5, 3], jnp.int32)
+    chain = tstate["anchor_step"][None] + 1 + jnp.arange(3)[:, None]
+    feats = jax.random.normal(jax.random.fold_in(key, 1), feat)
+    mask = jnp.asarray([True, False, True, False])
+    outs = {}
+    for backend in ("kernel", "jnp"):
+        monkeypatch.setenv("REPRO_TABLE_BACKEND", backend)
+        outs[backend] = (
+            fc.predict_lanes(tstate, steps),
+            fc.predict_chain_lanes(tstate, chain),
+            fc.update_lanes(tstate, feats, steps, mask))
+    for i, (a, b) in enumerate(zip(outs["kernel"], outs["jnp"])):
+        ka, kb = jax.tree_util.tree_leaves(a), jax.tree_util.tree_leaves(b)
+        for la, lb in zip(ka, kb):
+            if i < 2:  # predictions: FMA-contraction rounding only
+                np.testing.assert_allclose(np.asarray(la), np.asarray(lb),
+                                           rtol=1e-6, atol=1e-6)
+            else:  # update: exact copies
+                assert np.array_equal(np.asarray(la), np.asarray(lb))

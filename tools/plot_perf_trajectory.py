@@ -17,7 +17,11 @@ JSON) tracking, per snapshot:
     ``mean_completion_ticks``) when present;
   * sustained-load p50/p99 completion latency, deadline hit rate and
     peak queue depth per scheduler from ``serve_load.json`` /
-    ``serve_load_queue.json`` (``benchmarks/serve_load.py``).
+    ``serve_load_queue.json`` (``benchmarks/serve_load.py``);
+  * forecaster-family accept rate / GFLOPs / req/s (``forecaster=*``
+    rows of ``serve_throughput*.json``) and the closed-loop controller
+    frontier — per-τ0 static vs controller speedup and the dominance
+    verdict — from ``table11_controller_frontier.json``.
 
 This closes the ROADMAP "perf trajectory" item: download a few PRs'
 ``smoke-bench-results`` artifacts next to each other and run
@@ -80,6 +84,18 @@ def extract_series(entry: str) -> Dict[str, float]:
                         out[f"mean-ticks {mode}"] = \
                             float(row["mean_completion_ticks"])
                     continue
+                if mode.startswith("forecaster="):
+                    # pluggable-forecaster rows (--forecaster
+                    # taylor,spectral): accept rate and served GFLOPs
+                    # per family, keyed by mode so the spectral series
+                    # never collides with the Taylor lane rows
+                    out[f"req/s {mode}"] = float(rps)
+                    if row.get("draft_accept_rate") is not None:
+                        out[f"accept {mode}"] = \
+                            float(row["draft_accept_rate"])
+                    if row.get("gflops") is not None:
+                        out[f"gflops {mode}"] = float(row["gflops"])
+                    continue
                 # workload-tagged rows (decode / mixed traffic through
                 # the workload-agnostic engine): keyed by mode so they
                 # never collide with the diffusion lane series
@@ -122,6 +138,22 @@ def extract_series(entry: str) -> Dict[str, float]:
                     if row.get(col) is not None:
                         out[f"load {label} sched={sched}"] = \
                             float(row[col])
+        elif name.startswith("table11_controller_frontier"):
+            # closed-loop controller vs static-τ frontier
+            # (benchmarks/ablations.py): per-τ0 speedup for both modes
+            # plus the dominance verdict as a 0/1 liveness series
+            for row in rows:
+                mode = str(row.get("mode", ""))
+                if mode == "verdict":
+                    out["ctl frontier-dominates"] = \
+                        float(bool(row.get("controller_dominates")))
+                    continue
+                if row.get("speedup_flops") is None:
+                    continue
+                tag = f"{mode} tau0={row.get('tau0')}"
+                out[f"ctl speedup {tag}"] = float(row["speedup_flops"])
+                if row.get("rel_dev") is not None:
+                    out[f"ctl rel-dev {tag}"] = float(row["rel_dev"])
         elif name.startswith("table_bench"):
             for row in rows:
                 if row.get("backend") == "kernel":
