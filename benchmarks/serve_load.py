@@ -25,8 +25,11 @@ replays against a fresh engine and one summary row reports:
   * ``lat_<tenant>`` — per-tenant mean completion latency (the other
     face of the same fairness: WFQ trades bronze latency for gold);
   * ``qdepth_max`` and a queue-depth-over-time series
-    (``serve_load_queue.json``: one row per loop tick per scheduler)
-    that feeds ``tools/plot_perf_trajectory.py``.
+    (``serve_load_queue.json``: one row per SCHEDULER TICK per
+    scheduler, read from the engine's observability registry —
+    ``repro.obs`` — which samples inside ``tick()`` before admission,
+    so burst peaks are captured instead of the drained post-tick
+    queue) that feeds ``tools/plot_perf_trajectory.py``.
 
 Run (repo root on the path for ``benchmarks.common``):
   PYTHONPATH=src:. python benchmarks/serve_load.py \
@@ -129,11 +132,17 @@ def build_trace(cfg, lm_cfg, args):
 def drive(engine: SpeCaEngine, trace, *, max_ticks: int):
     """Replay one trace against one engine: submit due arrivals, tick,
     consume+release completions. Returns (records, queue-depth series,
-    shed-retry count, loop ticks, wall seconds)."""
+    shed-retry count, loop ticks, wall seconds).
+
+    The queue-depth series comes from the engine's observability
+    registry (``speca_queue_depth``/``speca_in_flight``), sampled
+    INSIDE ``tick()`` before admission — every scheduler tick lands one
+    point. The old poll-boundary sampling read the queue only after the
+    tick had already admitted the burst into free lanes, so burst peaks
+    were systematically under-reported."""
     backlog = list(trace)          # (arrival_tick, req, slack), sorted
     latency = {}                   # ticket_id -> (arrival_t, tenant)
     records = []                   # (Result, latency_ticks, tenant)
-    depth_series = []              # (loop_t, queued, in_flight)
     shed = 0
     t0 = time.time()
     t = 0
@@ -166,9 +175,14 @@ def drive(engine: SpeCaEngine, trace, *, max_ticks: int):
             arrival = latency.pop(res.ticket_id)
             records.append((res, t + 1 - arrival, res.tenant))
             engine.release(res.ticket_id)
-        depth_series.append((t, engine.pending(), engine.in_flight()))
         t += 1
     wall = time.time() - t0
+    # per-scheduler-tick queue state from the metrics registry (one
+    # point per tick, pre-admission — the burst-peak fix)
+    qd = engine.obs.metrics.series("speca_queue_depth").points()
+    fl = engine.obs.metrics.series("speca_in_flight").points()
+    depth_series = [(int(x), int(q), int(f))
+                    for (x, q), (_, f) in zip(qd, fl)]
     dropped = engine.shutdown()
     for res in dropped:            # should be empty: the loop drains
         arrival = latency.pop(res.ticket_id)
@@ -262,7 +276,8 @@ def main() -> None:
         eng = SpeCaEngine(cfg, params, dcfg, scfg, scheduler=sched,
                           max_queue=args.max_queue,
                           max_draft_depth=args.max_draft_depth,
-                          lanes=args.lanes, workloads=workloads)
+                          lanes=args.lanes, workloads=workloads,
+                          obs=True)
         # compile outside the timed drive loop: the lifecycle diffusion
         # session runs the mixed slot program, decode the plain one
         eng.warmup({"labels": jnp.asarray([0])}, lanes=args.lanes,

@@ -173,6 +173,14 @@ ACCEPT_MODES = ("batch", "per_sample")
 VERIFY_BACKENDS = ("fused", "jnp")
 GUIDANCE_MODES = (False, True, "mixed")
 
+# The per-tick flag keys engine accounting (and the observability
+# accumulator — repro.obs.lane_metrics) consumes: every [W] counter a
+# completed request's harvest materialises. One exported tuple so the
+# engine's completion fetch and the telemetry layer can never read
+# different layouts of the same flags dict.
+COUNTER_FLAGS = ("attempted", "accepted", "full",
+                 "n_spec", "n_drafted", "advanced")
+
 
 def verify_layer(cfg: ModelConfig, scfg: SpeCaConfig) -> int:
     """Resolved verify-layer index (negative config values wrap)."""

@@ -1,0 +1,77 @@
+"""The ``Clock`` seam: one monotonic time source for every serving
+timestamp.
+
+Every wall-clock number the serving stack reports — ``Result.wall_s``,
+``Result.timings``, trace-span boundaries, flight-recorder event stamps —
+is read through ONE injectable clock instead of scattered
+``time.time()`` calls. That buys two things:
+
+  * **Monotonicity**: the default clock is ``time.monotonic``, so spans
+    can never go negative across an NTP step the way ``time.time()``
+    deltas can.
+  * **Determinism in tests**: ``SpeCaEngine(clock=FakeClock())`` makes
+    every lifecycle timestamp a scripted value, so tests can assert
+    exact ``Timings`` fields instead of sleeping and hoping
+    (``tests/test_obs.py``).
+
+The seam is engine-wide and host-side only: nothing inside any traced
+step ever reads the clock, so swapping clocks cannot perturb a single
+device value (the observability inertness guarantee —
+``docs/observability.md``).
+"""
+from __future__ import annotations
+
+import time
+from typing import Protocol, runtime_checkable
+
+
+@runtime_checkable
+class Clock(Protocol):
+    """Anything with a monotonic ``now() -> float`` (seconds)."""
+
+    def now(self) -> float: ...
+
+
+class MonotonicClock:
+    """The production clock: ``time.monotonic`` (never steps backward)."""
+
+    def now(self) -> float:
+        return time.monotonic()
+
+
+class FakeClock:
+    """A scripted clock for deterministic tests.
+
+    ``now()`` returns the current scripted time and then advances it by
+    ``auto_tick`` (0 by default — time only moves when the test calls
+    ``advance``). With ``auto_tick`` > 0 every timestamp read is a
+    distinct, exactly predictable value, which is what lets lifecycle
+    tests pin ``Result.timings`` field-for-field.
+    """
+
+    def __init__(self, start: float = 0.0, auto_tick: float = 0.0) -> None:
+        self._t = float(start)
+        self.auto_tick = float(auto_tick)
+        self.reads = 0
+
+    def now(self) -> float:
+        t = self._t
+        self._t += self.auto_tick
+        self.reads += 1
+        return t
+
+    def advance(self, dt: float) -> None:
+        if dt < 0:
+            raise ValueError(f"FakeClock cannot run backwards (dt={dt})")
+        self._t += float(dt)
+
+
+def resolve_clock(clock) -> Clock:
+    """``None`` -> a fresh ``MonotonicClock``; anything with ``now()``
+    passes through; everything else is a loud error."""
+    if clock is None:
+        return MonotonicClock()
+    if isinstance(clock, Clock):
+        return clock
+    raise TypeError(f"clock must have a now() -> float method, "
+                    f"got {type(clock).__name__}")

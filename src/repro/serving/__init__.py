@@ -1,5 +1,7 @@
 from repro.core.workload import (DecodeWorkload,  # noqa: F401
                                  DiffusionWorkload, Workload)
+from repro.obs import (Clock, FakeClock, MonotonicClock,  # noqa: F401
+                       Observability, Span, Timings, Trace)
 from repro.serving.engine import (Preview, Request, Result,  # noqa: F401
                                   SpeCaEngine, allocation_report)
 from repro.serving.policy import (QueueFull, RequestPolicy,  # noqa: F401

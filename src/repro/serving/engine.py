@@ -73,7 +73,6 @@ from __future__ import annotations
 
 import dataclasses
 import math
-import time
 from typing import Any, Dict, Iterator, List, Optional, Tuple, Union
 
 import jax
@@ -85,9 +84,20 @@ from repro.core import lane_step as LS
 from repro.core.forecaster import get_forecaster
 from repro.core.workload import DiffusionWorkload, Workload
 from repro.diffusion.pipeline import null_cond_like
+from repro.obs import (Clock, Observability, Timings, Trace, build_trace,
+                       resolve_clock)
 from repro.serving.policy import QueueFull, RequestPolicy, Ticket
 from repro.serving.scheduler import (QueueItem, Scheduler, fresh_scheduler,
                                      make_scheduler)
+
+
+# histogram bucket grids for the per-request observability metrics:
+# rates live in [0, 1]; latency seconds get a coarse log grid wide
+# enough for CPU-interpret smoke runs and real hardware alike
+_RATE_EDGES = tuple(i / 20.0 for i in range(1, 21))
+_SECONDS_EDGES = tuple(float(x) for x in
+                       (1e-4, 3e-4, 1e-3, 3e-3, 1e-2, 3e-2, 0.1, 0.3,
+                        1.0, 3.0, 10.0, 30.0, 100.0, 300.0))
 
 
 @dataclasses.dataclass
@@ -153,6 +163,11 @@ class Result:
     # the policy's fair-queueing class, echoed back so per-tenant share
     # accounting (WFQ, benchmarks/serve_load.py) needs no side table
     tenant: str = "default"
+    # lifecycle timestamps/tick indices through the engine's Clock seam
+    # (repro.obs.Timings) — populated on every lifecycle-served request
+    # whether or not observability is enabled; None only for requests
+    # dropped before they ever started
+    timings: Optional[Timings] = None
 
     @property
     def alpha(self) -> float:
@@ -212,6 +227,9 @@ class _Entry:                          # may span two lanes
     t0: float
     done: int = 0       # host-tracked denoising step counter
     draft_k: int = 1    # the request's draft horizon (policy.draft_depth)
+    # engine-clock stamp of the first scheduler tick that dispatched this
+    # entry (None until then) — Timings.first_tick_s
+    first_tick_s: Optional[float] = None
 
     @property
     def streams(self) -> int:
@@ -248,6 +266,14 @@ class _Session:
         self.tick = 0
         self._flag_log: List[Optional[Dict[str, Any]]] = []
         self._flag_np: Dict[int, Dict[str, np.ndarray]] = {}
+        # host clock stamp at the START of each session tick, index-
+        # aligned with _flag_log (gc'd together): trace spans and
+        # Timings.first_tick_s read these, never the device
+        self._tick_s: List[Optional[float]] = []
+        # device-side telemetry accumulator (None when obs is off: the
+        # obs-off session contains no observability code path at all)
+        self._acc = engine._obs.lane_accumulator() \
+            if engine._obs is not None else None
 
     # --- occupancy -------------------------------------------------------
     def busy(self) -> bool:
@@ -291,11 +317,18 @@ class _Session:
                 free = half or free
             lanes = (free[0],)
         entry = _Entry(item=item, lanes=lanes, start_tick=self.tick,
-                       t0=time.time(),
+                       t0=self.e.clock.now(),
                        draft_k=int(item.policy.draft_depth or 1))
         for l in lanes:
             self.lane_entry[l] = entry
         self._fill(entry)
+        obs = self.e._obs
+        if obs is not None:
+            obs.recorder.record(
+                "admit", entry.t0, ticket=item.ticket_id,
+                request=item.request.request_id, workload=self.wl.tag,
+                tenant=item.policy.tenant, tick=entry.start_tick,
+                lanes=list(entry.lanes))
         return entry
 
     def _fill(self, entry: _Entry) -> None:
@@ -372,10 +405,16 @@ class _Session:
         lane moves 0..K steps per tick), so the tick's ``advanced``
         counters are fetched — the one host/device sync deep speculation
         costs. Returns the completions."""
+        now = self.e.clock.now()
+        self._tick_s.append(now)
         state, flags = self.step_fn(self.state)   # async dispatch
         self.state = state
         self._flag_log.append(flags)
         self.tick += 1
+        if self._acc is not None:
+            # fold this tick's flags into the on-device accumulator —
+            # one extra ASYNC dispatch, zero host syncs
+            self._acc.update(flags)
         # controller entries adapt draft_k ON DEVICE, so their host-side
         # draft_k is only the starting point: treat them as deep (their
         # per-tick advancement is data-dependent like any chain lane)
@@ -384,6 +423,8 @@ class _Session:
         adv = self._fetch(self.tick - 1)["advanced"] if deep else None
         completed: List[Tuple[_Entry, Result]] = []
         for entry in self.entries():
+            if entry.first_tick_s is None:
+                entry.first_tick_s = now
             # depth-1 entries advance exactly 1/tick (host-predictable)
             entry.done += int(adv[entry.lanes[0]]) if deep else 1
             if entry.done < entry.item.steps:
@@ -410,9 +451,7 @@ class _Session:
         if t not in self._flag_np:
             self._flag_np[t] = {k: np.asarray(v)
                                 for k, v in self._flag_log[t].items()
-                                if k in ("attempted", "accepted", "full",
-                                         "n_spec", "n_drafted",
-                                         "advanced")}
+                                if k in LS.COUNTER_FLAGS}
         return self._flag_np[t]
 
     def _gc_flags(self) -> None:
@@ -433,8 +472,10 @@ class _Session:
         the entry's first lane: for a guided pair the flags are
         pair-equal, so this is the pair's single decision."""
         item = entry.item
+        obs = self.e._obs
         lane0, k = entry.lanes[0], entry.streams
         accepts: List[bool] = []
+        per_tick: List[Dict[str, int]] = []
         n_drafted, n_full = 0, 0
         for t in range(entry.start_tick, end_tick):
             f = self._fetch(t)
@@ -448,7 +489,20 @@ class _Session:
             # drafted chain positions, NOT verify rounds: the
             # per-drafted-step accounting denominator
             n_drafted += int(f["n_drafted"][lane0])
-        return Result(
+            if obs is not None:
+                # trace rows come from the SAME rows this loop already
+                # materialised — span synthesis adds no device reads
+                per_tick.append({
+                    "n_spec": ns, "full": nf,
+                    "n_drafted": int(f["n_drafted"][lane0]),
+                    "advanced": int(f["advanced"][lane0])})
+        finish_s = self.e.clock.now()
+        timings = Timings(
+            submit_s=item.submit_s, admit_s=entry.t0, finish_s=finish_s,
+            first_tick_s=entry.first_tick_s,
+            submit_tick=item.submit_tick, admit_tick=entry.start_tick,
+            finish_tick=end_tick)
+        res = Result(
             request_id=item.request.request_id,
             sample=self.wl.emit(self.state, lane0, entry.done),
             num_full=n_full, num_spec=entry.done - n_full,
@@ -458,11 +512,56 @@ class _Session:
             # WORKLOAD's analytic cost (denoiser rows vs decode steps)
             flops=n_full * k * self.wl.full_flops
             + n_drafted * k * self.wl.verify_flops,
-            wall_s=time.time() - entry.t0,
+            wall_s=finish_s - entry.t0,
             accepts=accepts, completed=completed,
             finish_tick=end_tick, deadline=item.policy.deadline,
             ticket_id=item.ticket_id, workload=self.wl.tag,
-            tenant=item.policy.tenant)
+            tenant=item.policy.tenant, timings=timings)
+        if obs is not None:
+            self._observe_done(entry, res, timings, per_tick)
+        return res
+
+    def _observe_done(self, entry: _Entry, res: Result,
+                      timings: Timings,
+                      per_tick: List[Dict[str, int]]) -> None:
+        """Record one harvested request into the obs layer: lifecycle
+        event, per-request metrics, and its span Trace (host-side only —
+        every number here was already materialised by harvest)."""
+        obs = self.e._obs
+        item = entry.item
+        wl, tenant = self.wl.tag, item.policy.tenant
+        deep = entry.draft_k > 1 or item.policy.controller is not None
+        trace = build_trace(
+            ticket_id=item.ticket_id,
+            request_id=item.request.request_id, workload=wl,
+            tenant=tenant, completed=res.completed, timings=timings,
+            per_tick=per_tick, tick_times=self._tick_s, deep=deep)
+        obs.recorder.put_trace(trace)
+        obs.recorder.record(
+            "finish" if res.completed else "drop", timings.finish_s,
+            ticket=item.ticket_id, request=item.request.request_id,
+            workload=wl, tenant=tenant, tick=timings.finish_tick,
+            num_full=res.num_full, num_spec=res.num_spec,
+            num_drafted=res.num_drafted)
+        m = obs.metrics
+        kind = "completed" if res.completed else "dropped"
+        m.counter(f"speca_requests_{kind}_total",
+                  workload=wl, tenant=tenant).inc()
+        # service share in schedule-step decisions × lane streams — the
+        # WFQ ledger's unit, so tenant-share accounting reads directly
+        m.counter("speca_service_steps_total",
+                  workload=wl, tenant=tenant).inc(
+                      res.num_full + res.num_spec)
+        m.histogram("speca_accept_rate", edges=_RATE_EDGES,
+                    workload=wl).observe(res.alpha)
+        if res.num_drafted:
+            m.histogram("speca_request_draft_accept_rate",
+                        edges=_RATE_EDGES, workload=wl).observe(
+                            res.draft_accept_rate)
+        m.histogram("speca_queue_wait_s", edges=_SECONDS_EDGES,
+                    workload=wl).observe(timings.queue_wait_s)
+        m.histogram("speca_service_s", edges=_SECONDS_EDGES,
+                    workload=wl).observe(timings.service_s)
 
     def drain(self) -> List[Tuple[_Entry, Result]]:
         """Tick-budget shutdown: harvest every in-flight entry as
@@ -576,7 +675,9 @@ class SpeCaEngine:
                  lanes: int = 4,
                  forecaster: Any = None,
                  controller: bool = False,
-                 workloads: Optional[Dict[str, Workload]] = None):
+                 workloads: Optional[Dict[str, Workload]] = None,
+                 obs: Union[bool, Observability] = False,
+                 clock: Optional[Clock] = None):
         if accept_mode not in LS.ACCEPT_MODES:
             raise ValueError(f"unknown accept_mode {accept_mode!r}")
         if max_draft_depth < 1:
@@ -635,6 +736,20 @@ class SpeCaEngine:
         # every session's compiled program)
         self.forecaster = get_forecaster(forecaster)
         self.controller = bool(controller)
+        # observability (docs/observability.md): obs=False keeps every
+        # obs code path out of the engine entirely (pinned bitwise in
+        # tests/test_obs.py); obs=True builds a fresh Observability on
+        # the engine clock; a prebuilt Observability is adopted as-is
+        # (sharing one registry across engines), and supplies the clock
+        # when the caller passed none.
+        if isinstance(obs, Observability):
+            self._obs: Optional[Observability] = obs
+            self.clock: Clock = resolve_clock(
+                clock if clock is not None else obs.clock)
+        else:
+            self.clock = resolve_clock(clock)
+            self._obs = Observability(clock=self.clock) if obs else None
+        self._tick_count = 0   # engine-level tick index (series x-axis)
         # lanes one request occupies under the legacy engine-wide mode:
         # 1, or 2 for a guidance=True engine — kept for lane_width()
         self._streams = 2 if self.guidance else 1
@@ -726,6 +841,14 @@ class SpeCaEngine:
                 guidance=mode, max_draft_depth=self.max_draft_depth,
                 forecaster=self.forecaster, controller=self.controller,
                 mesh=self.mesh))
+            if self._obs is not None:
+                # per-tag program-build count (the compile-cost proxy:
+                # each new (tag, width, mode) key is one XLA program)
+                self._obs.metrics.counter(
+                    "speca_programs_built_total", workload=tag).inc()
+                self._obs.recorder.record(
+                    "compile", self.clock.now(), workload=tag,
+                    width=W, mode=str(mode))
         return self._lane_fns[key]
 
     def lane_width(self, lanes: int, n_requests: int) -> int:
@@ -826,10 +949,16 @@ class SpeCaEngine:
         item = QueueItem(seq=self._seq, request=req, policy=pol,
                          steps=steps,
                          submit_tick=sess.tick,
-                         ticket_id=self._seq)
+                         ticket_id=self._seq,
+                         submit_s=self.clock.now())
         self._seq += 1
         self._sched.push(item)
         self._ticket_status[item.ticket_id] = "queued"
+        if self._obs is not None:
+            self._obs.recorder.record(
+                "submit", item.submit_s, ticket=item.ticket_id,
+                request=req.request_id, workload=pol.workload,
+                tenant=pol.tenant, steps=steps)
         return Ticket(ticket_id=item.ticket_id,
                       request_id=req.request_id,
                       submit_tick=item.submit_tick)
@@ -865,17 +994,32 @@ class SpeCaEngine:
         for _ in range(n):
             if not self._sessions:
                 break
+            if self._obs is not None:
+                # sample queue state BEFORE admission so burst peaks are
+                # visible — the poll-boundary sampling this replaces saw
+                # the queue only after the tick had drained it
+                self._obs_tick_sample()
             for _sess, entry in self._admit_into(self._sessions,
                                                  self._sched):
                 self._ticket_status[entry.item.ticket_id] = "running"
             busy = [s for s in self._sessions.values() if s.busy()]
             if not busy:
                 break
+            self._tick_count += 1
             for sess in busy:
                 for entry, res in sess.advance():
                     self._record(res)
                     done.append(res)
         return done
+
+    def _obs_tick_sample(self) -> None:
+        """One per-scheduler-tick sample of the engine's queue state
+        (host-side integers only). Series are indexed by the engine
+        tick counter so every tick lands exactly one point."""
+        m = self._obs.metrics
+        t = self._tick_count
+        m.series("speca_queue_depth").append(t, len(self._sched))
+        m.series("speca_in_flight").append(t, self.in_flight())
 
     def _record(self, res: Result) -> None:
         self._results[res.ticket_id] = res
@@ -1050,8 +1194,48 @@ class SpeCaEngine:
             res = _dropped_result(item)
             self._record(res)
             out.append(res)
+            if self._obs is not None:
+                self._obs.recorder.record(
+                    "drop", self.clock.now(), ticket=item.ticket_id,
+                    request=item.request.request_id,
+                    workload=item.policy.workload,
+                    tenant=item.policy.tenant, started=False)
+        if self._obs is not None:
+            # the sessions own the device-side accumulators: flush them
+            # into the registry before they are discarded
+            self._flush_lane_metrics()
         self._sessions = {}
         return out
+
+    # --- observability surface -------------------------------------------
+    @property
+    def obs(self) -> Optional[Observability]:
+        """The engine's observability bundle (None when obs is off)."""
+        return self._obs
+
+    def _flush_lane_metrics(self) -> None:
+        for tag, sess in self._sessions.items():
+            if sess._acc is not None:
+                sess._acc.flush_into(self._obs.metrics, workload=tag)
+
+    def metrics_snapshot(self) -> List[Dict[str, Any]]:
+        """Flush the device-side lane accumulators (the ONE host sync
+        observability ever adds, paid only here) and return the plain-
+        Python metrics snapshot. Raises when obs is off."""
+        if self._obs is None:
+            raise RuntimeError("engine constructed with obs=False — "
+                               "pass SpeCaEngine(obs=True) for metrics")
+        self._flush_lane_metrics()
+        return self._obs.metrics.snapshot()
+
+    def trace(self, ticket: Union[Ticket, int]) -> Optional[Trace]:
+        """The completed ticket's span Trace from the flight recorder
+        (None when unknown, evicted, or still in flight). Raises when
+        obs is off."""
+        if self._obs is None:
+            raise RuntimeError("engine constructed with obs=False — "
+                               "pass SpeCaEngine(obs=True) for traces")
+        return self._obs.recorder.trace(self._tid(ticket))
 
     # --- batch=1 serving: the lanes=streams case of the scheduler --------
     def run_request(self, req: Request) -> Result:
@@ -1125,7 +1309,7 @@ class SpeCaEngine:
             sched.push(QueueItem(
                 seq=i, request=req, policy=pol,
                 steps=pol.steps(self.workloads[pol.workload].num_steps),
-                ticket_id=i))
+                ticket_id=i, submit_s=self.clock.now()))
         results: Dict[int, Result] = {}
         while len(sched) or any(s.busy() for s in sessions.values()):
             if max_ticks is not None and max(
@@ -1146,6 +1330,12 @@ class SpeCaEngine:
                 results[entry.item.seq] = res
         for item in sched.drain():
             results[item.seq] = _dropped_result(item)
+        if self._obs is not None:
+            # private per-call sessions still report: their accumulators
+            # flush into the engine registry before they are discarded
+            for tag, sess in sessions.items():
+                if sess._acc is not None:
+                    sess._acc.flush_into(self._obs.metrics, workload=tag)
         return [results[i] for i in range(len(requests))]
 
     def serve(self, requests: List[Request], *, lanes: int = 1,

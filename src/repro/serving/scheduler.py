@@ -62,6 +62,11 @@ class QueueItem:
     steps: int
     submit_tick: int = 0
     ticket_id: int = -1
+    # engine-clock stamp at submit (``SpeCaEngine.clock.now()``): the
+    # origin of ``Result.timings.queue_wait_s``; 0.0 for items pushed by
+    # callers that do not track wall-clock (tests driving the scheduler
+    # directly)
+    submit_s: float = 0.0
 
     @property
     def streams(self) -> int:
